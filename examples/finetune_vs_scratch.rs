@@ -1,0 +1,68 @@
+//! Fine-tuning vs training from scratch — the flexibility claim of the
+//! paper's abstract ("works well in both training from scratch and
+//! fine-tuning scenarios", cf. the two "Ours" blocks of Table I).
+//!
+//! 1. pretrains an fp32 model (cached under runs/pretrained/),
+//! 2. runs AdaQAT fine-tuning from that checkpoint,
+//! 3. runs AdaQAT from scratch with the same budget,
+//! and prints both results side by side.
+//!
+//! ```bash
+//! cargo run --release --example finetune_vs_scratch
+//! cargo run --release --example finetune_vs_scratch -- --model resnet20
+//! ```
+
+use std::path::Path;
+
+use adaqat::config::{ExperimentConfig, Scenario};
+use adaqat::coordinator::{default_runtime, ensure_fp32_pretrain, Experiment};
+use adaqat::metrics::Table;
+use adaqat::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    adaqat::util::logger::init();
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let model_key = args.get_str("model", "smallcnn");
+
+    let runtime = default_runtime()?;
+    let model = runtime.load_model(&model_key)?;
+
+    let mut base = ExperimentConfig::default_for(&model_key);
+    base.epochs = 3;
+    base.train_size = 2048;
+    base.test_size = 512;
+    base.eta_w = 0.02;
+    base.eta_a = 0.01;
+    base.apply_args(&args).map_err(|e| anyhow::anyhow!(e))?;
+
+    // fp32 pretrain (the "pretrained full-precision model" of §IV)
+    let ck = ensure_fp32_pretrain(&model, &base, base.epochs, Path::new("runs/pretrained"))?;
+
+    let mut table = Table::new(&["scenario", "W/A", "top-1 (%)", "WCR", "BitOPs (Gb)"]);
+    for (label, scenario) in [
+        ("fine-tuning", Scenario::Finetune { checkpoint: ck.clone() }),
+        ("from scratch", Scenario::Scratch),
+    ] {
+        let mut cfg = base.clone();
+        cfg.scenario = scenario;
+        // the paper fine-tunes with a 10x smaller LR (§IV-A)
+        if label == "fine-tuning" {
+            cfg.lr = 0.01;
+        }
+        let result = Experiment::new(&model, cfg)?.run()?;
+        let (k_w, k_a) = result.final_bits;
+        table.row(vec![
+            label.to_string(),
+            format!("{k_w}/{k_a}"),
+            format!("{:.1}", result.test_top1 * 100.0),
+            format!("{:.1}x", result.wcr),
+            format!("{:.3}", result.bitops_g),
+        ]);
+    }
+
+    println!("\n=== AdaQAT fine-tuning vs from scratch ({model_key}) ===");
+    print!("{}", table.render());
+    println!("expected shape: both land within a fraction of a point of each");
+    println!("other (paper Table I: 92.2 vs 92.1 at 3/4).");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! λ sweep (the Table III experiment at example scale): how the
+//! hardware-loss balance trades compression against accuracy.
+//!
+//! Runs AdaQAT from scratch at λ ∈ {0.2, 0.15, 0.1} on the small CNN
+//! (fast) and prints the learned (W, A, top-1) triple per λ — the paper's
+//! qualitative claim is that larger λ compresses harder and scores lower.
+//!
+//! ```bash
+//! cargo run --release --example lambda_sweep
+//! cargo run --release --example lambda_sweep -- --model resnet20 --epochs 4
+//! ```
+
+use adaqat::config::ExperimentConfig;
+use adaqat::coordinator::{default_runtime, Experiment};
+use adaqat::metrics::Table;
+use adaqat::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    adaqat::util::logger::init();
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let model_key = args.get_str("model", "smallcnn");
+
+    let runtime = default_runtime()?;
+    let model = runtime.load_model(&model_key)?;
+
+    let mut table = Table::new(&["lambda", "W", "A", "top-1 (%)", "WCR", "BitOPs (Gb)"]);
+    for lambda in [0.2, 0.15, 0.1] {
+        let mut cfg = ExperimentConfig::default_for(&model_key);
+        cfg.epochs = 3;
+        cfg.train_size = 2048;
+        cfg.test_size = 512;
+        cfg.eta_w = 0.02;
+        cfg.eta_a = 0.01;
+        cfg.apply_args(&args).map_err(|e| anyhow::anyhow!(e))?;
+        cfg.lambda = lambda;
+        let result = Experiment::new(&model, cfg)?.run()?;
+        let (k_w, k_a) = result.final_bits;
+        table.row(vec![
+            format!("{lambda}"),
+            k_w.to_string(),
+            k_a.to_string(),
+            format!("{:.1}", result.test_top1 * 100.0),
+            format!("{:.1}x", result.wcr),
+            format!("{:.3}", result.bitops_g),
+        ]);
+    }
+
+    println!("\n=== λ sweep ({model_key}) — cf. paper Table III ===");
+    print!("{}", table.render());
+    println!("expected shape: larger λ ⇒ fewer bits and (weakly) lower top-1.");
+    Ok(())
+}

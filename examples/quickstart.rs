@@ -1,0 +1,57 @@
+//! Quickstart: train the small CNN with AdaQAT on synthetic CIFAR-10.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the whole public API in ~40 lines: open the runtime,
+//! configure an experiment, run it, read the result. Takes ~1 minute on
+//! a laptop-class CPU.
+
+use adaqat::config::ExperimentConfig;
+use adaqat::coordinator::{default_runtime, Experiment};
+
+fn main() -> anyhow::Result<()> {
+    adaqat::util::logger::init();
+
+    // 1. Open the AOT artifacts (built once by `make artifacts`).
+    let runtime = default_runtime()?;
+    let model = runtime.load_model("smallcnn")?;
+
+    // 2. Describe the experiment. Everything has a sane default; we
+    //    shrink sizes so the quickstart finishes fast and raise the
+    //    bit-width learning rates so the adaptation is visible within
+    //    three epochs (the paper's 1e-3/5e-4 are tuned for 150+ epochs).
+    let mut cfg = ExperimentConfig::default_for("smallcnn");
+    cfg.epochs = 3;
+    cfg.train_size = 2048;
+    cfg.test_size = 512;
+    cfg.lambda = 0.15; // hardware-vs-accuracy balance (paper eq. (2))
+    cfg.eta_w = 0.02;
+    cfg.eta_a = 0.01;
+
+    // 3. Run: Rust drives the compiled HLO train/probe/eval graphs; the
+    //    AdaQAT controller adapts N_w / N_a between steps.
+    let exp = Experiment::new(&model, cfg)?;
+    let result = exp.run()?;
+
+    // 4. Inspect.
+    let (k_w, k_a) = result.final_bits;
+    println!("\n=== quickstart result ===");
+    println!("learned bit-widths  W/A = {k_w}/{k_a}");
+    println!("test top-1          {:.1}%", result.test_top1 * 100.0);
+    println!("weight compression  {:.1}x vs fp32", result.wcr);
+    println!("BitOPs              {:.3} Gb", result.bitops_g);
+    println!(
+        "steps               {} ({:.0} ms/step)",
+        result.steps,
+        result.step_seconds * 1e3
+    );
+    for e in &result.epochs {
+        println!(
+            "  epoch {}: train acc {:.3} | test acc {:.3} | bits {}/{}",
+            e.epoch, e.train_acc, e.test_acc, e.k_w, e.k_a
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+"""AOT lowering: JAX step functions → HLO **text** + manifest.json.
+
+This is the single build-time entry point (``make artifacts``); after it
+runs, Python is never needed again — the Rust coordinator loads the HLO
+text via ``HloModuleProto::from_text_file`` and executes it on the PJRT
+CPU client.
+
+Interchange is HLO *text*, not a serialized ``HloModuleProto``: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model ``m``:
+
+    {m}_train.hlo.txt     quantized train step  (runtime s_w/s_a scalars)
+    {m}_loss.hlo.txt      quantized forward probe (batch-stat BN)
+    {m}_eval.hlo.txt      quantized eval (running-stat BN)
+    {m}_fp_train.hlo.txt  fp32 baseline train step (pretraining / Table I)
+    {m}_fp_eval.hlo.txt   fp32 baseline eval
+
+plus a ``smallcnn_pallas_*`` variant that routes *convolutions* through
+the Layer-1 Pallas matmul (im2col), proving the all-Pallas path composes
+end-to-end on the PJRT runtime.
+
+The manifest records the flat tensor layout (the ordering contract with
+``rust/src/runtime/manifest.rs``), init specs so Rust can initialize
+parameters itself, and per-layer geometry for the BitOPs/WCR cost model.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+from jax._src.lib import xla_client as xc
+
+from .models import MODELS
+from .steps import make_train_step, make_forward_step, example_args
+
+# Batch sizes are baked into the artifacts (PJRT shapes are static).
+# Chosen for CPU-PJRT throughput; the paper's 256 is a V100 setting.
+BATCH = {"smallcnn": 64, "resnet20": 128, "resnet18": 32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(model, batch: int, *, pallas_conv: bool = False):
+    """Lower the five step graphs for one model; returns {suffix: hlo}."""
+    out = {}
+    train_args = example_args(model, batch, with_opt=True, with_lr=True)
+    fwd_args = example_args(model, batch, with_opt=False, with_lr=False)
+
+    def lower(fn, args):
+        # keep_unused=True: the manifest promises a fixed argument list;
+        # without it jax prunes args a given graph doesn't read (e.g. BN
+        # running stats in the batch-stat loss probe, s_w/s_a in fp32
+        # graphs) and the Rust runtime's buffer count no longer matches.
+        return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+
+    out["train"] = lower(
+        make_train_step(model, quant=True, pallas_conv=pallas_conv),
+        train_args)
+    out["loss"] = lower(
+        make_forward_step(model, quant=True, train_bn=True,
+                          pallas_conv=pallas_conv), fwd_args)
+    out["eval"] = lower(
+        make_forward_step(model, quant=True, train_bn=False,
+                          pallas_conv=pallas_conv), fwd_args)
+    if not pallas_conv:
+        out["fp_train"] = lower(
+            make_train_step(model, quant=False), train_args)
+        out["fp_eval"] = lower(
+            make_forward_step(model, quant=False, train_bn=False), fwd_args)
+    return out
+
+
+def model_manifest(model, batch: int, artifacts: dict) -> dict:
+    return {
+        "batch": batch,
+        "input_hw": list(model.input_hw),
+        "in_channels": model.in_channels,
+        "num_classes": model.num_classes,
+        "params": [
+            {"name": p.name, "shape": list(p.shape), "init": p.init,
+             "role": p.role}
+            for p in model.spec.params
+        ],
+        "bn": [
+            {"name": b.name, "shape": list(b.shape), "init": b.init}
+            for b in model.spec.bn
+        ],
+        "geoms": [
+            {"name": g.name, "kind": g.kind,
+             "weight_count": g.weight_count, "macs": g.macs,
+             "fixed8": g.fixed8}
+            for g in model.spec.geoms
+        ],
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*",
+                    default=["smallcnn", "resnet20", "resnet18"])
+    ap.add_argument("--pallas-conv-models", nargs="*", default=["smallcnn"])
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "models": {}}
+
+    def emit(key, model, batch, pallas_conv):
+        hlos = lower_model(model, batch, pallas_conv=pallas_conv)
+        arts = {}
+        for suffix, text in hlos.items():
+            fname = f"{key}_{suffix}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            arts[suffix] = fname
+            print(f"  wrote {fname} ({len(text)//1024} KiB)", file=sys.stderr)
+        manifest["models"][key] = model_manifest(model, batch, arts)
+
+    for name in args.models:
+        model = MODELS[name]()
+        print(f"[aot] lowering {name} (batch {BATCH[name]})", file=sys.stderr)
+        emit(name, model, BATCH[name], pallas_conv=False)
+    for name in args.pallas_conv_models:
+        model = MODELS[name]()
+        key = f"{name}_pallas"
+        print(f"[aot] lowering {key} (batch {BATCH[name]})", file=sys.stderr)
+        emit(key, model, BATCH[name], pallas_conv=True)
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {mpath}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

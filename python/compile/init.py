@@ -1,0 +1,46 @@
+"""Python-side parameter initialization — used by the pytest suite only.
+
+The *runtime* initialization lives in Rust (``rust/src/tensor/init.rs``,
+seeded xorshift + Box-Muller) so Python stays off the request path; this
+module mirrors the same init *specs* (Kaiming-normal over fan-in, zeros,
+ones, const) for build-time testing.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .models import Model
+
+
+def init_params(model: Model, key):
+    params = {}
+    for p in model.spec.params:
+        if p.init.startswith("kaiming:"):
+            fan_in = int(p.init.split(":")[1])
+            key, sub = jax.random.split(key)
+            std = (2.0 / fan_in) ** 0.5
+            params[p.name] = std * jax.random.normal(sub, p.shape, jnp.float32)
+        elif p.init == "zeros":
+            params[p.name] = jnp.zeros(p.shape, jnp.float32)
+        elif p.init == "ones":
+            params[p.name] = jnp.ones(p.shape, jnp.float32)
+        elif p.init.startswith("const:"):
+            v = float(p.init.split(":")[1])
+            params[p.name] = jnp.full(p.shape, v, jnp.float32)
+        else:
+            raise ValueError(f"unknown init {p.init}")
+    return params
+
+
+def init_bn(model: Model):
+    return {b.name: (jnp.zeros(b.shape, jnp.float32) if b.init == "zeros"
+                     else jnp.ones(b.shape, jnp.float32))
+            for b in model.spec.bn}
+
+
+def flatten_params(model: Model, params):
+    return [params[p.name] for p in model.spec.params]
+
+
+def flatten_bn(model: Model, bn):
+    return [bn[b.name] for b in model.spec.bn]

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for AdaQAT.
+
+All kernels are authored TPU-idiomatically but lowered with
+``interpret=True`` so they run on the CPU PJRT plugin (real-TPU lowering
+emits Mosaic custom-calls the CPU client cannot execute). Correctness of
+every kernel is pinned against the pure-jnp oracle in ``ref.py`` by
+``python/tests/test_kernels.py``.
+"""
+
+from .dorefa import dorefa_quant, dorefa_quant_blocked
+from .pact import pact_quant, pact_quant_blocked
+from .matmul import matmul as pallas_matmul
+from .matmul import matmul_ad as pallas_matmul_ad
+
+__all__ = [
+    "dorefa_quant",
+    "dorefa_quant_blocked",
+    "pact_quant",
+    "pact_quant_blocked",
+    "pallas_matmul",
+    "pallas_matmul_ad",
+]

@@ -1,0 +1,86 @@
+"""DoReFa weight fake-quantization Pallas kernel (paper §III-A, eq. (1)).
+
+Pipeline (DoReFa-Net, Zhou et al. 2016, as adopted by AdaQAT):
+
+    t   = tanh(w)
+    x   = t / (2 * max|t|) + 1/2          # in [0, 1]
+    q   = round(x * s) / s                # s = 2^k - 1  (runtime scalar!)
+    w_q = 2 * q - 1                       # in [-1, 1]
+
+The global ``max|tanh(w)|`` reduction is computed *outside* the kernel (a
+cheap XLA reduce) and fed in as a (1,)-shaped operand, so the kernel body
+itself is purely elementwise — the shape that vectorizes on the TPU VPU.
+
+``s`` is a runtime scalar: the Rust coordinator realizes the AdaQAT
+discretization ceil/floor(N_w) by feeding ``s = 2^k - 1`` for different
+integer ``k`` into the *same* compiled executable (see DESIGN.md §6).
+
+Two lowering variants:
+  * ``dorefa_quant``          — grid=() whole-array block. Used in the
+    production artifacts: the lowered HLO is one fused elementwise chain.
+  * ``dorefa_quant_blocked``  — 1-D grid over the leading axis with a
+    VMEM-sized BlockSpec. This is the shape that streams HBM→VMEM on a
+    real TPU; kept lowerable + tested for structural parity.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dorefa_kernel(w_ref, m_ref, s_ref, o_ref):
+    """Elementwise DoReFa body. m = max|tanh(w)| (global), s = 2^k - 1."""
+    t = jnp.tanh(w_ref[...])
+    x = t / (2.0 * m_ref[0]) + 0.5
+    q = jnp.round(x * s_ref[0]) / s_ref[0]
+    o_ref[...] = 2.0 * q - 1.0
+
+
+def dorefa_quant(w, s):
+    """Quantize a weight tensor with DoReFa at runtime scale ``s = 2^k - 1``.
+
+    Args:
+      w: float32 weight tensor, any shape.
+      s: float32 scalar (or ()-shaped array), the quantization scale.
+    Returns:
+      Fake-quantized tensor of the same shape, values in [-1, 1].
+    """
+    m = jnp.max(jnp.abs(jnp.tanh(w))).reshape(1)
+    m = jnp.maximum(m, 1e-12)  # all-zero tensors must not divide by zero
+    s = jnp.asarray(s, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _dorefa_kernel,
+        out_shape=jax.ShapeDtypeStruct(w.shape, jnp.float32),
+        interpret=True,
+    )(w.astype(jnp.float32), m, s)
+
+
+def dorefa_quant_blocked(w, s, block_rows: int = 8):
+    """Blocked variant: 1-D grid over the leading axis.
+
+    On TPU each grid step streams a ``(block_rows, *w.shape[1:])`` tile
+    HBM→VMEM; ``block_rows`` is chosen so a tile is ≤ ~4 MiB of VMEM.
+    Requires ``w.shape[0] % block_rows == 0`` (callers pad; the production
+    path uses the whole-array variant).
+    """
+    assert w.ndim >= 1 and w.shape[0] % block_rows == 0
+    m = jnp.max(jnp.abs(jnp.tanh(w))).reshape(1)
+    m = jnp.maximum(m, 1e-12)
+    s = jnp.asarray(s, jnp.float32).reshape(1)
+    grid = (w.shape[0] // block_rows,)
+    block = (block_rows,) + w.shape[1:]
+    zeros_tail = (0,) * (w.ndim - 1)
+    return pl.pallas_call(
+        _dorefa_kernel,
+        out_shape=jax.ShapeDtypeStruct(w.shape, jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(block, lambda i: (i,) + zeros_tail),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(block, lambda i: (i,) + zeros_tail),
+        interpret=True,
+    )(w.astype(jnp.float32), m, s)

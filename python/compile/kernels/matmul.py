@@ -1,0 +1,85 @@
+"""Tiled Pallas matmul targeting the MXU systolic array.
+
+The paper's networks spend their FLOPs in conv/fc layers; on TPU those map
+to MXU matmuls. This kernel is the GEMM primitive behind the classifier
+head and the optional im2col conv path (``layers.conv2d_im2col``).
+
+Tiling: grid over (M/bm, N/bn) output tiles; the full K ("contraction")
+dimension is resident per tile — for AdaQAT's shapes K ≤ C·kh·kw ≤ 4608,
+so an (bm, K) + (K, bn) + (bm, bn) working set stays well under the
+16 MiB VMEM budget (e.g. bm=bn=128, K=4608: 4.7 MiB). Accumulation is
+f32 (``preferred_element_type``), the MXU-native accumulate.
+
+Inputs whose dims don't divide the tile are padded by the wrapper and the
+result is sliced back — mirroring how XLA pads to MXU lanes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x, y, bm: int = 128, bn: int = 128):
+    """``x @ y`` via a (M/bm, N/bn)-tiled Pallas kernel.
+
+    Args:
+      x: (M, K) float32.
+      y: (K, N) float32.
+      bm, bn: output tile sizes (MXU-shaped: multiples of 128 on TPU).
+    Returns:
+      (M, N) float32 product.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {y.shape}"
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    mp = (m + bm - 1) // bm * bm
+    np_ = (n + bn - 1) // bn * bn
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    yp = jnp.pad(y, ((0, 0), (0, np_ - n))) if np_ != n else y
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp.astype(jnp.float32), yp.astype(jnp.float32))
+    if mp != m or np_ != n:
+        out = out[:m, :n]
+    return out
+
+
+# Reverse-mode autodiff cannot see through pallas_call; the VJP of a
+# matmul is two more matmuls, so the backward pass reuses the same kernel
+# (the MXU runs fwd and bwd GEMMs alike). Tile sizes are non-diff static
+# arguments so callers can tune them per site (see layers._conv2d_im2col).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def matmul_ad(x, y, bm: int = 128, bn: int = 128):
+    """Differentiable ``x @ y`` backed by the tiled Pallas kernel."""
+    return matmul(x, y, bm, bn)
+
+
+def _matmul_ad_fwd(x, y, bm, bn):
+    return matmul(x, y, bm, bn), (x, y)
+
+
+def _matmul_ad_bwd(bm, bn, res, g):
+    x, y = res
+    return matmul(g, y.T, bm, bn), matmul(x.T, g, bm, bn)
+
+
+matmul_ad.defvjp(_matmul_ad_fwd, _matmul_ad_bwd)

@@ -1,0 +1,64 @@
+"""PACT activation quantization Pallas kernel (paper §III-A).
+
+PACT (Choi et al. 2018) replaces ReLU with a learnable clip:
+
+    y     = clip(x, 0, alpha)
+    scale = s / alpha                      # s = 2^k - 1 (runtime scalar)
+    y_q   = round(y * scale) / scale       # in [0, alpha]
+
+``alpha`` is a trained parameter (one per quantized activation site);
+``s`` is the runtime bit-width scale fed by the Rust coordinator. Both
+arrive as (1,)-shaped operands so the kernel body stays elementwise.
+
+Same two lowering variants as the DoReFa kernel (see dorefa.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pact_kernel(x_ref, a_ref, s_ref, o_ref):
+    alpha = a_ref[0]
+    y = jnp.clip(x_ref[...], 0.0, alpha)
+    scale = s_ref[0] / alpha
+    o_ref[...] = jnp.round(y * scale) / scale
+
+
+def pact_quant(x, alpha, s):
+    """Clip-and-quantize activations at runtime scale ``s = 2^k - 1``.
+
+    Args:
+      x: float32 activation tensor, any shape.
+      alpha: float32 scalar, the learned clipping level (alpha > 0).
+      s: float32 scalar, the quantization scale.
+    """
+    alpha = jnp.asarray(alpha, jnp.float32).reshape(1)
+    s = jnp.asarray(s, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _pact_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), alpha, s)
+
+
+def pact_quant_blocked(x, alpha, s, block_rows: int = 8):
+    """Blocked variant, 1-D grid over the leading (batch) axis."""
+    assert x.ndim >= 1 and x.shape[0] % block_rows == 0
+    alpha = jnp.asarray(alpha, jnp.float32).reshape(1)
+    s = jnp.asarray(s, jnp.float32).reshape(1)
+    grid = (x.shape[0] // block_rows,)
+    block = (block_rows,) + x.shape[1:]
+    zeros_tail = (0,) * (x.ndim - 1)
+    return pl.pallas_call(
+        _pact_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(block, lambda i: (i,) + zeros_tail),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(block, lambda i: (i,) + zeros_tail),
+        interpret=True,
+    )(x.astype(jnp.float32), alpha, s)

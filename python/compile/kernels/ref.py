@@ -1,0 +1,36 @@
+"""Pure-jnp correctness oracles for every Layer-1 Pallas kernel.
+
+These are the ground truth the kernels are tested against
+(``python/tests/test_kernels.py``) — straight transcriptions of the
+paper's equations with no Pallas machinery.
+"""
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, s):
+    """Eq. (1): q(x) = round(x*s)/s for x in [0, 1], s = 2^k - 1."""
+    return jnp.round(x * s) / s
+
+
+def dorefa_ref(w, s):
+    """DoReFa weight fake-quant: tanh-normalize to [0,1], quantize, expand."""
+    t = jnp.tanh(w)
+    m = jnp.maximum(jnp.max(jnp.abs(t)), 1e-12)
+    x = t / (2.0 * m) + 0.5
+    return 2.0 * quantize_ref(x, s) - 1.0
+
+
+def pact_ref(x, alpha, s):
+    """PACT activation quant: clip to [0, alpha], quantize with s/alpha."""
+    y = jnp.clip(x, 0.0, alpha)
+    scale = s / alpha
+    return jnp.round(y * scale) / scale
+
+
+def matmul_ref(x, y):
+    return jnp.dot(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,210 @@
+"""Layer-2 layer library: quantized conv / BN / residual primitives.
+
+Everything is functional: parameters live in a flat ``dict[str, Array]``
+keyed by dotted names, and each model carries an ordered spec list (built
+at model-definition time) that fixes the flattening order shared with the
+Rust side through ``artifacts/manifest.json``.
+
+Quantization policy (paper §IV-A):
+  * conv/fc weights  → DoReFa at runtime scale ``s_w`` (first & last layer
+    pinned to 8 bits, i.e. scale 255),
+  * activations      → PACT at runtime scale ``s_a`` with a learned
+    ``alpha`` per quantization site,
+  * BN parameters and ``alpha`` are never quantized.
+
+``Ctx.quant=False`` gives the fp32 baseline graph (plain ReLU, raw
+weights) used for the Table I baseline row and fine-tuning pretrains; the
+parameter set is identical so fp32 checkpoints load directly into the
+quantized graph.
+"""
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .quantizers import weight_quant, act_quant
+from .kernels import pallas_matmul_ad as pallas_matmul
+
+FIXED8_SCALE = 255.0  # 2^8 - 1: first/last layers are pinned to 8 bits.
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """One trainable tensor: its manifest identity."""
+    name: str
+    shape: Tuple[int, ...]
+    init: str   # "kaiming:<fan_in>" | "zeros" | "ones" | "const:<v>"
+    role: str   # "conv_w" | "fc_w" | "fc_b" | "bn_scale" | "bn_bias" | "alpha"
+
+    @property
+    def decayed(self) -> bool:
+        """Weight decay applies to conv/fc weights only (not BN, not alpha)."""
+        return self.role in ("conv_w", "fc_w")
+
+
+@dataclasses.dataclass
+class BnSpec:
+    """One BN running-statistic tensor (mean or var)."""
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "zeros" for means, "ones" for vars
+
+
+@dataclasses.dataclass
+class LayerGeom:
+    """Geometry needed by the Rust cost model (BitOPs eq. of §III-B, WCR)."""
+    name: str
+    kind: str          # "conv" | "fc"
+    weight_count: int  # |f| — cardinality of the filter
+    macs: int          # kh*kw*cin*cout*out_h*out_w (fc: in*out)
+    fixed8: bool       # first/last layer rule
+
+
+class Ctx:
+    """Per-forward context: params, BN state, runtime scales, mode flags."""
+
+    def __init__(self, params: Dict[str, jnp.ndarray],
+                 bn_state: Dict[str, jnp.ndarray],
+                 s_w, s_a, *, train: bool, quant: bool = True,
+                 pallas_conv: bool = False, bn_momentum: float = 0.8):
+        self.params = params
+        self.bn_state = bn_state
+        self.s_w = s_w
+        self.s_a = s_a
+        self.train = train
+        self.quant = quant
+        self.pallas_conv = pallas_conv
+        self.bn_momentum = bn_momentum
+        self.new_bn: Dict[str, jnp.ndarray] = {}
+
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+def _quantized_weight(ctx: Ctx, w, fixed8: bool):
+    if not ctx.quant:
+        return w
+    scale = FIXED8_SCALE if fixed8 else ctx.s_w
+    return weight_quant(w, scale)
+
+
+def conv2d(ctx: Ctx, name: str, x, stride: int = 1, fixed8: bool = False):
+    """3x3/1x1 'SAME' conv, NHWC, weights HWIO, DoReFa-quantized."""
+    w = _quantized_weight(ctx, ctx.params[f"{name}.w"], fixed8)
+    if ctx.pallas_conv:
+        return _conv2d_im2col(x, w, stride)
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _conv2d_im2col(x, w, stride: int):
+    """Conv as im2col + the Layer-1 Pallas matmul (the MXU mapping of the
+    paper's conv hot-spot — see DESIGN.md §8). Used by the ``*_pallas``
+    artifact variants; numerically equal to lax.conv (tested)."""
+    kh, kw, cin, cout = w.shape
+    n, h, win, _ = x.shape
+    patches = lax.conv_general_dilated_patches(
+        x, filter_shape=(kh, kw), window_strides=(stride, stride),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (N, OH, OW, cin*kh*kw), feature order: cin-major, then kh, kw
+    oh, ow = patches.shape[1], patches.shape[2]
+    cols = patches.reshape(n * oh * ow, cin * kh * kw)
+    # Patches order features as (cin, kh, kw); weights are (kh, kw, cin, co).
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+    # Perf (EXPERIMENTS.md §Perf, L1 iteration): M = N·OH·OW is huge for
+    # conv, so use tall bm tiles — fewer grid steps amortize the
+    # interpret-mode loop (and on TPU keep the MXU pipeline fed); VMEM per
+    # tile stays ≤ (512·K + K·128 + 512·128)·4B ≈ 1.5 MiB at K=576.
+    out = pallas_matmul(cols, wmat, bm=512, bn=128)
+    return out.reshape(n, oh, ow, cout)
+
+
+def batchnorm(ctx: Ctx, name: str, x, eps: float = 1e-5):
+    """BN over NHW with running stats threaded through ``ctx``.
+
+    Train: normalize with batch stats, emit updated running stats into
+    ``ctx.new_bn``. Eval: normalize with running stats (and re-emit them
+    unchanged so the output signature is mode-independent).
+    """
+    scale = ctx.params[f"{name}.scale"]
+    bias = ctx.params[f"{name}.bias"]
+    r_mean = ctx.bn_state[f"{name}.mean"]
+    r_var = ctx.bn_state[f"{name}.var"]
+    if ctx.train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        m = ctx.bn_momentum
+        ctx.new_bn[f"{name}.mean"] = m * r_mean + (1.0 - m) * mean
+        ctx.new_bn[f"{name}.var"] = m * r_var + (1.0 - m) * var
+    else:
+        mean, var = r_mean, r_var
+        ctx.new_bn[f"{name}.mean"] = r_mean
+        ctx.new_bn[f"{name}.var"] = r_var
+    inv = lax.rsqrt(var + eps)
+    return (x - mean) * (inv * scale) + bias
+
+
+def activation(ctx: Ctx, name: str, x):
+    """PACT quantized activation (quant mode) or plain ReLU (fp32 mode)."""
+    if not ctx.quant:
+        return jax.nn.relu(x)
+    alpha = ctx.params[f"{name}.alpha"]
+    return act_quant(x, alpha, ctx.s_a)
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def dense(ctx: Ctx, name: str, x, fixed8: bool = True):
+    """Classifier head: Pallas-matmul dense layer, 8-bit pinned weights."""
+    w = _quantized_weight(ctx, ctx.params[f"{name}.w"], fixed8)
+    b = ctx.params[f"{name}.b"]
+    return pallas_matmul(x, w) + b
+
+
+# --------------------------------------------------------------------------
+# Spec builder
+# --------------------------------------------------------------------------
+
+class SpecBuilder:
+    """Accumulates ParamSpec/BnSpec/LayerGeom in deterministic build order.
+
+    The order of ``self.params`` is the flattening contract with Rust.
+    """
+
+    def __init__(self):
+        self.params: List[ParamSpec] = []
+        self.bn: List[BnSpec] = []
+        self.geoms: List[LayerGeom] = []
+
+    def conv(self, name: str, kh: int, kw: int, cin: int, cout: int,
+             out_hw: Tuple[int, int], fixed8: bool = False):
+        fan_in = kh * kw * cin
+        self.params.append(ParamSpec(f"{name}.w", (kh, kw, cin, cout),
+                                     f"kaiming:{fan_in}", "conv_w"))
+        self.geoms.append(LayerGeom(
+            name, "conv", kh * kw * cin * cout,
+            kh * kw * cin * cout * out_hw[0] * out_hw[1], fixed8))
+
+    def batchnorm(self, name: str, c: int):
+        self.params.append(ParamSpec(f"{name}.scale", (c,), "ones", "bn_scale"))
+        self.params.append(ParamSpec(f"{name}.bias", (c,), "zeros", "bn_bias"))
+        self.bn.append(BnSpec(f"{name}.mean", (c,), "zeros"))
+        self.bn.append(BnSpec(f"{name}.var", (c,), "ones"))
+
+    def act(self, name: str, alpha_init: float = 10.0):
+        self.params.append(ParamSpec(f"{name}.alpha", (1,),
+                                     f"const:{alpha_init}", "alpha"))
+
+    def dense(self, name: str, cin: int, cout: int, fixed8: bool = True):
+        self.params.append(ParamSpec(f"{name}.w", (cin, cout),
+                                     f"kaiming:{cin}", "fc_w"))
+        self.params.append(ParamSpec(f"{name}.b", (cout,), "zeros", "fc_b"))
+        self.geoms.append(LayerGeom(name, "fc", cin * cout, cin * cout, fixed8))

@@ -1,0 +1,114 @@
+"""Layer-2 model zoo: ResNet-20 (CIFAR-10), ResNet-18 (ImageNet-lite),
+SmallCNN (quickstart).
+
+Each model is a ``Model`` with (a) an ordered spec list — the manifest
+contract with Rust — and (b) a pure ``forward(ctx, x) -> logits``.
+
+Per the paper (§IV-A): first and last layers are pinned to 8 bits; every
+other conv weight quantizes at the runtime scale ``s_w`` and every
+activation at ``s_a``.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+@dataclasses.dataclass
+class Model:
+    name: str
+    input_hw: Tuple[int, int]
+    in_channels: int
+    num_classes: int
+    spec: L.SpecBuilder
+    stages: List[Tuple[int, int, int]]  # (width, blocks, stride) per stage
+    stem_width: int
+
+    # ---------------------------------------------------------------- fwd
+    def forward(self, ctx: L.Ctx, x):
+        """x: (N, H, W, C) float32 → logits (N, num_classes)."""
+        h = L.conv2d(ctx, "stem", x, stride=1, fixed8=True)
+        h = L.batchnorm(ctx, "stem.bn", h)
+        h = L.activation(ctx, "stem.act", h)
+        cin = self.stem_width
+        for si, (width, blocks, stride) in enumerate(self.stages):
+            for bi in range(blocks):
+                h = self._block(ctx, f"s{si}.b{bi}", h, cin, width,
+                                stride if bi == 0 else 1)
+                cin = width
+        h = L.global_avg_pool(h)
+        return L.dense(ctx, "fc", h, fixed8=True)
+
+    def _block(self, ctx, name, x, cin, cout, stride):
+        """Basic residual block (two 3x3 convs, projection shortcut when
+        the shape changes)."""
+        h = L.conv2d(ctx, f"{name}.conv1", x, stride=stride)
+        h = L.batchnorm(ctx, f"{name}.bn1", h)
+        h = L.activation(ctx, f"{name}.act1", h)
+        h = L.conv2d(ctx, f"{name}.conv2", h, stride=1)
+        h = L.batchnorm(ctx, f"{name}.bn2", h)
+        if stride != 1 or cin != cout:
+            sc = L.conv2d(ctx, f"{name}.down", x, stride=stride)
+            sc = L.batchnorm(ctx, f"{name}.down.bn", sc)
+        else:
+            sc = x
+        return L.activation(ctx, f"{name}.act2", h + sc)
+
+
+def _build(name, input_hw, in_channels, num_classes, stem_width, stages):
+    """Register every ParamSpec/BnSpec/LayerGeom in forward-pass order."""
+    b = L.SpecBuilder()
+    h, w = input_hw
+    b.conv("stem", 3, 3, in_channels, stem_width, (h, w), fixed8=True)
+    b.batchnorm("stem.bn", stem_width)
+    b.act("stem.act")
+    cin = stem_width
+    for si, (width, blocks, stride) in enumerate(stages):
+        for bi in range(blocks):
+            st = stride if bi == 0 else 1
+            if st > 1:
+                h = (h + st - 1) // st
+                w = (w + st - 1) // st
+            n = f"s{si}.b{bi}"
+            b.conv(f"{n}.conv1", 3, 3, cin, width, (h, w))
+            b.batchnorm(f"{n}.bn1", width)
+            b.act(f"{n}.act1")
+            b.conv(f"{n}.conv2", 3, 3, width, width, (h, w))
+            b.batchnorm(f"{n}.bn2", width)
+            if st != 1 or cin != width:
+                b.conv(f"{n}.down", 1, 1, cin, width, (h, w))
+                b.batchnorm(f"{n}.down.bn", width)
+            b.act(f"{n}.act2")
+            cin = width
+    b.dense("fc", cin, num_classes, fixed8=True)
+    return Model(name, input_hw, in_channels, num_classes, b, stages,
+                 stem_width)
+
+
+def resnet20(num_classes: int = 10) -> Model:
+    """He et al.'s CIFAR ResNet-20: 3 stages of 3 basic blocks, 16/32/64."""
+    return _build("resnet20", (32, 32), 3, num_classes, 16,
+                  [(16, 3, 1), (32, 3, 2), (64, 3, 2)])
+
+
+def resnet18(num_classes: int = 100) -> Model:
+    """ResNet-18 adapted to 32x32 inputs (3x3 stem, no maxpool) for the
+    synthetic ImageNet-lite substitution (DESIGN.md §4)."""
+    return _build("resnet18", (32, 32), 3, num_classes, 64,
+                  [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)])
+
+
+def smallcnn(num_classes: int = 10) -> Model:
+    """Tiny 3-stage CNN for the quickstart example and fast tests."""
+    return _build("smallcnn", (32, 32), 3, num_classes, 8,
+                  [(8, 1, 1), (16, 1, 2), (32, 1, 2)])
+
+
+MODELS = {
+    "resnet20": resnet20,
+    "resnet18": resnet18,
+    "smallcnn": smallcnn,
+}

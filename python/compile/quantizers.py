@@ -1,0 +1,85 @@
+"""STE quantizer wrappers (paper §III-A backward rules).
+
+Forward passes call the Layer-1 Pallas kernels; backward passes implement
+the straight-through estimators:
+
+  * DoReFa weights:  round() is identity in the backward pass, the tanh
+    reparameterization *is* differentiated (max|tanh| treated constant):
+        dL/dw = dL/dw_q · (1 - tanh(w)^2) / max|tanh(w)|
+  * PACT activations:
+        dL/dx     = dL/dy_q · 1[0 ≤ x ≤ alpha]
+        dL/dalpha = Σ dL/dy_q · 1[x > alpha]
+    (the quantization rounding is again straight-through).
+
+The runtime scale ``s = 2^k - 1`` receives no gradient — in AdaQAT the
+bit-widths are optimized by the Rust coordinator's finite-difference rule
+(paper §III-C), not by backprop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dorefa_quant, pact_quant
+
+
+# --------------------------------------------------------------------------
+# DoReFa weight quantizer
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def weight_quant(w, s):
+    """Fake-quantize weights with DoReFa at runtime scale s = 2^k - 1."""
+    return dorefa_quant(w, s)
+
+
+def _weight_quant_fwd(w, s):
+    return dorefa_quant(w, s), w
+
+
+def _weight_quant_bwd(w, g):
+    t = jnp.tanh(w)
+    m = jnp.maximum(jnp.max(jnp.abs(t)), 1e-12)
+    # d/dw [ 2*(tanh(w)/(2m) + 1/2) - 1 ] = (1 - tanh^2 w)/m, round ~ id.
+    return (g * (1.0 - t * t) / m, None)
+
+
+weight_quant.defvjp(_weight_quant_fwd, _weight_quant_bwd)
+
+
+# --------------------------------------------------------------------------
+# PACT activation quantizer
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def act_quant(x, alpha, s):
+    """Clip-and-quantize activations (PACT) at runtime scale s = 2^k - 1."""
+    return pact_quant(x, alpha, s)
+
+
+def _act_quant_fwd(x, alpha, s):
+    return pact_quant(x, alpha, s), (x, alpha)
+
+
+def _act_quant_bwd(res, g):
+    x, alpha = res
+    in_range = jnp.logical_and(x >= 0.0, x <= alpha)
+    gx = jnp.where(in_range, g, 0.0)
+    galpha = jnp.sum(jnp.where(x > alpha, g, 0.0))
+    # alpha is stored as a (1,)-shaped parameter; match its shape/dtype.
+    galpha = jnp.reshape(galpha.astype(jnp.float32), jnp.shape(alpha))
+    return (gx, galpha, None)
+
+
+act_quant.defvjp(_act_quant_fwd, _act_quant_bwd)
+
+
+def bitwidth_scale(k):
+    """s = 2^k - 1 for integer bit-width k (host-side helper, mirrored in
+    rust/src/quant/mod.rs — keep the two in sync)."""
+    return float(2.0 ** k - 1.0)
+
+
+# Feeding this scale emulates "activations not quantized" (the `/32` rows
+# of Table I): 2^24 is the largest power of two for which round(x*s)/s is
+# exact in f32 arithmetic, so quantization becomes the identity.
+S_IDENTITY = float(2.0 ** 24)

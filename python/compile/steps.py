@@ -1,0 +1,122 @@
+"""Layer-2 step functions: fused train / loss-probe / eval graphs.
+
+Each step is a *flat-positional* function (so the lowered HLO has a fixed
+parameter list the Rust runtime can bind via the manifest):
+
+  train:  (P params..., P momenta..., B bn..., x, y, lr, s_w, s_a)
+          -> (P params'..., P momenta'..., B bn'..., loss, correct)
+  loss:   (P params..., B bn..., x, y, s_w, s_a) -> (loss, correct)
+          [forward-only, batch-stat BN — the finite-difference probe of
+           paper §III-C re-runs this with neighbor scales on the SAME batch]
+  eval:   same signature as loss, but running-stat BN (inference mode).
+
+The optimizer (SGD, momentum 0.9, weight decay 1e-4 on conv/fc weights —
+paper §IV-A) is fused into the train graph so one PJRT execution performs
+the whole training step; nothing round-trips to the host but the batch,
+the scalar knobs, and the (loss, correct) metrics.
+"""
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .models import Model
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 1e-4
+
+
+def _cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def _correct(logits, labels):
+    return jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+def _unflatten(names: List[str], flat):
+    return dict(zip(names, flat))
+
+
+def make_train_step(model: Model, *, quant: bool, pallas_conv: bool = False):
+    """Build the fused train step. ``quant=False`` → fp32 baseline graph."""
+    pnames = [p.name for p in model.spec.params]
+    bnames = [b.name for b in model.spec.bn]
+    decayed = {p.name: p.decayed for p in model.spec.params}
+    np_, nb = len(pnames), len(bnames)
+
+    def step(*flat):
+        params = _unflatten(pnames, flat[:np_])
+        mom = _unflatten(pnames, flat[np_:2 * np_])
+        bn = _unflatten(bnames, flat[2 * np_:2 * np_ + nb])
+        x, y, lr, s_w, s_a = flat[2 * np_ + nb:]
+
+        def loss_fn(p):
+            ctx = L.Ctx(p, bn, s_w, s_a, train=True, quant=quant,
+                        pallas_conv=pallas_conv)
+            logits = model.forward(ctx, x)
+            loss = _cross_entropy(logits, y)
+            return loss, (ctx.new_bn, _correct(logits, y))
+
+        (loss, (new_bn, correct)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+
+        outs = []
+        new_mom = {}
+        for n in pnames:
+            g = grads[n]
+            if decayed[n]:
+                g = g + WEIGHT_DECAY * params[n]
+            m = MOMENTUM * mom[n] + g
+            new_mom[n] = m
+            outs.append(params[n] - lr * m)
+        outs.extend(new_mom[n] for n in pnames)
+        outs.extend(new_bn[n] for n in bnames)
+        outs.append(loss)
+        outs.append(correct)
+        return tuple(outs)
+
+    return step
+
+
+def make_forward_step(model: Model, *, quant: bool, train_bn: bool,
+                      pallas_conv: bool = False):
+    """Loss-probe (``train_bn=True``) or eval (``train_bn=False``) graph."""
+    pnames = [p.name for p in model.spec.params]
+    bnames = [b.name for b in model.spec.bn]
+    np_, nb = len(pnames), len(bnames)
+
+    def step(*flat):
+        params = _unflatten(pnames, flat[:np_])
+        bn = _unflatten(bnames, flat[np_:np_ + nb])
+        x, y, s_w, s_a = flat[np_ + nb:]
+        ctx = L.Ctx(params, bn, s_w, s_a, train=train_bn, quant=quant,
+                    pallas_conv=pallas_conv)
+        logits = model.forward(ctx, x)
+        return (_cross_entropy(logits, y), _correct(logits, y))
+
+    return step
+
+
+def example_args(model: Model, batch: int, *, with_opt: bool,
+                 with_lr: bool):
+    """ShapeDtypeStructs matching a step's flat signature (for lowering)."""
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    args = [sds(p.shape, f32) for p in model.spec.params]
+    if with_opt:
+        args += [sds(p.shape, f32) for p in model.spec.params]
+    args += [sds(b.shape, f32) for b in model.spec.bn]
+    h, w = model.input_hw
+    args.append(sds((batch, h, w, model.in_channels), f32))
+    args.append(sds((batch,), jnp.int32))
+    if with_lr:
+        args.append(sds((), f32))
+    args.append(sds((), f32))  # s_w
+    args.append(sds((), f32))  # s_a
+    return args

@@ -1,0 +1,55 @@
+"""AOT artifacts: manifest consistency and HLO parsability."""
+
+import json
+import os
+
+import pytest
+
+from compile.models import MODELS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_models(manifest):
+    for name in ("smallcnn", "resnet20", "resnet18", "smallcnn_pallas"):
+        assert name in manifest["models"]
+
+
+def test_manifest_matches_specs(manifest):
+    for name, fn in MODELS.items():
+        m = fn()
+        mm = manifest["models"][name]
+        assert [p["name"] for p in mm["params"]] == \
+            [p.name for p in m.spec.params]
+        assert [tuple(p["shape"]) for p in mm["params"]] == \
+            [p.shape for p in m.spec.params]
+        assert [b["name"] for b in mm["bn"]] == [b.name for b in m.spec.bn]
+        assert [g["name"] for g in mm["geoms"]] == \
+            [g.name for g in m.spec.geoms]
+
+
+def test_artifact_files_exist_and_parse(manifest):
+    for name, mm in manifest["models"].items():
+        for suffix, fname in mm["artifacts"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), path
+            head = open(path).read(200)
+            assert head.startswith("HloModule"), f"{fname}: {head[:40]!r}"
+
+
+def test_geom_macs_totals(manifest):
+    """ResNet-20 ≈ 41M MACs, ResNet-18(32px) ≈ 0.56G MACs (He et al.)."""
+    r20 = sum(g["macs"] for g in manifest["models"]["resnet20"]["geoms"])
+    assert 35e6 < r20 < 50e6, r20
+    r18 = sum(g["macs"] for g in manifest["models"]["resnet18"]["geoms"])
+    assert 0.4e9 < r18 < 0.8e9, r18

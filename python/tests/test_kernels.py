@@ -1,0 +1,173 @@
+"""Layer-1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, bit-widths, clip levels and value ranges; the
+kernels must match ``ref.py`` bit-for-bit (they compute the same fp32
+expression) up to float associativity in the matmul reduction.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    dorefa_quant,
+    dorefa_quant_blocked,
+    pact_quant,
+    pact_quant_blocked,
+    pallas_matmul,
+    pallas_matmul_ad,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+BITS = st.integers(min_value=1, max_value=8)
+
+
+def scale(k: int) -> float:
+    return float(2.0 ** k - 1.0)
+
+
+# --------------------------------------------------------------------------
+# DoReFa
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(1, 6), min_size=1, max_size=4),
+    BITS,
+    st.integers(0, 2**31 - 1),
+)
+def test_dorefa_matches_ref(dims, k, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), tuple(dims)) * 2.0
+    s = scale(k)
+    np.testing.assert_allclose(
+        dorefa_quant(w, s), ref.dorefa_ref(w, s), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), BITS, st.integers(0, 2**31 - 1))
+def test_dorefa_blocked_matches_whole(blocks, k, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (blocks * 8, 3, 5))
+    s = scale(k)
+    np.testing.assert_allclose(
+        dorefa_quant_blocked(w, s, block_rows=8),
+        dorefa_quant(w, s), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(BITS, st.integers(0, 2**31 - 1))
+def test_dorefa_range_and_levels(k, seed):
+    """Output lies in [-1, 1] and takes at most 2^k distinct values."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 3.0
+    out = np.asarray(dorefa_quant(w, scale(k)))
+    assert out.min() >= -1.0 - 1e-6 and out.max() <= 1.0 + 1e-6
+    assert len(np.unique(out)) <= 2 ** k
+
+
+def test_dorefa_zero_tensor_no_nan():
+    out = np.asarray(dorefa_quant(jnp.zeros((4, 4)), 7.0))
+    assert np.isfinite(out).all()
+
+
+def test_dorefa_binary_is_sign():
+    """k=1 (s=1): DoReFa degenerates to ±1 * sign-ish mapping."""
+    w = jnp.array([-2.0, -0.1, 0.1, 2.0])
+    out = np.asarray(dorefa_quant(w, scale(1)))
+    assert set(np.unique(out)).issubset({-1.0, 0.0, 1.0})
+
+
+# --------------------------------------------------------------------------
+# PACT
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(1, 6), min_size=1, max_size=4),
+    BITS,
+    st.floats(0.5, 12.0),
+    st.integers(0, 2**31 - 1),
+)
+def test_pact_matches_ref(dims, k, alpha, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), tuple(dims)) * 4.0
+    s = scale(k)
+    np.testing.assert_allclose(
+        pact_quant(x, alpha, s), ref.pact_ref(x, alpha, s),
+        rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), BITS, st.integers(0, 2**31 - 1))
+def test_pact_blocked_matches_whole(blocks, k, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (blocks * 8, 7)) * 4.0
+    s = scale(k)
+    np.testing.assert_allclose(
+        pact_quant_blocked(x, 6.0, s, block_rows=8),
+        pact_quant(x, 6.0, s), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(BITS, st.floats(0.5, 12.0), st.integers(0, 2**31 - 1))
+def test_pact_range_and_levels(k, alpha, seed):
+    """Output lies in [0, alpha] with at most 2^k distinct levels."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 6.0
+    out = np.asarray(pact_quant(x, alpha, scale(k)))
+    assert out.min() >= 0.0 and out.max() <= alpha + 1e-5
+    assert len(np.unique(out)) <= 2 ** k
+
+
+def test_pact_negative_all_zero():
+    out = np.asarray(pact_quant(-jnp.ones((8,)), 6.0, 15.0))
+    np.testing.assert_array_equal(out, np.zeros(8))
+
+
+def test_pact_identity_scale_is_clip():
+    """Feeding s = 2^24 makes quantization the identity (DESIGN.md §6)."""
+    from compile.quantizers import S_IDENTITY
+    x = jnp.linspace(-1.0, 8.0, 97)
+    out = np.asarray(pact_quant(x, 6.0, S_IDENTITY))
+    np.testing.assert_allclose(out, np.clip(np.asarray(x), 0.0, 6.0),
+                               rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Matmul
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 200), st.integers(1, 64), st.integers(1, 150),
+    st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (m, k))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    np.testing.assert_allclose(
+        pallas_matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_tile_boundaries():
+    """Shapes exactly on / just over the 128 tile boundary."""
+    key = jax.random.PRNGKey(0)
+    for m, n in [(128, 128), (129, 127), (256, 1), (1, 256)]:
+        a = jax.random.normal(key, (m, 40))
+        b = jax.random.normal(key, (40, n))
+        np.testing.assert_allclose(
+            pallas_matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_ad_gradients():
+    """The custom VJP equals jnp.dot's gradients."""
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (17, 9))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (9, 5))
+
+    ga_p, gb_p = jax.grad(lambda a, b: jnp.sum(pallas_matmul_ad(a, b) ** 2),
+                          argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(lambda a, b: jnp.sum((a @ b) ** 2),
+                          argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_p, ga_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gb_p, gb_r, rtol=1e-4, atol=1e-4)

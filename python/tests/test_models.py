@@ -1,0 +1,112 @@
+"""Layer-2 model zoo: shapes, spec/manifest consistency, conv-path parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile.init import init_params, init_bn
+from compile.models import MODELS, resnet20, resnet18, smallcnn
+from compile.quantizers import bitwidth_scale
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_forward_shapes(name, rng):
+    m = MODELS[name]()
+    p, bn = init_params(m, rng), init_bn(m)
+    x = jax.random.normal(rng, (4, *m.input_hw, m.in_channels))
+    ctx = L.Ctx(p, bn, bitwidth_scale(4), bitwidth_scale(4), train=True)
+    logits = m.forward(ctx, x)
+    assert logits.shape == (4, m.num_classes)
+    # train-mode BN must emit one update per running stat
+    assert set(ctx.new_bn) == {b.name for b in m.spec.bn}
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_spec_names_unique_and_used(name, rng):
+    m = MODELS[name]()
+    names = [p.name for p in m.spec.params]
+    assert len(names) == len(set(names)), "duplicate param names"
+    bn_names = [b.name for b in m.spec.bn]
+    assert len(bn_names) == len(set(bn_names))
+
+
+def test_resnet20_param_count():
+    """He et al. report ~0.27M parameters for CIFAR ResNet-20."""
+    m = resnet20()
+    total = sum(int(np.prod(p.shape)) for p in m.spec.params
+                if p.role in ("conv_w", "fc_w", "fc_b"))
+    assert 0.25e6 < total < 0.32e6, total
+
+
+def test_resnet18_param_count():
+    """~11.2M conv/fc parameters for ResNet-18 (fc head differs: 100 cls)."""
+    m = resnet18()
+    total = sum(int(np.prod(p.shape)) for p in m.spec.params
+                if p.role in ("conv_w", "fc_w", "fc_b"))
+    assert 10.5e6 < total < 12.0e6, total
+
+
+def test_first_last_layer_fixed8():
+    m = resnet20()
+    geoms = {g.name: g for g in m.spec.geoms}
+    assert geoms["stem"].fixed8
+    assert geoms["fc"].fixed8
+    inner = [g for g in m.spec.geoms if g.name not in ("stem", "fc")]
+    assert inner and all(not g.fixed8 for g in inner)
+
+
+def test_macs_positive_and_scaled():
+    """Stride-2 stages see their spatial MACs shrink accordingly."""
+    m = resnet20()
+    geoms = {g.name: g for g in m.spec.geoms}
+    # s1.b0.conv1: 16->32 at 16x16; s0.b0.conv1: 16->16 at 32x32
+    assert geoms["s0.b0.conv1"].macs == 3 * 3 * 16 * 16 * 32 * 32
+    assert geoms["s1.b0.conv1"].macs == 3 * 3 * 16 * 32 * 16 * 16
+    assert all(g.macs > 0 for g in m.spec.geoms)
+
+
+def test_pallas_conv_matches_lax_conv(rng):
+    """The im2col + Pallas-matmul conv path equals lax.conv numerically."""
+    m = smallcnn()
+    p, bn = init_params(m, rng), init_bn(m)
+    x = jax.random.normal(rng, (2, 32, 32, 3))
+    sw, sa = bitwidth_scale(4), bitwidth_scale(4)
+    ctx_a = L.Ctx(p, bn, sw, sa, train=False, pallas_conv=False)
+    ctx_b = L.Ctx(p, bn, sw, sa, train=False, pallas_conv=True)
+    la = m.forward(ctx_a, x)
+    lb = m.forward(ctx_b, x)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_eval_mode_uses_running_stats(rng):
+    """Eval BN must depend on bn_state, not the batch."""
+    m = smallcnn()
+    p, bn = init_params(m, rng), init_bn(m)
+    x1 = jax.random.normal(rng, (4, 32, 32, 3))
+    x2 = x1 * 5.0 + 1.0
+    sw = sa = bitwidth_scale(8)
+    out1 = m.forward(L.Ctx(p, bn, sw, sa, train=False), x1[:1])
+    out2 = m.forward(L.Ctx(p, bn, sw, sa, train=False),
+                     jnp.concatenate([x1[:1], x2[1:]], 0))[:1]
+    np.testing.assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fp32_mode_ignores_scales(rng):
+    """quant=False graphs must not read s_w/s_a at all."""
+    m = smallcnn()
+    p, bn = init_params(m, rng), init_bn(m)
+    x = jax.random.normal(rng, (2, 32, 32, 3))
+    o1 = m.forward(L.Ctx(p, bn, 3.0, 3.0, train=False, quant=False), x)
+    o2 = m.forward(L.Ctx(p, bn, 255.0, 255.0, train=False, quant=False), x)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))

@@ -1,0 +1,87 @@
+"""STE quantizer wrappers: forward parity + the paper's backward rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.quantizers import (
+    weight_quant, act_quant, bitwidth_scale, S_IDENTITY)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_bitwidth_scale_values():
+    assert bitwidth_scale(1) == 1.0
+    assert bitwidth_scale(2) == 3.0
+    assert bitwidth_scale(8) == 255.0
+    # S_IDENTITY must round-trip floats exactly: round(x*s)/s == x.
+    x = np.float32(0.123456)
+    assert np.float32(np.round(x * S_IDENTITY) / S_IDENTITY) == pytest.approx(
+        x, abs=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_weight_quant_forward(k, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (6, 7))
+    s = bitwidth_scale(k)
+    np.testing.assert_allclose(
+        weight_quant(w, s), ref.dorefa_ref(w, s), rtol=1e-6, atol=1e-6)
+
+
+def test_weight_quant_ste_gradient():
+    """dL/dw = g * (1 - tanh^2 w)/max|tanh w| (round straight-through)."""
+    w = jnp.array([[-1.5, -0.2], [0.3, 1.1]])
+    g = jax.grad(lambda w: jnp.sum(weight_quant(w, 3.0)))(w)
+    t = np.tanh(np.asarray(w))
+    m = np.abs(t).max()
+    expected = (1.0 - t * t) / m * 2.0 / 2.0  # d(2q-1)/dx chain: 2 * 1/(2m)…
+    # full chain: out = 2*(t/(2m)+.5 rounded)-1; STE: d out/dw = (1-t^2)/m
+    expected = (1.0 - t * t) / m
+    np.testing.assert_allclose(np.asarray(g), expected, rtol=1e-5)
+
+
+def test_weight_quant_scale_gets_no_grad():
+    """Bit-widths are optimized by the Rust finite-difference rule, not SGD."""
+    w = jnp.ones((2, 2))
+    fn = lambda s: jnp.sum(weight_quant(w, s))
+    g = jax.grad(fn)(jnp.float32(3.0))
+    assert float(g) == 0.0
+
+
+def test_act_quant_ste_gradient_regions():
+    """dL/dx masks to [0, alpha]; dL/dalpha collects the over-clip mass."""
+    x = jnp.array([-1.0, 0.5, 2.0, 9.0])
+    alpha = jnp.array([6.0])
+    gx = jax.grad(lambda x: jnp.sum(act_quant(x, alpha, 15.0)))(x)
+    np.testing.assert_allclose(np.asarray(gx), [0.0, 1.0, 1.0, 0.0])
+    ga = jax.grad(lambda a: jnp.sum(act_quant(x, a, 15.0)))(alpha)
+    # only x=9.0 exceeds alpha -> gradient 1.0
+    np.testing.assert_allclose(np.asarray(ga), [1.0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.floats(0.5, 10.0), st.integers(0, 2**31 - 1))
+def test_act_quant_forward(k, alpha, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (5, 5)) * 4.0
+    s = bitwidth_scale(k)
+    np.testing.assert_allclose(
+        act_quant(x, jnp.float32(alpha), s), ref.pact_ref(x, alpha, s),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_monotone_levels_in_bitwidth():
+    """More bits ⇒ quantization error does not increase (on a fixed tensor)."""
+    w = jax.random.normal(jax.random.PRNGKey(7), (128,))
+    errs = []
+    for k in range(1, 9):
+        wq = weight_quant(w, bitwidth_scale(k))
+        # compare against the un-rounded tanh reparameterization
+        t = jnp.tanh(w)
+        m = jnp.max(jnp.abs(t))
+        target = t / m
+        errs.append(float(jnp.mean((wq - target) ** 2)))
+    assert all(errs[i] >= errs[i + 1] - 1e-9 for i in range(len(errs) - 1))

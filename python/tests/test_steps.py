@@ -1,0 +1,144 @@
+"""Fused step graphs: loss decreases, probe semantics, bit-width response.
+
+These tests exercise the exact functions that get AOT-lowered into the
+artifacts, so green here means the HLO the Rust side runs is sane.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.init import init_params, init_bn, flatten_params, flatten_bn
+from compile.models import smallcnn
+from compile.steps import make_train_step, make_forward_step, example_args
+from compile.quantizers import bitwidth_scale, S_IDENTITY
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    m = smallcnn()
+    key = jax.random.PRNGKey(0)
+    p = init_params(m, key)
+    bn = init_bn(m)
+    mom = {k: jnp.zeros_like(v) for k, v in p.items()}
+    x = jax.random.normal(key, (B, 32, 32, 3))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (B,), 0, 10)
+    return m, p, mom, bn, x, y
+
+
+def flat_train(m, p, mom, bn, x, y, lr, kw, ka):
+    return (flatten_params(m, p) + flatten_params(m, mom) + flatten_bn(m, bn)
+            + [x, y, jnp.float32(lr), jnp.float32(bitwidth_scale(kw)),
+               jnp.float32(bitwidth_scale(ka))])
+
+
+def test_train_step_decreases_loss(setup):
+    m, p, mom, bn, x, y = setup
+    step = jax.jit(make_train_step(m, quant=True))
+    np_, nb = len(m.spec.params), len(m.spec.bn)
+    flat = flat_train(m, p, mom, bn, x, y, 0.1, 4, 4)
+    losses = []
+    for _ in range(15):
+        out = step(*flat)
+        flat = list(out[:2 * np_ + nb]) + flat[2 * np_ + nb:]
+        losses.append(float(out[-2]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_fp_train_step_decreases_loss(setup):
+    m, p, mom, bn, x, y = setup
+    step = jax.jit(make_train_step(m, quant=False))
+    np_, nb = len(m.spec.params), len(m.spec.bn)
+    flat = flat_train(m, p, mom, bn, x, y, 0.1, 8, 8)
+    losses = []
+    for _ in range(15):
+        out = step(*flat)
+        flat = list(out[:2 * np_ + nb]) + flat[2 * np_ + nb:]
+        losses.append(float(out[-2]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_step_output_arity_matches_manifest_convention(setup):
+    m, p, mom, bn, x, y = setup
+    step = make_train_step(m, quant=True)
+    out = step(*flat_train(m, p, mom, bn, x, y, 0.1, 4, 4))
+    np_, nb = len(m.spec.params), len(m.spec.bn)
+    assert len(out) == 2 * np_ + nb + 2  # params', mom', bn', loss, correct
+    fwd = make_forward_step(m, quant=True, train_bn=True)
+    pr = fwd(*(flatten_params(m, p) + flatten_bn(m, bn)
+               + [x, y, jnp.float32(15.0), jnp.float32(15.0)]))
+    assert len(pr) == 2
+
+
+def test_probe_loss_worsens_at_one_bit(setup):
+    """The finite-difference signal: fewer bits ⇒ (much) higher loss on a
+    partially trained net — the mechanism AdaQAT's gradient relies on."""
+    m, p, mom, bn, x, y = setup
+    step = jax.jit(make_train_step(m, quant=True))
+    np_, nb = len(m.spec.params), len(m.spec.bn)
+    flat = flat_train(m, p, mom, bn, x, y, 0.1, 8, 8)
+    for _ in range(30):
+        out = step(*flat)
+        flat = list(out[:2 * np_ + nb]) + flat[2 * np_ + nb:]
+    probe = jax.jit(make_forward_step(m, quant=True, train_bn=True))
+    base = flat[:np_] + flat[2 * np_:2 * np_ + nb] + [x, y]
+
+    def loss_at(kw, ka):
+        return float(probe(*base, jnp.float32(bitwidth_scale(kw)),
+                           jnp.float32(bitwidth_scale(ka)))[0])
+
+    l_8 = loss_at(8, 8)
+    l_1 = loss_at(1, 8)
+    assert l_1 > l_8, (l_1, l_8)
+
+
+def test_identity_scale_equals_high_bits(setup):
+    """S_IDENTITY (the `/32` rows) ≈ 24-bit quantization ≈ no quantization."""
+    m, p, mom, bn, x, y = setup
+    probe = jax.jit(make_forward_step(m, quant=True, train_bn=True))
+    base = (flatten_params(m, p) + flatten_bn(m, bn) + [x, y])
+    l_id = float(probe(*base, jnp.float32(S_IDENTITY),
+                       jnp.float32(S_IDENTITY))[0])
+    l_16 = float(probe(*base, jnp.float32(bitwidth_scale(16)),
+                       jnp.float32(bitwidth_scale(16)))[0])
+    assert abs(l_id - l_16) < 1e-3, (l_id, l_16)
+
+
+def test_probe_deterministic(setup):
+    m, p, mom, bn, x, y = setup
+    probe = jax.jit(make_forward_step(m, quant=True, train_bn=True))
+    args = (flatten_params(m, p) + flatten_bn(m, bn)
+            + [x, y, jnp.float32(7.0), jnp.float32(7.0)])
+    a = probe(*args)
+    b = probe(*args)
+    assert float(a[0]) == float(b[0]) and float(a[1]) == float(b[1])
+
+
+def test_example_args_match_signature(setup):
+    m, *_ = setup
+    t_args = example_args(m, B, with_opt=True, with_lr=True)
+    f_args = example_args(m, B, with_opt=False, with_lr=False)
+    np_, nb = len(m.spec.params), len(m.spec.bn)
+    assert len(t_args) == 2 * np_ + nb + 5
+    assert len(f_args) == np_ + nb + 4
+    # lowering must succeed with these avals
+    jax.jit(make_train_step(m, quant=True)).lower(*t_args)
+    jax.jit(make_forward_step(m, quant=True, train_bn=False)).lower(*f_args)
+
+
+def test_weight_decay_applies_only_to_weights(setup):
+    """alpha/BN entries update only through their loss gradient — with a
+    zero-LR step nothing should move at all (wd is folded into momentum)."""
+    m, p, mom, bn, x, y = setup
+    step = jax.jit(make_train_step(m, quant=True))
+    out = step(*flat_train(m, p, mom, bn, x, y, 0.0, 4, 4))
+    np_ = len(m.spec.params)
+    for spec, new in zip(m.spec.params, out[:np_]):
+        np.testing.assert_array_equal(np.asarray(new),
+                                      np.asarray(p[spec.name]),
+                                      err_msg=spec.name)

@@ -1,0 +1,125 @@
+//! Micro benchmarks (EXPERIMENTS.md §Perf raw numbers): runtime step
+//! latencies per model/graph, data-pipeline throughput, prefetch
+//! overlap, controller overhead, checkpoint I/O.
+//!
+//! ```bash
+//! cargo bench --bench micro
+//! cargo bench --bench micro -- --iters 20 --models smallcnn,resnet20
+//! ```
+
+use std::sync::Arc;
+
+use adaqat::adaqat::{AdaQatController, Controller};
+use adaqat::coordinator::default_runtime;
+use adaqat::data::{loader::Loader, synth, DatasetKind};
+use adaqat::quant::bitwidth_scale;
+use adaqat::util::bench::{bench_args, measure};
+
+fn main() -> anyhow::Result<()> {
+    adaqat::util::logger::init();
+    let args = bench_args();
+    let iters: usize = args.get("iters", 5).map_err(|e| anyhow::anyhow!(e))?;
+    let models = args.get_str("models", "smallcnn,resnet20");
+
+    let runtime = default_runtime()?;
+
+    println!("=== runtime step latency (batch baked per artifact) ===");
+    for key in models.split(',') {
+        let rt = runtime.load_model(key)?;
+        let mut state = rt.init_state(0)?;
+        let kind = if rt.mm.num_classes == 100 {
+            DatasetKind::ImagenetLite
+        } else {
+            DatasetKind::Cifar10
+        };
+        let ds = synth::generate(kind, rt.mm.batch, 0, 0).into_shared();
+        let batch = Loader::new(ds, rt.mm.batch, false).epoch(0).remove(0);
+        let s = bitwidth_scale(4);
+
+        let st = measure(2, iters, || {
+            rt.train_step(&mut state, &batch, 0.05, s, s, false).unwrap();
+        });
+        println!("{}", st.row(&format!("{key} train_step (quant)")));
+        let sp = measure(2, iters, || {
+            rt.probe_loss(&state, &batch, s, s).unwrap();
+        });
+        println!("{}", sp.row(&format!("{key} probe_loss")));
+        let se = measure(2, iters, || {
+            rt.eval_batch(&state, &batch, s, s, false).unwrap();
+        });
+        println!("{}", se.row(&format!("{key} eval_batch")));
+        if rt.has_fp32() {
+            let sf = measure(2, iters, || {
+                rt.train_step(&mut state, &batch, 0.05, s, s, true).unwrap();
+            });
+            println!("{}", sf.row(&format!("{key} train_step (fp32)")));
+        }
+        println!(
+            "{:<34} probe/train ratio {:.2} (2 probes/step worst case adds {:.0}%)",
+            "", sp.mean_ms / st.mean_ms, 200.0 * sp.mean_ms / st.mean_ms
+        );
+    }
+
+    println!("\n=== data pipeline ===");
+    let n = 2048;
+    let gen = measure(1, 5, || {
+        let d = synth::generate(DatasetKind::Cifar10, n, 1, 0);
+        std::hint::black_box(&d.images);
+    });
+    println!(
+        "{}  ({:.0} img/s)",
+        gen.row(&format!("synth generate n={n}")),
+        n as f64 / (gen.mean_ms / 1e3)
+    );
+
+    let ds = synth::generate(DatasetKind::Cifar10, n, 1, 0).into_shared();
+    let loader = Loader::new(Arc::clone(&ds), 128, true);
+    let asm = measure(1, 5, || {
+        let batches = loader.epoch(3);
+        std::hint::black_box(batches.len());
+    });
+    println!(
+        "{}  ({:.0} img/s)",
+        asm.row("epoch assemble+augment (sync)"),
+        n as f64 / (asm.mean_ms / 1e3)
+    );
+    let pre = measure(1, 5, || {
+        let rx = loader.epoch_prefetch(3);
+        let mut count = 0;
+        for b in rx.iter() {
+            std::hint::black_box(&b.x.data);
+            count += 1;
+        }
+        std::hint::black_box(count);
+    });
+    println!("{}", pre.row("epoch via prefetch thread"));
+
+    println!("\n=== controller (pure state machine) ===");
+    let ctl = measure(10, iters.max(20), || {
+        let mut c = AdaQatController::with_defaults(8.0, 8.0, 0.15);
+        for i in 0..1000 {
+            let probes: Vec<f64> = c.probes().iter().map(|_| 1.0 + (i % 7) as f64 * 0.1).collect();
+            c.update(1.0, &probes);
+        }
+        std::hint::black_box(c.bits());
+    });
+    println!("{}  (1000 updates/iter)", ctl.row("adaqat controller x1000"));
+
+    println!("\n=== checkpoint io (resnet20-sized state) ===");
+    let rt = runtime.load_model("resnet20")?;
+    let state = rt.init_state(0)?;
+    let path = std::env::temp_dir().join("adaqat_bench.ckpt");
+    let sv = measure(1, 5, || {
+        adaqat::train::save_checkpoint(&rt, &state, adaqat::util::json::Json::Null, &path)
+            .unwrap();
+    });
+    println!("{}", sv.row("save_checkpoint (~0.3M params)"));
+    let ld = measure(1, 5, || {
+        let ck = adaqat::tensor::checkpoint::Checkpoint::load(&path).unwrap();
+        std::hint::black_box(ck.tensors.len());
+    });
+    println!("{}", ld.row("load_checkpoint"));
+    std::fs::remove_file(&path).ok();
+
+    Ok(())
+}

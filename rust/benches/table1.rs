@@ -1,0 +1,123 @@
+//! Table I reproduction: mixed-precision quantization of ResNet-20 on
+//! (synthetic) CIFAR-10 — every row family of the paper's comparison.
+//!
+//! Row mapping (paper method → our in-framework analog; the substrate is
+//! a synthetic dataset + CPU-scale schedule, so *shapes*, not absolute
+//! points, are the reproduction target — see DESIGN.md §5/E1):
+//!   baseline 32/32      → fp32 graph, from scratch
+//!   DoReFa 2/32         → fixed 2/32, from scratch
+//!   PACT 2/32           → fixed 2/32, fine-tuned
+//!   LQ-Net 3/3          → fixed 3/3, from scratch
+//!   HAWQ-V1 3.89/4      → fixed 4/4, fine-tuned
+//!   FracBits 2.00/32    → scheduled fractional 2/32, fine-tuned
+//!   Ours W/32 (ft+scr)  → AdaQAT, activations pinned at 32 (η_a = 0)
+//!   Ours W/8  (ft+scr)  → AdaQAT, activations pinned at 8
+//!   Ours W/A  (ft+scr)  → AdaQAT λ=0.15, both learned
+//!
+//! ```bash
+//! cargo bench --bench table1                      # quick defaults, ~8 min
+//! cargo bench --bench table1 -- --epochs 2 --train_size 2048   # the EXPERIMENTS.md scale
+//! ```
+
+use std::path::Path;
+
+use adaqat::config::{ControllerKind, ExperimentConfig, Scenario};
+use adaqat::coordinator::{default_runtime, ensure_fp32_pretrain, Experiment};
+use adaqat::metrics::Table;
+use adaqat::util::bench::bench_args;
+
+fn main() -> anyhow::Result<()> {
+    adaqat::util::logger::init();
+    let args = bench_args();
+    let model_key = args.get_str("model", "resnet20");
+
+    let runtime = default_runtime()?;
+    let model = runtime.load_model(&model_key)?;
+
+    let mut base = ExperimentConfig::default_for(&model_key);
+    base.epochs = 2;
+    base.train_size = 1024;
+    base.test_size = 256;
+    // CPU-scale bit-width LRs (paper's 1e-3 is a 300-epoch setting)
+    base.eta_w = 0.08;
+    base.eta_a = 0.04;
+    base.apply_args(&args).map_err(|e| anyhow::anyhow!(e))?;
+
+    let ck = ensure_fp32_pretrain(&model, &base, base.epochs, Path::new("runs/pretrained"))?;
+    let ft = || Scenario::Finetune { checkpoint: ck.clone() };
+
+    struct Row {
+        label: &'static str,
+        ctl: ControllerKind,
+        scenario: Scenario,
+        fp32: bool,
+        init_na: f64,
+        eta_a: Option<f64>,
+        lambda: f64,
+    }
+    let rows = vec![
+        Row { label: "baseline fp32", ctl: ControllerKind::Fixed { k_w: 32, k_a: 32 }, scenario: ft(), fp32: true, init_na: 32.0, eta_a: None, lambda: 0.15 },
+        Row { label: "static 2/32 scratch  [DoReFa]", ctl: ControllerKind::Fixed { k_w: 2, k_a: 32 }, scenario: Scenario::Scratch, fp32: false, init_na: 32.0, eta_a: None, lambda: 0.15 },
+        Row { label: "static 2/32 finetune [PACT]", ctl: ControllerKind::Fixed { k_w: 2, k_a: 32 }, scenario: ft(), fp32: false, init_na: 32.0, eta_a: None, lambda: 0.15 },
+        Row { label: "static 3/3 scratch   [LQ-Net]", ctl: ControllerKind::Fixed { k_w: 3, k_a: 3 }, scenario: Scenario::Scratch, fp32: false, init_na: 3.0, eta_a: None, lambda: 0.15 },
+        Row { label: "static 4/4 finetune  [HAWQ-V1]", ctl: ControllerKind::Fixed { k_w: 4, k_a: 4 }, scenario: ft(), fp32: false, init_na: 4.0, eta_a: None, lambda: 0.15 },
+        Row { label: "sched 2/32 finetune  [FracBits]", ctl: ControllerKind::FracBits { k_w_target: 2, k_a_target: 32 }, scenario: ft(), fp32: false, init_na: 32.0, eta_a: None, lambda: 0.15 },
+        Row { label: "ours W/32 finetune", ctl: ControllerKind::AdaQat, scenario: ft(), fp32: false, init_na: 32.0, eta_a: Some(0.0), lambda: 0.3 },
+        Row { label: "ours W/32 scratch", ctl: ControllerKind::AdaQat, scenario: Scenario::Scratch, fp32: false, init_na: 32.0, eta_a: Some(0.0), lambda: 0.3 },
+        Row { label: "ours W/8 finetune", ctl: ControllerKind::AdaQat, scenario: ft(), fp32: false, init_na: 8.0, eta_a: Some(0.0), lambda: 0.15 },
+        Row { label: "ours W/8 scratch", ctl: ControllerKind::AdaQat, scenario: Scenario::Scratch, fp32: false, init_na: 8.0, eta_a: Some(0.0), lambda: 0.15 },
+        Row { label: "ours W/A finetune", ctl: ControllerKind::AdaQat, scenario: ft(), fp32: false, init_na: 8.0, eta_a: None, lambda: 0.15 },
+        Row { label: "ours W/A scratch", ctl: ControllerKind::AdaQat, scenario: Scenario::Scratch, fp32: false, init_na: 8.0, eta_a: None, lambda: 0.15 },
+    ];
+
+    let mut table = Table::new(&["method", "W/A", "top-1 (%)", "dAcc", "WCR", "BitOPs (Gb)"]);
+    let mut baseline_top1: Option<f64> = None;
+    for row in rows {
+        let mut cfg = base.clone();
+        cfg.controller = row.ctl;
+        cfg.fp32 = row.fp32;
+        cfg.init_na = row.init_na;
+        if let Some(ea) = row.eta_a {
+            cfg.eta_a = ea;
+        }
+        cfg.lambda = row.lambda;
+        cfg.scenario = row.scenario;
+        if matches!(cfg.scenario, Scenario::Finetune { .. }) {
+            cfg.lr = 0.01; // paper §IV-A fine-tuning LR
+        } else {
+            // paper §IV-A: from-scratch runs get twice the epochs (300
+            // vs 150); mirror the ratio so scratch rows are comparable
+            cfg.epochs *= 2;
+        }
+        let t0 = std::time::Instant::now();
+        let result = Experiment::new(&model, cfg)?.run()?;
+        let (k_w, k_a) = result.final_bits;
+        let top1 = result.test_top1 * 100.0;
+        let dacc = baseline_top1.map(|b| format!("{:+.1}", top1 - b)).unwrap_or("-".into());
+        if row.fp32 {
+            baseline_top1 = Some(top1);
+        }
+        log::info!("{}: done in {:.0}s", row.label, t0.elapsed().as_secs_f64());
+        table.row(vec![
+            row.label.to_string(),
+            if row.fp32 { "32/32".into() } else { format!("{k_w}/{k_a}") },
+            format!("{top1:.1}"),
+            dacc,
+            if row.fp32 { "-".into() } else { format!("{:.1}x", result.wcr) },
+            format!("{:.2}", result.bitops_g),
+        ]);
+        println!("{}", table.render()); // progressive output
+    }
+
+    println!("\n=== Table I (ours, synthetic CIFAR-10, CPU-scale schedule) ===");
+    print!("{}", table.render());
+    println!(
+        "\npaper Table I reference (real CIFAR-10, 150/300 epochs):
+  baseline 32/32 92.4 | DoReFa 2/32 88.2 (-4.2) | PACT 2/32 89.7 (-2.7)
+  LQ-Net 3/3 91.6 (-0.5) | FracBits 2/32 89.6 | HAWQ-V1 3.89/4 92.2 (-0.2)
+  ours ft 2/32 92.0, 3/8 92.1, 3/4 92.2 | ours scratch 2/32 91.8, 3/8 91.8, 3/4 92.1
+expected shape: low static bits lose the most; AdaQAT rows land near
+baseline; scratch ≈ finetune; BitOPs(3/4) ≈ 5x lower than 2/32."
+    );
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Baseline bit-width policies the paper compares against (Table I):
+//!
+//! * [`FixedController`] — static uniform bit-widths; reproduces the
+//!   DoReFa/PACT/LQ-Net-style rows (e.g. 2/32, 4/4) when paired with the
+//!   same quantized training graph.
+//! * [`FracBitsController`] — a FracBits-style *scheduled* relaxation:
+//!   fractional bit-widths anneal linearly from init to target over a
+//!   warm-up fraction of the run, then stay fixed. FracBits proper
+//!   learns the relaxation with a gradient; our comparator reproduces
+//!   the schedule *shape* (gradual fractional descent, no oscillation
+//!   phase) which is what the Table I comparison exercises — documented
+//!   as a shape-level comparator in DESIGN.md §7.
+
+use super::{Controller, ProbeRequest};
+
+/// Static bit-widths (k ≥ 24 ⇒ treated as unquantized 32-bit signals).
+pub struct FixedController {
+    k_w: u32,
+    k_a: u32,
+}
+
+impl FixedController {
+    pub fn new(k_w: u32, k_a: u32) -> FixedController {
+        assert!((1..=32).contains(&k_w) && (1..=32).contains(&k_a));
+        FixedController { k_w, k_a }
+    }
+}
+
+impl Controller for FixedController {
+    fn bits(&self) -> (u32, u32) {
+        (self.k_w, self.k_a)
+    }
+
+    fn fractional(&self) -> (f64, f64) {
+        (self.k_w as f64, self.k_a as f64)
+    }
+
+    fn probes(&self) -> Vec<ProbeRequest> {
+        vec![]
+    }
+
+    fn update(&mut self, _l_cc: f64, probe_losses: &[f64]) {
+        debug_assert!(probe_losses.is_empty());
+    }
+
+    fn frozen(&self) -> (bool, bool) {
+        (true, true)
+    }
+
+    fn name(&self) -> String {
+        format!("fixed({}/{})", self.k_w, self.k_a)
+    }
+}
+
+/// Linear annealing from `init` to `target` over `anneal_updates` calls.
+pub struct FracBitsController {
+    n_w: f64,
+    n_a: f64,
+    target_w: f64,
+    target_a: f64,
+    step_w: f64,
+    step_a: f64,
+    updates_left: usize,
+}
+
+impl FracBitsController {
+    pub fn new(
+        init_nw: f64,
+        init_na: f64,
+        target_w: u32,
+        target_a: u32,
+        anneal_updates: usize,
+    ) -> FracBitsController {
+        let n = anneal_updates.max(1) as f64;
+        FracBitsController {
+            n_w: init_nw,
+            n_a: init_na,
+            target_w: target_w as f64,
+            target_a: target_a as f64,
+            step_w: (init_nw - target_w as f64) / n,
+            step_a: (init_na - target_a as f64) / n,
+            updates_left: anneal_updates.max(1),
+        }
+    }
+}
+
+impl Controller for FracBitsController {
+    fn bits(&self) -> (u32, u32) {
+        (self.n_w.ceil() as u32, self.n_a.ceil() as u32)
+    }
+
+    fn fractional(&self) -> (f64, f64) {
+        (self.n_w, self.n_a)
+    }
+
+    fn probes(&self) -> Vec<ProbeRequest> {
+        vec![]
+    }
+
+    fn update(&mut self, _l_cc: f64, _probe_losses: &[f64]) {
+        if self.updates_left == 0 {
+            return;
+        }
+        self.updates_left -= 1;
+        self.n_w = (self.n_w - self.step_w).max(self.target_w);
+        self.n_a = (self.n_a - self.step_a).max(self.target_a);
+        if self.updates_left == 0 {
+            self.n_w = self.target_w;
+            self.n_a = self.target_a;
+        }
+    }
+
+    fn frozen(&self) -> (bool, bool) {
+        (self.updates_left == 0, self.updates_left == 0)
+    }
+
+    fn name(&self) -> String {
+        format!("fracbits(→{}/{})", self.target_w, self.target_a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut c = FixedController::new(2, 32);
+        assert_eq!(c.bits(), (2, 32));
+        assert!(c.probes().is_empty());
+        c.update(5.0, &[]);
+        assert_eq!(c.bits(), (2, 32));
+        assert_eq!(c.frozen(), (true, true));
+    }
+
+    #[test]
+    #[should_panic]
+    fn fixed_rejects_zero_bits() {
+        FixedController::new(0, 4);
+    }
+
+    #[test]
+    fn fracbits_anneals_monotonically_to_target() {
+        let mut c = FracBitsController::new(8.0, 8.0, 3, 4, 20);
+        let mut prev = c.fractional();
+        for _ in 0..25 {
+            c.update(0.0, &[]);
+            let cur = c.fractional();
+            assert!(cur.0 <= prev.0 + 1e-12 && cur.1 <= prev.1 + 1e-12);
+            prev = cur;
+        }
+        assert_eq!(c.bits(), (3, 4));
+        assert_eq!(c.frozen(), (true, true));
+    }
+
+    #[test]
+    fn fracbits_exact_landing() {
+        let mut c = FracBitsController::new(8.0, 8.0, 2, 2, 7);
+        for _ in 0..7 {
+            assert_eq!(c.frozen(), (false, false));
+            c.update(0.0, &[]);
+        }
+        assert_eq!(c.fractional(), (2.0, 2.0));
+    }
+}

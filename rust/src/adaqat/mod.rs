@@ -1,0 +1,472 @@
+//! The AdaQAT bit-width controller — the paper's contribution (§III).
+//!
+//! Maintains relaxed real-valued bit-widths `N_w`, `N_a`; trains the
+//! network at the discretized `⌈N_w⌉`, `⌈N_a⌉`; estimates task-loss
+//! gradients by finite differences between ceil/floor neighbors on the
+//! same batch (eq. (3)); updates with per-axis learning rates (eq. (4));
+//! detects the oscillation regime and freezes each bit-width at the
+//! larger oscillation point after `osc_threshold` flips (Fig. 1).
+//!
+//! The controller is *pure state-machine*: it never touches the runtime.
+//! The trainer asks it which probes to run (`probes()`), executes them
+//! against the compiled loss graph, and feeds the results back
+//! (`update()`), keeping this logic independently unit- and
+//! property-testable against synthetic loss landscapes.
+
+pub mod baselines;
+
+pub use baselines::{FixedController, FracBitsController};
+
+/// Which bit-width a finite-difference probe perturbs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    Weights,
+    Activations,
+}
+
+/// A probe the trainer must run: evaluate L_task at (k_w, k_a) on the
+/// current batch. `up` marks a forward (k+1) difference — used only at
+/// the 1-bit clamp, where the paper's ceil/floor difference degenerates
+/// (see `AdaQatController::probes`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeRequest {
+    pub axis: Axis,
+    pub k_w: u32,
+    pub k_a: u32,
+    pub up: bool,
+}
+
+/// Common interface for AdaQAT and the baseline bit-width policies.
+pub trait Controller: Send {
+    /// Discretized bit-widths to train with right now (⌈N_w⌉, ⌈N_a⌉).
+    fn bits(&self) -> (u32, u32);
+    /// The relaxed fractional values (for logging/Fig. 1).
+    fn fractional(&self) -> (f64, f64);
+    /// Neighbor evaluations needed before `update` (empty = no probe).
+    fn probes(&self) -> Vec<ProbeRequest>;
+    /// Feed back the train-batch loss `l_cc` (at `bits()`) and the probe
+    /// losses, in the same order `probes()` returned them.
+    fn update(&mut self, l_cc: f64, probe_losses: &[f64]);
+    /// (weights frozen?, activations frozen?)
+    fn frozen(&self) -> (bool, bool);
+    fn osc_counts(&self) -> (usize, usize) {
+        (0, 0)
+    }
+    fn name(&self) -> String;
+}
+
+/// Per-axis adaptive state.
+#[derive(Debug, Clone)]
+struct AxisState {
+    n: f64,
+    eta: f64,
+    frozen: Option<u32>,
+    /// last observed ⌈N⌉
+    prev_ceil: u32,
+    /// direction of the last ⌈N⌉ change: -1, +1 (0 = none yet)
+    last_dir: i32,
+    /// number of direction flips observed
+    osc: usize,
+    /// the two most recent distinct ⌈N⌉ values (oscillation points)
+    osc_points: (u32, u32),
+}
+
+impl AxisState {
+    fn new(init: f64, eta: f64) -> AxisState {
+        let c = init.ceil() as u32;
+        AxisState {
+            n: init,
+            eta,
+            // η = 0 means "this axis is not learned" (e.g. the /32 rows
+            // of Table I): freeze immediately at the initial ceil.
+            frozen: if eta == 0.0 { Some(c) } else { None },
+            prev_ceil: c,
+            last_dir: 0,
+            osc: 0,
+            osc_points: (c, c),
+        }
+    }
+
+    fn ceil(&self) -> u32 {
+        match self.frozen {
+            Some(k) => k,
+            None => self.n.ceil() as u32,
+        }
+    }
+
+    fn floor(&self) -> u32 {
+        (self.n.floor() as u32).max(1)
+    }
+
+    /// Apply one gradient step; detect ceil movement + oscillation.
+    fn step(&mut self, grad: f64, osc_threshold: usize) {
+        if self.frozen.is_some() {
+            return;
+        }
+        self.n = (self.n - self.eta * grad).clamp(1.0, 32.0);
+        let c = self.n.ceil() as u32;
+        if c != self.prev_ceil {
+            let dir = if c > self.prev_ceil { 1 } else { -1 };
+            if self.last_dir != 0 && dir != self.last_dir {
+                self.osc += 1;
+                self.osc_points = (self.prev_ceil, c);
+            }
+            self.last_dir = dir;
+            self.prev_ceil = c;
+        }
+        if self.osc >= osc_threshold {
+            // freeze at the larger of the two oscillation points (Fig. 1)
+            let k = self.osc_points.0.max(self.osc_points.1);
+            self.frozen = Some(k);
+            self.n = k as f64;
+        }
+    }
+}
+
+/// The paper's adaptive controller.
+pub struct AdaQatController {
+    w: AxisState,
+    a: AxisState,
+    lambda: f64,
+    osc_threshold: usize,
+    /// Pluggable L_hard (paper §III-B product by default; the §V
+    /// future-work FPGA/energy models live in crate::quant::energy).
+    hard: Box<dyn crate::quant::HardCost>,
+}
+
+impl AdaQatController {
+    /// `eta_* = 0` pins that axis at `ceil(init_*)` for the whole run
+    /// (used for the weight-only rows of Table I, A = 32).
+    pub fn new(
+        init_nw: f64,
+        init_na: f64,
+        eta_w: f64,
+        eta_a: f64,
+        lambda: f64,
+        osc_threshold: usize,
+    ) -> AdaQatController {
+        assert!((1.0..=32.0).contains(&init_nw));
+        assert!((1.0..=32.0).contains(&init_na));
+        AdaQatController {
+            w: AxisState::new(init_nw, eta_w),
+            a: AxisState::new(init_na, eta_a),
+            lambda,
+            osc_threshold,
+            hard: Box::new(crate::quant::ProductCost),
+        }
+    }
+
+    /// Swap the hardware-loss model (builder style).
+    pub fn with_hard_cost(mut self, hard: Box<dyn crate::quant::HardCost>) -> AdaQatController {
+        self.hard = hard;
+        self
+    }
+
+    /// Paper defaults: η_w = 0.001, η_a = 0.0005, threshold 10 (§III-C).
+    pub fn with_defaults(init_nw: f64, init_na: f64, lambda: f64) -> AdaQatController {
+        AdaQatController::new(init_nw, init_na, 0.001, 0.0005, lambda, 10)
+    }
+}
+
+impl Controller for AdaQatController {
+    fn bits(&self) -> (u32, u32) {
+        (self.w.ceil(), self.a.ceil())
+    }
+
+    fn fractional(&self) -> (f64, f64) {
+        (self.w.n, self.a.n)
+    }
+
+    fn probes(&self) -> Vec<ProbeRequest> {
+        let (kw, ka) = self.bits();
+        let mut probes = vec![];
+        // A floor probe is informative only when ceil != floor; on exact
+        // integers the finite difference is zero and the hardware term
+        // alone drives the update (paper eq. (3) degenerates cleanly) —
+        // EXCEPT at the 1-bit clamp: there the hardware term would pin N
+        // at 1.0 forever because no floor exists. We instead issue a
+        // *forward* difference probe at k+1 (a deviation from the paper,
+        // which never reaches the clamp with its 1e-3 learning rates;
+        // documented in DESIGN.md §10).
+        if self.w.frozen.is_none() {
+            if self.w.floor() != kw {
+                probes.push(ProbeRequest { axis: Axis::Weights, k_w: self.w.floor(), k_a: ka, up: false });
+            } else if self.w.n <= 1.0 {
+                probes.push(ProbeRequest { axis: Axis::Weights, k_w: 2, k_a: ka, up: true });
+            }
+        }
+        if self.a.frozen.is_none() {
+            if self.a.floor() != ka {
+                probes.push(ProbeRequest { axis: Axis::Activations, k_w: kw, k_a: self.a.floor(), up: false });
+            } else if self.a.n <= 1.0 {
+                probes.push(ProbeRequest { axis: Axis::Activations, k_w: kw, k_a: 2, up: true });
+            }
+        }
+        probes
+    }
+
+    fn update(&mut self, l_cc: f64, probe_losses: &[f64]) {
+        let (kw, ka) = self.bits();
+        let requests = self.probes();
+        assert_eq!(requests.len(), probe_losses.len(), "probe arity mismatch");
+        // task-loss finite differences (0 when no probe was needed)
+        let mut g_task_w = 0.0;
+        let mut g_task_a = 0.0;
+        for (req, &l_probe) in requests.iter().zip(probe_losses) {
+            // backward: ∂L/∂N ≈ L(⌈N⌉) − L(⌊N⌋); forward (clamp): L(k+1) − L(k)
+            let g = if req.up { l_probe - l_cc } else { l_cc - l_probe };
+            match req.axis {
+                Axis::Weights => g_task_w = g,
+                Axis::Activations => g_task_a = g,
+            }
+        }
+        // eq. (3): total gradient = task finite difference + λ·∂L_hard
+        // (∂L_hard as an exact one-bit difference of the active cost
+        // model; for the paper's product model this is exactly ⌈N_a⌉ /
+        // ⌈N_w⌉).
+        let g_w = g_task_w + self.lambda * self.hard.grad_w(kw, ka);
+        let g_a = g_task_a + self.lambda * self.hard.grad_a(kw, ka);
+        self.w.step(g_w, self.osc_threshold);
+        self.a.step(g_a, self.osc_threshold);
+    }
+
+    fn frozen(&self) -> (bool, bool) {
+        (self.w.frozen.is_some(), self.a.frozen.is_some())
+    }
+
+    fn osc_counts(&self) -> (usize, usize) {
+        (self.w.osc, self.a.osc)
+    }
+
+    fn name(&self) -> String {
+        format!("adaqat(λ={})", self.lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    /// Synthetic task-loss landscape: flat above k*, steep below.
+    /// L(k_w, k_a) = exp(kw* − k_w) + exp(ka* − k_a), roughly the shape a
+    /// partially-trained network exhibits (test_steps.py measures the
+    /// real thing).
+    fn task_loss(k_w: u32, k_a: u32, kw_star: f64, ka_star: f64) -> f64 {
+        (kw_star - k_w as f64).exp() + (ka_star - k_a as f64).exp()
+    }
+
+    /// Drive a controller against the synthetic landscape until both
+    /// axes freeze (or `max_iters`).
+    fn drive(
+        c: &mut AdaQatController,
+        kw_star: f64,
+        ka_star: f64,
+        max_iters: usize,
+    ) -> usize {
+        for it in 0..max_iters {
+            let (kw, ka) = c.bits();
+            let l_cc = task_loss(kw, ka, kw_star, ka_star);
+            let probe_losses: Vec<f64> = c
+                .probes()
+                .iter()
+                .map(|p| task_loss(p.k_w, p.k_a, kw_star, ka_star))
+                .collect();
+            c.update(l_cc, &probe_losses);
+            if c.frozen() == (true, true) {
+                return it;
+            }
+        }
+        max_iters
+    }
+
+    #[test]
+    fn converges_near_optimum_and_freezes() {
+        // larger etas so the test converges in few iterations
+        let mut c = AdaQatController::new(8.0, 8.0, 0.05, 0.05, 0.15, 10);
+        let iters = drive(&mut c, 3.0, 4.0, 50_000);
+        assert!(iters < 50_000, "never froze");
+        let (kw, ka) = c.bits();
+        assert!((3..=5).contains(&kw), "kw={kw}");
+        assert!((4..=6).contains(&ka), "ka={ka}");
+        assert!(c.osc_counts().0 >= 10 || c.osc_counts().1 >= 10);
+    }
+
+    #[test]
+    fn bits_decrease_from_init_before_freezing() {
+        let mut c = AdaQatController::new(8.0, 8.0, 0.05, 0.05, 0.15, 10);
+        let (kw0, ka0) = c.bits();
+        drive(&mut c, 2.0, 3.0, 50_000);
+        let (kw, ka) = c.bits();
+        assert!(kw < kw0 && ka < ka0, "({kw},{ka}) from ({kw0},{ka0})");
+    }
+
+    #[test]
+    fn larger_lambda_more_compression() {
+        // Table III property: λ↑ ⇒ frozen bit-widths ↓ (weakly)
+        let mut frozen_bits = vec![];
+        for lambda in [0.05, 0.3, 1.5] {
+            let mut c = AdaQatController::new(8.0, 8.0, 0.05, 0.05, lambda, 10);
+            drive(&mut c, 3.0, 3.0, 50_000);
+            let (kw, ka) = c.bits();
+            frozen_bits.push(kw + ka);
+        }
+        assert!(
+            frozen_bits[0] >= frozen_bits[1] && frozen_bits[1] >= frozen_bits[2],
+            "{frozen_bits:?}"
+        );
+    }
+
+    #[test]
+    fn eta_zero_pins_axis() {
+        // the weight-only rows of Table I: activations stay at 32
+        let mut c = AdaQatController::new(8.0, 32.0, 0.05, 0.0, 0.15, 10);
+        assert_eq!(c.frozen(), (false, true));
+        drive(&mut c, 2.0, 2.0, 50_000);
+        let (_, ka) = c.bits();
+        assert_eq!(ka, 32);
+        // and no activation probes were ever requested
+        assert!(c.probes().iter().all(|p| p.axis == Axis::Weights));
+    }
+
+    #[test]
+    fn frozen_controller_stops_probing_and_moving() {
+        let mut c = AdaQatController::new(8.0, 8.0, 0.05, 0.05, 0.15, 10);
+        drive(&mut c, 3.0, 3.0, 50_000);
+        let bits = c.bits();
+        assert!(c.probes().is_empty());
+        c.update(99.0, &[]);
+        assert_eq!(c.bits(), bits);
+    }
+
+    #[test]
+    fn integer_n_requests_no_task_probe() {
+        let c = AdaQatController::new(8.0, 8.0, 0.05, 0.05, 0.15, 10);
+        // N exactly 8.0: ceil == floor == 8 → only hardware force applies
+        assert!(c.probes().is_empty());
+    }
+
+    #[test]
+    fn clamps_to_valid_range() {
+        let mut c = AdaQatController::new(1.0, 1.0, 10.0, 10.0, 100.0, 1_000_000);
+        for _ in 0..100 {
+            let probes: Vec<f64> = c.probes().iter().map(|_| 0.0).collect();
+            c.update(0.0, &probes);
+            let (nw, na) = c.fractional();
+            assert!((1.0..=32.0).contains(&nw));
+            assert!((1.0..=32.0).contains(&na));
+        }
+    }
+
+    #[test]
+    fn freeze_picks_larger_oscillation_point() {
+        let mut c = AdaQatController::new(4.0, 8.0, 0.2, 0.0, 0.15, 3);
+        // Hand-drive N_w across the 3/4 boundary repeatedly: loss favors
+        // 4 bits strongly below 4, hardware pushes down above.
+        for _ in 0..10_000 {
+            let (kw, _) = c.bits();
+            let l_cc = task_loss(kw, 32, 4.2, 0.0);
+            let probes: Vec<f64> = c
+                .probes()
+                .iter()
+                .map(|p| task_loss(p.k_w, 32, 4.2, 0.0))
+                .collect();
+            c.update(l_cc, &probes);
+            if c.frozen().0 {
+                break;
+            }
+        }
+        assert!(c.frozen().0, "never froze");
+        let (kw, _) = c.bits();
+        // oscillating between 4 and 5 → freeze at the larger = 5
+        assert!(kw == 5 || kw == 4, "kw={kw}");
+    }
+
+    #[test]
+    fn probe_arity_mismatch_panics() {
+        let result = std::panic::catch_unwind(|| {
+            let mut c = AdaQatController::new(7.5, 7.5, 0.05, 0.05, 0.15, 10);
+            c.update(1.0, &[]); // probes() is non-empty for fractional N
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn property_never_exceeds_bounds_any_landscape() {
+        check(100, 13, |rng| {
+            let mut c = AdaQatController::new(
+                1.0 + 7.0 * rng.uniform() as f64,
+                1.0 + 7.0 * rng.uniform() as f64,
+                0.1 * rng.uniform() as f64,
+                0.1 * rng.uniform() as f64,
+                rng.uniform() as f64,
+                1 + rng.below(12),
+            );
+            for _ in 0..300 {
+                let l_cc = (rng.uniform() * 5.0) as f64;
+                let probes: Vec<f64> = c
+                    .probes()
+                    .iter()
+                    .map(|_| (rng.uniform() * 5.0) as f64)
+                    .collect();
+                c.update(l_cc, &probes);
+                let (kw, ka) = c.bits();
+                prop_assert!((1..=32).contains(&kw), "kw out of range: {kw}");
+                prop_assert!((1..=32).contains(&ka), "ka out of range: {ka}");
+                let (fw, fa) = c.frozen();
+                if fw && fa {
+                    break;
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[cfg(test)]
+mod clamp_tests {
+    use super::*;
+
+    /// Landscape where 1-bit is catastrophic: the controller must escape
+    /// the 1-bit clamp via the forward probe and oscillate around 2.
+    #[test]
+    fn clamp_release_probe_escapes_one_bit() {
+        let mut c = AdaQatController::new(1.0, 8.0, 0.2, 0.0, 0.15, 1000);
+        // at the clamp, an up-probe must be requested
+        let probes = c.probes();
+        assert_eq!(probes.len(), 1);
+        assert!(probes[0].up);
+        assert_eq!(probes[0].k_w, 2);
+        // 1-bit loss 5.0 vs 2-bit loss 0.5 → strong upward pressure
+        let l = |k: u32| if k <= 1 { 5.0 } else { 0.5 / k as f64 };
+        for _ in 0..50 {
+            let (kw, _) = c.bits();
+            let pl: Vec<f64> = c.probes().iter().map(|p| l(p.k_w)).collect();
+            c.update(l(kw), &pl);
+        }
+        let (nw, _) = c.fractional();
+        assert!(nw > 1.0, "stuck at the clamp: N_w = {nw}");
+    }
+
+    #[test]
+    fn clamp_trap_oscillates_and_freezes() {
+        // steep below 2, hardware pushes down: expect oscillation around
+        // the 1/2 boundary and an eventual freeze at 2 (larger point).
+        let mut c = AdaQatController::new(3.0, 8.0, 0.25, 0.0, 0.3, 4);
+        let l = |k: u32| if k <= 1 { 6.0 } else { 0.2 };
+        for _ in 0..10_000 {
+            let (kw, _) = c.bits();
+            let pl: Vec<f64> = c.probes().iter().map(|p| l(p.k_w)).collect();
+            c.update(l(kw), &pl);
+            if c.frozen().0 {
+                break;
+            }
+        }
+        assert!(c.frozen().0, "never froze: N_w = {}", c.fractional().0);
+        let (kw, _) = c.bits();
+        // the larger oscillation point: 2 (1↔2 bouncing) or 3 if the
+        // rebound overshoots the 2-boundary before falling back
+        assert!(kw == 2 || kw == 3, "froze at {kw}");
+    }
+}

@@ -1,0 +1,284 @@
+//! Experiment configuration system.
+//!
+//! A config is a typed struct with defaults per model, overridable from
+//! (a) a `key = value` config file (TOML-subset: flat keys, `#` comments)
+//! and (b) CLI flags (`--epochs 5`). Every experiment — examples, bench
+//! harnesses, the `adaqat train` subcommand — goes through this struct,
+//! so runs are fully describable by a small text file.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::cli::Args;
+
+/// Which bit-width controller drives the run (paper §III vs baselines).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControllerKind {
+    /// The paper's method: fractional bit-widths + finite differences.
+    AdaQat,
+    /// Static bit-widths (DoReFa/PACT-style rows of Table I).
+    Fixed { k_w: u32, k_a: u32 },
+    /// FracBits-style scheduled relaxation (comparator, DESIGN.md §7).
+    FracBits { k_w_target: u32, k_a_target: u32 },
+}
+
+/// Training scenario (paper §IV: fine-tuning vs from scratch).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scenario {
+    Scratch,
+    Finetune { checkpoint: PathBuf },
+}
+
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Manifest model key: smallcnn | resnet20 | resnet18 | smallcnn_pallas.
+    pub model: String,
+    /// Dataset: "cifar10" (10-class synthetic) | "imagenet-lite" (100-class).
+    pub dataset: String,
+    pub scenario: Scenario,
+    pub controller: ControllerKind,
+    /// Run the fp32 baseline graph instead of the quantized one.
+    pub fp32: bool,
+
+    pub epochs: usize,
+    pub train_size: usize,
+    pub test_size: usize,
+    /// Initial LR; cosine-annealed to 0 over `epochs` (paper §IV-A).
+    pub lr: f64,
+    /// Hardware-loss balance λ (paper eq. (2)).
+    pub lambda: f64,
+    /// Bit-width learning rates η_w, η_a (paper §III-C defaults).
+    pub eta_w: f64,
+    pub eta_a: f64,
+    /// Initial fractional bit-widths.
+    pub init_nw: f64,
+    pub init_na: f64,
+    /// Run the finite-difference probe every this many train steps.
+    pub probe_interval: usize,
+    /// Oscillation count that freezes a bit-width (paper: 10).
+    pub osc_threshold: usize,
+
+    pub seed: u64,
+    /// Where to write metrics CSVs / checkpoints (None = no output files).
+    pub out_dir: Option<PathBuf>,
+    /// Hardware-loss model for AdaQAT (paper §III-B "product" by
+    /// default; "memory" | "fpga-dsp" | "energy" are the §V future-work
+    /// extensions implemented in quant::energy).
+    pub hard_cost: String,
+}
+
+impl ExperimentConfig {
+    /// Sensible CPU-scale defaults for a model key.
+    pub fn default_for(model: &str) -> ExperimentConfig {
+        let (dataset, train_size, test_size) = match model {
+            "resnet18" => ("imagenet-lite", 4096, 512),
+            _ => ("cifar10", 8192, 1024),
+        };
+        ExperimentConfig {
+            model: model.to_string(),
+            dataset: dataset.to_string(),
+            scenario: Scenario::Scratch,
+            controller: ControllerKind::AdaQat,
+            fp32: false,
+            epochs: 4,
+            train_size,
+            test_size,
+            lr: 0.1,
+            lambda: 0.15,
+            eta_w: 0.001,
+            eta_a: 0.0005,
+            init_nw: 8.0,
+            init_na: 8.0,
+            probe_interval: 1,
+            osc_threshold: 10,
+            seed: 0,
+            out_dir: None,
+            hard_cost: "product".to_string(),
+        }
+    }
+
+    /// Apply one `key = value` setting; returns Err for unknown keys or
+    /// unparsable values.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(k: &str, v: &str) -> Result<T, String> {
+            v.parse().map_err(|_| format!("{k}: cannot parse {v:?}"))
+        }
+        match key {
+            "model" => self.model = value.to_string(),
+            "dataset" => self.dataset = value.to_string(),
+            "fp32" => self.fp32 = p(key, value)?,
+            "epochs" => self.epochs = p(key, value)?,
+            "train_size" => self.train_size = p(key, value)?,
+            "test_size" => self.test_size = p(key, value)?,
+            "lr" => self.lr = p(key, value)?,
+            "lambda" => self.lambda = p(key, value)?,
+            "eta_w" => self.eta_w = p(key, value)?,
+            "eta_a" => self.eta_a = p(key, value)?,
+            "init_nw" => self.init_nw = p(key, value)?,
+            "init_na" => self.init_na = p(key, value)?,
+            "probe_interval" => self.probe_interval = p(key, value)?,
+            "osc_threshold" => self.osc_threshold = p(key, value)?,
+            "seed" => self.seed = p(key, value)?,
+            "out_dir" => self.out_dir = Some(PathBuf::from(value)),
+            "hard_cost" => {
+                if !["product", "memory", "fpga-dsp", "energy"].contains(&value) {
+                    return Err(format!(
+                        "hard_cost: expected product|memory|fpga-dsp|energy, got {value:?}"
+                    ));
+                }
+                self.hard_cost = value.to_string();
+            }
+            "checkpoint" => {
+                self.scenario = Scenario::Finetune { checkpoint: PathBuf::from(value) }
+            }
+            "controller" => {
+                self.controller = match value {
+                    "adaqat" => ControllerKind::AdaQat,
+                    other => {
+                        // fixed:2:32  |  fracbits:3:4
+                        let parts: Vec<&str> = other.split(':').collect();
+                        match parts.as_slice() {
+                            ["fixed", w, a] => ControllerKind::Fixed {
+                                k_w: p("k_w", w)?,
+                                k_a: p("k_a", a)?,
+                            },
+                            ["fracbits", w, a] => ControllerKind::FracBits {
+                                k_w_target: p("k_w", w)?,
+                                k_a_target: p("k_a", a)?,
+                            },
+                            _ => return Err(format!(
+                                "controller: expected adaqat|fixed:W:A|fracbits:W:A, got {value:?}"
+                            )),
+                        }
+                    }
+                }
+            }
+            _ => return Err(format!("unknown config key {key:?}")),
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines (TOML-subset; `#` comments, blank lines).
+    pub fn apply_file(&mut self, path: &Path) -> Result<(), String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{path:?}: {e}"))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("{path:?}:{}: expected key = value", lineno + 1))?;
+            self.set(k.trim(), v.trim().trim_matches('"'))
+                .map_err(|e| format!("{path:?}:{}: {e}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides for every key present in `args`.
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
+        for key in [
+            "model", "dataset", "fp32", "epochs", "train_size", "test_size",
+            "lr", "lambda", "eta_w", "eta_a", "init_nw", "init_na",
+            "probe_interval", "osc_threshold", "seed", "out_dir",
+            "checkpoint", "controller", "hard_cost",
+        ] {
+            if args.has(key) {
+                let v = args.get_str(key, "");
+                self.set(key, &v)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.epochs == 0 {
+            return Err("epochs must be >= 1".into());
+        }
+        if !(self.lr > 0.0) {
+            return Err("lr must be positive".into());
+        }
+        if self.lambda < 0.0 {
+            return Err("lambda must be >= 0".into());
+        }
+        if !(1.0..=32.0).contains(&self.init_nw) || !(1.0..=32.0).contains(&self.init_na) {
+            return Err("init_nw/init_na must be in [1, 32]".into());
+        }
+        if self.probe_interval == 0 {
+            return Err("probe_interval must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_differ_by_model() {
+        let a = ExperimentConfig::default_for("resnet20");
+        let b = ExperimentConfig::default_for("resnet18");
+        assert_eq!(a.dataset, "cifar10");
+        assert_eq!(b.dataset, "imagenet-lite");
+        assert_eq!(a.eta_w, 0.001);
+        assert_eq!(a.eta_a, 0.0005);
+        assert_eq!(a.osc_threshold, 10);
+    }
+
+    #[test]
+    fn set_and_validate() {
+        let mut c = ExperimentConfig::default_for("resnet20");
+        c.set("lambda", "0.2").unwrap();
+        c.set("controller", "fixed:2:32").unwrap();
+        assert_eq!(c.lambda, 0.2);
+        assert_eq!(c.controller, ControllerKind::Fixed { k_w: 2, k_a: 32 });
+        c.set("controller", "adaqat").unwrap();
+        assert_eq!(c.controller, ControllerKind::AdaQat);
+        assert!(c.validate().is_ok());
+        c.set("epochs", "0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad() {
+        let mut c = ExperimentConfig::default_for("resnet20");
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("epochs", "x").is_err());
+        assert!(c.set("controller", "magic").is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let mut c = ExperimentConfig::default_for("resnet20");
+        let path = std::env::temp_dir()
+            .join(format!("adaqat_cfg_{}.toml", std::process::id()));
+        std::fs::write(
+            &path,
+            "# comment\nepochs = 7\nlambda = 0.1  # inline\ncontroller = \"fracbits:3:4\"\n",
+        )
+        .unwrap();
+        c.apply_file(&path).unwrap();
+        assert_eq!(c.epochs, 7);
+        assert_eq!(c.lambda, 0.1);
+        assert_eq!(
+            c.controller,
+            ControllerKind::FracBits { k_w_target: 3, k_a_target: 4 }
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = ExperimentConfig::default_for("resnet20");
+        let args = Args::parse(
+            "--epochs 3 --lambda 0.2 --checkpoint runs/fp.ckpt"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.epochs, 3);
+        assert!(matches!(c.scenario, Scenario::Finetune { .. }));
+    }
+}

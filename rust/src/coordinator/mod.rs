@@ -1,0 +1,301 @@
+//! Experiment coordinator: turns an [`ExperimentConfig`] into a full run
+//! — dataset generation, loader setup, controller construction, optional
+//! fp32 pretraining for the fine-tuning scenario, training, and output
+//! files — so examples, the CLI, and the bench harnesses all share one
+//! entry point.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::adaqat::{AdaQatController, Controller, FixedController, FracBitsController};
+use crate::config::{ControllerKind, ExperimentConfig, Scenario};
+use crate::data::{loader::Loader, synth, Dataset, DatasetKind};
+use crate::quant::{CostModel, EnergyCost, FpgaLutCost, HardCost, MemoryCost, ProductCost};
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::tensor::checkpoint::Checkpoint;
+use crate::train::{self, RunResult};
+use crate::util::json::Json;
+
+/// A fully assembled experiment, ready to run.
+pub struct Experiment<'rt> {
+    pub rt: &'rt ModelRuntime,
+    pub cfg: ExperimentConfig,
+    pub train_loader: Loader,
+    pub test_loader: Loader,
+}
+
+/// Build the L_hard model a config names (None = no cost model needed).
+pub fn make_hard_cost(cfg: &ExperimentConfig, cost: Option<&CostModel>) -> Box<dyn HardCost> {
+    match (cfg.hard_cost.as_str(), cost) {
+        ("memory", Some(c)) => Box::new(MemoryCost::new(c)),
+        ("fpga-dsp", Some(c)) => Box::new(FpgaLutCost::new(c)),
+        ("energy", Some(c)) => Box::new(EnergyCost::new(c)),
+        _ => Box::new(ProductCost),
+    }
+}
+
+/// Build the controller an [`ExperimentConfig`] asks for. `cost` feeds
+/// the layer-aware L_hard variants (paper §V extensions).
+pub fn make_controller_with_cost(
+    cfg: &ExperimentConfig,
+    steps_per_epoch: usize,
+    cost: Option<&CostModel>,
+) -> Box<dyn Controller> {
+    match &cfg.controller {
+        ControllerKind::AdaQat => {
+            // η_a = 0 pins activations (the weight-only Table I rows are
+            // configured as init_na = 32, eta_a = 0).
+            Box::new(
+                AdaQatController::new(
+                    cfg.init_nw,
+                    cfg.init_na,
+                    cfg.eta_w,
+                    cfg.eta_a,
+                    cfg.lambda,
+                    cfg.osc_threshold,
+                )
+                .with_hard_cost(make_hard_cost(cfg, cost)),
+            )
+        }
+        ControllerKind::Fixed { k_w, k_a } => Box::new(FixedController::new(*k_w, *k_a)),
+        ControllerKind::FracBits { k_w_target, k_a_target } => {
+            // anneal over the first half of training, FracBits-style
+            let updates = (cfg.epochs * steps_per_epoch / cfg.probe_interval.max(1)) / 2;
+            Box::new(FracBitsController::new(
+                cfg.init_nw,
+                cfg.init_na,
+                *k_w_target,
+                *k_a_target,
+                updates.max(1),
+            ))
+        }
+    }
+}
+
+/// Controller with the default (paper §III-B product) hardware loss.
+pub fn make_controller(cfg: &ExperimentConfig, steps_per_epoch: usize) -> Box<dyn Controller> {
+    make_controller_with_cost(cfg, steps_per_epoch, None)
+}
+
+/// Generate the train/test splits for a config (sizes rounded down to
+/// whole batches so every PJRT execution sees a full static batch).
+pub fn make_datasets(cfg: &ExperimentConfig, batch: usize) -> (Arc<Dataset>, Arc<Dataset>) {
+    let kind = DatasetKind::parse(&cfg.dataset).expect("validated earlier");
+    let round = |n: usize| (n / batch).max(1) * batch;
+    let train = synth::generate(kind, round(cfg.train_size), cfg.seed, 0).into_shared();
+    let test = synth::generate(kind, round(cfg.test_size), cfg.seed, 1).into_shared();
+    (train, test)
+}
+
+impl<'rt> Experiment<'rt> {
+    pub fn new(rt: &'rt ModelRuntime, cfg: ExperimentConfig) -> anyhow::Result<Experiment<'rt>> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        DatasetKind::parse(&cfg.dataset).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let (train_ds, test_ds) = make_datasets(&cfg, rt.mm.batch);
+        let train_loader = Loader::new(train_ds, rt.mm.batch, true);
+        let test_loader = Loader::new(test_ds, rt.mm.batch, false);
+        Ok(Experiment { rt, cfg, train_loader, test_loader })
+    }
+
+    /// Run to completion: resolves the scenario (scratch vs fine-tune),
+    /// trains, writes metrics/checkpoints into `cfg.out_dir` if set.
+    pub fn run(&self) -> anyhow::Result<RunResult> {
+        let mut state = match &self.cfg.scenario {
+            Scenario::Scratch => self.rt.init_state(self.cfg.seed),
+            Scenario::Finetune { checkpoint } => {
+                let ck = Checkpoint::load(checkpoint)?;
+                self.rt.load_state(&ck, self.cfg.seed)
+            }
+        }?;
+        let cost = CostModel::from_manifest(&self.rt.mm);
+        let mut controller = make_controller_with_cost(
+            &self.cfg,
+            self.train_loader.batches_per_epoch(),
+            Some(&cost),
+        );
+        log::info!(
+            "experiment: model={} dataset={} controller={} scenario={:?} epochs={}",
+            self.cfg.model,
+            self.cfg.dataset,
+            controller.name(),
+            match &self.cfg.scenario {
+                Scenario::Scratch => "scratch".to_string(),
+                Scenario::Finetune { checkpoint } => format!("finetune({checkpoint:?})"),
+            },
+            self.cfg.epochs,
+        );
+        let result = train::train(
+            self.rt,
+            &self.cfg,
+            controller.as_mut(),
+            &mut state,
+            &self.train_loader,
+            &self.test_loader,
+        )?;
+        if let Some(dir) = &self.cfg.out_dir {
+            self.write_outputs(dir, &result, &state, controller.as_ref())?;
+        }
+        Ok(result)
+    }
+
+    fn write_outputs(
+        &self,
+        dir: &Path,
+        result: &RunResult,
+        state: &crate::runtime::TrainState,
+        controller: &dyn Controller,
+    ) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        train::save_trace(&result.trace, &dir.join("trace.csv"))?;
+        let mut epochs = crate::metrics::CsvWriter::create(
+            &dir.join("epochs.csv"),
+            &["epoch", "lr", "train_loss", "train_acc", "test_loss", "test_acc", "k_w", "k_a"],
+        )?;
+        for e in &result.epochs {
+            epochs.row(&[
+                e.epoch.to_string(),
+                format!("{:.6}", e.lr),
+                format!("{:.5}", e.train_loss),
+                format!("{:.4}", e.train_acc),
+                format!("{:.5}", e.test_loss),
+                format!("{:.4}", e.test_acc),
+                e.k_w.to_string(),
+                e.k_a.to_string(),
+            ])?;
+        }
+        let (k_w, k_a) = result.final_bits;
+        train::save_checkpoint(
+            self.rt,
+            state,
+            Json::obj(vec![
+                ("model", Json::str(self.cfg.model.clone())),
+                ("controller", Json::str(controller.name())),
+                ("k_w", Json::num(k_w as f64)),
+                ("k_a", Json::num(k_a as f64)),
+                ("test_top1", Json::num(result.test_top1)),
+            ]),
+            &dir.join("final.ckpt"),
+        )?;
+        Ok(())
+    }
+}
+
+/// Train (or reuse a cached) fp32 model for the fine-tuning scenario:
+/// the Table I/II "pretrained full-precision model". Cached under
+/// `cache_dir/{model}_fp32_e{epochs}_s{seed}.ckpt`.
+pub fn ensure_fp32_pretrain(
+    rt: &ModelRuntime,
+    base_cfg: &ExperimentConfig,
+    epochs: usize,
+    cache_dir: &Path,
+) -> anyhow::Result<PathBuf> {
+    let path = cache_dir.join(format!(
+        "{}_fp32_e{}_s{}.ckpt",
+        base_cfg.model, epochs, base_cfg.seed
+    ));
+    if path.exists() {
+        log::info!("reusing fp32 pretrain {path:?}");
+        return Ok(path);
+    }
+    anyhow::ensure!(rt.has_fp32(), "{}: no fp32 artifacts", base_cfg.model);
+    let mut cfg = base_cfg.clone();
+    cfg.fp32 = true;
+    cfg.epochs = epochs;
+    cfg.scenario = Scenario::Scratch;
+    cfg.out_dir = None;
+    let exp = Experiment::new(rt, cfg)?;
+    let mut state = exp.rt.init_state(exp.cfg.seed)?;
+    let mut controller = FixedController::new(32, 32);
+    let result = train::train(
+        exp.rt,
+        &exp.cfg,
+        &mut controller,
+        &mut state,
+        &exp.train_loader,
+        &exp.test_loader,
+    )?;
+    log::info!(
+        "fp32 pretrain done: test top-1 {:.3} ({} epochs)",
+        result.test_top1,
+        epochs
+    );
+    std::fs::create_dir_all(cache_dir)?;
+    train::save_checkpoint(
+        exp.rt,
+        &state,
+        Json::obj(vec![
+            ("model", Json::str(exp.cfg.model.clone())),
+            ("fp32", Json::Bool(true)),
+            ("test_top1", Json::num(result.test_top1)),
+        ]),
+        &path,
+    )?;
+    Ok(path)
+}
+
+/// Convenience used by examples/benches: open the default artifact dir
+/// (`$ADAQAT_ARTIFACTS` or `./artifacts`).
+pub fn default_runtime() -> anyhow::Result<Runtime> {
+    let dir = std::env::var("ADAQAT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    Runtime::new(Path::new(&dir))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn controller_mapping_matches_config() {
+        let mut cfg = ExperimentConfig::default_for("resnet20");
+        cfg.controller = ControllerKind::AdaQat;
+        let c = make_controller(&cfg, 100);
+        assert!(c.name().starts_with("adaqat"));
+        assert_eq!(c.bits(), (8, 8)); // ceil of default init 8/8
+
+        cfg.controller = ControllerKind::Fixed { k_w: 2, k_a: 32 };
+        let c = make_controller(&cfg, 100);
+        assert_eq!(c.bits(), (2, 32));
+        assert_eq!(c.frozen(), (true, true));
+
+        cfg.controller = ControllerKind::FracBits { k_w_target: 3, k_a_target: 4 };
+        let mut c = make_controller(&cfg, 100);
+        assert_eq!(c.bits(), (8, 8));
+        // anneal to target over half the updates
+        for _ in 0..cfg.epochs * 100 {
+            c.update(0.0, &[]);
+        }
+        assert_eq!(c.bits(), (3, 4));
+    }
+
+    #[test]
+    fn adaqat_controller_honors_eta_zero_pin() {
+        let mut cfg = ExperimentConfig::default_for("resnet20");
+        cfg.init_na = 32.0;
+        cfg.eta_a = 0.0;
+        let c = make_controller(&cfg, 10);
+        assert_eq!(c.bits().1, 32);
+        assert!(c.frozen().1);
+        assert!(!c.frozen().0);
+    }
+
+    #[test]
+    fn datasets_round_to_whole_batches() {
+        let mut cfg = ExperimentConfig::default_for("resnet20");
+        cfg.train_size = 300; // not a multiple of 128
+        cfg.test_size = 100;
+        let (train, test) = make_datasets(&cfg, 128);
+        assert_eq!(train.n, 256);
+        assert_eq!(test.n, 128); // rounded down but at least one batch
+        // splits are disjoint streams
+        assert_ne!(train.images[..3072], test.images[..3072]);
+    }
+
+    #[test]
+    fn datasets_follow_config_kind() {
+        let mut cfg = ExperimentConfig::default_for("resnet18");
+        cfg.train_size = 64;
+        cfg.test_size = 64;
+        let (train, _) = make_datasets(&cfg, 32);
+        assert_eq!(train.num_classes, 100);
+    }
+}

@@ -1,0 +1,116 @@
+//! Training-time augmentation (paper §IV-A: random resized crop +
+//! horizontal flip; here: 4-px pad-and-crop — the standard CIFAR recipe —
+//! plus horizontal flip).
+//!
+//! Operates on single NHWC images in place-free style: reads from the
+//! dataset, writes into the batch buffer, so the hot loop does zero
+//! allocation.
+
+use crate::util::rng::Rng;
+
+/// Copy `src` (h×w×c) into `dst` applying a random 4-px shift crop
+/// (zero-padded) and a 50% horizontal flip.
+pub fn crop_flip(
+    src: &[f32],
+    dst: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    rng: &mut Rng,
+    pad: usize,
+) {
+    debug_assert_eq!(src.len(), h * w * c);
+    debug_assert_eq!(dst.len(), h * w * c);
+    // shift in [-pad, +pad]
+    let dy = rng.below(2 * pad + 1) as isize - pad as isize;
+    let dx = rng.below(2 * pad + 1) as isize - pad as isize;
+    let flip = rng.bool(0.5);
+    for y in 0..h as isize {
+        let sy = y + dy;
+        for x in 0..w as isize {
+            let sx_logical = x + dx;
+            let out = ((y as usize) * w + x as usize) * c;
+            if sy < 0 || sy >= h as isize || sx_logical < 0 || sx_logical >= w as isize {
+                dst[out..out + c].fill(0.0);
+                continue;
+            }
+            let sx = if flip { w as isize - 1 - sx_logical } else { sx_logical };
+            let inp = ((sy as usize) * w + sx as usize) * c;
+            dst[out..out + c].copy_from_slice(&src[inp..inp + c]);
+        }
+    }
+}
+
+/// Identity "augmentation" for eval batches.
+pub fn copy(src: &[f32], dst: &mut [f32]) {
+    dst.copy_from_slice(src);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::prop_assert;
+
+    fn image(h: usize, w: usize, c: usize) -> Vec<f32> {
+        (0..h * w * c).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn zero_shift_no_flip_possible_identity() {
+        // With pad=0 the only shift is 0; flip is still random, so check
+        // that either identity or mirror comes out.
+        let src = image(4, 4, 1);
+        let mut dst = vec![0.0; 16];
+        let mut rng = Rng::new(1);
+        crop_flip(&src, &mut dst, 4, 4, 1, &mut rng, 0);
+        let mirrored: Vec<f32> = (0..16)
+            .map(|i| {
+                let (y, x) = (i / 4, i % 4);
+                src[y * 4 + (3 - x)]
+            })
+            .collect();
+        assert!(dst == src || dst == mirrored);
+    }
+
+    #[test]
+    fn preserves_pixel_multiset_when_unshifted() {
+        // property: with pad=0 output is a permutation of input
+        check(50, 9, |rng| {
+            let src = image(8, 8, 3);
+            let mut dst = vec![0.0; src.len()];
+            crop_flip(&src, &mut dst, 8, 8, 3, rng, 0);
+            let mut a = src.clone();
+            let mut b = dst.clone();
+            a.sort_by(f32::total_cmp);
+            b.sort_by(f32::total_cmp);
+            prop_assert!(a == b, "not a permutation");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shifted_pixels_zero_padded() {
+        // property: out-of-range source pixels become exactly 0
+        check(50, 11, |rng| {
+            let src: Vec<f32> = vec![1.0; 8 * 8 * 2];
+            let mut dst = vec![9.0; src.len()];
+            crop_flip(&src, &mut dst, 8, 8, 2, rng, 4);
+            prop_assert!(
+                dst.iter().all(|&v| v == 0.0 || v == 1.0),
+                "unexpected value"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let src = image(6, 6, 3);
+        let mut d1 = vec![0.0; src.len()];
+        let mut d2 = vec![0.0; src.len()];
+        crop_flip(&src, &mut d1, 6, 6, 3, &mut Rng::new(5), 4);
+        crop_flip(&src, &mut d2, 6, 6, 3, &mut Rng::new(5), 4);
+        assert_eq!(d1, d2);
+    }
+}

@@ -1,0 +1,163 @@
+//! Batch assembly: shuffled epoch iteration + background prefetch.
+//!
+//! The prefetch thread builds (and augments) the *next* batch while the
+//! PJRT executable runs the current one — the standard input-pipeline
+//! overlap, measured in `benches/micro.rs` and EXPERIMENTS.md §Perf.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::runtime::Batch;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+
+use super::{augment, Dataset};
+
+/// Iterates a dataset in shuffled full batches (training: drop-last).
+pub struct Loader {
+    pub dataset: Arc<Dataset>,
+    pub batch: usize,
+    pub augment: bool,
+    pub pad: usize,
+}
+
+impl Loader {
+    pub fn new(dataset: Arc<Dataset>, batch: usize, augment: bool) -> Loader {
+        assert!(batch > 0 && dataset.n >= batch, "dataset smaller than batch");
+        Loader { dataset, batch, augment, pad: 4 }
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.dataset.n / self.batch
+    }
+
+    /// Build the batch for `indices` (len == self.batch).
+    fn assemble(&self, indices: &[usize], rng: &mut Rng) -> Batch {
+        let d = &self.dataset;
+        let sz = d.sample_numel();
+        let mut x = vec![0.0f32; self.batch * sz];
+        let mut y = vec![0i32; self.batch];
+        for (bi, &i) in indices.iter().enumerate() {
+            let dst = &mut x[bi * sz..(bi + 1) * sz];
+            if self.augment {
+                augment::crop_flip(d.image(i), dst, d.h, d.w, d.c, rng, self.pad);
+            } else {
+                augment::copy(d.image(i), dst);
+            }
+            y[bi] = d.labels[i];
+        }
+        Batch {
+            x: Tensor::new(vec![self.batch, d.h, d.w, d.c], x),
+            y: IntTensor::new(vec![self.batch], y),
+        }
+    }
+
+    /// One epoch of batches, synchronously.
+    pub fn epoch(&self, epoch_seed: u64) -> Vec<Batch> {
+        self.epoch_order(epoch_seed)
+            .chunks(self.batch)
+            .filter(|c| c.len() == self.batch)
+            .map(|c| {
+                let mut rng = Rng::new(epoch_seed ^ 0xA0_61).fork(c[0] as u64);
+                self.assemble(c, &mut rng)
+            })
+            .collect()
+    }
+
+    fn epoch_order(&self, epoch_seed: u64) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.dataset.n).collect();
+        if self.augment {
+            // only shuffle the training stream
+            Rng::new(epoch_seed).shuffle(&mut order);
+        }
+        order
+    }
+
+    /// One epoch of batches, produced by a background thread into a
+    /// bounded channel (capacity 2: current + next).
+    pub fn epoch_prefetch(&self, epoch_seed: u64) -> mpsc::Receiver<Batch> {
+        let (tx, rx) = mpsc::sync_channel(2);
+        let loader = Loader {
+            dataset: Arc::clone(&self.dataset),
+            batch: self.batch,
+            augment: self.augment,
+            pad: self.pad,
+        };
+        std::thread::spawn(move || {
+            let order = loader.epoch_order(epoch_seed);
+            for c in order.chunks(loader.batch) {
+                if c.len() < loader.batch {
+                    break;
+                }
+                let mut rng = Rng::new(epoch_seed ^ 0xA0_61).fork(c[0] as u64);
+                let batch = loader.assemble(c, &mut rng);
+                if tx.send(batch).is_err() {
+                    break; // consumer dropped mid-epoch
+                }
+            }
+        });
+        rx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, DatasetKind};
+
+    fn dataset(n: usize) -> Arc<Dataset> {
+        synth::generate(DatasetKind::Cifar10, n, 1, 0).into_shared()
+    }
+
+    #[test]
+    fn full_batches_only() {
+        let l = Loader::new(dataset(70), 32, true);
+        assert_eq!(l.batches_per_epoch(), 2);
+        let batches = l.epoch(0);
+        assert_eq!(batches.len(), 2);
+        for b in &batches {
+            assert_eq!(b.x.shape, vec![32, 32, 32, 3]);
+            assert_eq!(b.y.shape, vec![32]);
+        }
+    }
+
+    #[test]
+    fn eval_loader_is_deterministic_and_ordered() {
+        let l = Loader::new(dataset(64), 32, false);
+        let a = l.epoch(0);
+        let b = l.epoch(99); // seed must not matter without augmentation
+        assert_eq!(a.len(), b.len());
+        for (ba, bb) in a.iter().zip(&b) {
+            assert_eq!(ba.x.data, bb.x.data);
+            assert_eq!(ba.y.data, bb.y.data);
+        }
+        // unshuffled: first batch labels are dataset order
+        assert_eq!(&a[0].y.data[..4], &l.dataset.labels[..4]);
+    }
+
+    #[test]
+    fn train_epochs_shuffle_differently() {
+        let l = Loader::new(dataset(128), 64, true);
+        let a = l.epoch(0);
+        let b = l.epoch(1);
+        assert_ne!(a[0].y.data, b[0].y.data);
+    }
+
+    #[test]
+    fn prefetch_matches_sync() {
+        let l = Loader::new(dataset(96), 32, true);
+        let sync: Vec<Batch> = l.epoch(5);
+        let pre: Vec<Batch> = l.epoch_prefetch(5).iter().collect();
+        assert_eq!(sync.len(), pre.len());
+        for (a, b) in sync.iter().zip(&pre) {
+            assert_eq!(a.x.data, b.x.data);
+            assert_eq!(a.y.data, b.y.data);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "smaller than batch")]
+    fn rejects_tiny_dataset() {
+        Loader::new(dataset(16), 32, false);
+    }
+}

@@ -1,0 +1,85 @@
+//! Data pipeline substrate: synthetic datasets, augmentation, batching,
+//! and background prefetch.
+//!
+//! The paper trains on CIFAR-10 and ImageNet; neither is available in
+//! this environment (repro band 0/5), so [`synth`] generates
+//! class-conditional structured images that preserve the property AdaQAT
+//! actually exercises — a CNN-learnable task whose loss measurably
+//! degrades as bit-widths shrink (DESIGN.md §4).
+
+pub mod augment;
+pub mod loader;
+pub mod synth;
+
+use std::sync::Arc;
+
+/// An in-memory image-classification dataset, NHWC f32.
+#[derive(Debug)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn sample_numel(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Borrow one sample's pixels.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let sz = self.sample_numel();
+        &self.images[i * sz..(i + 1) * sz]
+    }
+
+    pub fn into_shared(self) -> Arc<Dataset> {
+        Arc::new(self)
+    }
+}
+
+/// Dataset family selector (paper datasets → synthetic substitutes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// 10-class, 32×32×3 — the CIFAR-10 substitute.
+    Cifar10,
+    /// 100-class, 32×32×3 — the ImageNet-lite substitute.
+    ImagenetLite,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Result<DatasetKind, String> {
+        match s {
+            "cifar10" => Ok(DatasetKind::Cifar10),
+            "imagenet-lite" => Ok(DatasetKind::ImagenetLite),
+            _ => Err(format!("unknown dataset {s:?} (cifar10|imagenet-lite)")),
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        match self {
+            DatasetKind::Cifar10 => 10,
+            DatasetKind::ImagenetLite => 100,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(DatasetKind::parse("cifar10").unwrap(), DatasetKind::Cifar10);
+        assert_eq!(
+            DatasetKind::parse("imagenet-lite").unwrap(),
+            DatasetKind::ImagenetLite
+        );
+        assert!(DatasetKind::parse("mnist").is_err());
+        assert_eq!(DatasetKind::Cifar10.num_classes(), 10);
+        assert_eq!(DatasetKind::ImagenetLite.num_classes(), 100);
+    }
+}

@@ -1,0 +1,222 @@
+//! Synthetic class-conditional image generator (the CIFAR-10 / ImageNet
+//! substitution, DESIGN.md §4).
+//!
+//! Each class `c` owns a prototype: an oriented sinusoidal texture
+//! (orientation θ_c, spatial frequency f_c), a color triple, and a
+//! low-frequency blob position. Each *sample* jitters phase, position,
+//! amplitude and adds pixel noise, so the task has real intra-class
+//! variance: a linear probe tops out well below a CNN, and accuracy
+//! falls off sharply when activations/weights are quantized to very few
+//! bits — the loss-vs-bit-width trade-off AdaQAT's finite-difference
+//! gradient feeds on.
+//!
+//! Generation is deterministic per (seed, split, index) via forked RNG
+//! streams, so train/test splits never overlap and every run sees
+//! identical data.
+
+use crate::util::rng::Rng;
+
+use super::{Dataset, DatasetKind};
+
+/// Per-channel standardization constants (match the generator's output
+/// statistics; analogous to CIFAR mean/std normalization in the paper's
+/// §IV-A pipeline).
+const MEAN: f32 = 0.28;
+const STD: f32 = 0.25;
+
+/// Class prototype parameters, derived deterministically from the class id.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassProto {
+    pub theta: f32,
+    pub freq: f32,
+    pub color: [f32; 3],
+    pub blob_x: f32,
+    pub blob_y: f32,
+}
+
+pub fn class_proto(kind: DatasetKind, class: usize) -> ClassProto {
+    let nc = kind.num_classes();
+    debug_assert!(class < nc);
+    // Use a fixed RNG stream per class so prototypes are stable across
+    // dataset sizes and splits.
+    let mut r = Rng::new(0xC1A5_5E5u64 ^ ((class as u64) << 20) ^ nc as u64);
+    let golden = 0.618_034_f32;
+    ClassProto {
+        // orientations tile [0, π) with a deterministic low-discrepancy
+        // offset so nearby class ids get distant orientations
+        theta: ((class as f32 * golden) % 1.0) * std::f32::consts::PI,
+        freq: 2.0 + (class % 7) as f32 + r.uniform(),
+        color: [
+            0.45 + 0.35 * ((class * 3 + 1) % nc) as f32 / nc as f32,
+            0.45 + 0.35 * ((class * 5 + 2) % nc) as f32 / nc as f32,
+            0.45 + 0.35 * ((class * 7 + 3) % nc) as f32 / nc as f32,
+        ],
+        blob_x: 0.25 + 0.5 * r.uniform(),
+        blob_y: 0.25 + 0.5 * r.uniform(),
+    }
+}
+
+/// Render one sample into `out` (len = h*w*3, NHWC row-major).
+pub fn render_sample(
+    kind: DatasetKind,
+    class: usize,
+    rng: &mut Rng,
+    h: usize,
+    w: usize,
+    out: &mut [f32],
+) {
+    let p = class_proto(kind, class);
+    // per-sample jitter
+    let phase = rng.range(0.0, 2.0 * std::f32::consts::PI);
+    let amp = rng.range(0.5, 1.0);
+    let dx = rng.range(-0.15, 0.15);
+    let dy = rng.range(-0.15, 0.15);
+    let blob_r = rng.range(0.12, 0.22);
+    let noise_sigma = 0.28;
+    // cue jitter: orientation/frequency wobble keeps classes from being
+    // linearly separable on a single Gabor response
+    let theta = p.theta + rng.range(-0.12, 0.12);
+    let freq = p.freq + rng.range(-0.6, 0.6);
+    let (st, ct) = theta.sin_cos();
+    // distractor texture at a random orientation (shared across classes)
+    let dtheta = rng.range(0.0, std::f32::consts::PI);
+    let (dst, dct) = dtheta.sin_cos();
+    let dphase = rng.range(0.0, 2.0 * std::f32::consts::PI);
+
+    for yy in 0..h {
+        for xx in 0..w {
+            let u = xx as f32 / w as f32;
+            let v = yy as f32 / h as f32;
+            // oriented sinusoidal texture
+            let t = ((u * ct + v * st) * freq * 2.0 * std::f32::consts::PI
+                + phase)
+                .sin();
+            let d = ((u * dct + v * dst) * 4.5 * 2.0 * std::f32::consts::PI
+                + dphase)
+                .sin();
+            let tex = 0.5 + 0.5 * amp * (0.75 * t + 0.25 * d);
+            // low-frequency blob (class-positioned, sample-jittered)
+            let bx = p.blob_x + dx;
+            let by = p.blob_y + dy;
+            let d2 = (u - bx) * (u - bx) + (v - by) * (v - by);
+            let blob = (-d2 / (blob_r * blob_r)).exp();
+            let base = 0.75 * tex + 0.25 * blob;
+            let idx = (yy * w + xx) * 3;
+            for ch in 0..3 {
+                let val = (base * p.color[ch] + noise_sigma * rng.normal())
+                    .clamp(0.0, 1.0);
+                out[idx + ch] = (val - MEAN) / STD;
+            }
+        }
+    }
+}
+
+/// Build a full split. `split` ∈ {0: train, 1: test} decorrelates sample
+/// streams so splits never share pixels.
+pub fn generate(kind: DatasetKind, n: usize, seed: u64, split: u64) -> Dataset {
+    let (h, w, c) = (32usize, 32usize, 3usize);
+    let nc = kind.num_classes();
+    let mut images = vec![0.0f32; n * h * w * c];
+    let mut labels = vec![0i32; n];
+    let base = Rng::new(seed ^ (split.wrapping_mul(0x9E37_79B9_0000_0001)));
+
+    // Deterministic parallel generation: each worker renders a disjoint
+    // index range; per-sample RNG comes from fork(index) so the result
+    // is identical regardless of thread count.
+    let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    let chunk = n.div_ceil(threads);
+    let sample_sz = h * w * c;
+    std::thread::scope(|scope| {
+        for (ti, (img_chunk, lab_chunk)) in images
+            .chunks_mut(chunk * sample_sz)
+            .zip(labels.chunks_mut(chunk))
+            .enumerate()
+        {
+            let base = base.clone();
+            scope.spawn(move || {
+                for (j, (img, lab)) in img_chunk
+                    .chunks_mut(sample_sz)
+                    .zip(lab_chunk.iter_mut())
+                    .enumerate()
+                {
+                    let i = ti * chunk + j;
+                    // class-balanced round-robin labels
+                    let class = i % nc;
+                    *lab = class as i32;
+                    let mut rng = base.fork(i as u64);
+                    render_sample(kind, class, &mut rng, h, w, img);
+                }
+            });
+        }
+    });
+
+    Dataset { images, labels, n, h, w, c, num_classes: nc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = generate(DatasetKind::Cifar10, 64, 7, 0);
+        let b = generate(DatasetKind::Cifar10, 64, 7, 0);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let a = generate(DatasetKind::Cifar10, 32, 7, 0);
+        let b = generate(DatasetKind::Cifar10, 32, 7, 1);
+        assert_ne!(a.images, b.images);
+    }
+
+    #[test]
+    fn prefix_stable_under_size() {
+        // growing the dataset must not change earlier samples
+        let a = generate(DatasetKind::Cifar10, 16, 3, 0);
+        let b = generate(DatasetKind::Cifar10, 64, 3, 0);
+        assert_eq!(a.images[..], b.images[..a.images.len()]);
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let d = generate(DatasetKind::Cifar10, 100, 1, 0);
+        for c in 0..10 {
+            assert_eq!(d.labels.iter().filter(|&&l| l == c).count(), 10);
+        }
+    }
+
+    #[test]
+    fn pixel_stats_standardized() {
+        let d = generate(DatasetKind::Cifar10, 256, 5, 0);
+        let mean = d.images.iter().sum::<f32>() / d.images.len() as f32;
+        let var = d.images.iter().map(|x| (x - mean).powi(2)).sum::<f32>()
+            / d.images.len() as f32;
+        assert!(mean.abs() < 0.3, "mean {mean}");
+        assert!((0.3..3.0).contains(&var), "var {var}");
+        assert!(d.images.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean inter-class L2 distance must dominate intra-class distance
+        let d = generate(DatasetKind::Cifar10, 200, 2, 0);
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>()
+        };
+        // samples 0,10,20 are class 0; 1,11 class 1 (round-robin labels)
+        let intra = dist(d.image(0), d.image(10)) + dist(d.image(0), d.image(20));
+        let inter = dist(d.image(0), d.image(1)) + dist(d.image(0), d.image(5));
+        assert!(inter > intra * 0.5, "inter {inter} intra {intra}");
+    }
+
+    #[test]
+    fn imagenet_lite_has_100_classes() {
+        let d = generate(DatasetKind::ImagenetLite, 200, 1, 0);
+        let max = *d.labels.iter().max().unwrap();
+        assert_eq!(d.num_classes, 100);
+        assert_eq!(max, 99);
+    }
+}

@@ -1,0 +1,27 @@
+//! # AdaQAT — Adaptive Bit-Width Quantization-Aware Training
+//!
+//! Full-system reproduction of *AdaQAT* (Gernigon et al., 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time)** — Pallas quantizer kernels + JAX model
+//!   graphs, AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **Layer 3 (this crate)** — the coordinator that *is* the paper's
+//!   contribution: the adaptive bit-width controller ([`adaqat`]), the
+//!   training orchestrator ([`train`]), the synthetic data pipeline
+//!   ([`data`]), the hardware cost model ([`quant`]), and the PJRT
+//!   runtime ([`runtime`]) that executes the compiled artifacts. Python
+//!   never runs on the training path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod adaqat;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

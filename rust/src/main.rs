@@ -1,0 +1,188 @@
+//! `adaqat` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   train      run one experiment from flags / --config file
+//!   eval       evaluate a checkpoint on the test split
+//!   pretrain   produce an fp32 checkpoint for the fine-tuning scenario
+//!   inspect    print manifest + cost-model facts for a model
+//!
+//! Examples:
+//!   adaqat train --model resnet20 --controller adaqat --lambda 0.15 \
+//!                --epochs 4 --out_dir runs/demo
+//!   adaqat pretrain --model resnet20 --epochs 3
+//!   adaqat eval --model resnet20 --checkpoint runs/demo/final.ckpt
+
+use std::path::{Path, PathBuf};
+
+use adaqat::adaqat::FixedController;
+use adaqat::config::ExperimentConfig;
+use adaqat::coordinator::{self, Experiment};
+use adaqat::quant::CostModel;
+use adaqat::tensor::checkpoint::Checkpoint;
+use adaqat::util::cli::Args;
+
+const KNOWN_FLAGS: &[&str] = &[
+    "model", "dataset", "fp32", "epochs", "train_size", "test_size", "lr",
+    "lambda", "eta_w", "eta_a", "init_nw", "init_na", "probe_interval",
+    "osc_threshold", "seed", "out_dir", "checkpoint", "controller",
+    "hard_cost", "config", "help",
+];
+
+fn main() {
+    adaqat::util::logger::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    if args.has("help") || cmd == "help" {
+        print_help();
+        return Ok(());
+    }
+    args.reject_unknown(KNOWN_FLAGS).map_err(|e| anyhow::anyhow!(e))?;
+    match cmd {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "inspect" => cmd_inspect(&args),
+        other => anyhow::bail!("unknown command {other:?} (try `adaqat help`)"),
+    }
+}
+
+fn config_from(args: &Args) -> anyhow::Result<ExperimentConfig> {
+    let model = args.get_str("model", "resnet20");
+    let mut cfg = ExperimentConfig::default_for(&model);
+    if args.has("config") {
+        cfg.apply_file(Path::new(&args.get_str("config", "")))
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    cfg.apply_args(args).map_err(|e| anyhow::anyhow!(e))?;
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let rt = coordinator::default_runtime()?;
+    let model_rt = rt.load_model(&cfg.model)?;
+    let exp = Experiment::new(&model_rt, cfg)?;
+    let result = exp.run()?;
+    let (k_w, k_a) = result.final_bits;
+    println!("final bits:   {k_w}/{k_a}");
+    println!("test top-1:   {:.2}%", result.test_top1 * 100.0);
+    println!("WCR:          {:.1}x", result.wcr);
+    println!("BitOPs:       {:.2} Gb", result.bitops_g);
+    println!(
+        "wall:         {:.1}s ({} steps, {:.0} ms/step)",
+        result.wall_seconds,
+        result.steps,
+        result.step_seconds * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    anyhow::ensure!(args.has("checkpoint"), "eval requires --checkpoint");
+    let ck_path = PathBuf::from(args.get_str("checkpoint", ""));
+    let rt = coordinator::default_runtime()?;
+    let model_rt = rt.load_model(&cfg.model)?;
+    let ck = Checkpoint::load(&ck_path)?;
+    let k_w = ck.meta.get("k_w").and_then(|j| j.as_f64()).unwrap_or(32.0) as u32;
+    let k_a = ck.meta.get("k_a").and_then(|j| j.as_f64()).unwrap_or(32.0) as u32;
+    let state = model_rt.load_state(&ck, cfg.seed)?;
+    let exp = Experiment::new(&model_rt, cfg)?;
+    let controller = FixedController::new(k_w, k_a);
+    let (loss, acc) = adaqat::train::evaluate(
+        &model_rt,
+        &state,
+        &exp.test_loader,
+        &controller,
+        exp.cfg.fp32,
+    )?;
+    println!("checkpoint:  {ck_path:?} (bits {k_w}/{k_a})");
+    println!("test loss:   {loss:.4}");
+    println!("test top-1:  {:.2}%", acc * 100.0);
+    Ok(())
+}
+
+fn cmd_pretrain(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let rt = coordinator::default_runtime()?;
+    let model_rt = rt.load_model(&cfg.model)?;
+    let path = coordinator::ensure_fp32_pretrain(
+        &model_rt,
+        &cfg,
+        cfg.epochs,
+        Path::new("runs/pretrained"),
+    )?;
+    println!("fp32 checkpoint: {}", path.display());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let rt = coordinator::default_runtime()?;
+    let mm = rt.manifest.model(&cfg.model)?;
+    let cost = CostModel::from_manifest(mm);
+    println!("model:        {}", mm.key);
+    println!("batch:        {}", mm.batch);
+    println!(
+        "input:        {}x{}x{} -> {} classes",
+        mm.input_hw.0, mm.input_hw.1, mm.in_channels, mm.num_classes
+    );
+    println!("params:       {} tensors, {} scalars", mm.params.len(), mm.param_count());
+    println!("weights:      {} scalars", mm.weight_count());
+    println!("bn tensors:   {}", mm.bn.len());
+    println!("layers:       {}", mm.geoms.len());
+    println!("total MACs:   {:.1}M", cost.total_macs() as f64 / 1e6);
+    println!("artifacts:    {:?}", mm.artifacts.keys().collect::<Vec<_>>());
+    println!();
+    println!("cost model (paper §III-B):");
+    for (k_w, k_a) in [(32, 32), (8, 8), (4, 4), (3, 4), (3, 8), (2, 32)] {
+        println!(
+            "  W{k_w:>2}/A{k_a:>2}:  BitOPs {:7.2} Gb   WCR {:5.1}x",
+            cost.bitops_g(k_w, k_a),
+            cost.wcr(k_w)
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "adaqat — AdaQAT: Adaptive Bit-Width Quantization-Aware Training
+
+USAGE: adaqat <train|eval|pretrain|inspect> [--flags]
+
+COMMANDS
+  train     run one experiment (controller: adaqat | fixed:W:A | fracbits:W:A)
+  eval      evaluate --checkpoint on the test split
+  pretrain  produce an fp32 checkpoint (fine-tuning scenario)
+  inspect   print manifest + cost model for --model
+
+COMMON FLAGS
+  --model NAME          smallcnn | resnet20 | resnet18 | smallcnn_pallas
+  --config FILE         key = value config file (flags override it)
+  --controller SPEC     adaqat | fixed:2:32 | fracbits:3:4   [adaqat]
+  --lambda F            hardware-loss balance λ              [0.15]
+  --epochs N            training epochs                      [4]
+  --lr F                initial LR (cosine annealed)         [0.1]
+  --eta_w F / --eta_a F bit-width learning rates             [0.001/0.0005]
+  --init_nw F / --init_na F  initial fractional bit-widths   [8/8]
+  --checkpoint FILE     fine-tune from / evaluate this checkpoint
+  --fp32 BOOL           run the fp32 baseline graph          [false]
+  --train_size/--test_size N  synthetic split sizes
+  --probe_interval N    steps between bit-width probes       [1]
+  --osc_threshold N     oscillations before freezing         [10]
+  --hard_cost M         L_hard model: product | memory | fpga-dsp | energy
+  --seed N / --out_dir DIR
+
+Artifacts are loaded from $ADAQAT_ARTIFACTS (default ./artifacts);
+build them with `make artifacts`."
+    );
+}

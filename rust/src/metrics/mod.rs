@@ -1,0 +1,174 @@
+//! Metrics output: CSV writers, aligned report tables, ASCII plots
+//! (used by the Fig. 1 bench to render the bit-width staircase).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Append-style CSV writer with a fixed header.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, columns: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            values.len() == self.columns,
+            "row has {} values, header has {}",
+            values.len(),
+            self.columns
+        );
+        writeln!(self.file, "{}", values.join(","))?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Build an aligned text table (the bench harnesses print these in the
+/// papers' row order).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, values: Vec<String>) {
+        assert_eq!(values.len(), self.header.len());
+        self.rows.push(values);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, v) in row.iter().enumerate() {
+                widths[i] = widths[i].max(v.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render one or more named series as a compact ASCII chart (Fig. 1).
+pub fn ascii_plot(series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    let glyphs = ['*', '+', 'o', 'x', '#'];
+    let n = series.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+    if n == 0 {
+        return String::new();
+    }
+    let lo = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .fold(f64::INFINITY, f64::min);
+    let hi = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-9);
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        for (i, &v) in s.iter().enumerate() {
+            let x = i * (width - 1) / (n - 1).max(1);
+            let y = ((v - lo) / span * (height - 1) as f64).round() as usize;
+            let y = height - 1 - y.min(height - 1);
+            grid[y][x] = glyphs[si % glyphs.len()];
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{hi:9.3} |")
+        } else if i == height - 1 {
+            format!("{lo:9.3} |")
+        } else {
+            "          |".to_string()
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("           ");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", glyphs[i % glyphs.len()], name))
+        .collect();
+    out.push_str(&format!("           {}\n", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("adaqat_csv_{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "2".into()]).unwrap();
+            assert!(w.row(&["only-one".into()]).is_err());
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn table_aligns() {
+        let mut t = Table::new(&["method", "top1"]);
+        t.row(vec!["baseline".into(), "92.4".into()]);
+        t.row(vec!["ours".into(), "92.2".into()]);
+        let r = t.render();
+        assert!(r.contains("method"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].find("92.4"), lines[3].find("92.2"));
+    }
+
+    #[test]
+    fn plot_contains_series_extremes() {
+        let s1: Vec<f64> = (0..50).map(|i| (i as f64 / 10.0).sin()).collect();
+        let s2: Vec<f64> = (0..50).map(|i| i as f64 / 50.0).collect();
+        let p = ascii_plot(&[("sin", &s1), ("ramp", &s2)], 60, 12);
+        assert!(p.contains('*') && p.contains('+'));
+        assert!(p.contains("sin") && p.contains("ramp"));
+        assert!(p.lines().count() >= 13);
+    }
+
+    #[test]
+    fn plot_empty_ok() {
+        assert_eq!(ascii_plot(&[], 10, 5), "");
+    }
+}

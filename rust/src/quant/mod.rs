@@ -1,0 +1,173 @@
+//! Quantization math + the hardware cost model (paper §III-B).
+//!
+//! * `bitwidth_scale` — s = 2^k − 1, the runtime scalar fed to the
+//!   compiled graphs (re-exported from [`crate::runtime`]).
+//! * [`CostModel`] — BitOPs and weight-compression-rate computed from the
+//!   per-layer geometry the AOT manifest ships (FracBits eqs. (4)–(5),
+//!   as adopted by the paper): for a conv filter f,
+//!   `BitOPs(f) = ⌈N_w⌉·⌈N_a⌉·|f|·w_f·h_f/s_f²` — i.e. MACs × N_w × N_a,
+//!   with first/last layers pinned at 8 bits.
+//! * `hard_loss` — the paper's network-level simplification
+//!   `L_hard = ⌈N_w⌉·⌈N_a⌉` (one bit-width per weights/activations).
+
+pub mod energy;
+
+use crate::runtime::manifest::ModelManifest;
+
+pub use crate::runtime::{bitwidth_scale, S_IDENTITY};
+pub use energy::{EnergyCost, FpgaLutCost, HardCost, MemoryCost, ProductCost};
+
+/// Bits used to report "unquantized" signals in tables (fp32 baseline).
+pub const FP_BITS: u32 = 32;
+
+/// Per-layer cost inputs, extracted from the manifest.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    layers: Vec<(usize, usize, bool)>, // (weight_count, macs, fixed8)
+}
+
+impl CostModel {
+    pub fn from_manifest(mm: &ModelManifest) -> CostModel {
+        CostModel {
+            layers: mm
+                .geoms
+                .iter()
+                .map(|g| (g.weight_count, g.macs, g.fixed8))
+                .collect(),
+        }
+    }
+
+    /// Synthetic cost model for unit tests / simulations.
+    pub fn from_layers(layers: Vec<(usize, usize, bool)>) -> CostModel {
+        CostModel { layers }
+    }
+
+    /// Total BitOPs in Gbit-ops for network-wide bit-widths (k_w, k_a).
+    /// Fixed-8 layers (first/last, paper §IV-A) contribute at 8×8
+    /// regardless; `k >= 24` means "unquantized" and is charged 32 bits
+    /// (matching how Table I reports the `/32` rows).
+    pub fn bitops_g(&self, k_w: u32, k_a: u32) -> f64 {
+        let eff = |k: u32| -> f64 {
+            if k >= 24 {
+                32.0
+            } else {
+                k as f64
+            }
+        };
+        let mut total = 0.0f64;
+        for &(_, macs, fixed8) in &self.layers {
+            let (w, a) = if fixed8 { (8.0, 8.0) } else { (eff(k_w), eff(k_a)) };
+            total += macs as f64 * w * a;
+        }
+        total / 1e9
+    }
+
+    /// Weight compression rate vs fp32: 32 / (weighted mean weight bits).
+    pub fn wcr(&self, k_w: u32) -> f64 {
+        let mut bits = 0.0f64;
+        let mut count = 0.0f64;
+        for &(wc, _, fixed8) in &self.layers {
+            let k = if fixed8 { 8.0 } else if k_w >= 24 { 32.0 } else { k_w as f64 };
+            bits += wc as f64 * k;
+            count += wc as f64;
+        }
+        32.0 * count / bits
+    }
+
+    /// Total model MACs (sanity/report helper).
+    pub fn total_macs(&self) -> usize {
+        self.layers.iter().map(|l| l.1).sum()
+    }
+
+    /// Raw per-layer rows (weight_count, macs, fixed8) — consumed by the
+    /// extended cost models in [`energy`].
+    pub fn layers(&self) -> &[(usize, usize, bool)] {
+        &self.layers
+    }
+}
+
+/// The paper's network-level hardware loss: L_hard = ⌈N_w⌉·⌈N_a⌉.
+pub fn hard_loss(k_w: u32, k_a: u32) -> f64 {
+    k_w as f64 * k_a as f64
+}
+
+/// ∂L_hard/∂⌈N_w⌉ = ⌈N_a⌉ and symmetrically (used by eq. (3)).
+pub fn hard_grad_w(k_a: u32) -> f64 {
+    k_a as f64
+}
+
+pub fn hard_grad_a(k_w: u32) -> f64 {
+    k_w as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    fn toy() -> CostModel {
+        // stem (fixed8), two body layers, fc (fixed8)
+        CostModel::from_layers(vec![
+            (432, 442_368, true),
+            (2_304, 2_359_296, false),
+            (9_216, 2_359_296, false),
+            (640, 640, true),
+        ])
+    }
+
+    #[test]
+    fn bitops_scales_with_bits() {
+        let cm = toy();
+        let b44 = cm.bitops_g(4, 4);
+        let b88 = cm.bitops_g(8, 8);
+        // body layers dominate; 8×8 is 4× the bit product of 4×4
+        assert!(b88 > b44 * 2.0, "{b88} vs {b44}");
+        // fixed layers identical in both
+        let fixed_part = (442_368.0 + 640.0) * 64.0 / 1e9;
+        assert!((b44 - fixed_part - 4.0 * 4.0 * (2.0 * 2_359_296.0) / 1e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unquantized_charged_32() {
+        let cm = toy();
+        assert!(cm.bitops_g(2, 32) > cm.bitops_g(2, 8));
+        assert_eq!(cm.bitops_g(2, 32), cm.bitops_g(2, 24));
+    }
+
+    #[test]
+    fn wcr_2bit_close_to_16x() {
+        let cm = toy();
+        // most weights are 2-bit, the small fixed layers dilute slightly
+        let wcr = cm.wcr(2);
+        assert!((12.0..16.0).contains(&wcr), "{wcr}");
+        let wcr32 = cm.wcr(32);
+        assert!(wcr32 < 1.1, "{wcr32}");
+    }
+
+    #[test]
+    fn monotonicity_properties() {
+        let cm = toy();
+        check(100, 3, |rng| {
+            let k1 = 1 + rng.below(8) as u32;
+            let k2 = k1 + 1 + rng.below(4) as u32;
+            let ka = 1 + rng.below(8) as u32;
+            prop_assert!(
+                cm.bitops_g(k1, ka) < cm.bitops_g(k2, ka),
+                "bitops not monotone in k_w: {k1} vs {k2}"
+            );
+            prop_assert!(
+                cm.wcr(k1) > cm.wcr(k2),
+                "wcr not antitone: {k1} vs {k2}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hard_loss_grads() {
+        assert_eq!(hard_loss(3, 4), 12.0);
+        assert_eq!(hard_grad_w(4), 4.0);
+        assert_eq!(hard_grad_a(3), 3.0);
+    }
+}

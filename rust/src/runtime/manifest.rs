@@ -1,0 +1,286 @@
+//! AOT manifest: the tensor-layout contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! The manifest fixes, per model, the exact flat ordering of parameters /
+//! momentum buffers / BN statistics in the compiled HLO's argument list,
+//! each tensor's shape + init spec, and per-layer geometry for the
+//! BitOPs/WCR cost model. If the Python and Rust sides ever disagree on
+//! this file, nothing runs — so it is validated aggressively on load.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub role: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BnSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+}
+
+/// Geometry of one conv/fc layer (paper §III-B cost model inputs).
+#[derive(Debug, Clone)]
+pub struct LayerGeom {
+    pub name: String,
+    pub kind: String,
+    pub weight_count: usize,
+    pub macs: usize,
+    pub fixed8: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub key: String,
+    pub batch: usize,
+    pub input_hw: (usize, usize),
+    pub in_channels: usize,
+    pub num_classes: usize,
+    pub params: Vec<ParamSpec>,
+    pub bn: Vec<BnSpec>,
+    pub geoms: Vec<LayerGeom>,
+    /// artifact suffix ("train", "loss", …) → HLO filename.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ModelManifest {
+    pub fn input_numel(&self) -> usize {
+        self.batch * self.input_hw.0 * self.input_hw.1 * self.in_channels
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Weight parameters only (conv_w/fc_w) — the WCR numerator.
+    pub fn weight_count(&self) -> usize {
+        self.params
+            .iter()
+            .filter(|p| p.role == "conv_w" || p.role == "fc_w")
+            .map(|p| p.numel())
+            .sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("{path:?}: {e} — run `make artifacts` first")
+        })?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let version = json
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing version"))?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+
+        let mut models = BTreeMap::new();
+        let mobj = json
+            .at(&["models"])
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest models not an object"))?;
+        for (key, m) in mobj {
+            models.insert(key.clone(), parse_model(key, m)?);
+        }
+        anyhow::ensure!(!models.is_empty(), "manifest lists no models");
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, key: &str) -> anyhow::Result<&ModelManifest> {
+        self.models.get(key).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model {key:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn shape_of(j: &Json) -> anyhow::Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+        .collect()
+}
+
+fn req_str(j: &Json, k: &str) -> anyhow::Result<String> {
+    Ok(j.get(k)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing string field {k:?}"))?
+        .to_string())
+}
+
+fn req_usize(j: &Json, k: &str) -> anyhow::Result<usize> {
+    j.get(k)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("missing numeric field {k:?}"))
+}
+
+fn parse_model(key: &str, m: &Json) -> anyhow::Result<ModelManifest> {
+    let hw = m
+        .at(&["input_hw"])
+        .map_err(|e| anyhow::anyhow!("{key}: {e}"))?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{key}: input_hw not an array"))?;
+    anyhow::ensure!(hw.len() == 2, "{key}: input_hw must have 2 entries");
+
+    let mut params = vec![];
+    for p in m.at(&["params"]).map_err(|e| anyhow::anyhow!("{e}"))?.as_arr().unwrap_or(&[])
+    {
+        params.push(ParamSpec {
+            name: req_str(p, "name")?,
+            shape: shape_of(p.get("shape").ok_or_else(|| anyhow::anyhow!("no shape"))?)?,
+            init: req_str(p, "init")?,
+            role: req_str(p, "role")?,
+        });
+    }
+    anyhow::ensure!(!params.is_empty(), "{key}: no params");
+
+    let mut bn = vec![];
+    for b in m.at(&["bn"]).map_err(|e| anyhow::anyhow!("{e}"))?.as_arr().unwrap_or(&[]) {
+        bn.push(BnSpec {
+            name: req_str(b, "name")?,
+            shape: shape_of(b.get("shape").ok_or_else(|| anyhow::anyhow!("no shape"))?)?,
+            init: req_str(b, "init")?,
+        });
+    }
+
+    let mut geoms = vec![];
+    for g in m.at(&["geoms"]).map_err(|e| anyhow::anyhow!("{e}"))?.as_arr().unwrap_or(&[])
+    {
+        geoms.push(LayerGeom {
+            name: req_str(g, "name")?,
+            kind: req_str(g, "kind")?,
+            weight_count: req_usize(g, "weight_count")?,
+            macs: req_usize(g, "macs")?,
+            fixed8: g.get("fixed8").and_then(Json::as_bool).unwrap_or(false),
+        });
+    }
+    anyhow::ensure!(!geoms.is_empty(), "{key}: no layer geometry");
+
+    let mut artifacts = BTreeMap::new();
+    if let Some(arts) = m.get("artifacts").and_then(Json::as_obj) {
+        for (suffix, fname) in arts {
+            artifacts.insert(
+                suffix.clone(),
+                fname.as_str().ok_or_else(|| anyhow::anyhow!("bad artifact"))?.to_string(),
+            );
+        }
+    }
+    for required in ["train", "loss", "eval"] {
+        anyhow::ensure!(
+            artifacts.contains_key(required),
+            "{key}: missing artifact {required:?}"
+        );
+    }
+
+    Ok(ModelManifest {
+        key: key.to_string(),
+        batch: req_usize(m, "batch")?,
+        input_hw: (hw[0].as_usize().unwrap(), hw[1].as_usize().unwrap()),
+        in_channels: req_usize(m, "in_channels")?,
+        num_classes: req_usize(m, "num_classes")?,
+        params,
+        bn,
+        geoms,
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal synthetic manifest for unit tests that don't need the
+    /// real artifacts (integration tests use the real one).
+    pub(crate) fn fake_manifest_json() -> String {
+        r#"{
+          "version": 1,
+          "models": {
+            "toy": {
+              "batch": 4, "input_hw": [8, 8], "in_channels": 3,
+              "num_classes": 2,
+              "params": [
+                {"name": "stem.w", "shape": [3,3,3,4], "init": "kaiming:27", "role": "conv_w"},
+                {"name": "fc.w", "shape": [4,2], "init": "kaiming:4", "role": "fc_w"},
+                {"name": "fc.b", "shape": [2], "init": "zeros", "role": "fc_b"}
+              ],
+              "bn": [
+                {"name": "stem.bn.mean", "shape": [4], "init": "zeros"},
+                {"name": "stem.bn.var", "shape": [4], "init": "ones"}
+              ],
+              "geoms": [
+                {"name": "stem", "kind": "conv", "weight_count": 108, "macs": 6912, "fixed8": true},
+                {"name": "mid", "kind": "conv", "weight_count": 144, "macs": 9216, "fixed8": false},
+                {"name": "fc", "kind": "fc", "weight_count": 8, "macs": 8, "fixed8": true}
+              ],
+              "artifacts": {"train": "toy_train.hlo.txt", "loss": "toy_loss.hlo.txt", "eval": "toy_eval.hlo.txt"}
+            }
+          }
+        }"#.to_string()
+    }
+
+    fn load_fake() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("adaqat_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest_json()).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_fake_manifest() {
+        let m = load_fake();
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.batch, 4);
+        assert_eq!(toy.params.len(), 3);
+        assert_eq!(toy.params[0].numel(), 108);
+        assert_eq!(toy.bn.len(), 2);
+        assert_eq!(toy.weight_count(), 108 + 8);
+        assert_eq!(toy.input_numel(), 4 * 8 * 8 * 3);
+        assert!(m.model("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifacts() {
+        let bad = fake_manifest_json().replace("\"eval\": \"toy_eval.hlo.txt\"", "\"x\": \"y\"");
+        let dir = std::env::temp_dir().join(format!("adaqat_badman_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), bad.replace(", \"x\": \"y\"}", "}")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let dir = std::env::temp_dir().join(format!("adaqat_badver_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            fake_manifest_json().replace("\"version\": 1", "\"version\": 99"),
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

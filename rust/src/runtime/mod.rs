@@ -1,0 +1,393 @@
+//! PJRT runtime: load AOT artifacts, hold training state, execute steps.
+//!
+//! The flow mirrors /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`
+//! → `execute`. One compiled executable per (model, step-kind); the
+//! AdaQAT bit-widths enter as runtime scalars (`s_w`, `s_a`), so a whole
+//! training run — including every finite-difference probe — reuses the
+//! same executables with different scalar inputs (DESIGN.md §2).
+
+pub mod manifest;
+
+use std::path::Path;
+
+use crate::tensor::{init::init_tensor, IntTensor, Tensor};
+use crate::util::rng::Rng;
+
+pub use manifest::{Manifest, ModelManifest};
+
+/// Scale fed for "this signal is not quantized" (`/32` rows of Table I):
+/// round(x·2^24)/2^24 is exact in f32, so quantization is the identity.
+/// Mirrors `python/compile/quantizers.py::S_IDENTITY`.
+pub const S_IDENTITY: f32 = 16_777_216.0; // 2^24
+
+/// s = 2^k − 1 for integer bit-width k (k ≥ 24 ⇒ identity scale).
+pub fn bitwidth_scale(k: u32) -> f32 {
+    if k >= 24 {
+        S_IDENTITY
+    } else {
+        (1u64 << k) as f32 - 1.0
+    }
+}
+
+/// One training batch, already padded to the artifact's static batch size.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// (batch, H, W, C) f32, NHWC.
+    pub x: Tensor,
+    /// (batch,) i32 labels.
+    pub y: IntTensor,
+}
+
+/// Scalar metrics returned by every step kind.
+#[derive(Debug, Clone, Copy)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub correct: f32,
+}
+
+/// Host-resident model state: parameters, momentum, BN statistics,
+/// ordered exactly as the manifest (the HLO argument order).
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<Tensor>,
+    pub momentum: Vec<Tensor>,
+    pub bn: Vec<Tensor>,
+}
+
+impl TrainState {
+    /// Fraction of parameters with non-finite values (divergence check).
+    pub fn is_finite(&self) -> bool {
+        self.params.iter().all(Tensor::is_finite)
+            && self.bn.iter().all(Tensor::is_finite)
+    }
+}
+
+/// The PJRT client + loaded manifest; entry point of the runtime layer.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, manifest })
+    }
+
+    /// Open one model's artifact set. Executables compile lazily on first
+    /// use (a step kind a run never touches — e.g. the fp32 graphs in a
+    /// quantized run — is never compiled), then stay cached for the
+    /// lifetime of the `ModelRuntime`.
+    pub fn load_model(&self, key: &str) -> anyhow::Result<ModelRuntime> {
+        let mm = self.manifest.model(key)?.clone();
+        let lazy = |suffix: &str| -> LazyExe {
+            LazyExe {
+                path: mm
+                    .artifacts
+                    .get(suffix)
+                    .map(|fname| self.manifest.dir.join(fname)),
+                suffix: suffix.to_string(),
+                cell: std::cell::OnceCell::new(),
+            }
+        };
+        Ok(ModelRuntime {
+            train: lazy("train"),
+            loss: lazy("loss"),
+            eval: lazy("eval"),
+            fp_train: lazy("fp_train"),
+            fp_eval: lazy("fp_eval"),
+            client: self.client.clone(),
+            mm,
+        })
+    }
+}
+
+/// A lazily compiled executable (PJRT compilation of the larger HLO
+/// graphs takes seconds; pay only for the graphs a run uses).
+struct LazyExe {
+    path: Option<std::path::PathBuf>,
+    suffix: String,
+    cell: std::cell::OnceCell<xla::PjRtLoadedExecutable>,
+}
+
+impl LazyExe {
+    fn get(&self, client: &xla::PjRtClient, key: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        let path = self
+            .path
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{key}: no artifact {:?}", self.suffix))?;
+        if let Some(exe) = self.cell.get() {
+            return Ok(exe);
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        log::info!(
+            "compiled {}_{} in {:.2}s",
+            key,
+            self.suffix,
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(self.cell.get_or_init(|| exe))
+    }
+
+    fn available(&self) -> bool {
+        self.path.is_some()
+    }
+}
+
+/// Compiled executables + manifest for one model.
+pub struct ModelRuntime {
+    pub mm: ModelManifest,
+    client: xla::PjRtClient,
+    train: LazyExe,
+    loss: LazyExe,
+    eval: LazyExe,
+    fp_train: LazyExe,
+    fp_eval: LazyExe,
+}
+
+// Perf note (EXPERIMENTS.md §Perf, L3 iteration 1): build literals with
+// a single memcpy via create_from_shape_and_untyped_data instead of
+// vec1(copy) + reshape(second copy + XLA call).
+fn to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    if t.shape.is_empty() {
+        return Ok(xla::Literal::scalar(t.data[0]));
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &t.shape,
+        bytes,
+    )?)
+}
+
+fn int_to_literal(t: &IntTensor) -> anyhow::Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &t.shape,
+        bytes,
+    )?)
+}
+
+fn from_literal(l: &xla::Literal, shape: &[usize]) -> anyhow::Result<Tensor> {
+    let data = l.to_vec::<f32>()?;
+    Ok(Tensor::new(shape.to_vec(), data))
+}
+
+impl ModelRuntime {
+    /// Initialize fresh training state from the manifest init specs.
+    pub fn init_state(&self, seed: u64) -> anyhow::Result<TrainState> {
+        let mut rng = Rng::new(seed);
+        let mut params = vec![];
+        for p in &self.mm.params {
+            params.push(
+                init_tensor(&p.init, &p.shape, &mut rng)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", p.name))?,
+            );
+        }
+        let momentum = self.mm.params.iter().map(|p| Tensor::zeros(p.shape.clone())).collect();
+        let mut bn = vec![];
+        for b in &self.mm.bn {
+            bn.push(
+                init_tensor(&b.init, &b.shape, &mut rng)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", b.name))?,
+            );
+        }
+        Ok(TrainState { params, momentum, bn })
+    }
+
+    /// Load parameters (and BN stats) from checkpoint tensors by name;
+    /// momentum restarts at zero. Unknown checkpoint entries are ignored,
+    /// missing ones keep their fresh init (e.g. `alpha` when fine-tuning
+    /// from an fp32 pretrain that never trained it).
+    pub fn load_state(
+        &self,
+        ck: &crate::tensor::checkpoint::Checkpoint,
+        seed: u64,
+    ) -> anyhow::Result<TrainState> {
+        let mut state = self.init_state(seed)?;
+        let map = ck.tensor_map();
+        let mut loaded = 0usize;
+        for (i, spec) in self.mm.params.iter().enumerate() {
+            if let Some(t) = map.get(spec.name.as_str()) {
+                anyhow::ensure!(
+                    t.shape == spec.shape,
+                    "checkpoint {}: shape {:?} != manifest {:?}",
+                    spec.name, t.shape, spec.shape
+                );
+                state.params[i] = (*t).clone();
+                loaded += 1;
+            }
+        }
+        for (i, spec) in self.mm.bn.iter().enumerate() {
+            if let Some(t) = map.get(spec.name.as_str()) {
+                state.bn[i] = (*t).clone();
+                loaded += 1;
+            }
+        }
+        log::info!("loaded {loaded} tensors from checkpoint");
+        Ok(state)
+    }
+
+    fn check_batch(&self, batch: &Batch) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            batch.x.shape
+                == vec![
+                    self.mm.batch,
+                    self.mm.input_hw.0,
+                    self.mm.input_hw.1,
+                    self.mm.in_channels
+                ],
+            "batch x shape {:?} does not match artifact batch {}",
+            batch.x.shape,
+            self.mm.batch
+        );
+        anyhow::ensure!(batch.y.shape == vec![self.mm.batch], "bad y shape");
+        Ok(())
+    }
+
+    /// One fused SGD train step; updates `state` in place and returns the
+    /// batch loss and correct-count. `fp32` selects the baseline graph.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        lr: f32,
+        s_w: f32,
+        s_a: f32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        let exe = if fp32 {
+            self.fp_train.get(&self.client, &self.mm.key)?
+        } else {
+            self.train.get(&self.client, &self.mm.key)?
+        };
+        let mut inputs: Vec<xla::Literal> =
+            Vec::with_capacity(2 * state.params.len() + state.bn.len() + 5);
+        for t in state.params.iter().chain(&state.momentum).chain(&state.bn) {
+            inputs.push(to_literal(t)?);
+        }
+        inputs.push(to_literal(&batch.x)?);
+        inputs.push(int_to_literal(&batch.y)?);
+        inputs.push(xla::Literal::scalar(lr));
+        inputs.push(xla::Literal::scalar(s_w));
+        inputs.push(xla::Literal::scalar(s_a));
+
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let np = self.mm.params.len();
+        let nb = self.mm.bn.len();
+        anyhow::ensure!(
+            outs.len() == 2 * np + nb + 2,
+            "train step returned {} outputs, expected {}",
+            outs.len(),
+            2 * np + nb + 2
+        );
+        for (i, spec) in self.mm.params.iter().enumerate() {
+            state.params[i] = from_literal(&outs[i], &spec.shape)?;
+            state.momentum[i] = from_literal(&outs[np + i], &spec.shape)?;
+        }
+        for (i, spec) in self.mm.bn.iter().enumerate() {
+            state.bn[i] = from_literal(&outs[2 * np + i], &spec.shape)?;
+        }
+        Ok(StepMetrics {
+            loss: outs[2 * np + nb].get_first_element::<f32>()?,
+            correct: outs[2 * np + nb + 1].get_first_element::<f32>()?,
+        })
+    }
+
+    fn forward(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        state: &TrainState,
+        batch: &Batch,
+        s_w: f32,
+        s_a: f32,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        let mut inputs: Vec<xla::Literal> =
+            Vec::with_capacity(state.params.len() + state.bn.len() + 4);
+        for t in state.params.iter().chain(&state.bn) {
+            inputs.push(to_literal(t)?);
+        }
+        inputs.push(to_literal(&batch.x)?);
+        inputs.push(int_to_literal(&batch.y)?);
+        inputs.push(xla::Literal::scalar(s_w));
+        inputs.push(xla::Literal::scalar(s_a));
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let (loss, correct) = result.to_tuple2()?;
+        Ok(StepMetrics {
+            loss: loss.get_first_element::<f32>()?,
+            correct: correct.get_first_element::<f32>()?,
+        })
+    }
+
+    /// Forward-only task loss with batch-stat BN — the finite-difference
+    /// probe of paper §III-C (same batch, neighbor bit-width scales).
+    pub fn probe_loss(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        s_w: f32,
+        s_a: f32,
+    ) -> anyhow::Result<StepMetrics> {
+        self.forward(self.loss.get(&self.client, &self.mm.key)?, state, batch, s_w, s_a)
+    }
+
+    /// Inference-mode evaluation (running-stat BN).
+    pub fn eval_batch(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        s_w: f32,
+        s_a: f32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics> {
+        let exe = if fp32 {
+            self.fp_eval.get(&self.client, &self.mm.key)?
+        } else {
+            self.eval.get(&self.client, &self.mm.key)?
+        };
+        self.forward(exe, state, batch, s_w, s_a)
+    }
+
+    pub fn has_fp32(&self) -> bool {
+        self.fp_train.available() && self.fp_eval.available()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitwidth_scales() {
+        assert_eq!(bitwidth_scale(1), 1.0);
+        assert_eq!(bitwidth_scale(2), 3.0);
+        assert_eq!(bitwidth_scale(8), 255.0);
+        assert_eq!(bitwidth_scale(32), S_IDENTITY);
+        assert_eq!(bitwidth_scale(24), S_IDENTITY);
+        // identity scale: exact for f32 in [0.5, 1] (24-bit mantissa),
+        // and within 1 ulp-of-2^-24 below that — i.e. "not quantized"
+        // at the precision the quantized graphs operate in.
+        let x = 0.7234567f32;
+        assert_eq!((x * S_IDENTITY).round() / S_IDENTITY, x);
+        let y = 0.1234567f32;
+        assert!(((y * S_IDENTITY).round() / S_IDENTITY - y).abs() < 2.0 / S_IDENTITY);
+    }
+}

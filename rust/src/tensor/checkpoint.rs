@@ -1,0 +1,172 @@
+//! Checkpoint format: a self-describing binary container for named
+//! tensors plus a small JSON metadata blob.
+//!
+//! Layout (all integers little-endian):
+//! ```text
+//!   magic   "AQCKPT01"                      (8 bytes)
+//!   meta    u32 len + JSON bytes            (run metadata, bit-widths, …)
+//!   count   u32                             number of tensors
+//!   entry*  u16 name_len + name bytes
+//!           u8  ndim + u32 dims[ndim]
+//!           f32 data[numel]
+//! ```
+//! Used for fp32 pretrains (the fine-tuning scenario of Table I/II) and
+//! for resuming AdaQAT runs.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::Tensor;
+
+const MAGIC: &[u8; 8] = b"AQCKPT01";
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub meta: Json,
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn new(meta: Json) -> Checkpoint {
+        Checkpoint { meta, tensors: vec![] }
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.push((name.into(), t));
+    }
+
+    pub fn tensor_map(&self) -> BTreeMap<&str, &Tensor> {
+        self.tensors.iter().map(|(n, t)| (n.as_str(), t)).collect()
+    }
+
+    // ---------------------------------------------------------------- io
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        let meta = self.meta.to_string();
+        w.write_all(&(meta.len() as u32).to_le_bytes())?;
+        w.write_all(meta.as_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            anyhow::ensure!(name.len() <= u16::MAX as usize, "name too long");
+            w.write_all(&(name.len() as u16).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            anyhow::ensure!(t.shape.len() <= u8::MAX as usize, "too many dims");
+            w.write_all(&[t.shape.len() as u8])?;
+            for &d in &t.shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &x in &t.data {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic in {path:?}");
+        let meta_len = read_u32(&mut r)? as usize;
+        let mut meta_bytes = vec![0u8; meta_len];
+        r.read_exact(&mut meta_bytes)?;
+        let meta = Json::parse(std::str::from_utf8(&meta_bytes)?)
+            .map_err(|e| anyhow::anyhow!("checkpoint meta: {e}"))?;
+        let count = read_u32(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let mut ndim = [0u8; 1];
+            r.read_exact(&mut ndim)?;
+            let mut shape = Vec::with_capacity(ndim[0] as usize);
+            for _ in 0..ndim[0] {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut buf = vec![0u8; numel * 4];
+            r.read_exact(&mut buf)?;
+            let data = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push((name, Tensor::new(shape, data)));
+        }
+        Ok(Checkpoint { meta, tensors })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16<R: Read>(r: &mut R) -> std::io::Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("adaqat_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut ck = Checkpoint::new(Json::obj(vec![
+            ("model", Json::str("resnet20")),
+            ("epoch", Json::num(3.0)),
+        ]));
+        ck.push("a.w", Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()));
+        ck.push("b", Tensor::new(vec![4], (0..4).map(|_| rng.normal()).collect()));
+        ck.push("scalar", Tensor::scalar(7.5));
+        let path = tmpfile("roundtrip.ckpt");
+        ck.save(&path).unwrap();
+        let rt = Checkpoint::load(&path).unwrap();
+        assert_eq!(rt.meta.get("model").unwrap().as_str(), Some("resnet20"));
+        assert_eq!(rt.tensors.len(), 3);
+        for ((n1, t1), (n2, t2)) in ck.tensors.iter().zip(&rt.tensors) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("badmagic.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut ck = Checkpoint::new(Json::Null);
+        ck.push("t", Tensor::zeros(vec![128]));
+        let path = tmpfile("trunc.ckpt");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,75 @@
+//! Parameter initialization from manifest init specs.
+//!
+//! The AOT manifest carries an init spec string per parameter
+//! (`kaiming:<fan_in>`, `zeros`, `ones`, `const:<v>`); this module turns
+//! them into tensors using the deterministic [`Rng`] so runs reproduce
+//! bit-for-bit from a seed. Mirrors `python/compile/init.py`, which is
+//! only used by the pytest suite.
+
+use crate::util::rng::Rng;
+
+use super::Tensor;
+
+/// Initialize one tensor from its manifest spec.
+pub fn init_tensor(spec: &str, shape: &[usize], rng: &mut Rng) -> Result<Tensor, String> {
+    let n: usize = shape.iter().product();
+    let data = if let Some(fan) = spec.strip_prefix("kaiming:") {
+        let fan_in: f64 = fan.parse().map_err(|_| format!("bad kaiming spec {spec:?}"))?;
+        if fan_in <= 0.0 {
+            return Err(format!("kaiming fan_in must be positive, got {fan_in}"));
+        }
+        let std = (2.0 / fan_in).sqrt() as f32;
+        (0..n).map(|_| std * rng.normal()).collect()
+    } else if spec == "zeros" {
+        vec![0.0; n]
+    } else if spec == "ones" {
+        vec![1.0; n]
+    } else if let Some(v) = spec.strip_prefix("const:") {
+        let v: f32 = v.parse().map_err(|_| format!("bad const spec {spec:?}"))?;
+        vec![v; n]
+    } else {
+        return Err(format!("unknown init spec {spec:?}"));
+    };
+    Ok(Tensor::new(shape.to_vec(), data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kaiming_moments() {
+        let mut rng = Rng::new(0);
+        let t = init_tensor("kaiming:72", &[3, 3, 8, 100], &mut rng).unwrap();
+        let std_expected = (2.0f32 / 72.0).sqrt();
+        let mean = t.mean();
+        let var = t.data.iter().map(|x| (x - mean).powi(2)).sum::<f32>()
+            / t.numel() as f32;
+        assert!(mean.abs() < 0.01 * std_expected * 10.0);
+        assert!((var.sqrt() - std_expected).abs() / std_expected < 0.05);
+    }
+
+    #[test]
+    fn const_and_fixed() {
+        let mut rng = Rng::new(0);
+        assert!(init_tensor("zeros", &[4], &mut rng).unwrap().data.iter().all(|&x| x == 0.0));
+        assert!(init_tensor("ones", &[4], &mut rng).unwrap().data.iter().all(|&x| x == 1.0));
+        assert!(init_tensor("const:10.0", &[2], &mut rng).unwrap().data.iter().all(|&x| x == 10.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = init_tensor("kaiming:9", &[16], &mut Rng::new(5)).unwrap();
+        let b = init_tensor("kaiming:9", &[16], &mut Rng::new(5)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bad_specs_error() {
+        let mut rng = Rng::new(0);
+        assert!(init_tensor("kaiming:x", &[2], &mut rng).is_err());
+        assert!(init_tensor("kaiming:0", &[2], &mut rng).is_err());
+        assert!(init_tensor("mystery", &[2], &mut rng).is_err());
+        assert!(init_tensor("const:zz", &[2], &mut rng).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Host tensor substrate: the coordinator-side representation of every
+//! array that crosses the PJRT boundary.
+//!
+//! Deliberately minimal — the heavy math lives in the compiled HLO; the
+//! host only initializes, shuttles, checkpoints, and inspects tensors.
+
+pub mod checkpoint;
+pub mod init;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Mean of all elements (metrics convenience).
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// L2 norm (used by divergence checks in the trainer).
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+/// A dense row-major i32 tensor (labels).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> IntTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        IntTensor { shape, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_stats() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        assert!((t.mean() - 3.5).abs() < 1e-6);
+        assert!((t.l2() - (91.0f32).sqrt()).abs() < 1e-5);
+        assert!(t.is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn nan_detection() {
+        let mut t = Tensor::zeros(vec![4]);
+        t.data[2] = f32::NAN;
+        assert!(!t.is_finite());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Tensor::scalar(2.5);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.numel(), 1);
+    }
+}

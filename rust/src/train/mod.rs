@@ -1,0 +1,257 @@
+//! Training orchestrator: epochs, LR schedule, controller probes,
+//! evaluation, checkpointing, and per-step tracing.
+//!
+//! This is where the three layers meet at runtime: batches stream in
+//! from the data pipeline's prefetch thread, the compiled HLO train step
+//! executes on PJRT, and the AdaQAT controller steers the bit-width
+//! scalars between steps (paper §III-C). The trainer is generic over
+//! [`Controller`], so AdaQAT and the Table I baselines run through the
+//! exact same loop.
+
+pub mod schedule;
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::adaqat::Controller;
+use crate::config::ExperimentConfig;
+use crate::data::loader::Loader;
+use crate::quant::{bitwidth_scale, CostModel};
+use crate::runtime::{ModelRuntime, StepMetrics, TrainState};
+use crate::tensor::checkpoint::Checkpoint;
+use crate::util::json::Json;
+
+use schedule::CosineSchedule;
+
+/// One row of the per-probe trace (drives Fig. 1).
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub step: usize,
+    pub n_w: f64,
+    pub n_a: f64,
+    pub k_w: u32,
+    pub k_a: u32,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub osc_w: usize,
+    pub osc_a: usize,
+}
+
+/// One row of the per-epoch record.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub lr: f64,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    pub k_w: u32,
+    pub k_a: u32,
+}
+
+/// Everything a finished run reports (consumed by the bench harnesses).
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub final_bits: (u32, u32),
+    pub test_top1: f64,
+    pub test_loss: f64,
+    pub wcr: f64,
+    pub bitops_g: f64,
+    pub epochs: Vec<EpochRecord>,
+    pub trace: Vec<TraceRecord>,
+    pub wall_seconds: f64,
+    pub steps: usize,
+    /// Mean wall time of one train step (the §Perf headline).
+    pub step_seconds: f64,
+}
+
+/// Train `state` under `cfg` with the given controller; returns the run
+/// record. `train`/`test` loaders must match the model's artifact batch.
+pub fn train(
+    rt: &ModelRuntime,
+    cfg: &ExperimentConfig,
+    controller: &mut dyn Controller,
+    state: &mut TrainState,
+    train_loader: &Loader,
+    test_loader: &Loader,
+) -> anyhow::Result<RunResult> {
+    let t0 = Instant::now();
+    let steps_per_epoch = train_loader.batches_per_epoch();
+    let sched = CosineSchedule::new(cfg.lr, cfg.epochs * steps_per_epoch);
+    let cost = CostModel::from_manifest(&rt.mm);
+
+    let mut epochs = vec![];
+    let mut trace = vec![];
+    let mut step = 0usize;
+    let mut step_time = 0.0f64;
+
+    for epoch in 0..cfg.epochs {
+        let mut ep_loss = 0.0f64;
+        let mut ep_correct = 0.0f64;
+        let mut ep_batches = 0usize;
+        let rx = train_loader.epoch_prefetch(cfg.seed ^ (epoch as u64) << 32);
+        for batch in rx.iter() {
+            let lr = sched.lr(step) as f32;
+            let (k_w, k_a) = controller.bits();
+            let ts = Instant::now();
+            let m = rt.train_step(
+                state,
+                &batch,
+                lr,
+                bitwidth_scale(k_w),
+                bitwidth_scale(k_a),
+                cfg.fp32,
+            )?;
+            step_time += ts.elapsed().as_secs_f64();
+            anyhow::ensure!(
+                m.loss.is_finite(),
+                "training diverged at step {step} (loss = {})",
+                m.loss
+            );
+            ep_loss += m.loss as f64;
+            ep_correct += m.correct as f64;
+            ep_batches += 1;
+
+            // ---- AdaQAT probe: finite differences on the SAME batch
+            let frozen = controller.frozen();
+            if !cfg.fp32 && !(frozen.0 && frozen.1) && step % cfg.probe_interval == 0 {
+                let requests = controller.probes();
+                let mut probe_losses = Vec::with_capacity(requests.len());
+                for p in &requests {
+                    let pm = rt.probe_loss(
+                        state,
+                        &batch,
+                        bitwidth_scale(p.k_w),
+                        bitwidth_scale(p.k_a),
+                    )?;
+                    probe_losses.push(pm.loss as f64);
+                }
+                controller.update(m.loss as f64, &probe_losses);
+                let (n_w, n_a) = controller.fractional();
+                let (k_w2, k_a2) = controller.bits();
+                let (osc_w, osc_a) = controller.osc_counts();
+                trace.push(TraceRecord {
+                    step,
+                    n_w,
+                    n_a,
+                    k_w: k_w2,
+                    k_a: k_a2,
+                    train_loss: m.loss as f64,
+                    train_acc: m.correct as f64 / rt.mm.batch as f64,
+                    osc_w,
+                    osc_a,
+                });
+            }
+            step += 1;
+        }
+
+        let (test_loss, test_acc) = evaluate(rt, state, test_loader, controller, cfg.fp32)?;
+        let (k_w, k_a) = controller.bits();
+        let rec = EpochRecord {
+            epoch,
+            lr: sched.lr(step),
+            train_loss: ep_loss / ep_batches.max(1) as f64,
+            train_acc: ep_correct / (ep_batches.max(1) * rt.mm.batch) as f64,
+            test_loss,
+            test_acc,
+            k_w,
+            k_a,
+        };
+        log::info!(
+            "epoch {epoch}: train loss {:.4} acc {:.3} | test loss {:.4} acc {:.3} | bits {}/{} (N={:.2}/{:.2}) osc {:?}",
+            rec.train_loss, rec.train_acc, rec.test_loss, rec.test_acc,
+            k_w, k_a, controller.fractional().0, controller.fractional().1,
+            controller.osc_counts(),
+        );
+        epochs.push(rec);
+    }
+
+    let (k_w, k_a) = controller.bits();
+    let last = epochs.last();
+    Ok(RunResult {
+        final_bits: (k_w, k_a),
+        test_top1: last.map(|e| e.test_acc).unwrap_or(0.0),
+        test_loss: last.map(|e| e.test_loss).unwrap_or(f64::NAN),
+        wcr: if cfg.fp32 { 1.0 } else { cost.wcr(k_w) },
+        bitops_g: if cfg.fp32 {
+            cost.bitops_g(32, 32)
+        } else {
+            cost.bitops_g(k_w, k_a)
+        },
+        epochs,
+        trace,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        steps: step,
+        step_seconds: if step > 0 { step_time / step as f64 } else { 0.0 },
+    })
+}
+
+/// Run the eval graph over the whole test loader; returns (loss, top-1).
+pub fn evaluate(
+    rt: &ModelRuntime,
+    state: &TrainState,
+    test_loader: &Loader,
+    controller: &dyn Controller,
+    fp32: bool,
+) -> anyhow::Result<(f64, f64)> {
+    let (k_w, k_a) = controller.bits();
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut batches = 0usize;
+    for batch in test_loader.epoch(0) {
+        let m: StepMetrics = rt.eval_batch(
+            state,
+            &batch,
+            bitwidth_scale(k_w),
+            bitwidth_scale(k_a),
+            fp32,
+        )?;
+        loss += m.loss as f64;
+        correct += m.correct as f64;
+        batches += 1;
+    }
+    let n = (batches * rt.mm.batch) as f64;
+    Ok((loss / batches.max(1) as f64, correct / n.max(1.0)))
+}
+
+/// Save model parameters + BN stats under their manifest names.
+pub fn save_checkpoint(
+    rt: &ModelRuntime,
+    state: &TrainState,
+    meta: Json,
+    path: &Path,
+) -> anyhow::Result<()> {
+    let mut ck = Checkpoint::new(meta);
+    for (spec, t) in rt.mm.params.iter().zip(&state.params) {
+        ck.push(spec.name.clone(), t.clone());
+    }
+    for (spec, t) in rt.mm.bn.iter().zip(&state.bn) {
+        ck.push(spec.name.clone(), t.clone());
+    }
+    ck.save(path)?;
+    log::info!("saved checkpoint to {path:?}");
+    Ok(())
+}
+
+/// Write the probe trace as CSV (Fig. 1 raw data).
+pub fn save_trace(trace: &[TraceRecord], path: &Path) -> anyhow::Result<()> {
+    let mut w = crate::metrics::CsvWriter::create(
+        path,
+        &["step", "n_w", "n_a", "k_w", "k_a", "train_loss", "train_acc", "osc_w", "osc_a"],
+    )?;
+    for t in trace {
+        w.row(&[
+            t.step.to_string(),
+            format!("{:.4}", t.n_w),
+            format!("{:.4}", t.n_a),
+            t.k_w.to_string(),
+            t.k_a.to_string(),
+            format!("{:.5}", t.train_loss),
+            format!("{:.4}", t.train_acc),
+            t.osc_w.to_string(),
+            t.osc_a.to_string(),
+        ])?;
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Learning-rate schedules (paper §IV-A: cosine annealing).
+
+/// Cosine annealing from `lr0` to 0 over `total` steps (paper §IV-A).
+#[derive(Debug, Clone, Copy)]
+pub struct CosineSchedule {
+    pub lr0: f64,
+    pub total: usize,
+}
+
+impl CosineSchedule {
+    pub fn new(lr0: f64, total: usize) -> CosineSchedule {
+        assert!(total > 0);
+        CosineSchedule { lr0, total }
+    }
+
+    pub fn lr(&self, step: usize) -> f64 {
+        let t = (step.min(self.total)) as f64 / self.total as f64;
+        self.lr0 * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_and_midpoint() {
+        let s = CosineSchedule::new(0.1, 100);
+        assert!((s.lr(0) - 0.1).abs() < 1e-12);
+        assert!((s.lr(50) - 0.05).abs() < 1e-12);
+        assert!(s.lr(100) < 1e-12);
+        assert!(s.lr(200) < 1e-12); // clamped past the end
+    }
+
+    #[test]
+    fn monotone_decreasing() {
+        let s = CosineSchedule::new(0.1, 64);
+        for i in 1..=64 {
+            assert!(s.lr(i) <= s.lr(i - 1) + 1e-15);
+        }
+    }
+}

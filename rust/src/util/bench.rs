@@ -1,0 +1,78 @@
+//! Bench-harness support (offline substitute for `criterion`).
+//!
+//! The `rust/benches/*` targets are `harness = false` binaries; this
+//! module gives them shared timing statistics and argument handling
+//! (cargo appends `--bench` to bench binaries — it is filtered here).
+
+use std::time::Instant;
+
+use super::cli::Args;
+
+/// Parse bench CLI args, dropping the flags cargo's test harness adds.
+pub fn bench_args() -> Args {
+    let argv: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench" && a != "--test" && a != "--nocapture")
+        .collect();
+    Args::parse(argv).expect("bench args")
+}
+
+/// Simple latency statistics over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl Stats {
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{name:<34} n={:<4} mean {:>9.2} ms  p50 {:>9.2}  p95 {:>9.2}  min {:>9.2}  max {:>9.2}",
+            self.iters, self.mean_ms, self.p50_ms, self.p95_ms, self.min_ms, self.max_ms
+        )
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `iters` timed; return stats.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(f64::total_cmp);
+    let n = samples.len();
+    Stats {
+        iters: n,
+        mean_ms: samples.iter().sum::<f64>() / n as f64,
+        p50_ms: samples[n / 2],
+        p95_ms: samples[(n as f64 * 0.95) as usize % n],
+        min_ms: samples[0],
+        max_ms: samples[n - 1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_orders_percentiles() {
+        let mut i = 0u64;
+        let s = measure(2, 20, || {
+            i += 1;
+            std::thread::sleep(std::time::Duration::from_micros(100 + (i % 3) * 50));
+        });
+        assert_eq!(s.iters, 20);
+        assert!(s.min_ms <= s.p50_ms && s.p50_ms <= s.p95_ms && s.p95_ms <= s.max_ms);
+        assert!(s.mean_ms > 0.05);
+    }
+}

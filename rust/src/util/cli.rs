@@ -1,0 +1,140 @@
+//! Minimal CLI argument parser (offline substitute for `clap`).
+//!
+//! Supports `--key value`, `--key=value`, bare `--flag`, and positional
+//! arguments, with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// (name, help, default) — registered by the caller for `usage()`.
+    specs: Vec<(String, String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (after argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut positional = vec![];
+        let mut flags = BTreeMap::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: everything after is positional
+                    positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    flags.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Args { positional, flags, specs: vec![] })
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Register a flag for the usage string (purely documentary).
+    pub fn describe(&mut self, name: &str, help: &str, default: &str) -> &mut Self {
+        self.specs.push((name.into(), help.into(), default.into()));
+        self
+    }
+
+    pub fn usage(&self, program: &str, about: &str) -> String {
+        let mut s = format!("{program} — {about}\n\nOptions:\n");
+        for (name, help, default) in &self.specs {
+            s.push_str(&format!("  --{name:<22} {help} [default: {default}]\n"));
+        }
+        s
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Unknown-flag check: every provided flag must be in `known`.
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k} (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = parse("train --epochs 5 --lr=0.1 --verbose --out dir");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get::<usize>("epochs", 0).unwrap(), 5);
+        assert_eq!(a.get::<f64>("lr", 0.0).unwrap(), 0.1);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_str("out", ""), "dir");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.get::<usize>("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_str("missing", "d"), "d");
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let a = parse("--epochs abc");
+        assert!(a.get::<usize>("epochs", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse("--a 1 -- --b 2");
+        assert_eq!(a.positional, vec!["--b", "2"]);
+        assert!(!a.has("b"));
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = parse("--lr 0.1 --typo 3");
+        assert!(a.reject_unknown(&["lr"]).is_err());
+        assert!(a.reject_unknown(&["lr", "typo"]).is_ok());
+    }
+}

@@ -1,0 +1,43 @@
+//! Tiny `log` backend: stderr with elapsed-time stamps.
+//!
+//! Level comes from `ADAQAT_LOG` (error|warn|info|debug|trace), default
+//! `info`. Installed once by `init()`; safe to call repeatedly.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            eprintln!("[{t:9.3}s {:5}] {}", record.level(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+pub fn init() {
+    let level = match std::env::var("ADAQAT_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
+    // Err means a logger is already set (e.g. repeated init in tests) — fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built in-repo because the offline crate universe
+//! lacks `serde`/`clap`/`proptest` (DESIGN.md §3): JSON, CLI parsing,
+//! deterministic RNG, property testing, and a `log` backend.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,59 @@
+//! Property-testing mini-framework (offline substitute for `proptest`).
+//!
+//! `check(cases, seed, f)` runs `f` against `cases` forked RNG streams
+//! and reports the failing case index + seed so failures reproduce
+//! exactly. Coordinator invariants (oscillation counting, freeze rules,
+//! batching, cost-model monotonicity) are verified with this.
+
+use super::rng::Rng;
+
+/// Run `f` on `cases` independent random streams; panic with a
+/// reproducible diagnostic on the first failure.
+pub fn check<F>(cases: usize, seed: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let base = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = base.fork(case as u64);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert with a formatted message inside property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, 1, |rng| {
+            let x = rng.uniform();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        check(50, 2, |rng| {
+            let x = rng.uniform();
+            prop_assert!(x < 0.5, "x too big: {x}");
+            Ok(())
+        });
+    }
+}

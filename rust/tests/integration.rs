@@ -1,0 +1,258 @@
+//! Integration tests over the real AOT artifacts (`make artifacts` first).
+//!
+//! These exercise the full L3→L2→L1 composition: Rust initializes state,
+//! uploads batches, executes the compiled HLO (which contains the Pallas
+//! quantizer kernels), and steers bit-widths — on the smallcnn artifacts
+//! to stay fast.
+
+use std::path::Path;
+
+use adaqat::adaqat::{AdaQatController, FixedController};
+use adaqat::config::{ControllerKind, ExperimentConfig, Scenario};
+use adaqat::coordinator::{ensure_fp32_pretrain, Experiment};
+use adaqat::data::{loader::Loader, synth, DatasetKind};
+use adaqat::runtime::{bitwidth_scale, Batch, Runtime, S_IDENTITY};
+use adaqat::tensor::checkpoint::Checkpoint;
+use adaqat::train;
+
+// PjRtClient is Rc-based (!Send), so each test owns its runtime.
+fn runtime() -> Runtime {
+    Runtime::new(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path())
+        .expect("run `make artifacts` before `cargo test`")
+}
+
+fn small_batch(rt: &adaqat::runtime::ModelRuntime, seed: u64) -> Batch {
+    let ds = synth::generate(DatasetKind::Cifar10, rt.mm.batch, seed, 0).into_shared();
+    Loader::new(ds, rt.mm.batch, false).epoch(0).remove(0)
+}
+
+#[test]
+fn manifest_covers_all_models() {
+    let rt = runtime();
+    for key in ["smallcnn", "resnet20", "resnet18", "smallcnn_pallas"] {
+        let mm = rt.manifest.model(key).unwrap();
+        assert!(mm.param_count() > 0);
+        assert!(!mm.geoms.is_empty());
+    }
+    // paper-scale sanity: resnet20 ≈ 0.27M weights, resnet18 ≈ 11M
+    let r20 = rt.manifest.model("resnet20").unwrap();
+    assert!((250_000..320_000).contains(&r20.weight_count()));
+    let r18 = rt.manifest.model("resnet18").unwrap();
+    assert!((10_000_000..12_500_000).contains(&r18.weight_count()));
+}
+
+#[test]
+fn train_step_decreases_loss_and_updates_state() {
+    let rt = runtime().load_model("smallcnn").unwrap();
+    let mut state = rt.init_state(0).unwrap();
+    let p0 = state.params[0].clone();
+    let batch = small_batch(&rt, 42);
+    let s = bitwidth_scale(4);
+    let first = rt.train_step(&mut state, &batch, 0.1, s, s, false).unwrap();
+    assert!(first.loss.is_finite());
+    assert_ne!(state.params[0], p0, "params must move");
+    let mut last = first;
+    for _ in 0..20 {
+        last = rt.train_step(&mut state, &batch, 0.1, s, s, false).unwrap();
+    }
+    assert!(
+        last.loss < first.loss * 0.7,
+        "loss did not decrease: {} -> {}",
+        first.loss,
+        last.loss
+    );
+    assert!(state.is_finite());
+    assert!(last.correct >= first.correct);
+}
+
+#[test]
+fn fp32_graph_trains_too() {
+    let rt = runtime().load_model("smallcnn").unwrap();
+    let mut state = rt.init_state(1).unwrap();
+    let batch = small_batch(&rt, 7);
+    let first = rt.train_step(&mut state, &batch, 0.1, 0.0, 0.0, true).unwrap();
+    let mut last = first;
+    for _ in 0..15 {
+        last = rt.train_step(&mut state, &batch, 0.1, 0.0, 0.0, true).unwrap();
+    }
+    assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
+}
+
+#[test]
+fn probe_loss_is_deterministic_and_bit_sensitive() {
+    let rt = runtime().load_model("smallcnn").unwrap();
+    let mut state = rt.init_state(2).unwrap();
+    let batch = small_batch(&rt, 3);
+    // train a bit at 8/8 so low bit-widths actually hurt
+    let s8 = bitwidth_scale(8);
+    for _ in 0..25 {
+        rt.train_step(&mut state, &batch, 0.1, s8, s8, false).unwrap();
+    }
+    let a = rt.probe_loss(&state, &batch, s8, s8).unwrap();
+    let b = rt.probe_loss(&state, &batch, s8, s8).unwrap();
+    assert_eq!(a.loss, b.loss, "probe must be deterministic");
+    let low = rt.probe_loss(&state, &batch, bitwidth_scale(1), s8).unwrap();
+    assert!(
+        low.loss > a.loss,
+        "1-bit weights should hurt: {} vs {}",
+        low.loss,
+        a.loss
+    );
+}
+
+#[test]
+fn identity_scale_matches_high_bits() {
+    let rt = runtime().load_model("smallcnn").unwrap();
+    let state = rt.init_state(3).unwrap();
+    let batch = small_batch(&rt, 5);
+    let id = rt.probe_loss(&state, &batch, S_IDENTITY, S_IDENTITY).unwrap();
+    let hi = rt
+        .probe_loss(&state, &batch, bitwidth_scale(16), bitwidth_scale(16))
+        .unwrap();
+    assert!((id.loss - hi.loss).abs() < 1e-3, "{} vs {}", id.loss, hi.loss);
+}
+
+#[test]
+fn eval_uses_running_stats() {
+    let rt = runtime().load_model("smallcnn").unwrap();
+    let mut state = rt.init_state(4).unwrap();
+    let batch = small_batch(&rt, 11);
+    let s = bitwidth_scale(8);
+    // Fresh BN running stats (mean 0, var 1) are wrong for real data, so
+    // eval loss differs from the batch-stat probe loss; after training
+    // the two converge. Here just check eval runs and is deterministic.
+    let e1 = rt.eval_batch(&state, &batch, s, s, false).unwrap();
+    let e2 = rt.eval_batch(&state, &batch, s, s, false).unwrap();
+    assert_eq!(e1.loss, e2.loss);
+    for _ in 0..10 {
+        rt.train_step(&mut state, &batch, 0.1, s, s, false).unwrap();
+    }
+    let e3 = rt.eval_batch(&state, &batch, s, s, false).unwrap();
+    assert!(e3.loss < e1.loss);
+}
+
+#[test]
+fn pallas_conv_variant_composes_end_to_end() {
+    // The all-Pallas path: convs lowered through the L1 tiled matmul.
+    let rt = runtime().load_model("smallcnn_pallas").unwrap();
+    let mut state = rt.init_state(5).unwrap();
+    let batch = small_batch(&rt, 13);
+    let s = bitwidth_scale(4);
+    let first = rt.train_step(&mut state, &batch, 0.1, s, s, false).unwrap();
+    let mut last = first;
+    for _ in 0..10 {
+        last = rt.train_step(&mut state, &batch, 0.1, s, s, false).unwrap();
+    }
+    assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
+}
+
+#[test]
+fn pallas_and_lax_conv_agree_numerically() {
+    // Same init, same batch, same scales → the two conv lowerings must
+    // produce near-identical losses (they compute the same function).
+    let rt_a = runtime().load_model("smallcnn").unwrap();
+    let rt_b = runtime().load_model("smallcnn_pallas").unwrap();
+    let state_a = rt_a.init_state(6).unwrap();
+    let state_b = rt_b.init_state(6).unwrap(); // same seed → same init
+    let batch = small_batch(&rt_a, 17);
+    let s = bitwidth_scale(6);
+    let la = rt_a.probe_loss(&state_a, &batch, s, s).unwrap();
+    let lb = rt_b.probe_loss(&state_b, &batch, s, s).unwrap();
+    assert!(
+        (la.loss - lb.loss).abs() < 1e-3,
+        "lax {} vs pallas {}",
+        la.loss,
+        lb.loss
+    );
+}
+
+#[test]
+fn full_experiment_with_adaqat_controller() {
+    let rt = runtime().load_model("smallcnn").unwrap();
+    let mut cfg = ExperimentConfig::default_for("smallcnn");
+    cfg.epochs = 2;
+    cfg.train_size = 512;
+    cfg.test_size = 128;
+    cfg.lambda = 0.15;
+    // big etas so bit-widths actually move in a 2-epoch smoke run
+    cfg.eta_w = 0.05;
+    cfg.eta_a = 0.02;
+    let exp = Experiment::new(&rt, cfg).unwrap();
+    let result = exp.run().unwrap();
+    assert_eq!(result.epochs.len(), 2);
+    assert!(result.test_top1 > 0.15, "top1 {}", result.test_top1);
+    assert!(!result.trace.is_empty(), "controller must have probed");
+    let (kw, ka) = result.final_bits;
+    assert!(kw < 8 || ka < 8, "bits should have moved from 8/8: {kw}/{ka}");
+    assert!(result.wcr > 1.0);
+    assert!(result.bitops_g > 0.0);
+}
+
+#[test]
+fn finetune_scenario_roundtrip() {
+    let rt = runtime().load_model("smallcnn").unwrap();
+    let tmp = std::env::temp_dir().join(format!("adaqat_it_{}", std::process::id()));
+    let mut cfg = ExperimentConfig::default_for("smallcnn");
+    cfg.epochs = 1;
+    cfg.train_size = 256;
+    cfg.test_size = 128;
+    let ck_path = ensure_fp32_pretrain(&rt, &cfg, 1, &tmp).unwrap();
+    assert!(ck_path.exists());
+    // reuse is cached
+    let again = ensure_fp32_pretrain(&rt, &cfg, 1, &tmp).unwrap();
+    assert_eq!(ck_path, again);
+
+    let ck = Checkpoint::load(&ck_path).unwrap();
+    assert!(ck.meta.get("fp32").is_some());
+    cfg.scenario = Scenario::Finetune { checkpoint: ck_path.clone() };
+    cfg.controller = ControllerKind::Fixed { k_w: 3, k_a: 4 };
+    let exp = Experiment::new(&rt, cfg).unwrap();
+    let result = exp.run().unwrap();
+    assert_eq!(result.final_bits, (3, 4));
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn trainer_runs_fixed_and_adaqat_identically_shaped() {
+    let rt = runtime().load_model("smallcnn").unwrap();
+    let ds = synth::generate(DatasetKind::Cifar10, 256, 9, 0).into_shared();
+    let test = synth::generate(DatasetKind::Cifar10, 128, 9, 1).into_shared();
+    let train_loader = Loader::new(ds, rt.mm.batch, true);
+    let test_loader = Loader::new(test, rt.mm.batch, false);
+    let mut cfg = ExperimentConfig::default_for("smallcnn");
+    cfg.epochs = 1;
+
+    let mut state = rt.init_state(0).unwrap();
+    let mut fixed = FixedController::new(4, 4);
+    let r1 = train::train(&rt, &cfg, &mut fixed, &mut state, &train_loader, &test_loader)
+        .unwrap();
+    assert_eq!(r1.final_bits, (4, 4));
+    assert!(r1.trace.is_empty(), "fixed controller never probes");
+
+    let mut state2 = rt.init_state(0).unwrap();
+    let mut ada = AdaQatController::with_defaults(8.0, 8.0, 0.15);
+    let r2 = train::train(&rt, &cfg, &mut ada, &mut state2, &train_loader, &test_loader)
+        .unwrap();
+    assert_eq!(r1.steps, r2.steps);
+    assert_eq!(r2.trace.len(), r2.steps); // probe_interval = 1
+}
+
+#[test]
+fn checkpoint_save_load_roundtrip_through_runtime() {
+    let rt = runtime().load_model("smallcnn").unwrap();
+    let mut state = rt.init_state(10).unwrap();
+    let batch = small_batch(&rt, 19);
+    let s = bitwidth_scale(8);
+    for _ in 0..5 {
+        rt.train_step(&mut state, &batch, 0.1, s, s, false).unwrap();
+    }
+    let path = std::env::temp_dir().join(format!("adaqat_rt_{}.ckpt", std::process::id()));
+    train::save_checkpoint(&rt, &state, adaqat::util::json::Json::Null, &path).unwrap();
+    let ck = Checkpoint::load(&path).unwrap();
+    let restored = rt.load_state(&ck, 0).unwrap();
+    // params and bn restored exactly; loss identical
+    let a = rt.probe_loss(&state, &batch, s, s).unwrap();
+    let b = rt.probe_loss(&restored, &batch, s, s).unwrap();
+    assert_eq!(a.loss, b.loss);
+    std::fs::remove_file(path).ok();
+}
