@@ -15,6 +15,7 @@ Artifacts per model ``m``:
     {m}_train.hlo.txt     quantized train step  (runtime s_w/s_a scalars)
     {m}_loss.hlo.txt      quantized forward probe (batch-stat BN)
     {m}_eval.hlo.txt      quantized eval (running-stat BN)
+    {m}_infer.hlo.txt     quantized serving forward: class ids, no labels
     {m}_fp_train.hlo.txt  fp32 baseline train step (pretraining / Table I)
     {m}_fp_eval.hlo.txt   fp32 baseline eval
 
@@ -37,7 +38,8 @@ import jax
 from jax._src.lib import xla_client as xc
 
 from .models import MODELS
-from .steps import make_train_step, make_forward_step, example_args
+from .steps import (make_train_step, make_forward_step, make_infer_step,
+                    example_args, infer_args)
 
 # Batch sizes are baked into the artifacts (PJRT shapes are static).
 # Chosen for CPU-PJRT throughput; the paper's 256 is a V100 setting.
@@ -53,7 +55,7 @@ def to_hlo_text(lowered) -> str:
 
 
 def lower_model(model, batch: int, *, pallas_conv: bool = False):
-    """Lower the five step graphs for one model; returns {suffix: hlo}."""
+    """Lower the step graphs for one model; returns {suffix: hlo}."""
     out = {}
     train_args = example_args(model, batch, with_opt=True, with_lr=True)
     fwd_args = example_args(model, batch, with_opt=False, with_lr=False)
@@ -74,6 +76,9 @@ def lower_model(model, batch: int, *, pallas_conv: bool = False):
     out["eval"] = lower(
         make_forward_step(model, quant=True, train_bn=False,
                           pallas_conv=pallas_conv), fwd_args)
+    out["infer"] = lower(
+        make_infer_step(model, quant=True, pallas_conv=pallas_conv),
+        infer_args(model, batch))
     if not pallas_conv:
         out["fp_train"] = lower(
             make_train_step(model, quant=False), train_args)

@@ -9,6 +9,9 @@ parameter list the Rust runtime can bind via the manifest):
           [forward-only, batch-stat BN — the finite-difference probe of
            paper §III-C re-runs this with neighbor scales on the SAME batch]
   eval:   same signature as loss, but running-stat BN (inference mode).
+  infer:  (P params..., B bn..., x, s_w, s_a) -> (preds,)
+          [serving graph: predicted class ids as f32, running-stat BN,
+           no labels — consumed by the Rust serve subsystem, DESIGN.md §7]
 
 The optimizer (SGD, momentum 0.9, weight decay 1e-4 on conv/fc weights —
 paper §IV-A) is fused into the train graph so one PJRT execution performs
@@ -101,6 +104,39 @@ def make_forward_step(model: Model, *, quant: bool, train_bn: bool,
         return (_cross_entropy(logits, y), _correct(logits, y))
 
     return step
+
+
+def make_infer_step(model: Model, *, quant: bool, pallas_conv: bool = False):
+    """Serving graph: per-sample predicted classes (as f32 so every
+    artifact stays single-dtype on the output side), inference-mode BN,
+    no labels."""
+    pnames = [p.name for p in model.spec.params]
+    bnames = [b.name for b in model.spec.bn]
+    np_, nb = len(pnames), len(bnames)
+
+    def step(*flat):
+        params = _unflatten(pnames, flat[:np_])
+        bn = _unflatten(bnames, flat[np_:np_ + nb])
+        x, s_w, s_a = flat[np_ + nb:]
+        ctx = L.Ctx(params, bn, s_w, s_a, train=False, quant=quant,
+                    pallas_conv=pallas_conv)
+        logits = model.forward(ctx, x)
+        return (jnp.argmax(logits, axis=1).astype(jnp.float32),)
+
+    return step
+
+
+def infer_args(model: Model, batch: int):
+    """ShapeDtypeStructs matching the infer step's flat signature."""
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    args = [sds(p.shape, f32) for p in model.spec.params]
+    args += [sds(b.shape, f32) for b in model.spec.bn]
+    h, w = model.input_hw
+    args.append(sds((batch, h, w, model.in_channels), f32))
+    args.append(sds((), f32))  # s_w
+    args.append(sds((), f32))  # s_a
+    return args
 
 
 def example_args(model: Model, batch: int, *, with_opt: bool,

@@ -11,7 +11,8 @@ import pytest
 
 from compile.init import init_params, init_bn, flatten_params, flatten_bn
 from compile.models import smallcnn
-from compile.steps import make_train_step, make_forward_step, example_args
+from compile.steps import (make_train_step, make_forward_step,
+                           make_infer_step, example_args, infer_args)
 from compile.quantizers import bitwidth_scale, S_IDENTITY
 
 jax.config.update("jax_platform_name", "cpu")
@@ -129,6 +130,27 @@ def test_example_args_match_signature(setup):
     # lowering must succeed with these avals
     jax.jit(make_train_step(m, quant=True)).lower(*t_args)
     jax.jit(make_forward_step(m, quant=True, train_bn=False)).lower(*f_args)
+
+
+def test_infer_step_matches_eval_argmax(setup):
+    """The serving graph must predict exactly what the eval graph's
+    logits argmax to — same params, same BN mode, same scales."""
+    m, p, mom, bn, x, y = setup
+    infer = jax.jit(make_infer_step(m, quant=True))
+    base = flatten_params(m, p) + flatten_bn(m, bn)
+    s = jnp.float32(bitwidth_scale(4))
+    preds = infer(*base, x, s, s)[0]
+    assert preds.shape == (B,)
+    assert preds.dtype == jnp.float32
+    # recompute logits through the model directly in eval mode
+    from compile import layers as L
+    ctx = L.Ctx(p, bn, s, s, train=False, quant=True)
+    logits = m.forward(ctx, x)
+    np.testing.assert_array_equal(np.asarray(preds),
+                                  np.argmax(np.asarray(logits), axis=1)
+                                  .astype(np.float32))
+    # and the flat signature lowers with its declared avals
+    jax.jit(make_infer_step(m, quant=True)).lower(*infer_args(m, B))
 
 
 def test_weight_decay_applies_only_to_weights(setup):

@@ -17,6 +17,10 @@ use adaqat::util::bench::{bench_args, measure};
 
 fn main() -> anyhow::Result<()> {
     adaqat::util::logger::init();
+    if !adaqat::coordinator::artifacts_present() {
+        eprintln!("bench micro: skipping — no AOT artifacts (run `make artifacts`)");
+        return Ok(());
+    }
     let args = bench_args();
     let iters: usize = args.get("iters", 5).map_err(|e| anyhow::anyhow!(e))?;
     let models = args.get_str("models", "smallcnn,resnet20");

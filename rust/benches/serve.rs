@@ -1,0 +1,143 @@
+//! Serving benchmarks (DESIGN.md §7): packed-checkpoint size at swept
+//! bit-widths, single-stream vs dynamically-batched throughput, and a
+//! TCP loopback end-to-end run.
+//!
+//! Runs entirely offline on the pure-Rust reference backend — no AOT
+//! artifacts or PJRT needed — so it doubles as the serving subsystem's
+//! executable smoke test in CI (`cargo test -q --benches`).
+//!
+//! ```bash
+//! cargo bench --bench serve
+//! cargo bench --bench serve -- --n 8192 --workers 4 --max_delay_ms 1
+//! ```
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use adaqat::data::DatasetKind;
+use adaqat::metrics::Table;
+use adaqat::serve::{
+    demo, Backend, Engine, EngineConfig, QuantizedCheckpoint, ReferenceBackend, Server,
+};
+use adaqat::util::bench::bench_args;
+
+fn main() -> anyhow::Result<()> {
+    adaqat::util::logger::init();
+    let args = bench_args();
+    let n: usize = args.get("n", 2048).map_err(|e| anyhow::anyhow!(e))?;
+    let batch: usize = args.get("batch", 64).map_err(|e| anyhow::anyhow!(e))?;
+    let workers: usize = args.get("workers", 2).map_err(|e| anyhow::anyhow!(e))?;
+    let window_ms: u64 = args.get("max_delay_ms", 2).map_err(|e| anyhow::anyhow!(e))?;
+    let single_n: usize = args.get("single_n", 256).map_err(|e| anyhow::anyhow!(e))?;
+
+    let tmp = std::env::temp_dir().join(format!("adaqat_serve_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp)?;
+
+    // ---------------------------------------------- packed size sweep
+    let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 64, 0, batch);
+    let fp32_path = tmp.join("model.ckpt");
+    ck.save(&fp32_path)?;
+    let fp32_bytes = std::fs::metadata(&fp32_path)?.len();
+    println!("=== packed checkpoint size (fp32 source: {fp32_bytes} bytes) ===");
+    let mut table = Table::new(&["k_w", "bytes", "vs fp32", "exact round-trip"]);
+    for bits in [2u32, 4, 8] {
+        let q = QuantizedCheckpoint::from_checkpoint(&ck, bits, |nm| nm.ends_with(".w"));
+        let path = tmp.join(format!("model_w{bits}.aqq"));
+        q.save(&path)?;
+        let bytes = std::fs::metadata(&path)?.len();
+        let reloaded = QuantizedCheckpoint::load(&path)?;
+        let exact = q
+            .tensors
+            .iter()
+            .zip(&reloaded.tensors)
+            .all(|((_, a), (_, b))| a.dequantize().data == b.dequantize().data);
+        table.row(vec![
+            bits.to_string(),
+            bytes.to_string(),
+            format!("{:.1}x smaller", fp32_bytes as f64 / bytes as f64),
+            exact.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // ---------------------------------------------- engine throughput
+    let packed = Arc::new(QuantizedCheckpoint::from_checkpoint(&ck, 4, |nm| {
+        nm.ends_with(".w")
+    }));
+    let packed2 = Arc::clone(&packed);
+    let engine = Engine::start(
+        EngineConfig {
+            workers,
+            queue_capacity: 4096.max(n),
+            max_delay: Duration::from_millis(window_ms),
+        },
+        move |_| Ok(Box::new(ReferenceBackend::from_packed(&packed2)?) as Box<dyn Backend>),
+    )?;
+
+    let ds = adaqat::data::synth::generate(DatasetKind::Cifar10, n, 7, 1);
+
+    println!("=== throughput: single-stream vs dynamic batching ===");
+    println!(
+        "(batch {batch}, {workers} workers, {window_ms} ms window — single-stream \
+         pays the window + a full-batch forward per request)"
+    );
+    let t0 = Instant::now();
+    for i in 0..single_n {
+        let resp = engine.infer_blocking(ds.image(i % n).to_vec())?;
+        anyhow::ensure!(resp.result.is_ok(), "single-stream request failed");
+    }
+    let rps_single = single_n as f64 / t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    for i in 0..n {
+        engine
+            .submit(i as u64, ds.image(i).to_vec(), tx.clone())
+            .map_err(|e| anyhow::anyhow!("submit {i}: {e}"))?;
+    }
+    let mut failures = 0usize;
+    for _ in 0..n {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .map_err(|_| anyhow::anyhow!("engine stalled"))?;
+        if resp.result.is_err() {
+            failures += 1;
+        }
+    }
+    let rps_batched = n as f64 / t0.elapsed().as_secs_f64();
+    anyhow::ensure!(failures == 0, "{failures} batched requests failed");
+
+    let speedup = rps_batched / rps_single;
+    println!("single-stream: {rps_single:9.0} req/s  ({single_n} requests, window included)");
+    println!("batched:       {rps_batched:9.0} req/s  ({n} requests in flight)");
+    println!(
+        "speedup:       {speedup:9.1}x  {}",
+        if speedup >= 4.0 { "(≥4x: dynamic batching pays)" } else { "(< 4x — investigate!)" }
+    );
+    println!("\n=== engine metrics ===\n{}", engine.metrics.report());
+
+    // ---------------------------------------------- TCP loopback e2e
+    println!("\n=== TCP loopback end-to-end ===");
+    match Server::start("127.0.0.1:0", Arc::clone(&engine)) {
+        Ok(server) => {
+            let images: Vec<(Vec<f32>, i32)> =
+                (0..n).map(|i| (ds.image(i).to_vec(), ds.labels[i])).collect();
+            let report = adaqat::serve::client::run(&server.addr.to_string(), &images, 64)?;
+            println!(
+                "served {}/{} over TCP at {:.0} req/s, accuracy {:.1}%, {} errors",
+                report.received,
+                report.sent,
+                report.requests_per_second(),
+                100.0 * report.correct as f64 / report.received.max(1) as f64,
+                report.errors
+            );
+            println!("{}", report.latency.row("client rtt"));
+            server.stop();
+        }
+        Err(e) => println!("skipping TCP section (bind failed: {e})"),
+    }
+
+    engine.shutdown();
+    std::fs::remove_dir_all(&tmp).ok();
+    Ok(())
+}

@@ -28,6 +28,10 @@ use adaqat::util::bench::bench_args;
 
 fn main() -> anyhow::Result<()> {
     adaqat::util::logger::init();
+    if !adaqat::coordinator::artifacts_present() {
+        eprintln!("bench table1: skipping — no AOT artifacts (run `make artifacts`)");
+        return Ok(());
+    }
     let args = bench_args();
     let model_key = args.get_str("model", "resnet20");
 

@@ -20,6 +20,10 @@ use adaqat::util::bench::bench_args;
 
 fn main() -> anyhow::Result<()> {
     adaqat::util::logger::init();
+    if !adaqat::coordinator::artifacts_present() {
+        eprintln!("bench table2: skipping — no AOT artifacts (run `make artifacts`)");
+        return Ok(());
+    }
     let args = bench_args();
 
     let runtime = default_runtime()?;

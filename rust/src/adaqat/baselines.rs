@@ -9,7 +9,7 @@
 //!   learns the relaxation with a gradient; our comparator reproduces
 //!   the schedule *shape* (gradual fractional descent, no oscillation
 //!   phase) which is what the Table I comparison exercises — documented
-//!   as a shape-level comparator in DESIGN.md §7.
+//!   as a shape-level comparator in DESIGN.md §5.
 
 use super::{Controller, ProbeRequest};
 

@@ -17,7 +17,7 @@ pub enum ControllerKind {
     AdaQat,
     /// Static bit-widths (DoReFa/PACT-style rows of Table I).
     Fixed { k_w: u32, k_a: u32 },
-    /// FracBits-style scheduled relaxation (comparator, DESIGN.md §7).
+    /// FracBits-style scheduled relaxation (comparator, DESIGN.md §5).
     FracBits { k_w_target: u32, k_a_target: u32 },
 }
 
@@ -211,6 +211,96 @@ impl ExperimentConfig {
     }
 }
 
+/// Configuration for `adaqat serve` (DESIGN.md §7). Same conventions as
+/// [`ExperimentConfig`]: typed struct, `key = value` settings, CLI
+/// overrides via [`Args`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Packed checkpoint (`adaqat export` output) to serve.
+    pub checkpoint: PathBuf,
+    /// Bind address, e.g. "127.0.0.1:7878" (port 0 picks a free port).
+    pub addr: String,
+    /// Worker threads, each owning one backend instance.
+    pub workers: usize,
+    /// Bounded request-queue capacity (beyond it, clients see
+    /// backpressure errors instead of unbounded buffering).
+    pub queue_capacity: usize,
+    /// Dynamic-batching window in milliseconds: the max time a lone
+    /// request waits for company before a partial batch ships.
+    pub max_delay_ms: u64,
+    /// "reference" (pure-Rust linear, offline-runnable) or "runtime"
+    /// (compiled infer graph on PJRT).
+    pub backend: String,
+    /// Manifest model key for the runtime backend.
+    pub model: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            checkpoint: PathBuf::new(),
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 2,
+            queue_capacity: 1024,
+            max_delay_ms: 5,
+            backend: "reference".to_string(),
+            model: "resnet20".to_string(),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(k: &str, v: &str) -> Result<T, String> {
+            v.parse().map_err(|_| format!("{k}: cannot parse {v:?}"))
+        }
+        match key {
+            "checkpoint" => self.checkpoint = PathBuf::from(value),
+            "addr" => self.addr = value.to_string(),
+            "workers" => self.workers = p(key, value)?,
+            "queue_capacity" => self.queue_capacity = p(key, value)?,
+            "max_delay_ms" => self.max_delay_ms = p(key, value)?,
+            "model" => self.model = value.to_string(),
+            "backend" => {
+                if !["reference", "runtime"].contains(&value) {
+                    return Err(format!(
+                        "backend: expected reference|runtime, got {value:?}"
+                    ));
+                }
+                self.backend = value.to_string();
+            }
+            _ => return Err(format!("unknown serve config key {key:?}")),
+        }
+        Ok(())
+    }
+
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
+        for key in [
+            "checkpoint", "addr", "workers", "queue_capacity", "max_delay_ms",
+            "backend", "model",
+        ] {
+            if args.has(key) {
+                let v = args.get_str(key, "");
+                self.set(key, &v)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.checkpoint.as_os_str().is_empty() {
+            return Err("serve requires --checkpoint (a packed .aqq file)".into());
+        }
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        if self.queue_capacity == 0 {
+            return Err("queue_capacity must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,5 +370,35 @@ mod tests {
         c.apply_args(&args).unwrap();
         assert_eq!(c.epochs, 3);
         assert!(matches!(c.scenario, Scenario::Finetune { .. }));
+    }
+
+    #[test]
+    fn serve_config_defaults_overrides_and_validation() {
+        let mut s = ServeConfig::default();
+        assert!(s.validate().is_err(), "checkpoint is required");
+        let args = Args::parse(
+            "--checkpoint runs/demo/packed.aqq --workers 4 --max_delay_ms 2 --backend runtime --model smallcnn"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        s.apply_args(&args).unwrap();
+        assert!(s.validate().is_ok());
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.max_delay_ms, 2);
+        assert_eq!(s.backend, "runtime");
+        assert_eq!(s.model, "smallcnn");
+        assert_eq!(s.addr, "127.0.0.1:7878");
+    }
+
+    #[test]
+    fn serve_config_rejects_bad_values() {
+        let mut s = ServeConfig::default();
+        assert!(s.set("backend", "gpu-magic").is_err());
+        assert!(s.set("workers", "zero").is_err());
+        assert!(s.set("nope", "1").is_err());
+        s.set("checkpoint", "x.aqq").unwrap();
+        s.set("workers", "0").unwrap();
+        assert!(s.validate().is_err());
     }
 }

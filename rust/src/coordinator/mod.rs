@@ -233,11 +233,105 @@ pub fn ensure_fp32_pretrain(
     Ok(path)
 }
 
-/// Convenience used by examples/benches: open the default artifact dir
-/// (`$ADAQAT_ARTIFACTS` or `./artifacts`).
+/// The artifact directory: `$ADAQAT_ARTIFACTS` or `./artifacts`.
+pub fn artifact_dir() -> PathBuf {
+    PathBuf::from(
+        std::env::var("ADAQAT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    )
+}
+
+/// Whether AOT artifacts exist. Benches and integration tests call this
+/// to skip gracefully (instead of failing) on checkouts that have not
+/// run `make artifacts`.
+pub fn artifacts_present() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+/// Convenience used by examples/benches: open the default artifact dir.
 pub fn default_runtime() -> anyhow::Result<Runtime> {
-    let dir = std::env::var("ADAQAT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
-    Runtime::new(Path::new(&dir))
+    Runtime::new(&artifact_dir())
+}
+
+/// What `export_packed` did, for reporting.
+#[derive(Debug, Clone)]
+pub struct ExportReport {
+    pub k_w: u32,
+    pub quantized_tensors: usize,
+    pub raw_tensors: usize,
+    /// fp32 bytes the packed weights replace (numel × 4 of all tensors).
+    pub fp32_bytes: usize,
+    pub packed_payload_bytes: usize,
+}
+
+/// Convert a training checkpoint into the packed serving format
+/// (DESIGN.md §7): weight tensors → `bits`-bit codes, everything else
+/// raw. Weight selection uses manifest roles when artifacts are present
+/// and the checkpoint names its model; otherwise it falls back to the
+/// `.w` naming convention every model spec follows. The packed meta is
+/// enriched with the cost-model summary (BitOPs, WCR) when the manifest
+/// geometry is available.
+pub fn export_packed(
+    ck: &Checkpoint,
+    bits: u32,
+) -> anyhow::Result<(crate::serve::QuantizedCheckpoint, ExportReport)> {
+    anyhow::ensure!((1..=24).contains(&bits), "export bits must be in 1..=24, got {bits}");
+    let model_key = ck.meta.get("model").and_then(Json::as_str).map(str::to_string);
+    let mut cost_summary: Option<(f64, f64)> = None;
+    let weight_names: Option<std::collections::BTreeSet<String>> = if artifacts_present() {
+        match (crate::runtime::Manifest::load(&artifact_dir()), &model_key) {
+            (Ok(man), Some(key)) => match man.model(key) {
+                Ok(mm) => {
+                    let k_a = ck.meta.get("k_a").and_then(Json::as_f64).unwrap_or(32.0) as u32;
+                    let cost = CostModel::from_manifest(mm);
+                    cost_summary = Some((cost.bitops_g(bits, k_a), cost.wcr(bits)));
+                    Some(
+                        mm.params
+                            .iter()
+                            .filter(|p| p.role == "conv_w" || p.role == "fc_w")
+                            .map(|p| p.name.clone())
+                            .collect(),
+                    )
+                }
+                Err(_) => None,
+            },
+            _ => None,
+        }
+    } else {
+        None
+    };
+    if weight_names.is_none() {
+        log::info!("export: no manifest roles for this checkpoint; using the `.w` naming convention");
+    }
+    let is_weight = |name: &str| match &weight_names {
+        Some(set) => set.contains(name),
+        None => name.ends_with(".w"),
+    };
+    let mut q = crate::serve::QuantizedCheckpoint::from_checkpoint(ck, bits, is_weight);
+    if let (Some((bitops_g, wcr)), Json::Obj(meta)) = (cost_summary, &mut q.meta) {
+        meta.insert(
+            "cost".to_string(),
+            Json::obj(vec![
+                ("bitops_g", Json::num(bitops_g)),
+                ("wcr", Json::num(wcr)),
+            ]),
+        );
+    }
+    let mut report = ExportReport {
+        k_w: bits,
+        quantized_tensors: 0,
+        raw_tensors: 0,
+        fp32_bytes: 0,
+        packed_payload_bytes: q.payload_bytes(),
+    };
+    for ((_, src), (_, packed)) in ck.tensors.iter().zip(&q.tensors) {
+        report.fp32_bytes += src.numel() * 4;
+        if packed.bits == crate::serve::packed::RAW_BITS {
+            report.raw_tensors += 1;
+        } else {
+            report.quantized_tensors += 1;
+        }
+    }
+    Ok((q, report))
 }
 
 #[cfg(test)]
@@ -297,5 +391,27 @@ mod tests {
         cfg.test_size = 64;
         let (train, _) = make_datasets(&cfg, 32);
         assert_eq!(train.num_classes, 100);
+    }
+
+    #[test]
+    fn export_packed_heuristic_path() {
+        // no model in the manifest matches "demo-linear", so the `.w`
+        // naming fallback must select exactly the weight matrix
+        let ck = crate::serve::demo::demo_checkpoint(
+            crate::data::DatasetKind::Cifar10,
+            2,
+            1,
+            8,
+        );
+        let (q, report) = export_packed(&ck, 4).unwrap();
+        assert_eq!(report.k_w, 4);
+        assert_eq!(report.quantized_tensors, 1);
+        assert_eq!(report.raw_tensors, 1);
+        assert_eq!(q.get("fc.w").unwrap().bits, 4);
+        assert!(report.packed_payload_bytes * 6 < report.fp32_bytes);
+        assert_eq!(q.meta.get("k_w").unwrap().as_f64(), Some(4.0));
+        // and the result still drives the reference backend
+        assert!(crate::serve::ReferenceBackend::from_packed(&q).is_ok());
+        assert!(export_packed(&ck, 32).is_err());
     }
 }

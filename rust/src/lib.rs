@@ -8,9 +8,11 @@
 //! * **Layer 3 (this crate)** — the coordinator that *is* the paper's
 //!   contribution: the adaptive bit-width controller ([`adaqat`]), the
 //!   training orchestrator ([`train`]), the synthetic data pipeline
-//!   ([`data`]), the hardware cost model ([`quant`]), and the PJRT
-//!   runtime ([`runtime`]) that executes the compiled artifacts. Python
-//!   never runs on the training path.
+//!   ([`data`]), the hardware cost model ([`quant`]), the PJRT
+//!   runtime ([`runtime`]) that executes the compiled artifacts, and the
+//!   quantized-inference serving subsystem ([`serve`]) that turns a
+//!   finished run into a batched TCP service. Python never runs on the
+//!   training or serving paths.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
@@ -22,6 +24,7 @@ pub mod data;
 pub mod metrics;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -1,32 +1,57 @@
 //! `adaqat` CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//!   train      run one experiment from flags / --config file
-//!   eval       evaluate a checkpoint on the test split
-//!   pretrain   produce an fp32 checkpoint for the fine-tuning scenario
-//!   inspect    print manifest + cost-model facts for a model
+//!   train       run one experiment from flags / --config file
+//!   eval        evaluate a checkpoint on the test split
+//!   pretrain    produce an fp32 checkpoint for the fine-tuning scenario
+//!   inspect     print manifest + cost-model facts for a model
+//!   export      pack a training checkpoint into the AQQCKPT1 serving format
+//!   serve       run the quantized-inference TCP service (DESIGN.md §7)
+//!   client      demo load generator against a running server
+//!   demo-model  build the offline nearest-centroid demo checkpoint
 //!
 //! Examples:
 //!   adaqat train --model resnet20 --controller adaqat --lambda 0.15 \
 //!                --epochs 4 --out_dir runs/demo
-//!   adaqat pretrain --model resnet20 --epochs 3
-//!   adaqat eval --model resnet20 --checkpoint runs/demo/final.ckpt
+//!   adaqat export --checkpoint runs/demo/final.ckpt --out runs/demo/packed.aqq
+//!   adaqat serve --checkpoint runs/demo/packed.aqq --addr 127.0.0.1:7878
+//!   adaqat client --addr 127.0.0.1:7878 --n 1000 --window 64
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
 
 use adaqat::adaqat::FixedController;
-use adaqat::config::ExperimentConfig;
+use adaqat::config::{ExperimentConfig, ServeConfig};
 use adaqat::coordinator::{self, Experiment};
+use adaqat::data::DatasetKind;
 use adaqat::quant::CostModel;
+use adaqat::serve::{
+    demo, Backend, Engine, EngineConfig, QuantizedCheckpoint, ReferenceBackend,
+    RuntimeBackend, Server,
+};
 use adaqat::tensor::checkpoint::Checkpoint;
 use adaqat::util::cli::Args;
 
-const KNOWN_FLAGS: &[&str] = &[
+const TRAIN_FLAGS: &[&str] = &[
     "model", "dataset", "fp32", "epochs", "train_size", "test_size", "lr",
     "lambda", "eta_w", "eta_a", "init_nw", "init_na", "probe_interval",
     "osc_threshold", "seed", "out_dir", "checkpoint", "controller",
     "hard_cost", "config", "help",
 ];
+
+const EXPORT_FLAGS: &[&str] = &["checkpoint", "out", "bits", "help"];
+
+const SERVE_FLAGS: &[&str] = &[
+    "checkpoint", "addr", "workers", "queue_capacity", "max_delay_ms",
+    "backend", "model", "help",
+];
+
+const CLIENT_FLAGS: &[&str] =
+    &["addr", "n", "window", "dataset", "seed", "help"];
+
+const DEMO_MODEL_FLAGS: &[&str] =
+    &["out", "dataset", "samples", "seed", "serve_batch", "help"];
 
 fn main() {
     adaqat::util::logger::init();
@@ -43,13 +68,25 @@ fn run() -> anyhow::Result<()> {
         print_help();
         return Ok(());
     }
-    args.reject_unknown(KNOWN_FLAGS).map_err(|e| anyhow::anyhow!(e))?;
+    let known = match cmd {
+        "train" | "eval" | "pretrain" | "inspect" => TRAIN_FLAGS,
+        "export" => EXPORT_FLAGS,
+        "serve" => SERVE_FLAGS,
+        "client" => CLIENT_FLAGS,
+        "demo-model" => DEMO_MODEL_FLAGS,
+        other => anyhow::bail!("unknown command {other:?} (try `adaqat help`)"),
+    };
+    args.reject_unknown(known).map_err(|e| anyhow::anyhow!(e))?;
     match cmd {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "pretrain" => cmd_pretrain(&args),
         "inspect" => cmd_inspect(&args),
-        other => anyhow::bail!("unknown command {other:?} (try `adaqat help`)"),
+        "export" => cmd_export(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "demo-model" => cmd_demo_model(&args),
+        _ => unreachable!("matched above"),
     }
 }
 
@@ -153,19 +190,160 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+// ------------------------------------------------------------- serving
+
+fn cmd_export(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(args.has("checkpoint"), "export requires --checkpoint");
+    let ck_path = PathBuf::from(args.get_str("checkpoint", ""));
+    let ck = Checkpoint::load(&ck_path)?;
+    let bits = if args.has("bits") {
+        // explicit value, even an invalid one like 0, must be validated
+        // downstream rather than silently replaced by the default
+        args.get::<u32>("bits", 8).map_err(|e| anyhow::anyhow!(e))?
+    } else {
+        // meta k_w outside the packable range (e.g. a 32-bit baseline
+        // run) falls back to 8-bit packing rather than hard-failing the
+        // documented no-flag flow
+        match ck.meta.get("k_w").and_then(|j| j.as_f64()).map(|k| k as u32) {
+            Some(k) if (1..=24).contains(&k) => k,
+            Some(k) => {
+                log::info!("meta k_w = {k} is not packable; defaulting to 8 (pass --bits to override)");
+                8
+            }
+            None => 8,
+        }
+    };
+    let out = PathBuf::from(args.get_str(
+        "out",
+        &format!("{}.aqq", ck_path.with_extension("").display()),
+    ));
+    let (q, report) = coordinator::export_packed(&ck, bits)?;
+    q.save(&out)?;
+    let fp32_file = std::fs::metadata(&ck_path)?.len();
+    let packed_file = std::fs::metadata(&out)?.len();
+    println!("packed:      {}", out.display());
+    println!(
+        "tensors:     {} quantized at {} bits, {} raw f32",
+        report.quantized_tensors, report.k_w, report.raw_tensors
+    );
+    println!(
+        "size:        {packed_file} bytes vs {fp32_file} fp32 ({:.1}% / {:.1}x smaller)",
+        100.0 * packed_file as f64 / fp32_file as f64,
+        fp32_file as f64 / packed_file as f64
+    );
+    if let Some(cost) = q.meta.get("cost") {
+        println!("cost model:  {}", cost.to_string());
+    }
+    Ok(())
+}
+
+fn engine_from(scfg: &ServeConfig) -> anyhow::Result<Arc<Engine>> {
+    let packed = Arc::new(QuantizedCheckpoint::load(&scfg.checkpoint)?);
+    let cfg = EngineConfig {
+        workers: scfg.workers,
+        queue_capacity: scfg.queue_capacity,
+        max_delay: Duration::from_millis(scfg.max_delay_ms),
+    };
+    match scfg.backend.as_str() {
+        "reference" => Engine::start(cfg, move |_| {
+            Ok(Box::new(ReferenceBackend::from_packed(&packed)?) as Box<dyn Backend>)
+        }),
+        "runtime" => {
+            let dir = coordinator::artifact_dir();
+            let model = scfg.model.clone();
+            Engine::start(cfg, move |_| {
+                Ok(Box::new(RuntimeBackend::new(&dir, &model, &packed)?)
+                    as Box<dyn Backend>)
+            })
+        }
+        other => anyhow::bail!("unknown backend {other:?}"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut scfg = ServeConfig::default();
+    scfg.apply_args(args).map_err(|e| anyhow::anyhow!(e))?;
+    scfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let engine = engine_from(&scfg)?;
+    let server = Server::start(&scfg.addr, Arc::clone(&engine))?;
+    println!(
+        "serving {} on {} ({} workers, batch {}, window {} ms)",
+        scfg.checkpoint.display(),
+        server.addr,
+        scfg.workers,
+        engine.batch(),
+        scfg.max_delay_ms
+    );
+    // Foreground service: report latency stats until the process is
+    // killed (no signal handling in the offline std-only build).
+    loop {
+        std::thread::sleep(Duration::from_secs(10));
+        if engine.metrics.requests.load(std::sync::atomic::Ordering::Relaxed) > 0 {
+            log::info!("\n{}", engine.metrics.report());
+        }
+    }
+}
+
+fn cmd_client(args: &Args) -> anyhow::Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let n: usize = args.get("n", 1000).map_err(|e| anyhow::anyhow!(e))?;
+    let window: usize = args.get("window", 64).map_err(|e| anyhow::anyhow!(e))?;
+    let seed: u64 = args.get("seed", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let kind = DatasetKind::parse(&args.get_str("dataset", "cifar10"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let ds = adaqat::data::synth::generate(kind, n, seed, 1);
+    let images: Vec<(Vec<f32>, i32)> =
+        (0..n).map(|i| (ds.image(i).to_vec(), ds.labels[i])).collect();
+    println!("sending {n} requests to {addr} (window {window})…");
+    let report = adaqat::serve::client::run(&addr, &images, window)?;
+    println!("received:    {}/{} ({} errors)", report.received, report.sent, report.errors);
+    println!(
+        "accuracy:    {:.1}% ({} correct)",
+        100.0 * report.correct as f64 / report.received.max(1) as f64,
+        report.correct
+    );
+    println!("throughput:  {:.0} req/s over {:.2}s", report.requests_per_second(), report.wall_seconds);
+    println!("{}", report.latency.row("latency"));
+    Ok(())
+}
+
+fn cmd_demo_model(args: &Args) -> anyhow::Result<()> {
+    let out = PathBuf::from(args.get_str("out", "runs/demo/model.ckpt"));
+    let kind = DatasetKind::parse(&args.get_str("dataset", "cifar10"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let samples: usize = args.get("samples", 64).map_err(|e| anyhow::anyhow!(e))?;
+    let seed: u64 = args.get("seed", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let serve_batch: usize = args.get("serve_batch", 64).map_err(|e| anyhow::anyhow!(e))?;
+    let ck = demo::demo_checkpoint(kind, samples, seed, serve_batch);
+    ck.save(&out)?;
+    // quick self-check on a fresh test split (fp32, pre-packing)
+    let (q, _) = coordinator::export_packed(&ck, 8)?;
+    let backend = ReferenceBackend::from_packed(&q)?;
+    let acc = demo::demo_accuracy(&backend, kind, 512, seed ^ 1);
+    println!("demo model:  {}", out.display());
+    println!("classes:     {}", q.meta.get("num_classes").and_then(|j| j.as_f64()).unwrap_or(0.0));
+    println!("test top-1:  {:.1}% (nearest-centroid, fresh split)", acc * 100.0);
+    println!("next:        adaqat export --checkpoint {} --bits 4", out.display());
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "adaqat — AdaQAT: Adaptive Bit-Width Quantization-Aware Training
 
-USAGE: adaqat <train|eval|pretrain|inspect> [--flags]
+USAGE: adaqat <train|eval|pretrain|inspect|export|serve|client|demo-model> [--flags]
 
 COMMANDS
-  train     run one experiment (controller: adaqat | fixed:W:A | fracbits:W:A)
-  eval      evaluate --checkpoint on the test split
-  pretrain  produce an fp32 checkpoint (fine-tuning scenario)
-  inspect   print manifest + cost model for --model
+  train       run one experiment (controller: adaqat | fixed:W:A | fracbits:W:A)
+  eval        evaluate --checkpoint on the test split
+  pretrain    produce an fp32 checkpoint (fine-tuning scenario)
+  inspect     print manifest + cost model for --model
+  export      pack --checkpoint into the AQQCKPT1 serving format
+  serve       serve a packed checkpoint over TCP/NDJSON (DESIGN.md §7)
+  client      demo load generator against a running `adaqat serve`
+  demo-model  build the offline nearest-centroid demo checkpoint
 
-COMMON FLAGS
+TRAIN/EVAL FLAGS
   --model NAME          smallcnn | resnet20 | resnet18 | smallcnn_pallas
   --config FILE         key = value config file (flags override it)
   --controller SPEC     adaqat | fixed:2:32 | fracbits:3:4   [adaqat]
@@ -181,6 +359,20 @@ COMMON FLAGS
   --osc_threshold N     oscillations before freezing         [10]
   --hard_cost M         L_hard model: product | memory | fpga-dsp | energy
   --seed N / --out_dir DIR
+
+SERVING FLAGS
+  export:     --checkpoint FILE [--out FILE.aqq] [--bits N (default: meta k_w)]
+  serve:      --checkpoint FILE.aqq [--addr HOST:PORT] [--workers N]
+              [--queue_capacity N] [--max_delay_ms N]
+              [--backend reference|runtime] [--model NAME]
+  client:     [--addr HOST:PORT] [--n N] [--window N] [--dataset D] [--seed N]
+  demo-model: [--out FILE] [--dataset D] [--samples PER_CLASS]
+              [--serve_batch N] [--seed N]
+
+Serving quickstart (no PJRT artifacts needed):
+  adaqat demo-model && adaqat export --checkpoint runs/demo/model.ckpt --bits 4
+  adaqat serve --checkpoint runs/demo/model.aqq &
+  adaqat client --n 1000 --window 64
 
 Artifacts are loaded from $ADAQAT_ARTIFACTS (default ./artifacts);
 build them with `make artifacts`."

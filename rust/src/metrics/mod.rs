@@ -1,8 +1,11 @@
 //! Metrics output: CSV writers, aligned report tables, ASCII plots
-//! (used by the Fig. 1 bench to render the bit-width staircase).
+//! (used by the Fig. 1 bench to render the bit-width staircase), and
+//! lock-free latency histograms with percentile reporting (used by the
+//! serve subsystem's per-request queue/compute timings — DESIGN.md §7).
 
 use std::io::Write;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Append-style CSV writer with a fixed header.
 pub struct CsvWriter {
@@ -127,6 +130,126 @@ pub fn ascii_plot(series: &[(&str, &[f64])], width: usize, height: usize) -> Str
     out
 }
 
+// --------------------------------------------------------------- latency
+
+/// Number of log-spaced histogram buckets.
+const HIST_BUCKETS: usize = 96;
+/// Lower edge of bucket 0 in milliseconds (1 µs).
+const HIST_LO_MS: f64 = 1e-3;
+/// log2 of the bucket-width ratio: buckets grow by 2^0.25 ≈ 1.19×, so
+/// reported percentiles carry ≲ ±10% quantization error and the range
+/// covers 1 µs … ~16.8 s.
+const HIST_LOG2_RATIO: f64 = 0.25;
+
+/// A fixed-memory, thread-safe latency histogram. `record_ms` is a
+/// single relaxed atomic increment, so the serve workers can stamp every
+/// request without contending on a lock.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Total in nanoseconds (u64 holds > 500 years of accumulated time).
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+/// Point-in-time percentile summary of a [`Histogram`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySnapshot {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(ms: f64) -> usize {
+        if ms <= HIST_LO_MS {
+            return 0;
+        }
+        let idx = ((ms / HIST_LO_MS).log2() / HIST_LOG2_RATIO) as usize;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of a bucket, in ms (what percentiles report).
+    fn bucket_mid(i: usize) -> f64 {
+        HIST_LO_MS * 2f64.powf((i as f64 + 0.5) * HIST_LOG2_RATIO)
+    }
+
+    pub fn record_ms(&self, ms: f64) {
+        let ms = if ms.is_finite() && ms >= 0.0 { ms } else { 0.0 };
+        self.buckets[Self::bucket_index(ms)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let ns = (ms * 1e6) as u64;
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// p ∈ [0, 1]; returns 0 for an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return Self::bucket_mid(i);
+            }
+        }
+        Self::bucket_mid(HIST_BUCKETS - 1)
+    }
+
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let count = self.count();
+        LatencySnapshot {
+            count,
+            mean_ms: if count == 0 {
+                0.0
+            } else {
+                self.sum_ns.load(Ordering::Relaxed) as f64 / 1e6 / count as f64
+            },
+            p50_ms: self.percentile(0.50),
+            p95_ms: self.percentile(0.95),
+            p99_ms: self.percentile(0.99),
+            max_ms: self.max_ns.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}
+
+impl LatencySnapshot {
+    /// One aligned report line (used by `adaqat serve` stats logging and
+    /// the serve bench).
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{name:<12} n={:<7} mean {:>8.3} ms  p50 {:>8.3}  p95 {:>8.3}  p99 {:>8.3}  max {:>8.3}",
+            self.count, self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms, self.max_ms
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,5 +293,56 @@ mod tests {
     #[test]
     fn plot_empty_ok() {
         assert_eq!(ascii_plot(&[], 10, 5), "");
+    }
+
+    #[test]
+    fn histogram_percentiles_track_uniform_distribution() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.record_ms(i as f64);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert!((s.mean_ms - 500.5).abs() < 10.0, "mean {}", s.mean_ms);
+        // log-bucketed: ≲ ±19% relative quantization error per bucket
+        assert!((400.0..625.0).contains(&s.p50_ms), "p50 {}", s.p50_ms);
+        assert!((760.0..1190.0).contains(&s.p95_ms), "p95 {}", s.p95_ms);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms);
+        assert!((s.max_ms - 1000.0).abs() < 1.0, "max {}", s.max_ms);
+    }
+
+    #[test]
+    fn histogram_empty_and_edge_values() {
+        let h = Histogram::new();
+        assert_eq!(h.snapshot().count, 0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        // pathological inputs land in bucket 0 instead of poisoning state
+        h.record_ms(-3.0);
+        h.record_ms(f64::NAN);
+        h.record_ms(0.0);
+        assert_eq!(h.count(), 3);
+        assert!(h.percentile(1.0) < 2e-3);
+        // far beyond the top bucket still counts
+        h.record_ms(1e9);
+        assert_eq!(h.count(), 4);
+        assert!(h.snapshot().max_ms >= 1e9 - 1.0);
+    }
+
+    #[test]
+    fn histogram_is_shareable_across_threads() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let mut handles = vec![];
+        for t in 0..4 {
+            let h = std::sync::Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..250 {
+                    h.record_ms((t * 250 + i) as f64 / 10.0);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 1000);
     }
 }

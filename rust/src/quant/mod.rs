@@ -1,7 +1,8 @@
 //! Quantization math + the hardware cost model (paper §III-B).
 //!
 //! * `bitwidth_scale` — s = 2^k − 1, the runtime scalar fed to the
-//!   compiled graphs (re-exported from [`crate::runtime`]).
+//!   compiled graphs (defined here; [`crate::runtime`] re-exports it for
+//!   callers that think in runtime terms).
 //! * [`CostModel`] — BitOPs and weight-compression-rate computed from the
 //!   per-layer geometry the AOT manifest ships (FracBits eqs. (4)–(5),
 //!   as adopted by the paper): for a conv filter f,
@@ -14,8 +15,21 @@ pub mod energy;
 
 use crate::runtime::manifest::ModelManifest;
 
-pub use crate::runtime::{bitwidth_scale, S_IDENTITY};
 pub use energy::{EnergyCost, FpgaLutCost, HardCost, MemoryCost, ProductCost};
+
+/// Scale fed for "this signal is not quantized" (`/32` rows of Table I):
+/// round(x·2^24)/2^24 is exact in f32, so quantization is the identity.
+/// Mirrors `python/compile/quantizers.py::S_IDENTITY`.
+pub const S_IDENTITY: f32 = 16_777_216.0; // 2^24
+
+/// s = 2^k − 1 for integer bit-width k (k ≥ 24 ⇒ identity scale).
+pub fn bitwidth_scale(k: u32) -> f32 {
+    if k >= 24 {
+        S_IDENTITY
+    } else {
+        (1u64 << k) as f32 - 1.0
+    }
+}
 
 /// Bits used to report "unquantized" signals in tables (fp32 baseline).
 pub const FP_BITS: u32 = 32;
@@ -169,5 +183,21 @@ mod tests {
         assert_eq!(hard_loss(3, 4), 12.0);
         assert_eq!(hard_grad_w(4), 4.0);
         assert_eq!(hard_grad_a(3), 3.0);
+    }
+
+    #[test]
+    fn bitwidth_scales() {
+        assert_eq!(bitwidth_scale(1), 1.0);
+        assert_eq!(bitwidth_scale(2), 3.0);
+        assert_eq!(bitwidth_scale(8), 255.0);
+        assert_eq!(bitwidth_scale(32), S_IDENTITY);
+        assert_eq!(bitwidth_scale(24), S_IDENTITY);
+        // identity scale: exact for f32 in [0.5, 1] (24-bit mantissa),
+        // and within 1 ulp-of-2^-24 below that — i.e. "not quantized"
+        // at the precision the quantized graphs operate in.
+        let x = 0.7234567f32;
+        assert_eq!((x * S_IDENTITY).round() / S_IDENTITY, x);
+        let y = 0.1234567f32;
+        assert!(((y * S_IDENTITY).round() / S_IDENTITY - y).abs() < 2.0 / S_IDENTITY);
     }
 }

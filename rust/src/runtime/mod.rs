@@ -16,19 +16,10 @@ use crate::util::rng::Rng;
 
 pub use manifest::{Manifest, ModelManifest};
 
-/// Scale fed for "this signal is not quantized" (`/32` rows of Table I):
-/// round(x·2^24)/2^24 is exact in f32, so quantization is the identity.
-/// Mirrors `python/compile/quantizers.py::S_IDENTITY`.
-pub const S_IDENTITY: f32 = 16_777_216.0; // 2^24
-
-/// s = 2^k − 1 for integer bit-width k (k ≥ 24 ⇒ identity scale).
-pub fn bitwidth_scale(k: u32) -> f32 {
-    if k >= 24 {
-        S_IDENTITY
-    } else {
-        (1u64 << k) as f32 - 1.0
-    }
-}
+// The bit-width → runtime-scalar mapping lives with the rest of the
+// quantization math; re-exported here because callers binding graph
+// inputs reach for it through the runtime.
+pub use crate::quant::{bitwidth_scale, S_IDENTITY};
 
 /// One training batch, already padded to the artifact's static batch size.
 #[derive(Debug, Clone)]
@@ -101,6 +92,7 @@ impl Runtime {
             train: lazy("train"),
             loss: lazy("loss"),
             eval: lazy("eval"),
+            infer: lazy("infer"),
             fp_train: lazy("fp_train"),
             fp_eval: lazy("fp_eval"),
             client: self.client.clone(),
@@ -151,6 +143,7 @@ pub struct ModelRuntime {
     train: LazyExe,
     loss: LazyExe,
     eval: LazyExe,
+    infer: LazyExe,
     fp_train: LazyExe,
     fp_eval: LazyExe,
 }
@@ -369,6 +362,56 @@ impl ModelRuntime {
     pub fn has_fp32(&self) -> bool {
         self.fp_train.available() && self.fp_eval.available()
     }
+
+    /// Whether the "infer" artifact exists (serving needs it; artifact
+    /// sets built before the serve subsystem landed predate it).
+    pub fn has_infer(&self) -> bool {
+        self.infer.available()
+    }
+
+    /// Serving forward pass: predicted class per sample, inference-mode
+    /// BN, no labels. `x` must already be padded to the static batch
+    /// shape (the serve batcher guarantees this — DESIGN.md §7).
+    pub fn infer_batch(
+        &self,
+        state: &TrainState,
+        x: &Tensor,
+        s_w: f32,
+        s_a: f32,
+    ) -> anyhow::Result<Vec<usize>> {
+        anyhow::ensure!(
+            x.shape
+                == vec![
+                    self.mm.batch,
+                    self.mm.input_hw.0,
+                    self.mm.input_hw.1,
+                    self.mm.in_channels
+                ],
+            "infer x shape {:?} does not match artifact batch {}",
+            x.shape,
+            self.mm.batch
+        );
+        let exe = self.infer.get(&self.client, &self.mm.key)?;
+        let mut inputs: Vec<xla::Literal> =
+            Vec::with_capacity(state.params.len() + state.bn.len() + 3);
+        for t in state.params.iter().chain(&state.bn) {
+            inputs.push(to_literal(t)?);
+        }
+        inputs.push(to_literal(x)?);
+        inputs.push(xla::Literal::scalar(s_w));
+        inputs.push(xla::Literal::scalar(s_a));
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 1, "infer returned {} outputs", outs.len());
+        let preds = outs[0].to_vec::<f32>()?;
+        anyhow::ensure!(
+            preds.len() == self.mm.batch,
+            "infer returned {} predictions for batch {}",
+            preds.len(),
+            self.mm.batch
+        );
+        Ok(preds.into_iter().map(|p| p.max(0.0) as usize).collect())
+    }
 }
 
 #[cfg(test)]
@@ -376,18 +419,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn bitwidth_scales() {
-        assert_eq!(bitwidth_scale(1), 1.0);
-        assert_eq!(bitwidth_scale(2), 3.0);
-        assert_eq!(bitwidth_scale(8), 255.0);
-        assert_eq!(bitwidth_scale(32), S_IDENTITY);
-        assert_eq!(bitwidth_scale(24), S_IDENTITY);
-        // identity scale: exact for f32 in [0.5, 1] (24-bit mantissa),
-        // and within 1 ulp-of-2^-24 below that — i.e. "not quantized"
-        // at the precision the quantized graphs operate in.
-        let x = 0.7234567f32;
-        assert_eq!((x * S_IDENTITY).round() / S_IDENTITY, x);
-        let y = 0.1234567f32;
-        assert!(((y * S_IDENTITY).round() / S_IDENTITY - y).abs() < 2.0 / S_IDENTITY);
+    fn bitwidth_scale_reexport_is_the_quant_impl() {
+        // the single home is crate::quant (dedup'd in the serve PR);
+        // the re-export must stay in lockstep
+        assert_eq!(bitwidth_scale(4), crate::quant::bitwidth_scale(4));
+        assert_eq!(S_IDENTITY, crate::quant::S_IDENTITY);
     }
 }

@@ -1,0 +1,126 @@
+//! Dynamic batcher: coalesce single-image requests into the runtime's
+//! static batch shape under a max-latency deadline (DESIGN.md §7).
+//!
+//! Policy: block until the first request arrives, then keep pulling
+//! until either the batch is full or `max_delay` has elapsed since the
+//! first pull. Under load, batches fill instantly and the deadline never
+//! fires; at low rates, a lone request waits at most `max_delay` before
+//! dispatch — the classic throughput/latency dial every serving stack
+//! exposes (the serve bench measures both ends of it).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::queue::{Pop, RequestQueue, ServeRequest};
+
+/// Poll granularity while idle-waiting for the *first* request; bounds
+/// shutdown latency, not request latency (a push wakes the wait early).
+const IDLE_POLL: Duration = Duration::from_millis(100);
+
+pub struct DynamicBatcher {
+    queue: Arc<RequestQueue>,
+    batch: usize,
+    max_delay: Duration,
+}
+
+impl DynamicBatcher {
+    pub fn new(queue: Arc<RequestQueue>, batch: usize, max_delay: Duration) -> DynamicBatcher {
+        assert!(batch > 0, "batch must be positive");
+        DynamicBatcher { queue, batch, max_delay }
+    }
+
+    /// Next coalesced batch (1..=batch requests), or `None` once the
+    /// queue is closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<ServeRequest>> {
+        let first = loop {
+            match self.queue.pop(IDLE_POLL) {
+                Pop::Item(r) => break r,
+                Pop::TimedOut => continue,
+                Pop::Closed => return None,
+            }
+        };
+        let deadline = Instant::now() + self.max_delay;
+        let mut out = Vec::with_capacity(self.batch);
+        out.push(first);
+        while out.len() < self.batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.queue.pop(deadline - now) {
+                Pop::Item(r) => out.push(r),
+                // Closed: ship what we have; the next call returns None.
+                Pop::TimedOut | Pop::Closed => break,
+            }
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> ServeRequest {
+        let (tx, rx) = mpsc::channel();
+        drop(rx);
+        ServeRequest { id, pixels: vec![], enqueued: Instant::now(), resp: tx }
+    }
+
+    #[test]
+    fn full_batch_dispatches_without_waiting_out_the_deadline() {
+        let q = RequestQueue::new(64);
+        for id in 0..8 {
+            q.push(req(id)).unwrap();
+        }
+        let b = DynamicBatcher::new(Arc::clone(&q), 4, Duration::from_secs(30));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline should not matter");
+        // the rest are still queued for the next batch
+        assert_eq!(b.next_batch().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn partial_batch_ships_at_the_deadline() {
+        let q = RequestQueue::new(64);
+        q.push(req(1)).unwrap();
+        let b = DynamicBatcher::new(Arc::clone(&q), 16, Duration::from_millis(30));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(25), "shipped too early: {waited:?}");
+        assert!(waited < Duration::from_secs(5), "deadline overshot: {waited:?}");
+    }
+
+    #[test]
+    fn late_arrivals_join_within_the_window() {
+        let q = RequestQueue::new(64);
+        q.push(req(1)).unwrap();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            q2.push(req(2)).unwrap();
+        });
+        let b = DynamicBatcher::new(Arc::clone(&q), 2, Duration::from_secs(10));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2, "second request should have joined");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn closed_queue_terminates_the_batcher() {
+        let q = RequestQueue::new(8);
+        q.push(req(1)).unwrap();
+        q.close();
+        let b = DynamicBatcher::new(Arc::clone(&q), 4, Duration::from_millis(5));
+        // drains the backlog first…
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        // …then signals termination
+        assert!(b.next_batch().is_none());
+    }
+}

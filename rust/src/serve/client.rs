@@ -1,0 +1,225 @@
+//! Demo load-generating client (DESIGN.md §7): pipelines labeled images
+//! over one TCP connection with a bounded in-flight window, then reports
+//! client-observed latency percentiles, throughput, and accuracy.
+//!
+//! Used by `adaqat client`, the serve bench's TCP mode, and the
+//! end-to-end test (≥1k requests through the full stack).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::{Histogram, LatencySnapshot};
+use crate::util::json::Json;
+
+/// What one run observed, from the client's side of the socket.
+pub struct ClientReport {
+    pub sent: usize,
+    pub received: usize,
+    pub errors: usize,
+    /// Predictions matching the supplied label.
+    pub correct: usize,
+    pub wall_seconds: f64,
+    pub latency: LatencySnapshot,
+    /// id → Ok(class) | Err(message), for correctness cross-checks.
+    pub preds: BTreeMap<u64, Result<usize, String>>,
+}
+
+impl ClientReport {
+    pub fn requests_per_second(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.received as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Send `images` (pixels, label) as requests `id = 0..n`, keeping at
+/// most `window` in flight. `window = 1` is the single-stream regime;
+/// large windows exercise dynamic batching.
+pub fn run(
+    addr: &str,
+    images: &[(Vec<f32>, i32)],
+    window: usize,
+) -> anyhow::Result<ClientReport> {
+    anyhow::ensure!(window >= 1, "window must be >= 1");
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let read_half = stream.try_clone()?;
+
+    let n = images.len();
+    let outstanding = Arc::new(AtomicUsize::new(0));
+    let sent_at: Arc<Mutex<BTreeMap<u64, Instant>>> = Arc::new(Mutex::new(BTreeMap::new()));
+    let latency = Arc::new(Histogram::new());
+    let preds: Arc<Mutex<BTreeMap<u64, Result<usize, String>>>> =
+        Arc::new(Mutex::new(BTreeMap::new()));
+
+    let reader_outstanding = Arc::clone(&outstanding);
+    let reader_sent_at = Arc::clone(&sent_at);
+    let reader_latency = Arc::clone(&latency);
+    let reader_preds = Arc::clone(&preds);
+    let reader = std::thread::spawn(move || -> Result<usize, String> {
+        let mut r = BufReader::new(read_half);
+        let mut line = String::new();
+        let mut received = 0usize;
+        while received < n {
+            line.clear();
+            match r.read_line(&mut line) {
+                Ok(0) => return Err(format!("server closed after {received}/{n}")),
+                Ok(_) => {}
+                Err(e) => return Err(format!("read failed after {received}/{n}: {e}")),
+            }
+            let j = Json::parse(line.trim()).map_err(|e| format!("bad response: {e}"))?;
+            let id = match j.get("id").and_then(Json::as_f64) {
+                Some(v) => v as u64,
+                // id-less protocol error (shouldn't happen for well-formed
+                // requests) — count it so the run still terminates
+                None => {
+                    return Err(format!("response without id: {}", line.trim()));
+                }
+            };
+            if let Some(t0) = reader_sent_at.lock().unwrap().remove(&id) {
+                reader_latency.record_ms(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            let outcome = match j.get("class").and_then(Json::as_f64) {
+                Some(c) => Ok(c as usize),
+                None => Err(j
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("malformed response")
+                    .to_string()),
+            };
+            reader_preds.lock().unwrap().insert(id, outcome);
+            reader_outstanding.fetch_sub(1, Ordering::AcqRel);
+            received += 1;
+        }
+        Ok(received)
+    });
+
+    let t0 = Instant::now();
+    let mut w = std::io::BufWriter::new(stream);
+    let mut sent = 0usize;
+    for (id, (pixels, _)) in images.iter().enumerate() {
+        if outstanding.load(Ordering::Acquire) >= window {
+            // about to block on the window: everything buffered must be
+            // on the wire or the responses we wait for can never come
+            w.flush()?;
+        }
+        while outstanding.load(Ordering::Acquire) >= window {
+            if reader.is_finished() {
+                break; // reader bailed; stop feeding a dead run
+            }
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        if reader.is_finished() {
+            break;
+        }
+        let mut line = String::with_capacity(pixels.len() * 10 + 32);
+        let _ = write!(line, "{{\"id\":{id},\"image\":[");
+        for (i, p) in pixels.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            // shortest round-trip formatting straight into the buffer
+            // (no per-pixel temporary): the server parses back the
+            // exact f32 we hold
+            let _ = write!(line, "{p}");
+        }
+        line.push_str("]}\n");
+        sent_at.lock().unwrap().insert(id as u64, Instant::now());
+        outstanding.fetch_add(1, Ordering::AcqRel);
+        w.write_all(line.as_bytes())?;
+        if window == 1 {
+            w.flush()?;
+        }
+        sent += 1;
+    }
+    w.flush()?;
+
+    let received = match reader.join() {
+        Ok(Ok(r)) => r,
+        Ok(Err(e)) => anyhow::bail!("client reader: {e}"),
+        Err(_) => anyhow::bail!("client reader panicked"),
+    };
+    let wall_seconds = t0.elapsed().as_secs_f64();
+
+    let preds = Arc::try_unwrap(preds)
+        .map_err(|_| anyhow::anyhow!("reader still holds preds"))?
+        .into_inner()
+        .unwrap();
+    let mut errors = 0usize;
+    let mut correct = 0usize;
+    for (id, outcome) in &preds {
+        match outcome {
+            Ok(class) => {
+                if images[*id as usize].1 as usize == *class {
+                    correct += 1;
+                }
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    Ok(ClientReport {
+        sent,
+        received,
+        errors,
+        correct,
+        wall_seconds,
+        latency: latency.snapshot(),
+        preds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetKind;
+    use crate::serve::demo;
+    use crate::serve::engine::{Backend, Engine, EngineConfig, ReferenceBackend};
+    use crate::serve::packed::QuantizedCheckpoint;
+    use crate::serve::server::Server;
+
+    #[test]
+    fn windowed_client_round_trips_small_batch() {
+        let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 4, 31, 8);
+        let q = Arc::new(QuantizedCheckpoint::from_checkpoint(&ck, 4, |n| {
+            n.ends_with(".w")
+        }));
+        let q2 = Arc::clone(&q);
+        let engine = Engine::start(
+            EngineConfig {
+                workers: 1,
+                queue_capacity: 64,
+                max_delay: Duration::from_millis(1),
+            },
+            move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
+        )
+        .unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&engine)).unwrap();
+
+        let ds = crate::data::synth::generate(DatasetKind::Cifar10, 32, 77, 1);
+        let images: Vec<(Vec<f32>, i32)> =
+            (0..32).map(|i| (ds.image(i).to_vec(), ds.labels[i])).collect();
+        let report = run(&server.addr.to_string(), &images, 8).unwrap();
+        assert_eq!(report.sent, 32);
+        assert_eq!(report.received, 32);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.preds.len(), 32);
+        assert!(report.latency.count == 32);
+        // every prediction matches the model's direct forward
+        let direct = ReferenceBackend::from_packed(&q).unwrap();
+        for (id, outcome) in &report.preds {
+            assert_eq!(
+                outcome.as_ref().ok().copied(),
+                Some(direct.classify_one(ds.image(*id as usize)))
+            );
+        }
+        server.stop();
+        engine.shutdown();
+    }
+}

@@ -1,0 +1,125 @@
+//! Nearest-centroid demo model over the synthetic datasets
+//! (DESIGN.md §7).
+//!
+//! Serving needs a model whose artifact chain runs in the offline build,
+//! where PJRT execution is stubbed (DESIGN.md §3). A nearest-centroid
+//! classifier is linear — `argmin_c ‖x − μ_c‖² = argmax_c μ_c·x −
+//! ½‖μ_c‖²` — so it fits the [`ReferenceBackend`]'s `fc.w`/`fc.b`
+//! contract exactly, and the synthetic classes carry enough linear
+//! signal (color triple, blob position) that predictions are far above
+//! chance: the end-to-end demo serves *meaningful* answers, not noise.
+//!
+//! [`ReferenceBackend`]: super::engine::ReferenceBackend
+
+use crate::data::{synth, DatasetKind};
+use crate::tensor::checkpoint::Checkpoint;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use super::engine::ReferenceBackend;
+
+/// Build the demo checkpoint: `fc.w` ([d, classes]) holds the class
+/// centroids of `per_class` training samples per class, `fc.b` the
+/// −½‖μ_c‖² offsets; meta carries everything the reference backend
+/// needs (`input_hw`, `in_channels`, `num_classes`, `serve_batch`).
+pub fn demo_checkpoint(
+    kind: DatasetKind,
+    per_class: usize,
+    seed: u64,
+    serve_batch: usize,
+) -> Checkpoint {
+    assert!(per_class > 0 && serve_batch > 0);
+    let nc = kind.num_classes();
+    let n = per_class * nc;
+    let ds = synth::generate(kind, n, seed, 0);
+    let d = ds.sample_numel();
+
+    let mut sums = vec![0.0f64; nc * d];
+    for i in 0..n {
+        let c = ds.labels[i] as usize;
+        let row = &mut sums[c * d..(c + 1) * d];
+        for (j, &p) in ds.image(i).iter().enumerate() {
+            row[j] += p as f64;
+        }
+    }
+    let mut w = vec![0.0f32; d * nc];
+    let mut b = vec![0.0f32; nc];
+    for c in 0..nc {
+        let mut norm2 = 0.0f64;
+        for j in 0..d {
+            let mu = sums[c * d + j] / per_class as f64;
+            w[j * nc + c] = mu as f32;
+            norm2 += mu * mu;
+        }
+        b[c] = (-0.5 * norm2) as f32;
+    }
+
+    let dataset = match kind {
+        DatasetKind::Cifar10 => "cifar10",
+        DatasetKind::ImagenetLite => "imagenet-lite",
+    };
+    let mut ck = Checkpoint::new(Json::obj(vec![
+        ("model", Json::str("demo-linear")),
+        ("dataset", Json::str(dataset)),
+        ("input_hw", Json::Arr(vec![Json::num(ds.h as f64), Json::num(ds.w as f64)])),
+        ("in_channels", Json::num(ds.c as f64)),
+        ("num_classes", Json::num(nc as f64)),
+        ("serve_batch", Json::num(serve_batch as f64)),
+        ("k_a", Json::num(32.0)),
+        ("train_per_class", Json::num(per_class as f64)),
+        ("seed", Json::num(seed as f64)),
+    ]));
+    ck.push("fc.w", Tensor::new(vec![d, nc], w));
+    ck.push("fc.b", Tensor::new(vec![nc], b));
+    ck
+}
+
+/// Top-1 accuracy of a backend on a fresh synthetic *test* split.
+pub fn demo_accuracy(
+    backend: &ReferenceBackend,
+    kind: DatasetKind,
+    n: usize,
+    seed: u64,
+) -> f64 {
+    let ds = synth::generate(kind, n, seed, 1);
+    let correct = (0..n)
+        .filter(|&i| backend.classify_one(ds.image(i)) == ds.labels[i] as usize)
+        .count();
+    correct as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::Backend;
+    use crate::serve::packed::QuantizedCheckpoint;
+
+    #[test]
+    fn deterministic_and_well_formed() {
+        let a = demo_checkpoint(DatasetKind::Cifar10, 4, 3, 8);
+        let b = demo_checkpoint(DatasetKind::Cifar10, 4, 3, 8);
+        assert_eq!(a.tensors, b.tensors);
+        assert_eq!(a.tensors[0].1.shape, vec![32 * 32 * 3, 10]);
+        assert_eq!(a.tensors[1].1.shape, vec![10]);
+        assert_eq!(a.meta.get("serve_batch").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn beats_chance_even_after_4bit_packing() {
+        let ck = demo_checkpoint(DatasetKind::Cifar10, 16, 1, 8);
+        let q = QuantizedCheckpoint::from_checkpoint(&ck, 4, |n| n.ends_with(".w"));
+        let backend = ReferenceBackend::from_packed(&q).unwrap();
+        let acc = demo_accuracy(&backend, DatasetKind::Cifar10, 200, 11);
+        assert!(acc > 0.2, "4-bit demo accuracy only {acc}");
+    }
+
+    #[test]
+    fn hundred_class_variant_works() {
+        let ck = demo_checkpoint(DatasetKind::ImagenetLite, 2, 5, 4);
+        let q = QuantizedCheckpoint::from_checkpoint(&ck, 8, |n| n.ends_with(".w"));
+        let backend = ReferenceBackend::from_packed(&q).unwrap();
+        assert_eq!(backend.num_classes(), 100);
+        let acc = demo_accuracy(&backend, DatasetKind::ImagenetLite, 200, 2);
+        assert!(acc > 0.03, "100-class accuracy only {acc}");
+    }
+}

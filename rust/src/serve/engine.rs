@@ -1,0 +1,577 @@
+//! Multi-worker inference engine (DESIGN.md §7).
+//!
+//! N worker threads each own one [`Backend`] instance (PJRT clients are
+//! `Rc`-based and `!Send`, so backends are constructed *on* their worker
+//! thread via a factory), pull coalesced batches from the shared
+//! [`RequestQueue`], pad them to the backend's static batch shape, run
+//! the forward pass, and answer each request through its own response
+//! channel while recording queue/compute latency into the engine's
+//! histograms.
+//!
+//! Two backends:
+//! * [`RuntimeBackend`] — the compiled "infer" graph on the PJRT
+//!   runtime, state loaded from a dequantized packed checkpoint.
+//! * [`ReferenceBackend`] — a pure-Rust linear classifier over a packed
+//!   checkpoint (`fc.w`/`fc.b`). It exists so the whole serving pipeline
+//!   — packing, batching, workers, wire protocol — runs and benches in
+//!   the offline build, and doubles as the nearest-centroid demo model
+//!   for the synthetic datasets.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::Histogram;
+use crate::quant::bitwidth_scale;
+use crate::runtime::{ModelRuntime, Runtime, TrainState};
+use crate::tensor::Tensor;
+
+use super::batcher::DynamicBatcher;
+use super::packed::QuantizedCheckpoint;
+use super::queue::{PushError, RequestQueue, ServeRequest, ServeResponse};
+
+/// A model that classifies one padded static batch at a time.
+pub trait Backend {
+    /// (h, w, c) of one input image.
+    fn input_shape(&self) -> (usize, usize, usize);
+    /// Static batch size every `infer` call must be padded to.
+    fn max_batch(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    /// `x` is (max_batch, h, w, c); returns max_batch predicted classes
+    /// (padded rows included — callers ignore them).
+    fn infer(&self, x: &Tensor) -> anyhow::Result<Vec<usize>>;
+}
+
+/// Shared counters + latency histograms.
+#[derive(Default)]
+pub struct EngineMetrics {
+    /// Time from enqueue to batch pickup, per request.
+    pub queue: Histogram,
+    /// Forward-pass wall time, per request (all requests in a batch see
+    /// the same compute time — that is the cost model of batching).
+    pub compute: Histogram,
+    pub requests: AtomicU64,
+    pub failures: AtomicU64,
+    pub batches: AtomicU64,
+    /// Padded (wasted) rows across all batches; padding/batches is the
+    /// occupancy complement the serve bench reports.
+    pub padded: AtomicU64,
+    /// Static rows per batch (set once at engine start; denominators).
+    pub batch_rows: AtomicU64,
+}
+
+impl EngineMetrics {
+    pub fn report(&self) -> String {
+        let batches = self.batches.load(Ordering::Relaxed);
+        // clamp only the occupancy denominator, not the displayed count
+        let denom = (batches.max(1) * self.batch_rows.load(Ordering::Relaxed).max(1)) as f64;
+        format!(
+            "{}\n{}\nrequests {}  failures {}  batches {}  mean occupancy {:.1}%",
+            self.queue.snapshot().row("queue"),
+            self.compute.snapshot().row("compute"),
+            self.requests.load(Ordering::Relaxed),
+            self.failures.load(Ordering::Relaxed),
+            batches,
+            100.0 * (1.0 - self.padded.load(Ordering::Relaxed) as f64 / denom),
+        )
+    }
+}
+
+/// Engine construction parameters (`ServeConfig` maps onto this).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub workers: usize,
+    pub queue_capacity: usize,
+    /// Dynamic-batching window: max time a lone request waits for
+    /// company before a partial batch ships.
+    pub max_delay: Duration,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            max_delay: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Fatal submit outcomes (distinct from per-request inference failures,
+/// which come back through the response channel).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    BadInput { got: usize, want: usize },
+    Full,
+    Closed,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::BadInput { got, want } => {
+                write!(f, "image has {got} values, model wants {want}")
+            }
+            SubmitError::Full => f.write_str("queue full (backpressure)"),
+            SubmitError::Closed => f.write_str("server shutting down"),
+        }
+    }
+}
+
+/// The running engine: queue + workers + metrics.
+pub struct Engine {
+    queue: Arc<RequestQueue>,
+    pub metrics: Arc<EngineMetrics>,
+    input_numel: usize,
+    num_classes: usize,
+    batch: usize,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Engine {
+    /// Spawn `cfg.workers` threads, each building its own backend via
+    /// `factory(worker_id)`. Blocks until every worker reports ready (or
+    /// any factory fails, which tears the engine down).
+    pub fn start<F>(cfg: EngineConfig, factory: F) -> anyhow::Result<Arc<Engine>>
+    where
+        F: Fn(usize) -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
+        let queue = RequestQueue::new(cfg.queue_capacity);
+        let metrics = Arc::new(EngineMetrics::default());
+        let factory = Arc::new(factory);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize), String>>();
+        let mut handles = vec![];
+        for wid in 0..cfg.workers {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let factory = Arc::clone(&factory);
+            let ready = ready_tx.clone();
+            let max_delay = cfg.max_delay;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{wid}"))
+                    .spawn(move || {
+                        let backend = match (*factory)(wid) {
+                            Ok(b) => {
+                                let (h, w, c) = b.input_shape();
+                                let _ = ready.send(Ok((
+                                    h * w * c,
+                                    b.max_batch(),
+                                    b.num_classes(),
+                                )));
+                                b
+                            }
+                            Err(e) => {
+                                let _ = ready.send(Err(format!("worker {wid}: {e}")));
+                                return;
+                            }
+                        };
+                        worker_loop(backend.as_ref(), &queue, &metrics, max_delay);
+                    })?,
+            );
+        }
+        drop(ready_tx);
+        let mut signature = None;
+        for _ in 0..cfg.workers {
+            match ready_rx.recv() {
+                Ok(Ok(sig)) => {
+                    if let Some(prev) = signature {
+                        if prev != sig {
+                            queue.close();
+                            anyhow::bail!(
+                                "workers disagree on model shape: {prev:?} vs {sig:?}"
+                            );
+                        }
+                    }
+                    signature = Some(sig);
+                }
+                Ok(Err(e)) => {
+                    queue.close();
+                    anyhow::bail!("backend construction failed: {e}");
+                }
+                Err(_) => {
+                    queue.close();
+                    anyhow::bail!("a serve worker died before reporting ready");
+                }
+            }
+        }
+        let (input_numel, batch, num_classes) =
+            signature.expect("at least one worker reported");
+        metrics.batch_rows.store(batch as u64, Ordering::Relaxed);
+        log::info!(
+            "serve engine up: {} workers, batch {batch}, window {:?}, queue cap {}",
+            cfg.workers,
+            cfg.max_delay,
+            cfg.queue_capacity
+        );
+        Ok(Arc::new(Engine {
+            queue,
+            metrics,
+            input_numel,
+            num_classes,
+            batch,
+            workers: Mutex::new(handles),
+        }))
+    }
+
+    pub fn input_numel(&self) -> usize {
+        self.input_numel
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Enqueue one request; the answer arrives on `resp`.
+    pub fn submit(
+        &self,
+        id: u64,
+        pixels: Vec<f32>,
+        resp: mpsc::Sender<ServeResponse>,
+    ) -> Result<(), SubmitError> {
+        if pixels.len() != self.input_numel {
+            return Err(SubmitError::BadInput { got: pixels.len(), want: self.input_numel });
+        }
+        self.queue
+            .push(ServeRequest { id, pixels, enqueued: Instant::now(), resp })
+            .map_err(|e| match e {
+                PushError::Full => SubmitError::Full,
+                PushError::Closed => SubmitError::Closed,
+            })
+    }
+
+    /// Single-request convenience (the serve bench's single-stream mode).
+    pub fn infer_blocking(&self, pixels: Vec<f32>) -> anyhow::Result<ServeResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(0, pixels, tx).map_err(|e| anyhow::anyhow!("{e}"))?;
+        rx.recv_timeout(Duration::from_secs(30))
+            .map_err(|_| anyhow::anyhow!("engine dropped the request"))
+    }
+
+    /// Stop accepting work, drain the queue, join the workers.
+    pub fn shutdown(&self) {
+        self.queue.close();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    backend: &dyn Backend,
+    queue: &Arc<RequestQueue>,
+    metrics: &EngineMetrics,
+    max_delay: Duration,
+) {
+    let (h, w, c) = backend.input_shape();
+    let sz = h * w * c;
+    let bs = backend.max_batch();
+    let batcher = DynamicBatcher::new(Arc::clone(queue), bs, max_delay);
+    while let Some(reqs) = batcher.next_batch() {
+        let picked = Instant::now();
+        // pad with zero rows up to the artifact's static batch shape
+        let mut x = vec![0.0f32; bs * sz];
+        for (i, r) in reqs.iter().enumerate() {
+            x[i * sz..(i + 1) * sz].copy_from_slice(&r.pixels);
+        }
+        let t0 = Instant::now();
+        let outcome = backend.infer(&Tensor::new(vec![bs, h, w, c], x));
+        let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.padded.fetch_add((bs - reqs.len()) as u64, Ordering::Relaxed);
+        match outcome {
+            Ok(classes) => {
+                for (i, r) in reqs.into_iter().enumerate() {
+                    let queue_ms =
+                        picked.duration_since(r.enqueued).as_secs_f64() * 1e3;
+                    metrics.queue.record_ms(queue_ms);
+                    metrics.compute.record_ms(compute_ms);
+                    metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.resp.send(ServeResponse {
+                        id: r.id,
+                        result: Ok(classes[i]),
+                        queue_ms,
+                        compute_ms,
+                    });
+                }
+            }
+            Err(e) => {
+                let msg = format!("inference failed: {e}");
+                log::warn!("serve worker: {msg}");
+                for r in reqs {
+                    let queue_ms =
+                        picked.duration_since(r.enqueued).as_secs_f64() * 1e3;
+                    // failed traffic must show up in the latency stats
+                    // too — an outage is exactly when they are read
+                    metrics.queue.record_ms(queue_ms);
+                    metrics.compute.record_ms(compute_ms);
+                    metrics.failures.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.resp.send(ServeResponse {
+                        id: r.id,
+                        result: Err(msg.clone()),
+                        queue_ms,
+                        compute_ms,
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- backends
+
+/// Pure-Rust linear classifier: logits = xᵀW + b with W = `fc.w`
+/// ([d, classes]) and b = `fc.b` from a packed checkpoint whose meta
+/// carries `input_hw`, `in_channels`, `num_classes`, `serve_batch`
+/// (written by `adaqat demo-model` / `serve::demo`).
+pub struct ReferenceBackend {
+    w: Vec<f32>, // row-major [d][classes]
+    b: Vec<f32>,
+    h: usize,
+    wid: usize,
+    c: usize,
+    classes: usize,
+    batch: usize,
+}
+
+impl ReferenceBackend {
+    pub fn from_packed(q: &QuantizedCheckpoint) -> anyhow::Result<ReferenceBackend> {
+        let hw = q
+            .meta
+            .get("input_hw")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| anyhow::anyhow!(
+                "packed meta lacks input_hw — export a demo-model checkpoint \
+                 or add serving metadata"
+            ))?;
+        anyhow::ensure!(hw.len() == 2, "input_hw must have 2 entries");
+        let h = hw[0].as_usize().ok_or_else(|| anyhow::anyhow!("bad input_hw"))?;
+        let wid = hw[1].as_usize().ok_or_else(|| anyhow::anyhow!("bad input_hw"))?;
+        let c = q
+            .meta
+            .get("in_channels")
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("packed meta lacks in_channels"))?;
+        let classes = q
+            .meta
+            .get("num_classes")
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("packed meta lacks num_classes"))?;
+        let batch = q
+            .meta
+            .get("serve_batch")
+            .and_then(|j| j.as_usize())
+            .unwrap_or(16);
+        let d = h * wid * c;
+        let wt = q
+            .get("fc.w")
+            .ok_or_else(|| anyhow::anyhow!("packed checkpoint lacks fc.w"))?;
+        anyhow::ensure!(
+            wt.shape == vec![d, classes],
+            "fc.w shape {:?} != [{d}, {classes}]",
+            wt.shape
+        );
+        let w = wt.dequantize().data;
+        let b = match q.get("fc.b") {
+            Some(bt) => {
+                anyhow::ensure!(bt.shape == vec![classes], "fc.b shape {:?}", bt.shape);
+                bt.dequantize().data
+            }
+            None => vec![0.0; classes],
+        };
+        Ok(ReferenceBackend { w, b, h, wid, c, classes, batch })
+    }
+
+    /// Direct (non-batched) forward for one image — the ground truth the
+    /// e2e tests compare the pipelined path against.
+    pub fn classify_one(&self, pixels: &[f32]) -> usize {
+        debug_assert_eq!(pixels.len(), self.h * self.wid * self.c);
+        let mut best = 0usize;
+        let mut best_score = f32::NEG_INFINITY;
+        for cls in 0..self.classes {
+            let mut score = self.b[cls];
+            for (i, &p) in pixels.iter().enumerate() {
+                score += p * self.w[i * self.classes + cls];
+            }
+            if score > best_score {
+                best_score = score;
+                best = cls;
+            }
+        }
+        best
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn input_shape(&self) -> (usize, usize, usize) {
+        (self.h, self.wid, self.c)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn infer(&self, x: &Tensor) -> anyhow::Result<Vec<usize>> {
+        let sz = self.h * self.wid * self.c;
+        anyhow::ensure!(
+            x.shape == vec![self.batch, self.h, self.wid, self.c],
+            "reference backend: bad batch shape {:?}",
+            x.shape
+        );
+        Ok((0..self.batch)
+            .map(|row| self.classify_one(&x.data[row * sz..(row + 1) * sz]))
+            .collect())
+    }
+}
+
+/// The PJRT path: compiled "infer" graph + state from a packed
+/// checkpoint, quantization scales from the checkpoint's (k_w, k_a).
+pub struct RuntimeBackend {
+    rt: ModelRuntime,
+    state: TrainState,
+    s_w: f32,
+    s_a: f32,
+}
+
+impl RuntimeBackend {
+    pub fn new(
+        artifact_dir: &Path,
+        model_key: &str,
+        packed: &QuantizedCheckpoint,
+    ) -> anyhow::Result<RuntimeBackend> {
+        let runtime = Runtime::new(artifact_dir)?;
+        let rt = runtime.load_model(model_key)?;
+        anyhow::ensure!(
+            rt.has_infer(),
+            "{model_key}: artifact set has no \"infer\" graph — re-run `make artifacts`"
+        );
+        let ck = packed.to_checkpoint();
+        let state = rt.load_state(&ck, 0)?;
+        let k_w = packed.meta.get("k_w").and_then(|j| j.as_f64()).unwrap_or(32.0) as u32;
+        let k_a = packed.meta.get("k_a").and_then(|j| j.as_f64()).unwrap_or(32.0) as u32;
+        log::info!("runtime backend: {model_key} at W{k_w}/A{k_a}");
+        Ok(RuntimeBackend {
+            rt,
+            state,
+            s_w: bitwidth_scale(k_w),
+            s_a: bitwidth_scale(k_a),
+        })
+    }
+}
+
+impl Backend for RuntimeBackend {
+    fn input_shape(&self) -> (usize, usize, usize) {
+        (self.rt.mm.input_hw.0, self.rt.mm.input_hw.1, self.rt.mm.in_channels)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.rt.mm.batch
+    }
+
+    fn num_classes(&self) -> usize {
+        self.rt.mm.num_classes
+    }
+
+    fn infer(&self, x: &Tensor) -> anyhow::Result<Vec<usize>> {
+        self.rt.infer_batch(&self.state, x, self.s_w, self.s_a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetKind;
+    use crate::serve::demo;
+
+    fn demo_engine(
+        workers: usize,
+        batch: usize,
+        max_delay_ms: u64,
+    ) -> (Arc<Engine>, Arc<QuantizedCheckpoint>) {
+        let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 8, 42, batch);
+        let q = Arc::new(QuantizedCheckpoint::from_checkpoint(&ck, 4, |n| {
+            n.ends_with(".w")
+        }));
+        let q2 = Arc::clone(&q);
+        let engine = Engine::start(
+            EngineConfig {
+                workers,
+                queue_capacity: 256,
+                max_delay: Duration::from_millis(max_delay_ms),
+            },
+            move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
+        )
+        .unwrap();
+        (engine, q)
+    }
+
+    #[test]
+    fn pipeline_matches_direct_forward() {
+        let (engine, q) = demo_engine(2, 8, 2);
+        let direct = ReferenceBackend::from_packed(&q).unwrap();
+        let ds = crate::data::synth::generate(DatasetKind::Cifar10, 64, 5, 1);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..64 {
+            engine.submit(i as u64, ds.image(i).to_vec(), tx.clone()).unwrap();
+        }
+        let mut got = 0;
+        while got < 64 {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            let want = direct.classify_one(ds.image(resp.id as usize));
+            assert_eq!(resp.result, Ok(want), "request {}", resp.id);
+            assert!(resp.queue_ms >= 0.0 && resp.compute_ms >= 0.0);
+            got += 1;
+        }
+        assert_eq!(engine.metrics.requests.load(Ordering::Relaxed), 64);
+        assert!(engine.metrics.queue.count() == 64);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn bad_input_rejected_at_submit() {
+        let (engine, _q) = demo_engine(1, 4, 1);
+        let (tx, _rx) = mpsc::channel();
+        let err = engine.submit(0, vec![0.0; 7], tx).unwrap_err();
+        assert!(matches!(err, SubmitError::BadInput { got: 7, .. }));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_closed() {
+        let (engine, _q) = demo_engine(1, 4, 1);
+        let numel = engine.input_numel();
+        engine.shutdown();
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(engine.submit(0, vec![0.0; numel], tx).unwrap_err(), SubmitError::Closed);
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let result = Engine::start(EngineConfig::default(), |wid| {
+            anyhow::bail!("no backend for worker {wid}")
+        });
+        assert!(result.is_err());
+        assert!(result.err().unwrap().to_string().contains("no backend"));
+    }
+
+    #[test]
+    fn infer_blocking_round_trips() {
+        let (engine, q) = demo_engine(1, 4, 1);
+        let direct = ReferenceBackend::from_packed(&q).unwrap();
+        let ds = crate::data::synth::generate(DatasetKind::Cifar10, 4, 9, 1);
+        let resp = engine.infer_blocking(ds.image(2).to_vec()).unwrap();
+        assert_eq!(resp.result, Ok(direct.classify_one(ds.image(2))));
+        engine.shutdown();
+    }
+}

@@ -1,0 +1,34 @@
+//! The quantized-inference serving subsystem (DESIGN.md §7).
+//!
+//! Turns a finished AdaQAT run into an inference service — the artifact
+//! chain the paper's "cheaper inference" claim cashes out into:
+//!
+//! ```text
+//!  final.ckpt ──adaqat export──▶ packed .aqq (AQQCKPT1, k_w-bit codes)
+//!                                    │
+//!                 adaqat serve ──────┤
+//!                                    ▼
+//!   TCP/NDJSON ▶ [queue] ▶ [dynamic batcher] ▶ [N workers × Backend]
+//!      ▲            bounded     deadline-based      PJRT infer graph
+//!      │            MPSC        coalescing          or pure-Rust ref.
+//!   adaqat client                                   └▶ latency histograms
+//! ```
+//!
+//! Module map: [`packed`] — bit-packed checkpoints; [`queue`] +
+//! [`batcher`] — the request pipeline; [`engine`] — workers, backends,
+//! metrics; [`protocol`] + [`server`] + [`client`] — the NDJSON/TCP
+//! front end; [`demo`] — the offline-runnable nearest-centroid model.
+
+pub mod batcher;
+pub mod client;
+pub mod demo;
+pub mod engine;
+pub mod packed;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+
+pub use engine::{Backend, Engine, EngineConfig, ReferenceBackend, RuntimeBackend};
+pub use packed::{PackedTensor, QuantizedCheckpoint};
+pub use queue::{RequestQueue, ServeRequest, ServeResponse};
+pub use server::Server;

@@ -1,0 +1,479 @@
+//! Packed quantized checkpoints (`AQQCKPT1`) — the deployment artifact
+//! of an AdaQAT run (DESIGN.md §7).
+//!
+//! A [`QuantizedCheckpoint`] is the serving sibling of
+//! [`crate::tensor::checkpoint::Checkpoint`]: weight tensors are stored
+//! as bit-packed integer codes at the learned k_w plus one f32 max-abs
+//! scale per tensor; everything else (BN statistics, biases, PACT α)
+//! stays raw f32. Layout (integers little-endian):
+//!
+//! ```text
+//!   magic   "AQQCKPT1"                       (8 bytes)
+//!   meta    u32 len + JSON bytes             (k_w, k_a, cost summary, …)
+//!   count   u32                              number of tensors
+//!   entry*  u16 name_len + name bytes
+//!           u8  ndim + u32 dims[ndim]
+//!           u8  bits      (1..=24 packed; 32 = raw f32)
+//!           f32 scale     (max-abs; 0 for raw tensors)
+//!           payload       packed: ceil(numel·bits/8) bytes, codes
+//!                         LSB-first; raw: numel·4 bytes f32 LE
+//! ```
+//!
+//! The quantization grid mirrors the training quantizer: s = 2^k − 1
+//! levels (`quant::bitwidth_scale`) spread symmetrically over
+//! [−max|x|, +max|x|]; code c dequantizes to `(c/s·2 − 1)·scale`. The
+//! dequantized f32 stream is the checkpoint's *canonical* content:
+//! save → load → [`PackedTensor::dequantize`] is bit-exact, which is
+//! what the runtime consumes and what the round-trip tests pin down.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::checkpoint::{read_u16, read_u32, Checkpoint};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"AQQCKPT1";
+
+/// Marker bits value for "stored raw f32, not quantized".
+pub const RAW_BITS: u32 = 32;
+
+/// One bit-packed (or raw) tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedTensor {
+    pub shape: Vec<usize>,
+    /// 1..=24: packed integer codes; [`RAW_BITS`]: raw f32 payload.
+    pub bits: u32,
+    /// Max-abs of the source tensor (packed tensors only).
+    pub scale: f32,
+    pub payload: Vec<u8>,
+}
+
+impl PackedTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn packed_len(numel: usize, bits: u32) -> usize {
+        (numel * bits as usize + 7) / 8
+    }
+
+    /// s = 2^k − 1, the same grid as `quant::bitwidth_scale` — spelled
+    /// out here because the runtime helper switches to the identity
+    /// scale at k ≥ 24, which would not fit a k-bit code field.
+    fn levels(bits: u32) -> f32 {
+        ((1u64 << bits) - 1) as f32
+    }
+
+    /// Store a tensor untouched (fp32 passthrough).
+    pub fn raw(t: &Tensor) -> PackedTensor {
+        let payload = t.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        PackedTensor { shape: t.shape.clone(), bits: RAW_BITS, scale: 0.0, payload }
+    }
+
+    /// Quantize to `bits` ∈ 1..=24 on the symmetric s = 2^k − 1 grid.
+    pub fn quantize(t: &Tensor, bits: u32) -> PackedTensor {
+        assert!((1..=24).contains(&bits), "packed bits must be in 1..=24, got {bits}");
+        let s = Self::levels(bits);
+        let scale = t.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let mut payload = vec![0u8; Self::packed_len(t.numel(), bits)];
+        for (i, &x) in t.data.iter().enumerate() {
+            let unit = if scale > 0.0 {
+                ((x / scale) * 0.5 + 0.5).clamp(0.0, 1.0)
+            } else {
+                0.5
+            };
+            let code = (unit * s).round() as u32;
+            write_bits(&mut payload, i * bits as usize, bits, code);
+        }
+        PackedTensor { shape: t.shape.clone(), bits, scale, payload }
+    }
+
+    /// The f32 tensor the runtime consumes. Deterministic: the same
+    /// codes + scale always dequantize to bit-identical floats.
+    pub fn dequantize(&self) -> Tensor {
+        let n = self.numel();
+        if self.bits == RAW_BITS {
+            let data = self
+                .payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            return Tensor::new(self.shape.clone(), data);
+        }
+        let s = Self::levels(self.bits);
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            let code = read_bits(&self.payload, i * self.bits as usize, self.bits);
+            data.push((code as f32 / s * 2.0 - 1.0) * self.scale);
+        }
+        Tensor::new(self.shape.clone(), data)
+    }
+
+    /// Bytes this tensor occupies on disk (payload only).
+    pub fn payload_bytes(&self) -> usize {
+        self.payload.len()
+    }
+}
+
+/// Write `bits` low bits of `code` at bit offset `off`, LSB-first.
+fn write_bits(buf: &mut [u8], off: usize, bits: u32, code: u32) {
+    let mut v = code as u64;
+    let mut off = off;
+    let mut rem = bits as usize;
+    while rem > 0 {
+        let byte = off / 8;
+        let shift = off % 8;
+        let take = (8 - shift).min(rem);
+        buf[byte] |= ((v & ((1u64 << take) - 1)) as u8) << shift;
+        v >>= take;
+        off += take;
+        rem -= take;
+    }
+}
+
+fn read_bits(buf: &[u8], off: usize, bits: u32) -> u32 {
+    let mut v = 0u64;
+    let mut got = 0usize;
+    let mut off = off;
+    let mut rem = bits as usize;
+    while rem > 0 {
+        let byte = off / 8;
+        let shift = off % 8;
+        let take = (8 - shift).min(rem);
+        let part = (buf[byte] as u64 >> shift) & ((1u64 << take) - 1);
+        v |= part << got;
+        got += take;
+        off += take;
+        rem -= take;
+    }
+    v as u32
+}
+
+/// A packed model: JSON metadata + named [`PackedTensor`]s.
+#[derive(Debug, Clone)]
+pub struct QuantizedCheckpoint {
+    pub meta: Json,
+    pub tensors: Vec<(String, PackedTensor)>,
+}
+
+impl QuantizedCheckpoint {
+    pub fn new(meta: Json) -> QuantizedCheckpoint {
+        QuantizedCheckpoint { meta, tensors: vec![] }
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, t: PackedTensor) {
+        self.tensors.push((name.into(), t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&PackedTensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Pack a training checkpoint: tensors selected by `is_weight` are
+    /// quantized to `bits`, the rest stay raw. The source metadata is
+    /// carried over and `k_w` is set to `bits` (an existing `k_a` is
+    /// kept — activations quantize at runtime, not in the file).
+    pub fn from_checkpoint(
+        ck: &Checkpoint,
+        bits: u32,
+        is_weight: impl Fn(&str) -> bool,
+    ) -> QuantizedCheckpoint {
+        let mut meta = match &ck.meta {
+            Json::Obj(m) => m.clone(),
+            _ => BTreeMap::new(),
+        };
+        meta.insert("format".to_string(), Json::str("aqqckpt1"));
+        meta.insert("k_w".to_string(), Json::num(bits as f64));
+        let mut q = QuantizedCheckpoint { meta: Json::Obj(meta), tensors: vec![] };
+        for (name, t) in &ck.tensors {
+            let pt = if is_weight(name) && t.numel() > 0 {
+                PackedTensor::quantize(t, bits)
+            } else {
+                PackedTensor::raw(t)
+            };
+            q.push(name.clone(), pt);
+        }
+        q
+    }
+
+    /// Dequantize everything back into a plain [`Checkpoint`] (what
+    /// `ModelRuntime::load_state` and the reference backend consume).
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint::new(self.meta.clone());
+        for (name, t) in &self.tensors {
+            ck.push(name.clone(), t.dequantize());
+        }
+        ck
+    }
+
+    /// Total payload bytes across tensors (excludes names/meta framing).
+    pub fn payload_bytes(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.payload_bytes()).sum()
+    }
+
+    // ---------------------------------------------------------------- io
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        let meta = self.meta.to_string();
+        w.write_all(&(meta.len() as u32).to_le_bytes())?;
+        w.write_all(meta.as_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            anyhow::ensure!(name.len() <= u16::MAX as usize, "name too long");
+            w.write_all(&(name.len() as u16).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            anyhow::ensure!(t.shape.len() <= u8::MAX as usize, "too many dims");
+            w.write_all(&[t.shape.len() as u8])?;
+            for &d in &t.shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            anyhow::ensure!(
+                t.bits == RAW_BITS || (1..=24).contains(&t.bits),
+                "{name}: bad bits {}",
+                t.bits
+            );
+            let expect = if t.bits == RAW_BITS {
+                t.numel() * 4
+            } else {
+                PackedTensor::packed_len(t.numel(), t.bits)
+            };
+            anyhow::ensure!(
+                t.payload.len() == expect,
+                "{name}: payload {} bytes, expected {expect}",
+                t.payload.len()
+            );
+            w.write_all(&[t.bits as u8])?;
+            w.write_all(&t.scale.to_le_bytes())?;
+            w.write_all(&t.payload)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<QuantizedCheckpoint> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(
+            &magic == MAGIC,
+            "bad packed-checkpoint magic in {path:?} (expected AQQCKPT1)"
+        );
+        let meta_len = read_u32(&mut r)? as usize;
+        let mut meta_bytes = vec![0u8; meta_len];
+        r.read_exact(&mut meta_bytes)?;
+        let meta = Json::parse(std::str::from_utf8(&meta_bytes)?)
+            .map_err(|e| anyhow::anyhow!("packed meta: {e}"))?;
+        let count = read_u32(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(count.min(4096));
+        for _ in 0..count {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let mut ndim = [0u8; 1];
+            r.read_exact(&mut ndim)?;
+            let mut shape = Vec::with_capacity(ndim[0] as usize);
+            for _ in 0..ndim[0] {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let mut bits_scale = [0u8; 5];
+            r.read_exact(&mut bits_scale)?;
+            let bits = bits_scale[0] as u32;
+            anyhow::ensure!(
+                bits == RAW_BITS || (1..=24).contains(&bits),
+                "{name}: bad bits {bits}"
+            );
+            let scale = f32::from_le_bytes([
+                bits_scale[1],
+                bits_scale[2],
+                bits_scale[3],
+                bits_scale[4],
+            ]);
+            // dims come from an untrusted file: overflow must be Err,
+            // not a debug panic / silent release wraparound
+            let numel = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("{name}: shape {shape:?} overflows usize")
+                })?;
+            let len = if bits == RAW_BITS {
+                numel.checked_mul(4)
+            } else {
+                numel
+                    .checked_mul(bits as usize)
+                    .and_then(|b| b.checked_add(7))
+                    .map(|b| b / 8)
+            }
+            .ok_or_else(|| {
+                anyhow::anyhow!("{name}: payload size overflows usize")
+            })?;
+            let mut payload = vec![0u8; len];
+            r.read_exact(&mut payload)?;
+            tensors.push((name, PackedTensor { shape, bits, scale, payload }));
+        }
+        Ok(QuantizedCheckpoint { meta, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("adaqat_packed_{}_{name}", std::process::id()))
+    }
+
+    fn random_tensor(shape: Vec<usize>, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.normal() * 0.1).collect())
+    }
+
+    #[test]
+    fn bit_packing_roundtrips_all_widths() {
+        for bits in [1u32, 2, 3, 4, 5, 7, 8, 11, 16, 24] {
+            let max = (1u64 << bits) - 1;
+            let codes: Vec<u32> =
+                (0..100u64).map(|i| ((i * 2654435761) % (max + 1)) as u32).collect();
+            let mut buf = vec![0u8; (codes.len() * bits as usize + 7) / 8];
+            for (i, &c) in codes.iter().enumerate() {
+                write_bits(&mut buf, i * bits as usize, bits, c);
+            }
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(read_bits(&buf, i * bits as usize, bits), c, "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequantize_is_deterministic_and_bounded() {
+        let t = random_tensor(vec![64, 3], 1);
+        let p = PackedTensor::quantize(&t, 4);
+        let a = p.dequantize();
+        let b = p.dequantize();
+        assert_eq!(a, b);
+        let max = t.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        // 4-bit grid: worst-case error is one half-step of 2·max/15
+        let step = 2.0 * max / 15.0;
+        for (x, q) in t.data.iter().zip(&a.data) {
+            assert!((x - q).abs() <= 0.5 * step + 1e-6, "{x} vs {q}");
+        }
+    }
+
+    #[test]
+    fn raw_tensors_are_bit_exact() {
+        let t = random_tensor(vec![17], 2);
+        assert_eq!(PackedTensor::raw(&t).dequantize(), t);
+    }
+
+    #[test]
+    fn zero_tensor_survives() {
+        let t = Tensor::zeros(vec![8, 8]);
+        let p = PackedTensor::quantize(&t, 3);
+        assert_eq!(p.scale, 0.0);
+        assert_eq!(p.dequantize(), t);
+    }
+
+    #[test]
+    fn file_roundtrip_exact_dequant() {
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            ("model", Json::str("resnet20")),
+            ("k_a", Json::num(4.0)),
+        ]));
+        q.push("stem.w", PackedTensor::quantize(&random_tensor(vec![3, 3, 3, 16], 3), 4));
+        q.push("stem.bn.mean", PackedTensor::raw(&random_tensor(vec![16], 4)));
+        q.push("fc.w", PackedTensor::quantize(&random_tensor(vec![64, 10], 5), 2));
+        let path = tmpfile("roundtrip.aqq");
+        q.save(&path).unwrap();
+        let rt = QuantizedCheckpoint::load(&path).unwrap();
+        assert_eq!(rt.meta.get("model").unwrap().as_str(), Some("resnet20"));
+        assert_eq!(rt.tensors.len(), 3);
+        for ((n1, t1), (n2, t2)) in q.tensors.iter().zip(&rt.tensors) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+            // the canonical dequantized stream is bit-identical
+            assert_eq!(t1.dequantize().data, t2.dequantize().data);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn from_checkpoint_selects_weights_and_carries_meta() {
+        let mut ck = Checkpoint::new(Json::obj(vec![
+            ("model", Json::str("toy")),
+            ("k_a", Json::num(8.0)),
+        ]));
+        ck.push("conv1.w", random_tensor(vec![3, 3, 3, 8], 6));
+        ck.push("conv1.b", random_tensor(vec![8], 7));
+        ck.push("bn.var", random_tensor(vec![8], 8));
+        let q = QuantizedCheckpoint::from_checkpoint(&ck, 4, |n| n.ends_with(".w"));
+        assert_eq!(q.get("conv1.w").unwrap().bits, 4);
+        assert_eq!(q.get("conv1.b").unwrap().bits, RAW_BITS);
+        assert_eq!(q.get("bn.var").unwrap().bits, RAW_BITS);
+        assert_eq!(q.meta.get("k_w").unwrap().as_f64(), Some(4.0));
+        assert_eq!(q.meta.get("k_a").unwrap().as_f64(), Some(8.0));
+        assert_eq!(q.meta.get("model").unwrap().as_str(), Some("toy"));
+        // dequantized checkpoint exposes the same tensor names in order
+        let back = q.to_checkpoint();
+        let names: Vec<&str> = back.tensors.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["conv1.w", "conv1.b", "bn.var"]);
+        // raw tensors pass through exactly
+        assert_eq!(back.tensors[1].1, ck.tensors[1].1);
+    }
+
+    #[test]
+    fn four_bit_file_is_at_most_a_sixth_of_fp32() {
+        // weight-dominated model, as every real manifest is
+        let mut ck = Checkpoint::new(Json::Null);
+        ck.push("fc.w", random_tensor(vec![3072, 10], 9));
+        ck.push("fc.b", random_tensor(vec![10], 10));
+        let fp32_path = tmpfile("size_fp32.ckpt");
+        ck.save(&fp32_path).unwrap();
+        let q = QuantizedCheckpoint::from_checkpoint(&ck, 4, |n| n.ends_with(".w"));
+        let packed_path = tmpfile("size_packed.aqq");
+        q.save(&packed_path).unwrap();
+        let fp32 = std::fs::metadata(&fp32_path).unwrap().len();
+        let packed = std::fs::metadata(&packed_path).unwrap().len();
+        assert!(
+            packed * 6 <= fp32,
+            "packed {packed} bytes vs fp32 {fp32} — ratio {:.3}",
+            packed as f64 / fp32 as f64
+        );
+        std::fs::remove_file(fp32_path).ok();
+        std::fs::remove_file(packed_path).ok();
+    }
+
+    #[test]
+    fn empty_non_ascii_and_truncated() {
+        // empty tensor list + non-ASCII name in meta
+        let q = QuantizedCheckpoint::new(Json::obj(vec![("λ", Json::num(0.15))]));
+        let path = tmpfile("empty.aqq");
+        q.save(&path).unwrap();
+        let rt = QuantizedCheckpoint::load(&path).unwrap();
+        assert!(rt.tensors.is_empty());
+        assert_eq!(rt.meta.get("λ").unwrap().as_f64(), Some(0.15));
+        // non-ASCII tensor name
+        let mut q2 = QuantizedCheckpoint::new(Json::Null);
+        q2.push("重み.w", PackedTensor::quantize(&random_tensor(vec![32], 11), 4));
+        q2.save(&path).unwrap();
+        let rt2 = QuantizedCheckpoint::load(&path).unwrap();
+        assert_eq!(rt2.tensors[0].0, "重み.w");
+        // truncation anywhere is an error, not a short read
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [bytes.len() - 3, 20, 9] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(QuantizedCheckpoint::load(&path).is_err(), "cut at {cut}");
+        }
+        // wrong magic
+        std::fs::write(&path, b"AQCKPT01xxxxxxxxxxxx").unwrap();
+        assert!(QuantizedCheckpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

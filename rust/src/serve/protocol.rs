@@ -1,0 +1,200 @@
+//! Wire protocol: newline-delimited JSON over TCP (DESIGN.md §7).
+//!
+//! `serde` is unavailable offline (DESIGN.md §3), so framing is built on
+//! `util::json`. One JSON object per line, each direction:
+//!
+//! ```text
+//!   → {"id": 7, "image": [f32 × h·w·c]}      classify one image
+//!   → {"cmd": "ping"}                        liveness probe
+//!   → {"cmd": "stats"}                       latency/throughput counters
+//!   ← {"id": 7, "class": 3, "queue_ms": 0.8, "compute_ms": 1.9}
+//!   ← {"id": 7, "error": "queue full (backpressure)"}
+//!   ← {"ok": true}                           pong
+//!   ← {"requests": …, "queue_p50_ms": …, …}  stats
+//! ```
+
+use std::sync::atomic::Ordering;
+
+use crate::util::json::Json;
+
+use super::engine::EngineMetrics;
+use super::queue::ServeResponse;
+
+/// A parsed inbound line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Infer { id: u64, pixels: Vec<f32> },
+    Ping,
+    Stats,
+}
+
+/// Parse one request line. Errors are strings ready to ship back via
+/// [`error_line`].
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "ping" => Ok(Request::Ping),
+            "stats" => Ok(Request::Stats),
+            other => Err(format!("unknown cmd {other:?}")),
+        };
+    }
+    let image = j
+        .get("image")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "request needs \"image\" (array) or \"cmd\"".to_string())?;
+    let mut pixels = Vec::with_capacity(image.len());
+    for v in image {
+        pixels.push(
+            v.as_f64().ok_or_else(|| "image must be all numbers".to_string())? as f32,
+        );
+    }
+    let id = match j.get("id") {
+        None => 0,
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| "id must be a number".to_string())?;
+            // reject anything a u64 echo could not round-trip exactly —
+            // pipelined clients correlate responses by id
+            if f < 0.0 || f.fract() != 0.0 || f >= 9_007_199_254_740_992.0 {
+                return Err("id must be a non-negative integer < 2^53".to_string());
+            }
+            f as u64
+        }
+    };
+    Ok(Request::Infer { id, pixels })
+}
+
+/// Serialize an engine response (success or per-request failure).
+pub fn response_line(resp: &ServeResponse) -> String {
+    let mut pairs = vec![("id", Json::num(resp.id as f64))];
+    match &resp.result {
+        Ok(class) => pairs.push(("class", Json::num(*class as f64))),
+        Err(msg) => pairs.push(("error", Json::str(msg.clone()))),
+    }
+    pairs.push(("queue_ms", Json::num(round3(resp.queue_ms))));
+    pairs.push(("compute_ms", Json::num(round3(resp.compute_ms))));
+    Json::obj(pairs).to_string()
+}
+
+/// Protocol-level error (parse failure, backpressure, bad shape).
+pub fn error_line(id: Option<u64>, msg: &str) -> String {
+    let mut pairs = vec![];
+    if let Some(id) = id {
+        pairs.push(("id", Json::num(id as f64)));
+    }
+    pairs.push(("error", Json::str(msg)));
+    Json::obj(pairs).to_string()
+}
+
+pub fn pong_line() -> String {
+    Json::obj(vec![("ok", Json::Bool(true))]).to_string()
+}
+
+/// Snapshot the engine counters as one stats object.
+pub fn stats_line(m: &EngineMetrics) -> String {
+    let q = m.queue.snapshot();
+    let c = m.compute.snapshot();
+    Json::obj(vec![
+        ("requests", Json::num(m.requests.load(Ordering::Relaxed) as f64)),
+        ("failures", Json::num(m.failures.load(Ordering::Relaxed) as f64)),
+        ("batches", Json::num(m.batches.load(Ordering::Relaxed) as f64)),
+        ("padded_rows", Json::num(m.padded.load(Ordering::Relaxed) as f64)),
+        ("queue_p50_ms", Json::num(round3(q.p50_ms))),
+        ("queue_p95_ms", Json::num(round3(q.p95_ms))),
+        ("queue_p99_ms", Json::num(round3(q.p99_ms))),
+        ("compute_p50_ms", Json::num(round3(c.p50_ms))),
+        ("compute_p95_ms", Json::num(round3(c.p95_ms))),
+        ("compute_p99_ms", Json::num(round3(c.p99_ms))),
+    ])
+    .to_string()
+}
+
+/// Keep emitted latencies short and round-trippable.
+fn round3(ms: f64) -> f64 {
+    (ms * 1000.0).round() / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_infer_request() {
+        let r = parse_request(r#"{"id": 9, "image": [0.5, -1.25, 3]}"#).unwrap();
+        assert_eq!(r, Request::Infer { id: 9, pixels: vec![0.5, -1.25, 3.0] });
+        // id defaults to 0
+        let r = parse_request(r#"{"image": []}"#).unwrap();
+        assert_eq!(r, Request::Infer { id: 0, pixels: vec![] });
+    }
+
+    #[test]
+    fn parses_commands_and_rejects_garbage() {
+        assert_eq!(parse_request(r#"{"cmd": "ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(parse_request(r#"{"cmd": "stats"}"#).unwrap(), Request::Stats);
+        assert!(parse_request(r#"{"cmd": "reboot"}"#).is_err());
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"id": 1}"#).is_err());
+        assert!(parse_request(r#"{"image": ["a"]}"#).is_err());
+    }
+
+    #[test]
+    fn non_roundtrippable_ids_are_rejected() {
+        // a u64 echo must return exactly the id the client sent —
+        // anything else breaks pipelined correlation
+        assert!(parse_request(r#"{"id": -1, "image": [1]}"#).is_err());
+        assert!(parse_request(r#"{"id": 1.5, "image": [1]}"#).is_err());
+        assert!(parse_request(r#"{"id": 9007199254740992, "image": [1]}"#).is_err());
+        assert!(parse_request(r#"{"id": "7", "image": [1]}"#).is_err());
+        assert!(parse_request(r#"{"id": 9007199254740991, "image": [1]}"#).is_ok());
+    }
+
+    #[test]
+    fn response_lines_roundtrip_through_json() {
+        let ok = ServeResponse {
+            id: 3,
+            result: Ok(7),
+            queue_ms: 0.1234567,
+            compute_ms: 2.5,
+        };
+        let j = Json::parse(&response_line(&ok)).unwrap();
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("class").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("queue_ms").unwrap().as_f64(), Some(0.123));
+        assert!(j.get("error").is_none());
+
+        let err = ServeResponse {
+            id: 4,
+            result: Err("queue full (backpressure)".to_string()),
+            queue_ms: 0.0,
+            compute_ms: 0.0,
+        };
+        let j = Json::parse(&response_line(&err)).unwrap();
+        assert!(j.get("class").is_none());
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("full"));
+    }
+
+    #[test]
+    fn error_and_pong_lines_are_valid_json() {
+        let j = Json::parse(&error_line(Some(5), "boom")).unwrap();
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(5.0));
+        let j = Json::parse(&error_line(None, "bad \"quote\"")).unwrap();
+        assert!(j.get("id").is_none());
+        assert!(j.get("error").unwrap().as_str().unwrap().contains('"'));
+        let j = Json::parse(&pong_line()).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn stats_line_reports_counters() {
+        let m = EngineMetrics::default();
+        m.requests.store(12, Ordering::Relaxed);
+        m.queue.record_ms(1.0);
+        m.compute.record_ms(2.0);
+        let j = Json::parse(&stats_line(&m)).unwrap();
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(12.0));
+        assert!(j.get("queue_p50_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("compute_p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Bounded MPSC request queue between the front end and the batcher
+//! (DESIGN.md §7).
+//!
+//! Connection threads `push` (non-blocking: a full queue is surfaced to
+//! the client as backpressure instead of buffering unboundedly), worker
+//! threads `pop` with a timeout. Built on `Mutex<VecDeque>` + `Condvar`
+//! rather than `std::sync::mpsc` because the batcher needs
+//! deadline-bounded waits and multiple *consumers* (one per worker),
+//! which `mpsc::Receiver` cannot provide.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request traveling through the pipeline.
+pub struct ServeRequest {
+    /// Client-chosen id, echoed back in the response (ids are scoped to
+    /// their connection: the per-request response channel does the
+    /// routing, so cross-connection collisions are harmless).
+    pub id: u64,
+    /// Flattened NHWC pixels for exactly one image.
+    pub pixels: Vec<f32>,
+    /// When the request entered the queue (queue-latency clock).
+    pub enqueued: Instant,
+    /// Where the engine delivers the answer.
+    pub resp: mpsc::Sender<ServeResponse>,
+}
+
+/// The engine's answer to one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeResponse {
+    pub id: u64,
+    /// Predicted class, or a human-readable failure.
+    pub result: Result<usize, String>,
+    pub queue_ms: f64,
+    pub compute_ms: f64,
+}
+
+/// Why a push was refused. The request is dropped; the caller still
+/// holds the id and its response channel and reports the error itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// Queue at capacity — shed load at the edge.
+    Full,
+    /// Engine shutting down.
+    Closed,
+}
+
+impl fmt::Display for PushError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            PushError::Full => "queue full (backpressure)",
+            PushError::Closed => "server shutting down",
+        })
+    }
+}
+
+/// Outcome of a timed pop.
+pub enum Pop {
+    Item(ServeRequest),
+    TimedOut,
+    /// Closed *and* drained — consumers should exit.
+    Closed,
+}
+
+struct Inner {
+    q: VecDeque<ServeRequest>,
+    closed: bool,
+}
+
+/// The bounded queue itself; shared via `Arc`.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> Arc<RequestQueue> {
+        assert!(capacity > 0, "queue capacity must be positive");
+        Arc::new(RequestQueue {
+            inner: Mutex::new(Inner { q: VecDeque::with_capacity(capacity), closed: false }),
+            cv: Condvar::new(),
+            capacity,
+        })
+    }
+
+    pub fn push(&self, req: ServeRequest) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        if g.q.len() >= self.capacity {
+            return Err(PushError::Full);
+        }
+        g.q.push_back(req);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Wait up to `timeout` for one request.
+    pub fn pop(&self, timeout: Duration) -> Pop {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(req) = g.q.pop_front() {
+                return Pop::Item(req);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, _res) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Close the queue: pushes fail, pops drain the backlog then report
+    /// [`Pop::Closed`].
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> (ServeRequest, mpsc::Receiver<ServeResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            ServeRequest { id, pixels: vec![0.0; 4], enqueued: Instant::now(), resp: tx },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(8);
+        let mut rxs = vec![];
+        for id in 0..5 {
+            let (r, rx) = req(id);
+            q.push(r).unwrap();
+            rxs.push(rx);
+        }
+        for id in 0..5 {
+            match q.pop(Duration::from_millis(10)) {
+                Pop::Item(r) => assert_eq!(r.id, id),
+                _ => panic!("expected item {id}"),
+            }
+        }
+        assert!(matches!(q.pop(Duration::from_millis(1)), Pop::TimedOut));
+    }
+
+    #[test]
+    fn capacity_backpressure() {
+        let q = RequestQueue::new(2);
+        let (r0, _k0) = req(0);
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        q.push(r0).unwrap();
+        q.push(r1).unwrap();
+        assert_eq!(q.push(r2).unwrap_err(), PushError::Full);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = RequestQueue::new(4);
+        let (r0, _k0) = req(0);
+        q.push(r0).unwrap();
+        q.close();
+        let (r1, _k1) = req(1);
+        assert_eq!(q.push(r1).unwrap_err(), PushError::Closed);
+        assert!(matches!(q.pop(Duration::from_millis(1)), Pop::Item(_)));
+        assert!(matches!(q.pop(Duration::from_millis(1)), Pop::Closed));
+    }
+
+    #[test]
+    fn pop_wakes_on_cross_thread_push() {
+        let q = RequestQueue::new(4);
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let (r, rx) = req(7);
+            q2.push(r).unwrap();
+            rx
+        });
+        let start = Instant::now();
+        match q.pop(Duration::from_secs(5)) {
+            Pop::Item(r) => assert_eq!(r.id, 7),
+            _ => panic!("expected pushed item"),
+        }
+        assert!(start.elapsed() < Duration::from_secs(4), "pop did not wake early");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_producers_all_land() {
+        let q = RequestQueue::new(1024);
+        let mut handles = vec![];
+        for p in 0..8u64 {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let (r, rx) = req(p * 100 + i);
+                    q.push(r).unwrap();
+                    drop(rx); // response channel unused in this test
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(q.len(), 400);
+    }
+}

@@ -1,0 +1,254 @@
+//! TCP front end: accept loop + per-connection reader/writer threads
+//! (DESIGN.md §7).
+//!
+//! Each connection gets a reader thread (parses NDJSON requests, submits
+//! them to the engine) and a writer thread (drains the connection's
+//! response channel). Requests pipeline freely: a client may have any
+//! number in flight; ids map answers back to questions. All writes to a
+//! connection go through one mutex-guarded `BufWriter`, so response and
+//! control lines never interleave mid-line.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use super::engine::Engine;
+use super::protocol::{self, Request};
+use super::queue::ServeResponse;
+
+/// Hard cap on one NDJSON request line. Generous — a 32×32×3 image is
+/// ~80 KiB of JSON — but bounded, so a newline-less client cannot grow
+/// server memory without limit.
+const MAX_LINE_BYTES: u64 = 16 * 1024 * 1024;
+
+/// A running server; dropping it does NOT stop the accept loop — call
+/// [`Server::stop`].
+pub struct Server {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind (`"127.0.0.1:0"` picks a free port — see `self.addr`) and
+    /// start accepting.
+    pub fn start(bind: &str, engine: Arc<Engine>) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("serve-accept".to_string())
+            .spawn(move || accept_loop(listener, engine, stop2))?;
+        log::info!("serving on {addr}");
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Stop accepting new connections (existing ones run until the
+    /// client disconnects or the engine shuts down).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, engine: Arc<Engine>, stop: Arc<AtomicBool>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                log::debug!("connection from {peer}");
+                let engine = Arc::clone(&engine);
+                let _ = std::thread::Builder::new()
+                    .name("serve-conn".to_string())
+                    .spawn(move || handle_conn(stream, engine));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => {
+                log::warn!("accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+
+fn write_line(out: &SharedWriter, line: &str) -> bool {
+    let mut g = out.lock().unwrap();
+    writeln!(g, "{line}").and_then(|_| g.flush()).is_ok()
+}
+
+fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
+    // the listener is non-blocking; accepted sockets must not be
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            log::warn!("connection clone failed: {e}");
+            return;
+        }
+    };
+    let out: SharedWriter = Arc::new(Mutex::new(BufWriter::new(write_half)));
+    let (tx, rx) = mpsc::channel::<ServeResponse>();
+
+    let out_resp = Arc::clone(&out);
+    let writer_thread = std::thread::spawn(move || {
+        for resp in rx.iter() {
+            if !write_line(&out_resp, &protocol::response_line(&resp)) {
+                break;
+            }
+        }
+    });
+
+    // Bounded line framing: a client that never sends '\n' (or sends one
+    // enormous line) must hit a hard cap, not grow a String until OOM —
+    // the queue's backpressure can't protect what never reaches it.
+    let mut reader = BufReader::new(stream).take(MAX_LINE_BYTES);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        reader.set_limit(MAX_LINE_BYTES);
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => break, // EOF
+            Ok(_) => {}
+            Err(_) => break,
+        }
+        if buf.last() != Some(&b'\n') && reader.limit() == 0 {
+            // cap hit mid-line: answer once, then drop the connection
+            write_line(
+                &out,
+                &protocol::error_line(
+                    None,
+                    &format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                ),
+            );
+            break;
+        }
+        let line = match std::str::from_utf8(&buf) {
+            Ok(l) => l.trim(),
+            Err(_) => {
+                if !write_line(&out, &protocol::error_line(None, "request is not UTF-8")) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if line.is_empty() {
+            continue;
+        }
+        let keep_going = match protocol::parse_request(line) {
+            Ok(Request::Ping) => write_line(&out, &protocol::pong_line()),
+            Ok(Request::Stats) => {
+                write_line(&out, &protocol::stats_line(&engine.metrics))
+            }
+            Ok(Request::Infer { id, pixels }) => {
+                match engine.submit(id, pixels, tx.clone()) {
+                    Ok(()) => true,
+                    Err(e) => {
+                        write_line(&out, &protocol::error_line(Some(id), &e.to_string()))
+                    }
+                }
+            }
+            Err(msg) => write_line(&out, &protocol::error_line(None, &msg)),
+        };
+        if !keep_going {
+            break;
+        }
+    }
+    // Reader done: drop our sender so the writer drains in-flight
+    // responses and exits once the engine releases its clones.
+    drop(tx);
+    let _ = writer_thread.join();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetKind;
+    use crate::serve::demo;
+    use crate::serve::engine::{Backend, EngineConfig, ReferenceBackend};
+    use crate::serve::packed::QuantizedCheckpoint;
+    use crate::util::json::Json;
+
+    fn start_demo_server() -> (Server, Arc<Engine>, Arc<QuantizedCheckpoint>) {
+        let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 8, 21, 8);
+        let q = Arc::new(QuantizedCheckpoint::from_checkpoint(&ck, 4, |n| {
+            n.ends_with(".w")
+        }));
+        let q2 = Arc::clone(&q);
+        let engine = Engine::start(
+            EngineConfig {
+                workers: 2,
+                queue_capacity: 128,
+                max_delay: Duration::from_millis(2),
+            },
+            move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
+        )
+        .unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&engine)).unwrap();
+        (server, engine, q)
+    }
+
+    #[test]
+    fn tcp_smoke_ping_infer_stats_and_errors() {
+        let (server, engine, q) = start_demo_server();
+        let direct = ReferenceBackend::from_packed(&q).unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream.try_clone().unwrap();
+        let mut line = String::new();
+
+        // ping
+        writeln!(w, r#"{{"cmd":"ping"}}"#).unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\""), "{line}");
+
+        // a real image round-trips with the direct prediction
+        let ds = crate::data::synth::generate(DatasetKind::Cifar10, 4, 3, 1);
+        let px: Vec<String> = ds.image(1).iter().map(|p| format!("{p}")).collect();
+        writeln!(w, r#"{{"id": 42, "image": [{}]}}"#, px.join(",")).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(42.0));
+        assert_eq!(
+            j.get("class").unwrap().as_f64(),
+            Some(direct.classify_one(ds.image(1)) as f64)
+        );
+
+        // wrong pixel count → protocol error with the id echoed
+        writeln!(w, r#"{{"id": 43, "image": [1, 2, 3]}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"error\"") && line.contains("43"), "{line}");
+
+        // garbage → protocol error without id
+        writeln!(w, "zzz").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"error\""), "{line}");
+
+        // stats reflect the one served request
+        writeln!(w, r#"{{"cmd":"stats"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(1.0));
+
+        drop(w);
+        drop(reader);
+        server.stop();
+        engine.shutdown();
+    }
+}

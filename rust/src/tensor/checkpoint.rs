@@ -92,8 +92,15 @@ impl Checkpoint {
             for _ in 0..ndim[0] {
                 shape.push(read_u32(&mut r)? as usize);
             }
-            let numel: usize = shape.iter().product();
-            let mut buf = vec![0u8; numel * 4];
+            // dims come from an untrusted file: overflow must be Err,
+            // not a debug panic / silent release wraparound
+            let bytes = shape
+                .iter()
+                .try_fold(4usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("{name}: shape {shape:?} overflows usize")
+                })?;
+            let mut buf = vec![0u8; bytes];
             r.read_exact(&mut buf)?;
             let data = buf
                 .chunks_exact(4)
@@ -105,13 +112,15 @@ impl Checkpoint {
     }
 }
 
-fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+// Shared little-endian framing primitives (also used by the packed
+// serving checkpoint, serve::packed — one copy, two container formats).
+pub(crate) fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn read_u16<R: Read>(r: &mut R) -> std::io::Result<u16> {
+pub(crate) fn read_u16<R: Read>(r: &mut R) -> std::io::Result<u16> {
     let mut b = [0u8; 2];
     r.read_exact(&mut b)?;
     Ok(u16::from_le_bytes(b))
@@ -167,6 +176,49 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_tensor_list_roundtrips() {
+        let ck = Checkpoint::new(Json::obj(vec![("only", Json::str("meta"))]));
+        let path = tmpfile("empty.ckpt");
+        ck.save(&path).unwrap();
+        let rt = Checkpoint::load(&path).unwrap();
+        assert!(rt.tensors.is_empty());
+        assert_eq!(rt.meta.get("only").unwrap().as_str(), Some("meta"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn non_ascii_names_roundtrip() {
+        let mut ck = Checkpoint::new(Json::obj(vec![("λ", Json::num(0.15))]));
+        ck.push("重み.conv1.w", Tensor::new(vec![3], vec![1.0, -2.0, 3.0]));
+        ck.push("ß-gemein", Tensor::scalar(9.0));
+        let path = tmpfile("nonascii.ckpt");
+        ck.save(&path).unwrap();
+        let rt = Checkpoint::load(&path).unwrap();
+        assert_eq!(rt.tensors[0].0, "重み.conv1.w");
+        assert_eq!(rt.tensors[1].0, "ß-gemein");
+        assert_eq!(rt.meta.get("λ").unwrap().as_f64(), Some(0.15));
+        assert_eq!(rt.tensors[0].1, ck.tensors[0].1);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncation_at_every_section_errors() {
+        let mut ck = Checkpoint::new(Json::obj(vec![("m", Json::str("x"))]));
+        ck.push("w", Tensor::zeros(vec![16]));
+        let path = tmpfile("trunc_sections.ckpt");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // cut inside: magic, meta length, meta body, count, name, shape,
+        // and payload — every prefix must fail loudly
+        for cut in [4usize, 10, 14, 20, 24, 28, bytes.len() - 1] {
+            let cut = cut.min(bytes.len() - 1);
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(Checkpoint::load(&path).is_err(), "cut at {cut} must error");
+        }
         std::fs::remove_file(path).ok();
     }
 }

@@ -95,7 +95,7 @@ impl Json {
 
     // ------------------------------------------------------------- parse
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -168,22 +168,50 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
+    /// Parse failure at a byte offset.
     Parse(usize, String),
-    #[error("json access error: {0}")]
+    /// Path lookup failure (see [`Json::at`]).
     Access(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Parse(pos, msg) => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Access(msg) => write!(f, "json access error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// Recursion cap for arrays/objects. The parser is fed untrusted TCP
+/// input by the serve front end (DESIGN.md §7), so unbounded nesting
+/// must be a parse error, not a thread-stack overflow (which aborts the
+/// whole process).
+const MAX_DEPTH: usize = 128;
 
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError::Parse(self.pos, msg.to_string())
+    }
+
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH}")));
+        }
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -229,11 +257,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -248,6 +278,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected `,` or `}`")),
@@ -256,11 +287,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut v = vec![];
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -270,6 +303,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(self.err("expected `,` or `]`")),
@@ -344,9 +378,13 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err(&format!("bad number `{text}`")))
+        match text.parse::<f64>() {
+            // Overflowing forms like `1e999` parse to ±inf in Rust; the
+            // module contract excludes them (they cannot round-trip), so
+            // reject anything non-finite explicitly.
+            Ok(v) if v.is_finite() => Ok(Json::Num(v)),
+            _ => Err(self.err(&format!("bad number `{text}`"))),
+        }
     }
 }
 
@@ -405,5 +443,79 @@ mod tests {
         assert!(j.at(&["a", "b"]).is_ok());
         let e = j.at(&["a", "z"]).unwrap_err();
         assert!(format!("{e}").contains("z"));
+    }
+
+    // ------------------------------------------------- wire-protocol edges
+    // (the serve front end speaks NDJSON built on this module, so the
+    // grammar corners below are load-bearing — DESIGN.md §7)
+
+    #[test]
+    fn escape_sequences_decode_and_reencode() {
+        assert_eq!(Json::parse(r#""Aé""#).unwrap(), Json::str("Aé"));
+        assert_eq!(Json::parse(r#""\b\f\/""#).unwrap(), Json::str("\u{8}\u{c}/"));
+        // unpaired surrogate maps to U+FFFD rather than corrupting the string
+        assert_eq!(Json::parse(r#""\ud800""#).unwrap(), Json::str("\u{fffd}"));
+        // control characters are re-emitted as \u escapes
+        assert_eq!(Json::str("a\u{1}b").to_string(), "\"a\\u0001b\"");
+        let s = Json::str("tab\t nl\n q\" bs\\ bell\u{7}");
+        assert_eq!(Json::parse(&s.to_string()).unwrap(), s);
+        // malformed escapes are errors, not panics
+        assert!(Json::parse(r#""\x""#).is_err());
+        assert!(Json::parse(r#""\u12""#).is_err());
+        assert!(Json::parse(r#""\u12zz""#).is_err());
+    }
+
+    #[test]
+    fn non_ascii_passthrough() {
+        let s = Json::str("λ=0.15 · 重み 4bit ✓");
+        assert_eq!(Json::parse(&s.to_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn deeply_nested_arrays_roundtrip() {
+        let depth = 100;
+        let src = format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+        let j = Json::parse(&src).unwrap();
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        let mut cur = &j;
+        for _ in 0..depth {
+            cur = &cur.as_arr().unwrap()[0];
+        }
+        assert_eq!(cur.as_f64(), Some(1.0));
+        // unbalanced nesting is an error at every depth
+        assert!(Json::parse(&format!("{}1{}", "[".repeat(4), "]".repeat(3))).is_err());
+    }
+
+    #[test]
+    fn nesting_past_the_cap_is_an_error_not_a_stack_overflow() {
+        // the serve front end feeds this parser raw TCP lines; a
+        // 200k-bracket bomb must fail cleanly (DESIGN.md §7)
+        for depth in [129usize, 10_000, 200_000] {
+            let src = format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+            let e = Json::parse(&src).unwrap_err();
+            assert!(format!("{e}").contains("nesting"), "depth {depth}: {e}");
+        }
+        // exactly at the cap still parses
+        let src = format!("{}1{}", "[".repeat(128), "]".repeat(128));
+        assert!(Json::parse(&src).is_ok());
+    }
+
+    #[test]
+    fn number_boundary_forms() {
+        assert_eq!(Json::parse("1e308").unwrap().as_f64(), Some(1e308));
+        assert_eq!(Json::parse("-1.5E-7").unwrap().as_f64(), Some(-1.5e-7));
+        assert_eq!(Json::parse("2.5e+2").unwrap().as_f64(), Some(250.0));
+        assert_eq!(Json::parse("-0").unwrap().as_f64(), Some(0.0));
+        // overflow / non-finite forms are rejected, per the module contract
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        // malformed digit soup is rejected (the scanner is permissive,
+        // the f64 parse is not)
+        assert!(Json::parse("1.2.3").is_err());
+        assert!(Json::parse("--1").is_err());
+        assert!(Json::parse("1e").is_err());
+        // large-magnitude integers fall back to float emission
+        let j = Json::num(1e16);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 }

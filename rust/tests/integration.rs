@@ -16,9 +16,26 @@ use adaqat::tensor::checkpoint::Checkpoint;
 use adaqat::train;
 
 // PjRtClient is Rc-based (!Send), so each test owns its runtime.
-fn runtime() -> Runtime {
-    Runtime::new(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path())
-        .expect("run `make artifacts` before `cargo test`")
+fn try_runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("artifacts present but runtime failed to open them"))
+}
+
+/// Evaluates to a [`Runtime`], or returns from the test (as a skip) when
+/// the AOT artifacts have not been built in this checkout.
+macro_rules! require_artifacts {
+    () => {
+        match try_runtime() {
+            Some(rt) => rt,
+            None => {
+                eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
 }
 
 fn small_batch(rt: &adaqat::runtime::ModelRuntime, seed: u64) -> Batch {
@@ -28,7 +45,7 @@ fn small_batch(rt: &adaqat::runtime::ModelRuntime, seed: u64) -> Batch {
 
 #[test]
 fn manifest_covers_all_models() {
-    let rt = runtime();
+    let rt = require_artifacts!();
     for key in ["smallcnn", "resnet20", "resnet18", "smallcnn_pallas"] {
         let mm = rt.manifest.model(key).unwrap();
         assert!(mm.param_count() > 0);
@@ -43,7 +60,7 @@ fn manifest_covers_all_models() {
 
 #[test]
 fn train_step_decreases_loss_and_updates_state() {
-    let rt = runtime().load_model("smallcnn").unwrap();
+    let rt = require_artifacts!().load_model("smallcnn").unwrap();
     let mut state = rt.init_state(0).unwrap();
     let p0 = state.params[0].clone();
     let batch = small_batch(&rt, 42);
@@ -67,7 +84,7 @@ fn train_step_decreases_loss_and_updates_state() {
 
 #[test]
 fn fp32_graph_trains_too() {
-    let rt = runtime().load_model("smallcnn").unwrap();
+    let rt = require_artifacts!().load_model("smallcnn").unwrap();
     let mut state = rt.init_state(1).unwrap();
     let batch = small_batch(&rt, 7);
     let first = rt.train_step(&mut state, &batch, 0.1, 0.0, 0.0, true).unwrap();
@@ -80,7 +97,7 @@ fn fp32_graph_trains_too() {
 
 #[test]
 fn probe_loss_is_deterministic_and_bit_sensitive() {
-    let rt = runtime().load_model("smallcnn").unwrap();
+    let rt = require_artifacts!().load_model("smallcnn").unwrap();
     let mut state = rt.init_state(2).unwrap();
     let batch = small_batch(&rt, 3);
     // train a bit at 8/8 so low bit-widths actually hurt
@@ -102,7 +119,7 @@ fn probe_loss_is_deterministic_and_bit_sensitive() {
 
 #[test]
 fn identity_scale_matches_high_bits() {
-    let rt = runtime().load_model("smallcnn").unwrap();
+    let rt = require_artifacts!().load_model("smallcnn").unwrap();
     let state = rt.init_state(3).unwrap();
     let batch = small_batch(&rt, 5);
     let id = rt.probe_loss(&state, &batch, S_IDENTITY, S_IDENTITY).unwrap();
@@ -114,7 +131,7 @@ fn identity_scale_matches_high_bits() {
 
 #[test]
 fn eval_uses_running_stats() {
-    let rt = runtime().load_model("smallcnn").unwrap();
+    let rt = require_artifacts!().load_model("smallcnn").unwrap();
     let mut state = rt.init_state(4).unwrap();
     let batch = small_batch(&rt, 11);
     let s = bitwidth_scale(8);
@@ -134,7 +151,7 @@ fn eval_uses_running_stats() {
 #[test]
 fn pallas_conv_variant_composes_end_to_end() {
     // The all-Pallas path: convs lowered through the L1 tiled matmul.
-    let rt = runtime().load_model("smallcnn_pallas").unwrap();
+    let rt = require_artifacts!().load_model("smallcnn_pallas").unwrap();
     let mut state = rt.init_state(5).unwrap();
     let batch = small_batch(&rt, 13);
     let s = bitwidth_scale(4);
@@ -150,8 +167,8 @@ fn pallas_conv_variant_composes_end_to_end() {
 fn pallas_and_lax_conv_agree_numerically() {
     // Same init, same batch, same scales → the two conv lowerings must
     // produce near-identical losses (they compute the same function).
-    let rt_a = runtime().load_model("smallcnn").unwrap();
-    let rt_b = runtime().load_model("smallcnn_pallas").unwrap();
+    let rt_a = require_artifacts!().load_model("smallcnn").unwrap();
+    let rt_b = require_artifacts!().load_model("smallcnn_pallas").unwrap();
     let state_a = rt_a.init_state(6).unwrap();
     let state_b = rt_b.init_state(6).unwrap(); // same seed → same init
     let batch = small_batch(&rt_a, 17);
@@ -168,7 +185,7 @@ fn pallas_and_lax_conv_agree_numerically() {
 
 #[test]
 fn full_experiment_with_adaqat_controller() {
-    let rt = runtime().load_model("smallcnn").unwrap();
+    let rt = require_artifacts!().load_model("smallcnn").unwrap();
     let mut cfg = ExperimentConfig::default_for("smallcnn");
     cfg.epochs = 2;
     cfg.train_size = 512;
@@ -190,7 +207,7 @@ fn full_experiment_with_adaqat_controller() {
 
 #[test]
 fn finetune_scenario_roundtrip() {
-    let rt = runtime().load_model("smallcnn").unwrap();
+    let rt = require_artifacts!().load_model("smallcnn").unwrap();
     let tmp = std::env::temp_dir().join(format!("adaqat_it_{}", std::process::id()));
     let mut cfg = ExperimentConfig::default_for("smallcnn");
     cfg.epochs = 1;
@@ -214,7 +231,7 @@ fn finetune_scenario_roundtrip() {
 
 #[test]
 fn trainer_runs_fixed_and_adaqat_identically_shaped() {
-    let rt = runtime().load_model("smallcnn").unwrap();
+    let rt = require_artifacts!().load_model("smallcnn").unwrap();
     let ds = synth::generate(DatasetKind::Cifar10, 256, 9, 0).into_shared();
     let test = synth::generate(DatasetKind::Cifar10, 128, 9, 1).into_shared();
     let train_loader = Loader::new(ds, rt.mm.batch, true);
@@ -239,7 +256,7 @@ fn trainer_runs_fixed_and_adaqat_identically_shaped() {
 
 #[test]
 fn checkpoint_save_load_roundtrip_through_runtime() {
-    let rt = runtime().load_model("smallcnn").unwrap();
+    let rt = require_artifacts!().load_model("smallcnn").unwrap();
     let mut state = rt.init_state(10).unwrap();
     let batch = small_batch(&rt, 19);
     let s = bitwidth_scale(8);

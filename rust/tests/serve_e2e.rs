@@ -1,0 +1,127 @@
+//! End-to-end serving test (DESIGN.md §7) — runs fully offline, no AOT
+//! artifacts or PJRT needed: demo checkpoint → `export` packing →
+//! engine + dynamic batcher → TCP server → pipelined client, 1k+
+//! requests, every prediction cross-checked against the model's direct
+//! (unbatched) forward pass.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use adaqat::coordinator::export_packed;
+use adaqat::data::{synth, DatasetKind};
+use adaqat::serve::client;
+use adaqat::serve::demo;
+use adaqat::serve::{
+    Backend, Engine, EngineConfig, QuantizedCheckpoint, ReferenceBackend, Server,
+};
+
+#[test]
+fn serve_end_to_end_1k_requests_over_tcp() {
+    let tmp = std::env::temp_dir().join(format!("adaqat_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    // 1. train-time artifact: the demo checkpoint (fp32)
+    let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 32, 7, 16);
+    let ck_path = tmp.join("model.ckpt");
+    ck.save(&ck_path).unwrap();
+
+    // 2. export to the packed serving format at 4 bits, through disk
+    let (q, report) = export_packed(&ck, 4).unwrap();
+    assert_eq!(report.quantized_tensors, 1);
+    let packed_path = tmp.join("model.aqq");
+    q.save(&packed_path).unwrap();
+    // packed ≤ 1/6 of the fp32 source on disk (acceptance criterion)
+    let fp32_bytes = std::fs::metadata(&ck_path).unwrap().len();
+    let packed_bytes = std::fs::metadata(&packed_path).unwrap().len();
+    assert!(
+        packed_bytes * 6 <= fp32_bytes,
+        "packed {packed_bytes} vs fp32 {fp32_bytes}"
+    );
+    let packed = Arc::new(QuantizedCheckpoint::load(&packed_path).unwrap());
+
+    // 3. engine with 2 workers + dynamic batching
+    let packed2 = Arc::clone(&packed);
+    let engine = Engine::start(
+        EngineConfig {
+            workers: 2,
+            queue_capacity: 2048,
+            max_delay: Duration::from_millis(2),
+        },
+        move |_| Ok(Box::new(ReferenceBackend::from_packed(&packed2)?) as Box<dyn Backend>),
+    )
+    .unwrap();
+
+    // 4. TCP server + pipelined demo client, 1024 single-image requests
+    let server = Server::start("127.0.0.1:0", Arc::clone(&engine)).unwrap();
+    let n = 1024usize;
+    let ds = synth::generate(DatasetKind::Cifar10, n, 99, 1);
+    let images: Vec<(Vec<f32>, i32)> =
+        (0..n).map(|i| (ds.image(i).to_vec(), ds.labels[i])).collect();
+    let report = client::run(&server.addr.to_string(), &images, 64).unwrap();
+
+    // every request answered, none dropped or failed
+    assert_eq!(report.sent, n);
+    assert_eq!(report.received, n);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.preds.len(), n);
+
+    // 5. correctness: the pipelined path agrees with the direct forward
+    //    for all 1k requests…
+    let direct = ReferenceBackend::from_packed(&packed).unwrap();
+    for (id, outcome) in &report.preds {
+        let want = direct.classify_one(ds.image(*id as usize));
+        assert_eq!(outcome.as_ref().ok().copied(), Some(want), "request {id}");
+    }
+    // …and the demo model genuinely classifies (≫ 10-class chance)
+    let acc = report.correct as f64 / n as f64;
+    assert!(acc > 0.2, "served accuracy only {acc:.3}");
+
+    // 6. latency accounting covered every request
+    assert_eq!(engine.metrics.requests.load(std::sync::atomic::Ordering::Relaxed), n as u64);
+    assert_eq!(engine.metrics.queue.count(), n as u64);
+    assert_eq!(engine.metrics.compute.count(), n as u64);
+    let snap = engine.metrics.queue.snapshot();
+    assert!(snap.p50_ms <= snap.p95_ms && snap.p95_ms <= snap.p99_ms);
+    // dynamic batching actually coalesced: far fewer batches than requests
+    let batches = engine.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches < n as u64, "no coalescing happened ({batches} batches)");
+
+    server.stop();
+    engine.shutdown();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn serve_sheds_load_instead_of_buffering_unboundedly() {
+    // tiny queue + one slow-ish worker: the client must see explicit
+    // backpressure errors, not hangs
+    let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 4, 3, 4);
+    let (q, _) = export_packed(&ck, 4).unwrap();
+    let q = Arc::new(q);
+    let q2 = Arc::clone(&q);
+    let engine = Engine::start(
+        EngineConfig {
+            workers: 1,
+            queue_capacity: 2,
+            max_delay: Duration::from_millis(50),
+        },
+        move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
+    )
+    .unwrap();
+    let numel = engine.input_numel();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut accepted = 0usize;
+    let mut shed = 0usize;
+    for i in 0..64u64 {
+        match engine.submit(i, vec![0.0; numel], tx.clone()) {
+            Ok(()) => accepted += 1,
+            Err(adaqat::serve::engine::SubmitError::Full) => shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed > 0, "a 2-deep queue cannot absorb 64 instant submits");
+    for _ in 0..accepted {
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    }
+    engine.shutdown();
+}

@@ -1,0 +1,134 @@
+//! Offline API-compatible stub of `anyhow`.
+//!
+//! The offline crate universe (DESIGN.md §3) has no registry access, so
+//! the subset of `anyhow` this repo uses is vendored here: a
+//! string-backed [`Error`] convertible from any `std::error::Error`
+//! (which makes `?` work everywhere), the [`Result`] alias, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Context chaining is elided —
+//! call sites already build full messages with `anyhow!`.
+
+use std::fmt;
+
+/// A string-backed error. Deliberately does NOT implement
+/// `std::error::Error`, so the blanket `From<E: std::error::Error>`
+/// below stays coherent (same trick as the real crate).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(::std::format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("boom"));
+        assert!(format!("{e:#}").contains("boom"));
+        assert!(format!("{e:?}").contains("boom"));
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        let e = anyhow!("value {x} bad: {}", 7);
+        assert_eq!(e.to_string(), "value 3 bad: 7");
+        let from_string: Error = anyhow!(String::from("plain"));
+        assert_eq!(from_string.to_string(), "plain");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 5 {
+                bail!("five is right out");
+            }
+            Ok(n)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(12).unwrap_err().to_string().contains("12"));
+        assert!(check(5).unwrap_err().to_string().contains("five"));
+    }
+
+    #[test]
+    fn bare_ensure_names_condition() {
+        fn f() -> Result<()> {
+            let a = 1;
+            ensure!(a == 2);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("a == 2"));
+    }
+}

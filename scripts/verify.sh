@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 verification (ROADMAP.md) + bench smoke.
+#
+#   scripts/verify.sh           # build, unit+integration tests, bench smoke
+#
+# Works offline: integration tests and the paper benches skip themselves
+# when AOT artifacts are absent (DESIGN.md §3); the serve bench runs
+# fully on the pure-Rust reference backend, so the serving subsystem is
+# exercised end-to-end either way.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== bench smoke: cargo test -q --benches =="
+# harness = false benches run as plain binaries; each either completes a
+# smoke-scale run or prints why it skipped
+cargo test -q --benches
+
+echo "verify: OK"
