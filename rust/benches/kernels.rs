@@ -1,0 +1,182 @@
+//! Quantized-kernel benchmarks (DESIGN.md §11): f32-vs-integer GEMM
+//! sweep over k_w ∈ {2,3,4,8} × batch ∈ {1,16,64} on the 2-layer demo
+//! MLP, written to `BENCH_kernels.json` so later PRs have a perf
+//! trajectory to beat.
+//!
+//! Three forward paths per (k, batch) cell:
+//! * `legacy` — the pre-kernels serving math: dequantize the packed
+//!   weights to f32 once, then the cache-hostile strided scalar dot
+//!   (`w[i·n_out + o]` strides by `n_out` every element);
+//! * `f32` — the kernels' f32 fallback: same dequantized weights,
+//!   transposed contiguous layout (isolates the layout win);
+//! * `quant` — the integer path: i8/i16 codes, on-the-fly activation
+//!   quantization at k_a = 8, i32 accumulation, f64 epilogue.
+//!
+//! Acceptance floor (ISSUE 2): quant ≥ 2× legacy at k_w = 4, batch 64.
+//!
+//! ```bash
+//! cargo bench --bench kernels
+//! cargo bench --bench kernels -- --iters 5 --hidden 512 --threads 2
+//! ```
+
+use std::path::PathBuf;
+
+use adaqat::data::DatasetKind;
+use adaqat::kernels::QuantMlp;
+use adaqat::metrics::Table;
+use adaqat::serve::{demo, QuantizedCheckpoint};
+use adaqat::util::bench::{bench_args, measure};
+use adaqat::util::json::Json;
+
+/// The old serving forward, generalized to the layer stack: dequantized
+/// f32 weights in the checkpoint's `[d, n_out]` layout, inner loop
+/// striding by `n_out` — kept verbatim as the baseline under test.
+struct LegacyForward {
+    layers: Vec<(usize, usize, Vec<f32>, Vec<f32>, bool)>, // (d, n_out, w, b, relu)
+}
+
+impl LegacyForward {
+    fn from_packed(q: &QuantizedCheckpoint, names: &[&str]) -> LegacyForward {
+        let mut layers = vec![];
+        for (li, name) in names.iter().enumerate() {
+            let wt = q.get(&format!("{name}.w")).expect("layer weight");
+            let (d, n_out) = (wt.shape[0], wt.shape[1]);
+            let w = wt.dequantize().data;
+            let b = match q.get(&format!("{name}.b")) {
+                Some(bt) => bt.dequantize().data,
+                None => vec![0.0; n_out],
+            };
+            layers.push((d, n_out, w, b, li + 1 != names.len()));
+        }
+        LegacyForward { layers }
+    }
+
+    fn forward(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut cur = x.to_vec();
+        for (d, n_out, w, b, relu) in &self.layers {
+            let (d, n_out) = (*d, *n_out);
+            let mut next = vec![0.0f32; rows * n_out];
+            for r in 0..rows {
+                let xr = &cur[r * d..(r + 1) * d];
+                for o in 0..n_out {
+                    let mut acc = b[o];
+                    for (i, &xv) in xr.iter().enumerate() {
+                        acc += xv * w[i * n_out + o]; // strided: the old hot path
+                    }
+                    next[r * n_out + o] = if *relu && acc < 0.0 { 0.0 } else { acc };
+                }
+            }
+            cur = next;
+        }
+        cur
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    adaqat::util::logger::init();
+    let args = bench_args();
+    let iters: usize = args.get("iters", 2).map_err(|e| anyhow::anyhow!(e))?;
+    let warmup: usize = args.get("warmup", 1).map_err(|e| anyhow::anyhow!(e))?;
+    let hidden: usize = args.get("hidden", 256).map_err(|e| anyhow::anyhow!(e))?;
+    let samples: usize = args.get("samples", 8).map_err(|e| anyhow::anyhow!(e))?;
+    let threads: usize = args.get("threads", 1).map_err(|e| anyhow::anyhow!(e))?;
+    // benches always run with cwd = rust/, so the default lands at the
+    // repo root where CI picks it up as an artifact
+    let out = PathBuf::from(args.get_str("out", "../BENCH_kernels.json"));
+
+    let ks = [2u32, 3, 4, 8];
+    let batches = [1usize, 16, 64];
+
+    let ck = demo::demo_mlp_checkpoint(DatasetKind::Cifar10, hidden, samples, 0, 64, 8);
+    let ds = adaqat::data::synth::generate(DatasetKind::Cifar10, 64, 3, 1);
+    let d = ds.sample_numel();
+    let mut x = vec![0.0f32; 64 * d];
+    for i in 0..64 {
+        x[i * d..(i + 1) * d].copy_from_slice(ds.image(i));
+    }
+
+    println!(
+        "=== quantized GEMM vs f32 (demo MLP {d}->{hidden}->10, k_a=8, {threads} thread(s)) ==="
+    );
+    let mut table = Table::new(&[
+        "k_w", "batch", "legacy ms", "f32 ms", "quant ms", "vs legacy", "vs f32",
+    ]);
+    let mut rows_json: Vec<Json> = vec![];
+    let mut accept: Option<f64> = None;
+
+    for &k in &ks {
+        let q = QuantizedCheckpoint::from_checkpoint(&ck, k, |n| n.ends_with(".w"));
+        let quant = QuantMlp::from_packed(&q)?;
+        anyhow::ensure!(
+            quant.layers.iter().all(|l| l.gemm.is_integer()),
+            "k={k}: expected the integer path"
+        );
+        // same dequantized weights, contiguous f32 fallback (k_a = 32)
+        let mut q32 = q.clone();
+        if let Json::Obj(m) = &mut q32.meta {
+            m.insert("k_a".to_string(), Json::num(32.0));
+        }
+        let f32mlp = QuantMlp::from_packed(&q32)?;
+        anyhow::ensure!(f32mlp.layers.iter().all(|l| !l.gemm.is_integer()));
+        let legacy = LegacyForward::from_packed(&q, &["fc1", "fc2"]);
+
+        for &batch in &batches {
+            let xb = &x[..batch * d];
+            let s_legacy = measure(warmup, iters, || {
+                std::hint::black_box(legacy.forward(xb, batch));
+            });
+            let s_f32 = measure(warmup, iters, || {
+                std::hint::black_box(f32mlp.forward(xb, batch, threads));
+            });
+            let s_quant = measure(warmup, iters, || {
+                std::hint::black_box(quant.forward(xb, batch, threads));
+            });
+            let vs_legacy = s_legacy.p50_ms / s_quant.p50_ms;
+            let vs_f32 = s_f32.p50_ms / s_quant.p50_ms;
+            if k == 4 && batch == 64 {
+                accept = Some(vs_legacy);
+            }
+            table.row(vec![
+                k.to_string(),
+                batch.to_string(),
+                format!("{:.3}", s_legacy.p50_ms),
+                format!("{:.3}", s_f32.p50_ms),
+                format!("{:.3}", s_quant.p50_ms),
+                format!("{vs_legacy:.1}x"),
+                format!("{vs_f32:.1}x"),
+            ]);
+            rows_json.push(Json::obj(vec![
+                ("k_w", Json::num(k as f64)),
+                ("k_a", Json::num(8.0)),
+                ("batch", Json::num(batch as f64)),
+                ("legacy_f32_ms", Json::num(s_legacy.p50_ms)),
+                ("f32_ms", Json::num(s_f32.p50_ms)),
+                ("quant_ms", Json::num(s_quant.p50_ms)),
+                ("speedup_vs_legacy", Json::num(vs_legacy)),
+                ("speedup_vs_f32", Json::num(vs_f32)),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+
+    if let Some(sp) = accept {
+        println!(
+            "acceptance (k_w=4, batch=64): quant is {sp:.1}x the legacy path {}",
+            if sp >= 2.0 { "(>= 2x: OK)" } else { "(< 2x — REGRESSION, investigate!)" }
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        ("model", Json::str("demo-mlp")),
+        ("input", Json::num(d as f64)),
+        ("hidden", Json::num(hidden as f64)),
+        ("classes", Json::num(10.0)),
+        ("threads", Json::num(threads as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("results", Json::Arr(rows_json)),
+    ]);
+    std::fs::write(&out, doc.to_string())?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

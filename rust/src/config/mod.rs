@@ -228,11 +228,16 @@ pub struct ServeConfig {
     /// Dynamic-batching window in milliseconds: the max time a lone
     /// request waits for company before a partial batch ships.
     pub max_delay_ms: u64,
-    /// "reference" (pure-Rust linear, offline-runnable) or "runtime"
-    /// (compiled infer graph on PJRT).
+    /// "reference" (pure-Rust quantized kernels, offline-runnable) or
+    /// "runtime" (compiled infer graph on PJRT).
     pub backend: String,
     /// Manifest model key for the runtime backend.
     pub model: String,
+    /// GEMM row-parallelism per backend instance (std::thread workers
+    /// inside the kernels, DESIGN.md §11); 0 = one per available core.
+    /// Total compute threads ≈ workers × threads, so the default keeps
+    /// one GEMM thread per serving worker.
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -245,6 +250,7 @@ impl Default for ServeConfig {
             max_delay_ms: 5,
             backend: "reference".to_string(),
             model: "resnet20".to_string(),
+            threads: 1,
         }
     }
 }
@@ -260,6 +266,7 @@ impl ServeConfig {
             "workers" => self.workers = p(key, value)?,
             "queue_capacity" => self.queue_capacity = p(key, value)?,
             "max_delay_ms" => self.max_delay_ms = p(key, value)?,
+            "threads" => self.threads = p(key, value)?,
             "model" => self.model = value.to_string(),
             "backend" => {
                 if !["reference", "runtime"].contains(&value) {
@@ -277,7 +284,7 @@ impl ServeConfig {
     pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
         for key in [
             "checkpoint", "addr", "workers", "queue_capacity", "max_delay_ms",
-            "backend", "model",
+            "backend", "model", "threads",
         ] {
             if args.has(key) {
                 let v = args.get_str(key, "");
@@ -377,7 +384,7 @@ mod tests {
         let mut s = ServeConfig::default();
         assert!(s.validate().is_err(), "checkpoint is required");
         let args = Args::parse(
-            "--checkpoint runs/demo/packed.aqq --workers 4 --max_delay_ms 2 --backend runtime --model smallcnn"
+            "--checkpoint runs/demo/packed.aqq --workers 4 --max_delay_ms 2 --backend runtime --model smallcnn --threads 0"
                 .split_whitespace()
                 .map(String::from),
         )
@@ -388,6 +395,7 @@ mod tests {
         assert_eq!(s.max_delay_ms, 2);
         assert_eq!(s.backend, "runtime");
         assert_eq!(s.model, "smallcnn");
+        assert_eq!(s.threads, 0, "0 = auto-size to the machine");
         assert_eq!(s.addr, "127.0.0.1:7878");
     }
 

@@ -1,0 +1,134 @@
+//! On-the-fly activation quantization at the checkpoint's learned k_a.
+//!
+//! Serving quantizes activations per *row* (one request's feature
+//! vector) on the same symmetric s = 2^k − 1 grid the training
+//! quantizer and the packed weight format use (`quant::code_levels`):
+//! code c = round((x/scale·½ + ½)·s) with scale = max|x| over the row.
+//! The kernels consume the *centered* integer q = 2c − s ∈ [−s, s]
+//! (q has the parity of s, giving the grid's 2^k points), so a row
+//! dequantizes as x ≈ q·Δ with a single per-row step Δ = scale/s and no
+//! zero-point cross terms survive into the GEMM — the whole
+//! dequantization collapses into one f32 epilogue multiply per output.
+//!
+//! Per-row (not per-batch) scales matter twice: accuracy (one hot
+//! sample cannot crush everyone else's resolution) and exactness (a
+//! row's codes are independent of its batch neighbours, so a 1-image
+//! batch is bit-identical to the same image inside a 64-batch — the
+//! property the serving e2e test pins down).
+
+use crate::quant::code_levels;
+
+/// Largest k_a the centered-i16 integer path accepts: |2c − s| ≤ s must
+/// fit i16, so s = 2^k − 1 ≤ 32767 ⇒ k ≤ 15. Beyond that (and at the
+/// k ≥ 24 "identity" widths) layers fall back to the f32 path.
+pub const MAX_INT_ACT_BITS: u32 = 15;
+
+/// Quantize one activation row to centered codes at `bits` ∈ 1..=15.
+/// Returns the row's dequantization step Δ = max|x| / s; the row
+/// reconstructs as x̂_i = q_i·Δ. An all-zero row returns Δ = 0 with
+/// all-zero codes.
+pub fn quantize_row_centered(x: &[f32], bits: u32, out: &mut [i16]) -> f32 {
+    assert!(
+        (1..=MAX_INT_ACT_BITS).contains(&bits),
+        "integer activation path needs bits in 1..=15, got {bits}"
+    );
+    assert_eq!(x.len(), out.len());
+    let s = code_levels(bits) as f32;
+    let s_i = code_levels(bits) as i32;
+    let scale = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if !(scale > 0.0) {
+        out.fill(0);
+        return 0.0;
+    }
+    let inv = 0.5 / scale;
+    for (o, &v) in out.iter_mut().zip(x) {
+        let unit = (v * inv + 0.5).clamp(0.0, 1.0);
+        let c = (unit * s).round() as i32;
+        *o = (2 * c - s_i) as i16;
+    }
+    scale / s
+}
+
+/// Fake-quantize a row in place (quantize + dequantize to the grid's
+/// f32 points, x̂ = q·Δ). The f32 fallback layers use this so a model's
+/// learned k_a is honoured even when the integer path is unavailable
+/// (raw-f32 weights, k_a > 15, or an i32-overflow guard trip).
+pub fn fake_quantize_row(x: &mut [f32], bits: u32) {
+    let s = code_levels(bits) as f32;
+    let s_i = code_levels(bits) as i32;
+    let scale = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if !(scale > 0.0) {
+        return;
+    }
+    let step = scale / s;
+    let inv = 0.5 / scale;
+    for v in x.iter_mut() {
+        let unit = (*v * inv + 0.5).clamp(0.0, 1.0);
+        let c = (unit * s).round() as i32;
+        *v = (2 * c - s_i) as f32 * step;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grid_points_requantize_to_themselves() {
+        // a value already on the grid must come back with the same code
+        for bits in [2u32, 3, 4, 8, 15] {
+            let s = code_levels(bits) as i32;
+            let step = 0.003f32;
+            // q ranges over the grid: q = 2c − s for c = 0..=s
+            let xs: Vec<f32> =
+                (0..=s).map(|c| (2 * c - s) as f32 * step).collect();
+            let mut q = vec![0i16; xs.len()];
+            let got_step = quantize_row_centered(&xs, bits, &mut q);
+            for (c, &qi) in q.iter().enumerate() {
+                assert_eq!(qi as i32, 2 * c as i32 - s, "bits={bits} c={c}");
+            }
+            // max|x| = s·step, so the recovered step is scale/s = step
+            assert!((got_step - step).abs() <= step * 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_row_is_zero() {
+        let mut q = vec![7i16; 16];
+        let step = quantize_row_centered(&[0.0; 16], 4, &mut q);
+        assert_eq!(step, 0.0);
+        assert!(q.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn codes_are_bounded_and_reconstruction_is_within_half_step() {
+        let mut rng = Rng::new(9);
+        for bits in 2..=8u32 {
+            let s = code_levels(bits) as i32;
+            let xs: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
+            let mut q = vec![0i16; xs.len()];
+            let step = quantize_row_centered(&xs, bits, &mut q);
+            for (&x, &qi) in xs.iter().zip(&q) {
+                assert!((qi as i32).abs() <= s, "bits={bits}");
+                // centered codes share the parity of s
+                assert_eq!((qi as i32 & 1), (s & 1), "bits={bits}");
+                let err = (x - qi as f32 * step).abs();
+                assert!(err <= step + 1e-6, "bits={bits}: {x} vs {}", qi as f32 * step);
+            }
+        }
+    }
+
+    #[test]
+    fn fake_quantize_matches_integer_reconstruction() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f32> = (0..128).map(|_| rng.normal() * 0.3).collect();
+        let mut q = vec![0i16; xs.len()];
+        let step = quantize_row_centered(&xs, 4, &mut q);
+        let mut fq = xs.clone();
+        fake_quantize_row(&mut fq, 4);
+        for (&qi, &f) in q.iter().zip(&fq) {
+            assert_eq!(qi as f32 * step, f);
+        }
+    }
+}

@@ -1,0 +1,417 @@
+//! Integer-domain quantized GEMM plans (DESIGN.md §11).
+//!
+//! A [`QuantGemm`] is built *once* per layer at checkpoint load from a
+//! [`PackedTensor`]: codes are unpacked with the u64 fast path
+//! ([`super::pack`]), centered (q = 2c − s), and transposed into a
+//! row-major `[n_out][d]` layout so the inner reduction is contiguous —
+//! the checkpoint stores weights `[d, n_out]`, which made the old
+//! serving loop stride by `n_out` floats per element. The per-tensor
+//! scale collapses into a single step Δ_w = scale/s folded with the
+//! activation row's Δ_a into one f64 epilogue multiply per output.
+//!
+//! Accumulation is i32 and *exact*: |Σ q_a·q_w| ≤ d·s_a·s_w, and plans
+//! only take the integer path when that bound fits i32 (checked at
+//! construction — see [`QuantGemm::integer_bound_ok`]). Exactness makes
+//! the kernel order-independent, so cache blocking and row threading
+//! cannot change results: the blocked/threaded output is bit-identical
+//! to a naive scalar dot, which is what the property tests pin down.
+//!
+//! Codes wider than i16 (k > 15), raw-f32 tensors, identity-scale
+//! activations (k_a ≥ 24) and bound violations fall back to an f32 plan
+//! over the canonical dequantized weights, same transposed layout.
+
+use crate::quant::code_levels;
+use crate::serve::packed::{PackedTensor, RAW_BITS};
+
+use super::activ::MAX_INT_ACT_BITS;
+use super::pack;
+
+/// Weight storage: centered integer codes when the integer path is
+/// usable, canonical dequantized f32 otherwise. All row-major
+/// `[n_out][d]` (transposed from the checkpoint's `[d, n_out]`).
+enum Weights {
+    /// k_w ≤ 7: |q| ≤ 127 fits i8 (half the cache traffic of i16).
+    I8(Vec<i8>),
+    /// 8 ≤ k_w ≤ 15: |q| ≤ 32767 fits i16.
+    I16(Vec<i16>),
+    /// Fallback: canonical `PackedTensor::dequantize` values.
+    F32(Vec<f32>),
+}
+
+/// Output-neuron tile: one tile of weight rows (tile × d codes) is
+/// streamed while every batch row's activations stay resident, so the
+/// weight matrix is read once per tile instead of once per batch row.
+const OUT_TILE: usize = 16;
+
+pub struct QuantGemm {
+    /// Input features (contiguous inner/reduction dimension).
+    pub d: usize,
+    /// Output features.
+    pub n_out: usize,
+    /// Weight bit-width (RAW_BITS for raw-f32 tensors).
+    pub bits: u32,
+    /// Δ_w = scale / (2^k_w − 1); 0 for f32 plans.
+    pub step_w: f32,
+    weights: Weights,
+}
+
+impl QuantGemm {
+    /// Whether the i32 accumulator is exact for reduction length `d` at
+    /// weight width `k_w` and activation width `k_a`:
+    /// d·(2^k_a − 1)·(2^k_w − 1) ≤ i32::MAX. (At W8/A8 this allows
+    /// d ≤ 33 025 — far above any fc layer served here; see §11.)
+    pub fn integer_bound_ok(d: usize, k_w: u32, k_a: u32) -> bool {
+        if k_w == 0 || k_a == 0 || k_w > MAX_INT_ACT_BITS || k_a > MAX_INT_ACT_BITS {
+            return false;
+        }
+        let sw = code_levels(k_w) as u128;
+        let sa = code_levels(k_a) as u128;
+        (d as u128) * sw * sa <= i32::MAX as u128
+    }
+
+    /// Build a plan from a packed weight tensor of shape `[d, n_out]`.
+    /// `k_a` is the activation width the plan will be driven at; it
+    /// decides integer-vs-f32 representation up front.
+    pub fn from_packed(t: &PackedTensor, k_a: u32) -> anyhow::Result<QuantGemm> {
+        anyhow::ensure!(
+            t.shape.len() == 2,
+            "QuantGemm wants a 2-d weight tensor, got shape {:?}",
+            t.shape
+        );
+        let d = t.shape[0];
+        let n_out = t.shape[1];
+        anyhow::ensure!(d > 0 && n_out > 0, "degenerate weight shape {:?}", t.shape);
+        let integer = t.bits != RAW_BITS
+            && k_a < 24
+            && Self::integer_bound_ok(d, t.bits, k_a);
+        if !integer {
+            let deq = t.dequantize().data;
+            let mut w = vec![0.0f32; d * n_out];
+            for i in 0..d {
+                for o in 0..n_out {
+                    w[o * d + i] = deq[i * n_out + o];
+                }
+            }
+            return Ok(QuantGemm { d, n_out, bits: t.bits, step_w: 0.0, weights: Weights::F32(w) });
+        }
+        let s_i = code_levels(t.bits) as i32;
+        let s = s_i as f32;
+        let step_w = if t.scale > 0.0 { t.scale / s } else { 0.0 };
+        let codes = pack::unpack_codes(&t.payload, t.bits, d * n_out);
+        let weights = if t.bits <= 7 {
+            let mut w = vec![0i8; d * n_out];
+            for i in 0..d {
+                for o in 0..n_out {
+                    w[o * d + i] = (2 * codes[i * n_out + o] as i32 - s_i) as i8;
+                }
+            }
+            Weights::I8(w)
+        } else {
+            let mut w = vec![0i16; d * n_out];
+            for i in 0..d {
+                for o in 0..n_out {
+                    w[o * d + i] = (2 * codes[i * n_out + o] as i32 - s_i) as i16;
+                }
+            }
+            Weights::I16(w)
+        };
+        Ok(QuantGemm { d, n_out, bits: t.bits, step_w, weights })
+    }
+
+    /// Whether this plan runs the integer path (drive it with
+    /// [`forward_quant`]; otherwise use [`forward_f32`]).
+    ///
+    /// [`forward_quant`]: QuantGemm::forward_quant
+    /// [`forward_f32`]: QuantGemm::forward_f32
+    pub fn is_integer(&self) -> bool {
+        !matches!(self.weights, Weights::F32(_))
+    }
+
+    /// Integer-domain forward over `rows` quantized activation rows:
+    /// `out[r·n_out + o] = (Σ_i qa[r·d+i]·qw[o·d+i]) · Δ_a[r]·Δ_w + bias[o]`.
+    /// The accumulator is exact i32; the epilogue folds both steps in
+    /// f64 and rounds once to f32.
+    pub fn forward_quant(
+        &self,
+        qa: &[i16],
+        step_a: &[f32],
+        rows: usize,
+        bias: &[f32],
+        out: &mut [f32],
+    ) {
+        assert!(self.is_integer(), "f32 plan driven through forward_quant");
+        assert_eq!(qa.len(), rows * self.d);
+        assert_eq!(step_a.len(), rows);
+        assert_eq!(bias.len(), self.n_out);
+        assert_eq!(out.len(), rows * self.n_out);
+        let sw = self.step_w as f64;
+        match &self.weights {
+            Weights::I8(w) => {
+                for o0 in (0..self.n_out).step_by(OUT_TILE) {
+                    let o1 = (o0 + OUT_TILE).min(self.n_out);
+                    for r in 0..rows {
+                        let a = &qa[r * self.d..(r + 1) * self.d];
+                        let da = step_a[r] as f64 * sw;
+                        for o in o0..o1 {
+                            let wr = &w[o * self.d..(o + 1) * self.d];
+                            let mut acc = 0i32;
+                            for (&x, &y) in a.iter().zip(wr) {
+                                acc += x as i32 * y as i32;
+                            }
+                            out[r * self.n_out + o] = (acc as f64 * da) as f32 + bias[o];
+                        }
+                    }
+                }
+            }
+            Weights::I16(w) => {
+                for o0 in (0..self.n_out).step_by(OUT_TILE) {
+                    let o1 = (o0 + OUT_TILE).min(self.n_out);
+                    for r in 0..rows {
+                        let a = &qa[r * self.d..(r + 1) * self.d];
+                        let da = step_a[r] as f64 * sw;
+                        for o in o0..o1 {
+                            let wr = &w[o * self.d..(o + 1) * self.d];
+                            let mut acc = 0i32;
+                            for (&x, &y) in a.iter().zip(wr) {
+                                acc += x as i32 * y as i32;
+                            }
+                            out[r * self.n_out + o] = (acc as f64 * da) as f32 + bias[o];
+                        }
+                    }
+                }
+            }
+            Weights::F32(_) => unreachable!("guarded by is_integer"),
+        }
+    }
+
+    /// f32 fallback forward over raw activation rows, same transposed
+    /// contiguous layout — and the *same operation sequence* as the
+    /// pre-kernels scalar path (accumulator seeded with the bias, then
+    /// products added in ascending index order), so it is bit-identical
+    /// to the old strided loop by construction, not approximately.
+    pub fn forward_f32(&self, x: &[f32], rows: usize, bias: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), rows * self.d);
+        assert_eq!(bias.len(), self.n_out);
+        assert_eq!(out.len(), rows * self.n_out);
+        let w = match &self.weights {
+            Weights::F32(w) => w,
+            _ => panic!("integer plan driven through forward_f32"),
+        };
+        for o0 in (0..self.n_out).step_by(OUT_TILE) {
+            let o1 = (o0 + OUT_TILE).min(self.n_out);
+            for r in 0..rows {
+                let a = &x[r * self.d..(r + 1) * self.d];
+                for o in o0..o1 {
+                    let wr = &w[o * self.d..(o + 1) * self.d];
+                    let mut acc = bias[o];
+                    for (&xv, &yv) in a.iter().zip(wr) {
+                        acc += xv * yv;
+                    }
+                    out[r * self.n_out + o] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::activ::quantize_row_centered;
+    use crate::quant::code_levels;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    /// Hand-build a PackedTensor from explicit codes (bypasses the
+    /// max-abs scale heuristic so tests control the grid exactly).
+    fn packed_from_codes(codes: &[u32], shape: Vec<usize>, bits: u32, scale: f32) -> PackedTensor {
+        PackedTensor {
+            shape,
+            bits,
+            scale,
+            payload: pack::pack_codes(codes, bits),
+        }
+    }
+
+    fn random_codes(n: usize, bits: u32, rng: &mut Rng) -> Vec<u32> {
+        let max = code_levels(bits) as u64;
+        (0..n).map(|_| (rng.next_u64() % (max + 1)) as u32).collect()
+    }
+
+    /// Bit-exactness against a genuine dequantize-then-f32-matmul.
+    ///
+    /// With power-of-two steps every dequantized grid point is exact in
+    /// f32, every product q_a·q_w·2^-(ma+mw) has a ≤16-bit integer
+    /// mantissa, and every partial sum stays an integer multiple of
+    /// 2^-(ma+mw) below 2^24 for d ≤ 128 — so the f32 matmul is exact
+    /// arithmetic and must equal the integer kernel *bitwise*, for
+    /// every k ∈ 2..=8. (Arbitrary scales are covered by the i64-oracle
+    /// test below; there f32 matmul rounding makes bitwise equality
+    /// impossible for any kernel.)
+    #[test]
+    fn bitexact_vs_f32_matmul_on_pow2_steps_all_widths() {
+        let mut rng = Rng::new(42);
+        for k in 2..=8u32 {
+            let d = 96usize; // ≤ 128 keeps f32 partial sums exact at k=8
+            let n_out = 7usize;
+            let rows = 3usize;
+            let s_i = code_levels(k) as i32;
+            // scale = s·2^-9 ⇒ step_w = scale/s = 2^-9 exactly
+            let wscale = s_i as f32 * 0.001953125; // 2^-9
+            let wcodes = random_codes(d * n_out, k, &mut rng);
+            let wt = packed_from_codes(&wcodes, vec![d, n_out], k, wscale);
+            let gemm = QuantGemm::from_packed(&wt, k).unwrap();
+            assert!(gemm.is_integer());
+
+            // activations on the same grid with step 2^-7; force
+            // max-abs = s·2^-7 so the recovered step is exactly 2^-7
+            let acodes = random_codes(rows * d, k, &mut rng);
+            let astep = 0.0078125f32; // 2^-7
+            let mut x = vec![0.0f32; rows * d];
+            for (xi, &c) in x.iter_mut().zip(&acodes) {
+                *xi = (2 * c as i32 - s_i) as f32 * astep;
+            }
+            for r in 0..rows {
+                x[r * d] = s_i as f32 * astep; // pin the row max
+            }
+            let bias: Vec<f32> = (0..n_out).map(|_| rng.normal() * 0.1).collect();
+
+            // kernel path: quantize on the fly + integer GEMM
+            let mut qa = vec![0i16; rows * d];
+            let mut steps = vec![0.0f32; rows];
+            for r in 0..rows {
+                steps[r] =
+                    quantize_row_centered(&x[r * d..(r + 1) * d], k, &mut qa[r * d..(r + 1) * d]);
+                assert_eq!(steps[r], astep, "k={k} row {r}: step not recovered");
+            }
+            let mut got = vec![0.0f32; rows * n_out];
+            gemm.forward_quant(&qa, &steps, rows, &bias, &mut got);
+
+            // oracle: canonical dequantized weights, plain f32 matmul
+            let wdeq: Tensor = wt.dequantize();
+            for r in 0..rows {
+                for o in 0..n_out {
+                    let mut acc = 0.0f32;
+                    for i in 0..d {
+                        acc += x[r * d + i] * wdeq.data[i * n_out + o];
+                    }
+                    let want = acc + bias[o];
+                    assert_eq!(
+                        got[r * n_out + o].to_bits(),
+                        want.to_bits(),
+                        "k={k} r={r} o={o}: {} vs {want}",
+                        got[r * n_out + o]
+                    );
+                }
+            }
+        }
+    }
+
+    /// At arbitrary scales the integer accumulator must still equal a
+    /// naive i64 dot over independently-unpacked (scalar path) codes —
+    /// blocked loops, i8/i16 storage, transposition and the u64 unpack
+    /// fast path all cancel out exactly, for every width 2..=8.
+    #[test]
+    fn integer_acc_matches_scalar_i64_oracle_any_scale() {
+        let mut rng = Rng::new(7);
+        for k in 2..=8u32 {
+            let d = 131usize; // odd: exercises partial-byte payload tails
+            let n_out = 10usize;
+            let rows = 4usize;
+            let wdata: Vec<f32> = (0..d * n_out).map(|_| rng.normal() * 0.2).collect();
+            let wt = PackedTensor::quantize(&Tensor::new(vec![d, n_out], wdata), k);
+            let gemm = QuantGemm::from_packed(&wt, k).unwrap();
+            assert!(gemm.is_integer(), "k={k}");
+
+            let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+            let mut qa = vec![0i16; rows * d];
+            let mut steps = vec![0.0f32; rows];
+            for r in 0..rows {
+                steps[r] =
+                    quantize_row_centered(&x[r * d..(r + 1) * d], k, &mut qa[r * d..(r + 1) * d]);
+            }
+            let bias = vec![0.25f32; n_out];
+            let mut got = vec![0.0f32; rows * n_out];
+            gemm.forward_quant(&qa, &steps, rows, &bias, &mut got);
+
+            // oracle: scalar per-element unpack + i64 accumulation +
+            // the same epilogue arithmetic
+            let s_i = code_levels(k) as i64;
+            let sw = if wt.scale > 0.0 { wt.scale / s_i as f32 } else { 0.0 };
+            for r in 0..rows {
+                for o in 0..n_out {
+                    let mut acc = 0i64;
+                    for i in 0..d {
+                        let c = pack::read_bits_scalar(
+                            &wt.payload,
+                            (i * n_out + o) * k as usize,
+                            k,
+                        ) as i64;
+                        acc += qa[r * d + i] as i64 * (2 * c - s_i);
+                    }
+                    assert!(acc.abs() <= i32::MAX as i64, "k={k}: bound violated");
+                    let want = (acc as f64 * (steps[r] as f64 * sw as f64)) as f32 + bias[o];
+                    assert_eq!(
+                        got[r * n_out + o].to_bits(),
+                        want.to_bits(),
+                        "k={k} r={r} o={o}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_fallback_matches_legacy_strided_scalar_path() {
+        // raw-f32 weights: the plan must reproduce the pre-kernels
+        // strided loop bit-for-bit (same values, same summation order)
+        let mut rng = Rng::new(13);
+        let (d, n_out, rows) = (57usize, 9usize, 2usize);
+        let wdata: Vec<f32> = (0..d * n_out).map(|_| rng.normal()).collect();
+        let wt = PackedTensor::raw(&Tensor::new(vec![d, n_out], wdata.clone()));
+        let gemm = QuantGemm::from_packed(&wt, 32).unwrap();
+        assert!(!gemm.is_integer());
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..n_out).map(|_| rng.normal()).collect();
+        let mut got = vec![0.0f32; rows * n_out];
+        gemm.forward_f32(&x, rows, &bias, &mut got);
+        for r in 0..rows {
+            for o in 0..n_out {
+                // the old serving loop: bias-seeded accumulator, then
+                // w[i*n_out + o] with i ascending
+                let mut acc = bias[o];
+                for i in 0..d {
+                    acc += x[r * d + i] * wdata[i * n_out + o];
+                }
+                assert_eq!(got[r * n_out + o].to_bits(), acc.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_guard_falls_back_to_f32() {
+        assert!(QuantGemm::integer_bound_ok(3072, 8, 8));
+        assert!(QuantGemm::integer_bound_ok(33_025, 8, 8)); // 33025·255² ≤ i32::MAX
+        assert!(!QuantGemm::integer_bound_ok(33_026, 8, 8));
+        assert!(!QuantGemm::integer_bound_ok(2_100, 15, 15));
+        let mut rng = Rng::new(3);
+        let wdata: Vec<f32> = (0..8 * 4).map(|_| rng.normal()).collect();
+        let wt = PackedTensor::quantize(&Tensor::new(vec![8, 4], wdata), 8);
+        // k_a = 32 (identity) forces the f32 plan even for packed weights
+        let gemm = QuantGemm::from_packed(&wt, 32).unwrap();
+        assert!(!gemm.is_integer());
+    }
+
+    #[test]
+    fn zero_scale_weights_produce_zero_logits_plus_bias() {
+        let wt = PackedTensor::quantize(&Tensor::zeros(vec![6, 3]), 4);
+        assert_eq!(wt.scale, 0.0);
+        let gemm = QuantGemm::from_packed(&wt, 4).unwrap();
+        let x = vec![1.0f32; 6];
+        let mut qa = vec![0i16; 6];
+        let step = quantize_row_centered(&x, 4, &mut qa);
+        let mut out = vec![0.0f32; 3];
+        gemm.forward_quant(&qa, &[step], 1, &[1.0, 2.0, 3.0], &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,392 @@
+//! Pure-Rust quantized compute subsystem (DESIGN.md §11).
+//!
+//! The cost model (`quant::CostModel`) charges compute proportional to
+//! k_w·k_a — but until this module existed the serving path dequantized
+//! every packed tensor back to f32 and ran a strided scalar dot, so the
+//! learned bit-widths saved disk bytes and zero compute. `kernels`
+//! operates directly on the low-bit codes instead:
+//!
+//! * [`pack`] — u64 word-at-a-time bit-stream pack/unpack (the
+//!   per-element loops survive only as property-test oracles);
+//! * [`gemm`] — [`QuantGemm`] plans: codes unpacked once at load,
+//!   centered, transposed to contiguous `[n_out][d]`, i8/i16 storage,
+//!   exact i32 accumulation, scales folded into one epilogue multiply;
+//! * [`activ`] — per-row on-the-fly activation quantization at the
+//!   checkpoint's learned k_a, same s = 2^k − 1 grid as training;
+//! * [`QuantMlp`] (here) — the multi-layer forward: fc stacks with
+//!   ReLU, per-layer mixed k_w (each tensor's packed width) and k_a
+//!   (checkpoint meta), row-parallel across std::thread workers.
+//!
+//! `serve::ReferenceBackend` is a thin adapter over [`QuantMlp`].
+
+pub mod activ;
+pub mod gemm;
+pub mod pack;
+
+pub use activ::{fake_quantize_row, quantize_row_centered, MAX_INT_ACT_BITS};
+pub use gemm::QuantGemm;
+
+use crate::serve::packed::QuantizedCheckpoint;
+use crate::util::json::Json;
+
+/// One fc layer: a weight plan, bias, the activation width its *input*
+/// is quantized at, and whether a ReLU follows it.
+pub struct QuantLayer {
+    pub name: String,
+    pub gemm: QuantGemm,
+    pub bias: Vec<f32>,
+    pub k_a: u32,
+    pub relu: bool,
+}
+
+/// A stack of [`QuantLayer`]s loaded from a packed checkpoint.
+pub struct QuantMlp {
+    pub layers: Vec<QuantLayer>,
+    /// Input feature count of the first layer.
+    pub input: usize,
+    /// Output count of the last layer.
+    pub classes: usize,
+}
+
+impl QuantMlp {
+    /// Build from a packed checkpoint. Layer names come from the meta
+    /// `mlp_layers` array (`["fc1", "fc2", …]`, ReLU between layers);
+    /// a checkpoint without it serves the legacy single `fc` layer.
+    /// Each layer `L` needs `L.w` (`[d_in, d_out]`) and optionally
+    /// `L.b` (`[d_out]`). Activation widths: meta `k_a` globally,
+    /// overridable per layer via a `layer_k_a` object (`{"fc1": 8}`);
+    /// k_w is per-tensor by construction (each `PackedTensor` carries
+    /// its own bit-width), so mixed-precision stacks need no extra meta.
+    pub fn from_packed(q: &QuantizedCheckpoint) -> anyhow::Result<QuantMlp> {
+        let names: Vec<String> = match q.meta.get("mlp_layers").and_then(Json::as_arr) {
+            Some(arr) => {
+                anyhow::ensure!(!arr.is_empty(), "mlp_layers is empty");
+                arr.iter()
+                    .map(|j| {
+                        j.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow::anyhow!("mlp_layers entries must be strings")
+                        })
+                    })
+                    .collect::<anyhow::Result<_>>()?
+            }
+            None => vec!["fc".to_string()],
+        };
+        let global_k_a =
+            q.meta.get("k_a").and_then(Json::as_f64).unwrap_or(32.0) as u32;
+        let per_layer = q.meta.get("layer_k_a");
+        let last = names.len() - 1;
+        let mut layers = Vec::with_capacity(names.len());
+        for (li, name) in names.iter().enumerate() {
+            let wt = q
+                .get(&format!("{name}.w"))
+                .ok_or_else(|| anyhow::anyhow!("packed checkpoint lacks {name}.w"))?;
+            let k_a = per_layer
+                .and_then(|m| m.get(name))
+                .and_then(Json::as_f64)
+                .map(|v| v as u32)
+                .unwrap_or(global_k_a);
+            anyhow::ensure!(k_a >= 1, "{name}: k_a must be >= 1");
+            let gemm = QuantGemm::from_packed(wt, k_a)
+                .map_err(|e| anyhow::anyhow!("{name}.w: {e}"))?;
+            let bias = match q.get(&format!("{name}.b")) {
+                Some(bt) => {
+                    anyhow::ensure!(
+                        bt.shape == vec![gemm.n_out],
+                        "{name}.b shape {:?} != [{}]",
+                        bt.shape,
+                        gemm.n_out
+                    );
+                    bt.dequantize().data
+                }
+                None => vec![0.0; gemm.n_out],
+            };
+            layers.push(QuantLayer {
+                name: name.clone(),
+                gemm,
+                bias,
+                k_a,
+                relu: li != last,
+            });
+        }
+        for pair in layers.windows(2) {
+            anyhow::ensure!(
+                pair[0].gemm.n_out == pair[1].gemm.d,
+                "layer chain mismatch: {}.w outputs {} but {}.w expects {}",
+                pair[0].name,
+                pair[0].gemm.n_out,
+                pair[1].name,
+                pair[1].gemm.d
+            );
+        }
+        let input = layers[0].gemm.d;
+        let classes = layers[layers.len() - 1].gemm.n_out;
+        Ok(QuantMlp { layers, input, classes })
+    }
+
+    /// Logits for `rows` stacked input rows (`x.len() == rows·input`),
+    /// row-parallel across `threads` std::thread workers (≤ 1 runs
+    /// inline). Integer layers quantize their input rows on the fly;
+    /// f32-fallback layers fake-quantize when k_a < 24 so the learned
+    /// activation width is honoured either way. Per-row activation
+    /// scales make results independent of batch composition: a row
+    /// computes bit-identically at batch 1 and inside a full batch.
+    pub fn forward(&self, x: &[f32], rows: usize, threads: usize) -> Vec<f32> {
+        assert_eq!(x.len(), rows * self.input, "bad input length");
+        let mut cur = x.to_vec();
+        for layer in &self.layers {
+            let d = layer.gemm.d;
+            let n_out = layer.gemm.n_out;
+            let mut next = vec![0.0f32; rows * n_out];
+            if layer.gemm.is_integer() {
+                let mut qa = vec![0i16; rows * d];
+                let mut steps = vec![0.0f32; rows];
+                for r in 0..rows {
+                    steps[r] = activ::quantize_row_centered(
+                        &cur[r * d..(r + 1) * d],
+                        layer.k_a,
+                        &mut qa[r * d..(r + 1) * d],
+                    );
+                }
+                run_row_chunks(
+                    threads,
+                    rows,
+                    n_out,
+                    &mut next,
+                    &|r0: usize, r1: usize, out: &mut [f32]| {
+                        layer.gemm.forward_quant(
+                            &qa[r0 * d..r1 * d],
+                            &steps[r0..r1],
+                            r1 - r0,
+                            &layer.bias,
+                            out,
+                        );
+                    },
+                );
+            } else {
+                if layer.k_a < 24 {
+                    for r in 0..rows {
+                        activ::fake_quantize_row(&mut cur[r * d..(r + 1) * d], layer.k_a);
+                    }
+                }
+                let xin = &cur;
+                run_row_chunks(
+                    threads,
+                    rows,
+                    n_out,
+                    &mut next,
+                    &|r0: usize, r1: usize, out: &mut [f32]| {
+                        layer.gemm.forward_f32(
+                            &xin[r0 * d..r1 * d],
+                            r1 - r0,
+                            &layer.bias,
+                            out,
+                        );
+                    },
+                );
+            }
+            if layer.relu {
+                for v in next.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            cur = next;
+        }
+        cur
+    }
+
+    /// Argmax class per row (ties break to the lowest class id, the
+    /// same rule the pre-kernels serving loop used).
+    pub fn classify(&self, x: &[f32], rows: usize, threads: usize) -> Vec<usize> {
+        let logits = self.forward(x, rows, threads);
+        (0..rows)
+            .map(|r| argmax(&logits[r * self.classes..(r + 1) * self.classes]))
+            .collect()
+    }
+}
+
+fn argmax(scores: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_score = f32::NEG_INFINITY;
+    for (i, &s) in scores.iter().enumerate() {
+        if s > best_score {
+            best_score = s;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Split `rows` into contiguous chunks and run `f(r0, r1, out_chunk)`
+/// on up to `threads` scoped std::threads (rayon-free: the offline
+/// crate universe has no dependencies, DESIGN.md §3). `threads ≤ 1`
+/// runs inline. Chunking is by whole rows, so with the kernels'
+/// order-independent integer accumulation the thread count never
+/// changes results.
+fn run_row_chunks<F>(threads: usize, rows: usize, n_out: usize, out: &mut [f32], f: &F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let t = threads.max(1).min(rows.max(1));
+    if t <= 1 {
+        f(0, rows, out);
+        return;
+    }
+    let chunk = (rows + t - 1) / t;
+    std::thread::scope(|s| {
+        for (ci, out_chunk) in out.chunks_mut(chunk * n_out).enumerate() {
+            let r0 = ci * chunk;
+            let r1 = (r0 + chunk).min(rows);
+            s.spawn(move || f(r0, r1, out_chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::packed::PackedTensor;
+    use crate::tensor::checkpoint::Checkpoint;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn random_tensor(shape: Vec<usize>, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.normal() * 0.2).collect())
+    }
+
+    /// A legacy-style single-layer packed checkpoint (`fc.w`/`fc.b`).
+    fn single_layer_packed(d: usize, classes: usize, bits: u32, k_a: f64) -> QuantizedCheckpoint {
+        let mut ck = Checkpoint::new(Json::obj(vec![("k_a", Json::num(k_a))]));
+        ck.push("fc.w", random_tensor(vec![d, classes], 21));
+        ck.push("fc.b", random_tensor(vec![classes], 22));
+        QuantizedCheckpoint::from_checkpoint(&ck, bits, |n| n.ends_with(".w"))
+    }
+
+    #[test]
+    fn legacy_single_layer_f32_path_matches_old_strided_oracle() {
+        // k_a = 32 (identity): the f32 plan must reproduce the
+        // pre-kernels serving math — dequantized weights, strided
+        // layout, ascending-index accumulation — bit for bit.
+        let (d, classes) = (48usize, 10usize);
+        let q = single_layer_packed(d, classes, 4, 32.0);
+        let mlp = QuantMlp::from_packed(&q).unwrap();
+        assert_eq!(mlp.layers.len(), 1);
+        assert!(!mlp.layers[0].gemm.is_integer());
+        assert!(!mlp.layers[0].relu);
+        let w = q.get("fc.w").unwrap().dequantize().data;
+        let b = q.get("fc.b").unwrap().dequantize().data;
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..3 * d).map(|_| rng.normal()).collect();
+        let logits = mlp.forward(&x, 3, 1);
+        for r in 0..3 {
+            for cls in 0..classes {
+                // the old ReferenceBackend::classify_one inner loop
+                let mut score = b[cls];
+                for i in 0..d {
+                    score += x[r * d + i] * w[i * classes + cls];
+                }
+                assert_eq!(logits[r * classes + cls].to_bits(), score.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn two_layer_mixed_precision_chain() {
+        // fc1 at 3 bits, fc2 at 8 bits, per-layer k_a override — the
+        // per-tensor `bits` field carries mixed k_w with no extra meta.
+        let (d, h, classes) = (24usize, 12usize, 5usize);
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            ("k_a", Json::num(8.0)),
+            (
+                "mlp_layers",
+                Json::Arr(vec![Json::str("fc1"), Json::str("fc2")]),
+            ),
+            (
+                "layer_k_a",
+                Json::obj(vec![("fc2", Json::num(6.0))]),
+            ),
+        ]));
+        q.push("fc1.w", PackedTensor::quantize(&random_tensor(vec![d, h], 1), 3));
+        q.push("fc1.b", PackedTensor::raw(&random_tensor(vec![h], 2)));
+        q.push("fc2.w", PackedTensor::quantize(&random_tensor(vec![h, classes], 3), 8));
+        q.push("fc2.b", PackedTensor::raw(&random_tensor(vec![classes], 4)));
+        let mlp = QuantMlp::from_packed(&q).unwrap();
+        assert_eq!(mlp.input, d);
+        assert_eq!(mlp.classes, classes);
+        assert_eq!(mlp.layers[0].gemm.bits, 3);
+        assert_eq!(mlp.layers[1].gemm.bits, 8);
+        assert_eq!(mlp.layers[0].k_a, 8);
+        assert_eq!(mlp.layers[1].k_a, 6);
+        assert!(mlp.layers[0].relu && !mlp.layers[1].relu);
+        let mut rng = Rng::new(6);
+        let x: Vec<f32> = (0..4 * d).map(|_| rng.normal()).collect();
+        let preds = mlp.classify(&x, 4, 1);
+        assert_eq!(preds.len(), 4);
+        assert!(preds.iter().all(|&p| p < classes));
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        let (d, h, classes) = (64usize, 32usize, 10usize);
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            ("k_a", Json::num(8.0)),
+            (
+                "mlp_layers",
+                Json::Arr(vec![Json::str("fc1"), Json::str("fc2")]),
+            ),
+        ]));
+        q.push("fc1.w", PackedTensor::quantize(&random_tensor(vec![d, h], 31), 4));
+        q.push("fc2.w", PackedTensor::quantize(&random_tensor(vec![h, classes], 32), 4));
+        let mlp = QuantMlp::from_packed(&q).unwrap();
+        let mut rng = Rng::new(33);
+        let rows = 13usize; // deliberately not divisible by thread counts
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let base = mlp.forward(&x, rows, 1);
+        for threads in [2usize, 3, 4, 8, 64] {
+            let got = mlp.forward(&x, rows, threads);
+            assert_eq!(base.len(), got.len());
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_composition_does_not_change_a_row() {
+        // per-row activation scales: row 3 of a 8-batch == the same
+        // image at batch 1, bitwise
+        let q = single_layer_packed(32, 7, 4, 6.0);
+        let mlp = QuantMlp::from_packed(&q).unwrap();
+        assert!(mlp.layers[0].gemm.is_integer());
+        let mut rng = Rng::new(44);
+        let x: Vec<f32> = (0..8 * 32).map(|_| rng.normal()).collect();
+        let batch = mlp.forward(&x, 8, 2);
+        let solo = mlp.forward(&x[3 * 32..4 * 32], 1, 1);
+        for (a, b) in batch[3 * 7..4 * 7].iter().zip(&solo) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn missing_and_mismatched_tensors_error() {
+        let q = QuantizedCheckpoint::new(Json::obj(vec![(
+            "mlp_layers",
+            Json::Arr(vec![Json::str("fc1")]),
+        )]));
+        assert!(QuantMlp::from_packed(&q).is_err());
+        // chain mismatch: fc1 outputs 12, fc2 expects 13
+        let mut q2 = QuantizedCheckpoint::new(Json::obj(vec![
+            ("k_a", Json::num(8.0)),
+            (
+                "mlp_layers",
+                Json::Arr(vec![Json::str("fc1"), Json::str("fc2")]),
+            ),
+        ]));
+        q2.push("fc1.w", PackedTensor::quantize(&random_tensor(vec![6, 12], 1), 4));
+        q2.push("fc2.w", PackedTensor::quantize(&random_tensor(vec![13, 3], 2), 4));
+        assert!(QuantMlp::from_packed(&q2).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Bit-stream packing: word-at-a-time (u64) fast paths plus the
+//! per-element scalar reference they are verified against.
+//!
+//! Codes are written LSB-first at widths 1..=24, the same layout
+//! `serve::packed` has always used on disk — the fast paths exist
+//! because the serving hot path unpacks every weight tensor once at
+//! load and the per-element `read_bits` loop (byte/shift bookkeeping
+//! per code) dominated that step. The streaming versions keep a u64
+//! accumulator and touch each payload byte exactly once.
+//!
+//! The scalar `write_bits_scalar`/`read_bits_scalar` pair stays `pub`
+//! as the property-test oracle: both directions are cross-checked
+//! against it on odd lengths at every width (see tests).
+
+/// Write `bits` low bits of `code` at bit offset `off`, LSB-first.
+/// Per-element reference implementation (the pre-kernels code path).
+pub fn write_bits_scalar(buf: &mut [u8], off: usize, bits: u32, code: u32) {
+    let mut v = code as u64;
+    let mut off = off;
+    let mut rem = bits as usize;
+    while rem > 0 {
+        let byte = off / 8;
+        let shift = off % 8;
+        let take = (8 - shift).min(rem);
+        buf[byte] |= ((v & ((1u64 << take) - 1)) as u8) << shift;
+        v >>= take;
+        off += take;
+        rem -= take;
+    }
+}
+
+/// Read `bits` bits at bit offset `off`, LSB-first. Per-element
+/// reference implementation (the pre-kernels code path).
+pub fn read_bits_scalar(buf: &[u8], off: usize, bits: u32) -> u32 {
+    let mut v = 0u64;
+    let mut got = 0usize;
+    let mut off = off;
+    let mut rem = bits as usize;
+    while rem > 0 {
+        let byte = off / 8;
+        let shift = off % 8;
+        let take = (8 - shift).min(rem);
+        let part = (buf[byte] as u64 >> shift) & ((1u64 << take) - 1);
+        v |= part << got;
+        got += take;
+        off += take;
+        rem -= take;
+    }
+    v as u32
+}
+
+/// Exact payload length for `n` codes at `bits` each.
+pub fn packed_len(n: usize, bits: u32) -> usize {
+    (n * bits as usize + 7) / 8
+}
+
+/// Pack `codes` at `bits` each into a fresh LSB-first byte stream.
+/// Streams through a u64 accumulator: the accumulator never holds more
+/// than 7 + 24 bits, so `filled + bits` cannot overflow 64.
+pub fn pack_codes(codes: &[u32], bits: u32) -> Vec<u8> {
+    assert!((1..=24).contains(&bits), "pack width must be in 1..=24, got {bits}");
+    let mut out = Vec::with_capacity(packed_len(codes.len(), bits));
+    let mask = (1u64 << bits) - 1;
+    let mut acc = 0u64;
+    let mut filled = 0u32;
+    for &c in codes {
+        acc |= ((c as u64) & mask) << filled;
+        filled += bits;
+        while filled >= 8 {
+            out.push(acc as u8);
+            acc >>= 8;
+            filled -= 8;
+        }
+    }
+    if filled > 0 {
+        out.push(acc as u8);
+    }
+    out
+}
+
+/// Unpack `n` codes at `bits` each from an LSB-first byte stream.
+/// Mirror image of [`pack_codes`]; panics if the payload is shorter
+/// than [`packed_len`]`(n, bits)` (callers validate sizes at load).
+pub fn unpack_codes(payload: &[u8], bits: u32, n: usize) -> Vec<u32> {
+    assert!((1..=24).contains(&bits), "unpack width must be in 1..=24, got {bits}");
+    assert!(
+        payload.len() >= packed_len(n, bits),
+        "payload {} bytes, need {} for {n} codes at {bits} bits",
+        payload.len(),
+        packed_len(n, bits)
+    );
+    let mut out = Vec::with_capacity(n);
+    let mask = (1u64 << bits) - 1;
+    let mut acc = 0u64;
+    let mut have = 0u32;
+    let mut next = 0usize;
+    for _ in 0..n {
+        while have < bits {
+            acc |= (payload[next] as u64) << have;
+            next += 1;
+            have += 8;
+        }
+        out.push((acc & mask) as u32);
+        acc >>= bits;
+        have -= bits;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_codes(n: usize, bits: u32, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        let max = (1u64 << bits) - 1;
+        (0..n).map(|_| (rng.next_u64() % (max + 1)) as u32).collect()
+    }
+
+    #[test]
+    fn fast_pack_matches_scalar_on_odd_lengths_and_all_widths() {
+        for bits in 1..=24u32 {
+            // odd / prime / tiny lengths hit every partial-byte tail
+            for n in [0usize, 1, 2, 3, 7, 13, 64, 101] {
+                let codes = random_codes(n, bits, (bits as u64) << 8 | n as u64);
+                let fast = pack_codes(&codes, bits);
+                let mut scalar = vec![0u8; packed_len(n, bits)];
+                for (i, &c) in codes.iter().enumerate() {
+                    write_bits_scalar(&mut scalar, i * bits as usize, bits, c);
+                }
+                assert_eq!(fast, scalar, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_unpack_matches_scalar_and_roundtrips() {
+        for bits in 1..=24u32 {
+            for n in [1usize, 5, 17, 100] {
+                let codes = random_codes(n, bits, 0xF00D ^ (bits as u64 * 31 + n as u64));
+                let payload = pack_codes(&codes, bits);
+                let fast = unpack_codes(&payload, bits, n);
+                let scalar: Vec<u32> = (0..n)
+                    .map(|i| read_bits_scalar(&payload, i * bits as usize, bits))
+                    .collect();
+                assert_eq!(fast, scalar, "bits={bits} n={n}");
+                assert_eq!(fast, codes, "roundtrip bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_len_is_exact() {
+        assert_eq!(packed_len(0, 3), 0);
+        assert_eq!(packed_len(8, 1), 1);
+        assert_eq!(packed_len(9, 1), 2);
+        assert_eq!(packed_len(100, 3), 38); // 300 bits -> 37.5 -> 38
+        assert_eq!(pack_codes(&[1; 100], 3).len(), 38);
+    }
+
+    #[test]
+    #[should_panic(expected = "payload")]
+    fn short_payload_panics_not_reads_garbage() {
+        unpack_codes(&[0u8; 2], 8, 3);
+    }
+}

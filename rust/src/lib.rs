@@ -9,10 +9,12 @@
 //!   contribution: the adaptive bit-width controller ([`adaqat`]), the
 //!   training orchestrator ([`train`]), the synthetic data pipeline
 //!   ([`data`]), the hardware cost model ([`quant`]), the PJRT
-//!   runtime ([`runtime`]) that executes the compiled artifacts, and the
+//!   runtime ([`runtime`]) that executes the compiled artifacts, the
 //!   quantized-inference serving subsystem ([`serve`]) that turns a
-//!   finished run into a batched TCP service. Python never runs on the
-//!   training or serving paths.
+//!   finished run into a batched TCP service, and the integer-domain
+//!   quantized kernel engine ([`kernels`]) that makes the learned
+//!   bit-widths buy actual compute, not just disk bytes. Python never
+//!   runs on the training or serving paths.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
@@ -21,6 +23,7 @@ pub mod adaqat;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod kernels;
 pub mod metrics;
 pub mod quant;
 pub mod runtime;

@@ -44,14 +44,14 @@ const EXPORT_FLAGS: &[&str] = &["checkpoint", "out", "bits", "help"];
 
 const SERVE_FLAGS: &[&str] = &[
     "checkpoint", "addr", "workers", "queue_capacity", "max_delay_ms",
-    "backend", "model", "help",
+    "backend", "model", "threads", "help",
 ];
 
 const CLIENT_FLAGS: &[&str] =
     &["addr", "n", "window", "dataset", "seed", "help"];
 
 const DEMO_MODEL_FLAGS: &[&str] =
-    &["out", "dataset", "samples", "seed", "serve_batch", "help"];
+    &["out", "dataset", "samples", "seed", "serve_batch", "hidden", "k_a", "help"];
 
 fn main() {
     adaqat::util::logger::init();
@@ -244,9 +244,11 @@ fn engine_from(scfg: &ServeConfig) -> anyhow::Result<Arc<Engine>> {
         queue_capacity: scfg.queue_capacity,
         max_delay: Duration::from_millis(scfg.max_delay_ms),
     };
+    let threads = scfg.threads;
     match scfg.backend.as_str() {
         "reference" => Engine::start(cfg, move |_| {
-            Ok(Box::new(ReferenceBackend::from_packed(&packed)?) as Box<dyn Backend>)
+            Ok(Box::new(ReferenceBackend::with_threads(&packed, threads)?)
+                as Box<dyn Backend>)
         }),
         "runtime" => {
             let dir = coordinator::artifact_dir();
@@ -314,7 +316,24 @@ fn cmd_demo_model(args: &Args) -> anyhow::Result<()> {
     let samples: usize = args.get("samples", 64).map_err(|e| anyhow::anyhow!(e))?;
     let seed: u64 = args.get("seed", 0).map_err(|e| anyhow::anyhow!(e))?;
     let serve_batch: usize = args.get("serve_batch", 64).map_err(|e| anyhow::anyhow!(e))?;
-    let ck = demo::demo_checkpoint(kind, samples, seed, serve_batch);
+    // --hidden N builds the 2-layer ReLU MLP (kernels demo); 0 = linear
+    let hidden: usize = args.get("hidden", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let k_a: u32 = args.get("k_a", 8).map_err(|e| anyhow::anyhow!(e))?;
+    let ck = if hidden > 0 {
+        // validate here so flag mistakes are CLI errors, not panics
+        anyhow::ensure!(
+            hidden % 2 == 0 && hidden >= 2 * kind.num_classes(),
+            "--hidden must be even and >= {} (2x num_classes), got {hidden}",
+            2 * kind.num_classes()
+        );
+        anyhow::ensure!(
+            (1..=24).contains(&k_a),
+            "--k_a must be in 1..=24, got {k_a}"
+        );
+        demo::demo_mlp_checkpoint(kind, hidden, samples, seed, serve_batch, k_a)
+    } else {
+        demo::demo_checkpoint(kind, samples, seed, serve_batch)
+    };
     ck.save(&out)?;
     // quick self-check on a fresh test split (fp32, pre-packing)
     let (q, _) = coordinator::export_packed(&ck, 8)?;
@@ -322,7 +341,11 @@ fn cmd_demo_model(args: &Args) -> anyhow::Result<()> {
     let acc = demo::demo_accuracy(&backend, kind, 512, seed ^ 1);
     println!("demo model:  {}", out.display());
     println!("classes:     {}", q.meta.get("num_classes").and_then(|j| j.as_f64()).unwrap_or(0.0));
-    println!("test top-1:  {:.1}% (nearest-centroid, fresh split)", acc * 100.0);
+    println!(
+        "test top-1:  {:.1}% ({}, fresh split)",
+        acc * 100.0,
+        if hidden > 0 { "2-layer ReLU MLP" } else { "nearest-centroid" }
+    );
     println!("next:        adaqat export --checkpoint {} --bits 4", out.display());
     Ok(())
 }
@@ -365,12 +388,15 @@ SERVING FLAGS
   serve:      --checkpoint FILE.aqq [--addr HOST:PORT] [--workers N]
               [--queue_capacity N] [--max_delay_ms N]
               [--backend reference|runtime] [--model NAME]
+              [--threads N (GEMM threads per backend; 0 = per core)]
   client:     [--addr HOST:PORT] [--n N] [--window N] [--dataset D] [--seed N]
   demo-model: [--out FILE] [--dataset D] [--samples PER_CLASS]
               [--serve_batch N] [--seed N]
+              [--hidden N (0 = linear; even N builds the 2-layer ReLU MLP)]
+              [--k_a N (MLP activation bits, default 8)]
 
 Serving quickstart (no PJRT artifacts needed):
-  adaqat demo-model && adaqat export --checkpoint runs/demo/model.ckpt --bits 4
+  adaqat demo-model --hidden 256 && adaqat export --checkpoint runs/demo/model.ckpt --bits 4
   adaqat serve --checkpoint runs/demo/model.aqq &
   adaqat client --n 1000 --window 64
 

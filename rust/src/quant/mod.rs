@@ -31,6 +31,16 @@ pub fn bitwidth_scale(k: u32) -> f32 {
     }
 }
 
+/// Integer code levels s = 2^k − 1 for k ∈ 1..=24 — the shared grid
+/// definition behind [`bitwidth_scale`], the packed-checkpoint format
+/// (`serve::packed`) and the integer kernels' activation quantizer
+/// (`kernels::activ`). Codes c ∈ [0, s] are 2^k values; the centered
+/// form q = 2c − s ∈ [−s, s] steps by 2 and carries s's parity.
+pub fn code_levels(k: u32) -> u32 {
+    debug_assert!((1..=24).contains(&k), "code_levels wants k in 1..=24, got {k}");
+    (1u32 << k) - 1
+}
+
 /// Bits used to report "unquantized" signals in tables (fp32 baseline).
 pub const FP_BITS: u32 = 32;
 
@@ -183,6 +193,14 @@ mod tests {
         assert_eq!(hard_loss(3, 4), 12.0);
         assert_eq!(hard_grad_w(4), 4.0);
         assert_eq!(hard_grad_a(3), 3.0);
+    }
+
+    #[test]
+    fn code_levels_match_bitwidth_scale_below_identity() {
+        for k in 1..24u32 {
+            assert_eq!(code_levels(k) as f32, bitwidth_scale(k), "k={k}");
+        }
+        assert_eq!(code_levels(24), (1 << 24) - 1);
     }
 
     #[test]

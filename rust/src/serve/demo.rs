@@ -1,13 +1,22 @@
-//! Nearest-centroid demo model over the synthetic datasets
-//! (DESIGN.md §7).
+//! Demo models over the synthetic datasets (DESIGN.md §7).
 //!
-//! Serving needs a model whose artifact chain runs in the offline build,
-//! where PJRT execution is stubbed (DESIGN.md §3). A nearest-centroid
-//! classifier is linear — `argmin_c ‖x − μ_c‖² = argmax_c μ_c·x −
-//! ½‖μ_c‖²` — so it fits the [`ReferenceBackend`]'s `fc.w`/`fc.b`
-//! contract exactly, and the synthetic classes carry enough linear
-//! signal (color triple, blob position) that predictions are far above
-//! chance: the end-to-end demo serves *meaningful* answers, not noise.
+//! Serving needs models whose artifact chain runs in the offline build,
+//! where PJRT execution is stubbed (DESIGN.md §3). Two of them:
+//!
+//! * [`demo_checkpoint`] — nearest-centroid linear classifier:
+//!   `argmin_c ‖x − μ_c‖² = argmax_c μ_c·x − ½‖μ_c‖²` fits the legacy
+//!   single-`fc` contract exactly, and the synthetic classes carry
+//!   enough linear signal (color triple, blob position) that
+//!   predictions are far above chance.
+//! * [`demo_mlp_checkpoint`] — a genuine 2-layer ReLU MLP for the
+//!   integer kernel engine (`crate::kernels`): fc1 is a *mirrored*
+//!   random projection `[R; −R]` (so `relu(Rx) − relu(−Rx) = Rx` is
+//!   linearly recoverable through the nonlinearity), fc2 scores the
+//!   class centroids in the projected space. The model exercises two
+//!   packed GEMMs, ReLU and per-layer activation quantization while
+//!   keeping the centroid classifier's above-chance accuracy (up to
+//!   the random projection's distortion) — the end-to-end demo serves
+//!   *meaningful* answers, not noise.
 //!
 //! [`ReferenceBackend`]: super::engine::ReferenceBackend
 
@@ -15,6 +24,7 @@ use crate::data::{synth, DatasetKind};
 use crate::tensor::checkpoint::Checkpoint;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 use super::engine::ReferenceBackend;
 
@@ -74,6 +84,142 @@ pub fn demo_checkpoint(
     ck
 }
 
+/// Gain of the random-feature block in the demo MLP's second layer —
+/// real signal flowing through every hidden unit, small enough that the
+/// centroid-pair block keeps the model at the linear demo's accuracy.
+const MLP_DISTRACTOR_GAIN: f32 = 0.3;
+
+/// Build the 2-layer demo MLP (`mlp_layers = ["fc1", "fc2"]`, ReLU
+/// between). `fc1.w` ([d, hidden], hidden = 2m) is a *mirrored* bank
+/// `[B; −B]`: the first `classes` rows of B are the class centroids
+/// μ_c, the rest random features ~ N(0, 1/d). Mirroring makes every
+/// pre-ReLU signal linearly recoverable — `relu(b·x) − relu(−b·x) =
+/// b·x` — so `fc2` reconstructs the exact nearest-centroid score
+/// `μ_c·x − ½‖μ_c‖²` from the centroid pairs while mixing in the
+/// random-feature pairs' class means at [`MLP_DISTRACTOR_GAIN`]. The
+/// result is a genuine ReLU MLP (two packed GEMMs, nonlinearity,
+/// per-layer activation quantization at `k_a`) that still classifies at
+/// the linear demo's accuracy instead of drowning it in projection
+/// noise. Meta carries `mlp_layers` plus everything the reference
+/// backend needs.
+pub fn demo_mlp_checkpoint(
+    kind: DatasetKind,
+    hidden: usize,
+    per_class: usize,
+    seed: u64,
+    serve_batch: usize,
+    k_a: u32,
+) -> Checkpoint {
+    assert!(per_class > 0 && serve_batch > 0);
+    let nc = kind.num_classes();
+    assert!(
+        hidden % 2 == 0 && hidden >= 2 * nc,
+        "hidden must be even and >= 2*num_classes, got {hidden} for {nc} classes"
+    );
+    let m = hidden / 2;
+    let n = per_class * nc;
+    let ds = synth::generate(kind, n, seed, 0);
+    let d = ds.sample_numel();
+
+    // class centroids μ_c
+    let mut sums = vec![0.0f64; nc * d];
+    for i in 0..n {
+        let c = ds.labels[i] as usize;
+        let row = &mut sums[c * d..(c + 1) * d];
+        for (j, &p) in ds.image(i).iter().enumerate() {
+            row[j] += p as f64;
+        }
+    }
+    // feature bank B (m×d): centroid rows, then random features
+    let mut rng = Rng::new(seed ^ 0x5EED_F00D);
+    let sd = 1.0 / (d as f32).sqrt();
+    let mut bank = vec![0.0f32; m * d];
+    for c in 0..nc {
+        for i in 0..d {
+            bank[c * d + i] = (sums[c * d + i] / per_class as f64) as f32;
+        }
+    }
+    for v in bank[nc * d..].iter_mut() {
+        *v = rng.normal() * sd;
+    }
+
+    // fc1 = [B; −B] in the checkpoint's [d, hidden] layout
+    let mut w1 = vec![0.0f32; d * hidden];
+    for j in 0..m {
+        for i in 0..d {
+            w1[i * hidden + j] = bank[j * d + i];
+            w1[i * hidden + m + j] = -bank[j * d + i];
+        }
+    }
+
+    // class means of the random-feature hidden units over the train set
+    // (the mirrored layout means unit j fires relu(b_j·x), unit m+j
+    // fires relu(−b_j·x))
+    let mut hsum = vec![0.0f64; nc * hidden];
+    for i in 0..n {
+        let c = ds.labels[i] as usize;
+        let x = ds.image(i);
+        for j in nc..m {
+            let mut dot = 0.0f64;
+            for (xi, bi) in x.iter().zip(&bank[j * d..(j + 1) * d]) {
+                dot += *xi as f64 * *bi as f64;
+            }
+            hsum[c * hidden + j] += dot.max(0.0);
+            hsum[c * hidden + m + j] += (-dot).max(0.0);
+        }
+    }
+
+    // fc2: exact centroid-score reconstruction on the first nc pairs,
+    // γ-scaled hidden-space class means on the random-feature pairs
+    let g = MLP_DISTRACTOR_GAIN as f64;
+    let mut w2 = vec![0.0f32; hidden * nc];
+    let mut b2 = vec![0.0f32; nc];
+    for c in 0..nc {
+        w2[c * nc + c] = 1.0;
+        w2[(m + c) * nc + c] = -1.0;
+        let mut norm2 = 0.0f64;
+        for i in 0..d {
+            let mu = sums[c * d + i] / per_class as f64;
+            norm2 += mu * mu;
+        }
+        let mut blk2 = 0.0f64;
+        for j in nc..m {
+            for &jj in &[j, m + j] {
+                let hc = hsum[c * hidden + jj] / per_class as f64;
+                w2[jj * nc + c] = (g * hc) as f32;
+                blk2 += hc * hc;
+            }
+        }
+        b2[c] = (-0.5 * norm2 - 0.5 * g * blk2) as f32;
+    }
+
+    let dataset = match kind {
+        DatasetKind::Cifar10 => "cifar10",
+        DatasetKind::ImagenetLite => "imagenet-lite",
+    };
+    let mut ck = Checkpoint::new(Json::obj(vec![
+        ("model", Json::str("demo-mlp")),
+        ("dataset", Json::str(dataset)),
+        (
+            "mlp_layers",
+            Json::Arr(vec![Json::str("fc1"), Json::str("fc2")]),
+        ),
+        ("input_hw", Json::Arr(vec![Json::num(ds.h as f64), Json::num(ds.w as f64)])),
+        ("in_channels", Json::num(ds.c as f64)),
+        ("num_classes", Json::num(nc as f64)),
+        ("serve_batch", Json::num(serve_batch as f64)),
+        ("hidden", Json::num(hidden as f64)),
+        ("k_a", Json::num(k_a as f64)),
+        ("train_per_class", Json::num(per_class as f64)),
+        ("seed", Json::num(seed as f64)),
+    ]));
+    ck.push("fc1.w", Tensor::new(vec![d, hidden], w1));
+    ck.push("fc1.b", Tensor::new(vec![hidden], vec![0.0; hidden]));
+    ck.push("fc2.w", Tensor::new(vec![hidden, nc], w2));
+    ck.push("fc2.b", Tensor::new(vec![nc], b2));
+    ck
+}
+
 /// Top-1 accuracy of a backend on a fresh synthetic *test* split.
 pub fn demo_accuracy(
     backend: &ReferenceBackend,
@@ -111,6 +257,25 @@ mod tests {
         let backend = ReferenceBackend::from_packed(&q).unwrap();
         let acc = demo_accuracy(&backend, DatasetKind::Cifar10, 200, 11);
         assert!(acc > 0.2, "4-bit demo accuracy only {acc}");
+    }
+
+    #[test]
+    fn mlp_demo_is_deterministic_well_formed_and_beats_chance() {
+        let a = demo_mlp_checkpoint(DatasetKind::Cifar10, 128, 8, 2, 8, 8);
+        let b = demo_mlp_checkpoint(DatasetKind::Cifar10, 128, 8, 2, 8, 8);
+        assert_eq!(a.tensors, b.tensors);
+        assert_eq!(a.tensors[0].1.shape, vec![32 * 32 * 3, 128]);
+        assert_eq!(a.tensors[2].1.shape, vec![128, 10]);
+        // mirrored projection: column m+j is the negation of column j
+        let w1 = &a.tensors[0].1;
+        assert_eq!(w1.data[0 * 128 + 64], -w1.data[0 * 128 + 0]);
+
+        // 8-bit pack + integer kernels keep the linear demo's accuracy
+        // (the centroid pairs reconstruct its scores through the ReLU)
+        let q = QuantizedCheckpoint::from_checkpoint(&a, 8, |n| n.ends_with(".w"));
+        let backend = ReferenceBackend::from_packed(&q).unwrap();
+        let acc = demo_accuracy(&backend, DatasetKind::Cifar10, 200, 12);
+        assert!(acc > 0.3, "8-bit MLP demo accuracy only {acc}");
     }
 
     #[test]

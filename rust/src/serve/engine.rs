@@ -3,19 +3,20 @@
 //! N worker threads each own one [`Backend`] instance (PJRT clients are
 //! `Rc`-based and `!Send`, so backends are constructed *on* their worker
 //! thread via a factory), pull coalesced batches from the shared
-//! [`RequestQueue`], pad them to the backend's static batch shape, run
-//! the forward pass, and answer each request through its own response
-//! channel while recording queue/compute latency into the engine's
-//! histograms.
+//! [`RequestQueue`], run the forward pass over the *real* row count
+//! (static-shape backends pad internally), and answer each request
+//! through its own response channel while recording queue/compute
+//! latency into the engine's histograms.
 //!
 //! Two backends:
 //! * [`RuntimeBackend`] — the compiled "infer" graph on the PJRT
 //!   runtime, state loaded from a dequantized packed checkpoint.
-//! * [`ReferenceBackend`] — a pure-Rust linear classifier over a packed
-//!   checkpoint (`fc.w`/`fc.b`). It exists so the whole serving pipeline
-//!   — packing, batching, workers, wire protocol — runs and benches in
-//!   the offline build, and doubles as the nearest-centroid demo model
-//!   for the synthetic datasets.
+//! * [`ReferenceBackend`] — a pure-Rust quantized model (single fc or
+//!   an MLP stack) over a packed checkpoint, running the integer-domain
+//!   kernels in [`crate::kernels`]. It exists so the whole serving
+//!   pipeline — packing, batching, workers, wire protocol — runs and
+//!   benches in the offline build, and doubles as the nearest-centroid
+//!   demo model for the synthetic datasets.
 
 use std::fmt;
 use std::path::Path;
@@ -23,6 +24,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::kernels::QuantMlp;
 use crate::metrics::Histogram;
 use crate::quant::bitwidth_scale;
 use crate::runtime::{ModelRuntime, Runtime, TrainState};
@@ -32,15 +34,19 @@ use super::batcher::DynamicBatcher;
 use super::packed::QuantizedCheckpoint;
 use super::queue::{PushError, RequestQueue, ServeRequest, ServeResponse};
 
-/// A model that classifies one padded static batch at a time.
+/// A model that classifies one coalesced batch at a time.
 pub trait Backend {
     /// (h, w, c) of one input image.
     fn input_shape(&self) -> (usize, usize, usize);
-    /// Static batch size every `infer` call must be padded to.
+    /// Upper bound on rows per `infer` call (the batcher's coalescing
+    /// target; static-shape backends also pad up to it internally).
     fn max_batch(&self) -> usize;
     fn num_classes(&self) -> usize;
-    /// `x` is (max_batch, h, w, c); returns max_batch predicted classes
-    /// (padded rows included — callers ignore them).
+    /// `x` is (rows, h, w, c) with 1 ≤ rows ≤ `max_batch()` — the
+    /// *real* request count, no padding; returns `rows` predicted
+    /// classes. Backends whose compiled graph has a static batch shape
+    /// (PJRT) pad internally and truncate the answer; dynamic backends
+    /// do `rows` of work, so a 1-image batch costs 1 image.
     fn infer(&self, x: &Tensor) -> anyhow::Result<Vec<usize>>;
 }
 
@@ -55,8 +61,11 @@ pub struct EngineMetrics {
     pub requests: AtomicU64,
     pub failures: AtomicU64,
     pub batches: AtomicU64,
-    /// Padded (wasted) rows across all batches; padding/batches is the
-    /// occupancy complement the serve bench reports.
+    /// Unfilled batch slots across all batches (the coalescing
+    /// occupancy complement the serve bench reports). Only static-shape
+    /// backends (PJRT) actually compute these as zero rows — the
+    /// kernels-backed reference backend does `rows`-only work, so for
+    /// it this measures batcher occupancy, not wasted compute.
     pub padded: AtomicU64,
     /// Static rows per batch (set once at engine start; denominators).
     pub batch_rows: AtomicU64,
@@ -276,16 +285,18 @@ fn worker_loop(
     let batcher = DynamicBatcher::new(Arc::clone(queue), bs, max_delay);
     while let Some(reqs) = batcher.next_batch() {
         let picked = Instant::now();
-        // pad with zero rows up to the artifact's static batch shape
-        let mut x = vec![0.0f32; bs * sz];
+        // ship only the real rows — static-shape backends pad for
+        // themselves, dynamic ones do `rows` of work (no zero-row tax)
+        let rows = reqs.len();
+        let mut x = vec![0.0f32; rows * sz];
         for (i, r) in reqs.iter().enumerate() {
             x[i * sz..(i + 1) * sz].copy_from_slice(&r.pixels);
         }
         let t0 = Instant::now();
-        let outcome = backend.infer(&Tensor::new(vec![bs, h, w, c], x));
+        let outcome = backend.infer(&Tensor::new(vec![rows, h, w, c], x));
         let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
         metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.padded.fetch_add((bs - reqs.len()) as u64, Ordering::Relaxed);
+        metrics.padded.fetch_add((bs - rows) as u64, Ordering::Relaxed);
         match outcome {
             Ok(classes) => {
                 for (i, r) in reqs.into_iter().enumerate() {
@@ -327,22 +338,35 @@ fn worker_loop(
 
 // ------------------------------------------------------------- backends
 
-/// Pure-Rust linear classifier: logits = xᵀW + b with W = `fc.w`
-/// ([d, classes]) and b = `fc.b` from a packed checkpoint whose meta
+/// Pure-Rust quantized backend: a [`QuantMlp`] (single fc layer or an
+/// `mlp_layers` stack with ReLU) over a packed checkpoint whose meta
 /// carries `input_hw`, `in_channels`, `num_classes`, `serve_batch`
-/// (written by `adaqat demo-model` / `serve::demo`).
+/// (written by `adaqat demo-model` / `serve::demo`). Packed weight
+/// tensors run in the integer domain (i8/i16 codes, i32 accumulation,
+/// activations quantized on the fly at the learned k_a) instead of the
+/// old dequantize-to-f32 strided dot — see DESIGN.md §11.
 pub struct ReferenceBackend {
-    w: Vec<f32>, // row-major [d][classes]
-    b: Vec<f32>,
+    mlp: QuantMlp,
     h: usize,
     wid: usize,
     c: usize,
-    classes: usize,
     batch: usize,
+    threads: usize,
 }
 
 impl ReferenceBackend {
     pub fn from_packed(q: &QuantizedCheckpoint) -> anyhow::Result<ReferenceBackend> {
+        Self::with_threads(q, 1)
+    }
+
+    /// `threads` sizes the per-batch row parallelism inside the GEMMs
+    /// (std::thread, `--threads` in `ServeConfig`); 0 means one per
+    /// available core. Thread count never changes results — the integer
+    /// kernels are order-independent.
+    pub fn with_threads(
+        q: &QuantizedCheckpoint,
+        threads: usize,
+    ) -> anyhow::Result<ReferenceBackend> {
         let hw = q
             .meta
             .get("input_hw")
@@ -369,43 +393,35 @@ impl ReferenceBackend {
             .get("serve_batch")
             .and_then(|j| j.as_usize())
             .unwrap_or(16);
-        let d = h * wid * c;
-        let wt = q
-            .get("fc.w")
-            .ok_or_else(|| anyhow::anyhow!("packed checkpoint lacks fc.w"))?;
+        let mlp = QuantMlp::from_packed(q)?;
         anyhow::ensure!(
-            wt.shape == vec![d, classes],
-            "fc.w shape {:?} != [{d}, {classes}]",
-            wt.shape
+            mlp.input == h * wid * c,
+            "model expects {} inputs but meta says {}x{}x{}",
+            mlp.input,
+            h,
+            wid,
+            c
         );
-        let w = wt.dequantize().data;
-        let b = match q.get("fc.b") {
-            Some(bt) => {
-                anyhow::ensure!(bt.shape == vec![classes], "fc.b shape {:?}", bt.shape);
-                bt.dequantize().data
-            }
-            None => vec![0.0; classes],
+        anyhow::ensure!(
+            mlp.classes == classes,
+            "model has {} outputs but meta num_classes is {classes}",
+            mlp.classes
+        );
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
         };
-        Ok(ReferenceBackend { w, b, h, wid, c, classes, batch })
+        Ok(ReferenceBackend { mlp, h, wid, c, batch, threads })
     }
 
     /// Direct (non-batched) forward for one image — the ground truth the
-    /// e2e tests compare the pipelined path against.
+    /// e2e tests compare the pipelined path against. Per-row activation
+    /// scales make this bit-identical to the same image inside any
+    /// batch, so the comparison is exact, not approximate.
     pub fn classify_one(&self, pixels: &[f32]) -> usize {
         debug_assert_eq!(pixels.len(), self.h * self.wid * self.c);
-        let mut best = 0usize;
-        let mut best_score = f32::NEG_INFINITY;
-        for cls in 0..self.classes {
-            let mut score = self.b[cls];
-            for (i, &p) in pixels.iter().enumerate() {
-                score += p * self.w[i * self.classes + cls];
-            }
-            if score > best_score {
-                best_score = score;
-                best = cls;
-            }
-        }
-        best
+        self.mlp.classify(pixels, 1, 1)[0]
     }
 }
 
@@ -419,19 +435,25 @@ impl Backend for ReferenceBackend {
     }
 
     fn num_classes(&self) -> usize {
-        self.classes
+        self.mlp.classes
     }
 
     fn infer(&self, x: &Tensor) -> anyhow::Result<Vec<usize>> {
-        let sz = self.h * self.wid * self.c;
         anyhow::ensure!(
-            x.shape == vec![self.batch, self.h, self.wid, self.c],
+            x.shape.len() == 4
+                && x.shape[1] == self.h
+                && x.shape[2] == self.wid
+                && x.shape[3] == self.c,
             "reference backend: bad batch shape {:?}",
             x.shape
         );
-        Ok((0..self.batch)
-            .map(|row| self.classify_one(&x.data[row * sz..(row + 1) * sz]))
-            .collect())
+        let rows = x.shape[0];
+        anyhow::ensure!(
+            rows >= 1 && rows <= self.batch,
+            "reference backend: {rows} rows exceeds serve batch {}",
+            self.batch
+        );
+        Ok(self.mlp.classify(&x.data, rows, self.threads))
     }
 }
 
@@ -484,7 +506,35 @@ impl Backend for RuntimeBackend {
     }
 
     fn infer(&self, x: &Tensor) -> anyhow::Result<Vec<usize>> {
-        self.rt.infer_batch(&self.state, x, self.s_w, self.s_a)
+        // The compiled graph's batch shape is static: pad partial
+        // batches with zero rows here and truncate the answer.
+        let bs = self.rt.mm.batch;
+        let (h, w, c) = self.input_shape();
+        let sz = h * w * c;
+        anyhow::ensure!(
+            x.shape.len() == 4 && x.shape[1] == h && x.shape[2] == w && x.shape[3] == c,
+            "runtime backend: bad batch shape {:?}",
+            x.shape
+        );
+        let rows = x.shape[0];
+        anyhow::ensure!(
+            rows >= 1 && rows <= bs,
+            "runtime backend: {rows} rows exceeds compiled batch {bs}"
+        );
+        let mut classes = if rows == bs {
+            self.rt.infer_batch(&self.state, x, self.s_w, self.s_a)?
+        } else {
+            let mut padded = vec![0.0f32; bs * sz];
+            padded[..rows * sz].copy_from_slice(&x.data);
+            self.rt.infer_batch(
+                &self.state,
+                &Tensor::new(vec![bs, h, w, c], padded),
+                self.s_w,
+                self.s_a,
+            )?
+        };
+        classes.truncate(rows);
+        Ok(classes)
     }
 }
 
@@ -572,6 +622,65 @@ mod tests {
         let ds = crate::data::synth::generate(DatasetKind::Cifar10, 4, 9, 1);
         let resp = engine.infer_blocking(ds.image(2).to_vec()).unwrap();
         assert_eq!(resp.result, Ok(direct.classify_one(ds.image(2))));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn partial_batches_carry_their_real_row_count() {
+        let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 8, 17, 8);
+        let q = QuantizedCheckpoint::from_checkpoint(&ck, 4, |n| n.ends_with(".w"));
+        let backend = ReferenceBackend::from_packed(&q).unwrap();
+        let (h, w, c) = backend.input_shape();
+        let sz = h * w * c;
+        let ds = crate::data::synth::generate(DatasetKind::Cifar10, 3, 23, 1);
+        // a 3-row tensor against a serve batch of 8: 3 answers, each
+        // matching the direct forward — no zero-padded rows computed
+        let mut x = vec![0.0f32; 3 * sz];
+        for i in 0..3 {
+            x[i * sz..(i + 1) * sz].copy_from_slice(ds.image(i));
+        }
+        let preds = backend.infer(&Tensor::new(vec![3, h, w, c], x)).unwrap();
+        assert_eq!(preds.len(), 3);
+        for i in 0..3 {
+            assert_eq!(preds[i], backend.classify_one(ds.image(i)), "row {i}");
+        }
+        // oversized batches are rejected, not silently truncated
+        let too_big = Tensor::zeros(vec![9, h, w, c]);
+        assert!(backend.infer(&too_big).is_err());
+    }
+
+    #[test]
+    fn mlp_engine_pipeline_matches_direct_forward() {
+        // 2-layer demo MLP at 8-bit weights / 8-bit activations on the
+        // integer kernels, 2 GEMM threads — pipeline must agree with
+        // classify_one exactly (per-row activation scales)
+        let ck = demo::demo_mlp_checkpoint(DatasetKind::Cifar10, 64, 8, 5, 8, 8);
+        let q = Arc::new(QuantizedCheckpoint::from_checkpoint(&ck, 8, |n| {
+            n.ends_with(".w")
+        }));
+        let q2 = Arc::clone(&q);
+        let engine = Engine::start(
+            EngineConfig {
+                workers: 2,
+                queue_capacity: 128,
+                max_delay: Duration::from_millis(2),
+            },
+            move |_| {
+                Ok(Box::new(ReferenceBackend::with_threads(&q2, 2)?) as Box<dyn Backend>)
+            },
+        )
+        .unwrap();
+        let direct = ReferenceBackend::from_packed(&q).unwrap();
+        let ds = crate::data::synth::generate(DatasetKind::Cifar10, 32, 3, 1);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..32 {
+            engine.submit(i as u64, ds.image(i).to_vec(), tx.clone()).unwrap();
+        }
+        for _ in 0..32 {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            let want = direct.classify_one(ds.image(resp.id as usize));
+            assert_eq!(resp.result, Ok(want), "request {}", resp.id);
+        }
         engine.shutdown();
     }
 }

@@ -17,7 +17,11 @@
 //! Module map: [`packed`] — bit-packed checkpoints; [`queue`] +
 //! [`batcher`] — the request pipeline; [`engine`] — workers, backends,
 //! metrics; [`protocol`] + [`server`] + [`client`] — the NDJSON/TCP
-//! front end; [`demo`] — the offline-runnable nearest-centroid model.
+//! front end; [`demo`] — the offline-runnable demo models (linear
+//! nearest-centroid and the 2-layer ReLU MLP). The reference backend's
+//! math lives in [`crate::kernels`]: integer-domain GEMMs over the
+//! packed codes, so the learned bit-widths buy compute, not just bytes
+//! (DESIGN.md §11).
 
 pub mod batcher;
 pub mod client;

@@ -20,16 +20,22 @@
 //! ```
 //!
 //! The quantization grid mirrors the training quantizer: s = 2^k − 1
-//! levels (`quant::bitwidth_scale`) spread symmetrically over
-//! [−max|x|, +max|x|]; code c dequantizes to `(c/s·2 − 1)·scale`. The
-//! dequantized f32 stream is the checkpoint's *canonical* content:
-//! save → load → [`PackedTensor::dequantize`] is bit-exact, which is
-//! what the runtime consumes and what the round-trip tests pin down.
+//! levels (`quant::code_levels`) spread symmetrically over
+//! [−max|x|, +max|x|]; code c dequantizes to `(2c − s)·Δ` with the
+//! per-tensor step Δ = scale/s — the same centered-code folding the
+//! integer kernels use (`crate::kernels`), so a dequantized value and
+//! the kernel's q·Δ reconstruction are the *same* f32. The dequantized
+//! stream is the checkpoint's *canonical* content: save → load →
+//! [`PackedTensor::dequantize`] is bit-exact, which is what the runtime
+//! consumes and what the round-trip tests pin down. Bit-stream packing
+//! goes through the u64 word-at-a-time paths in [`crate::kernels::pack`].
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::kernels::pack;
+use crate::quant::code_levels;
 use crate::tensor::checkpoint::{read_u16, read_u32, Checkpoint};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -59,11 +65,20 @@ impl PackedTensor {
         (numel * bits as usize + 7) / 8
     }
 
-    /// s = 2^k − 1, the same grid as `quant::bitwidth_scale` — spelled
-    /// out here because the runtime helper switches to the identity
-    /// scale at k ≥ 24, which would not fit a k-bit code field.
+    /// Shape product with overflow as a hard error — the same guard the
+    /// file loader applies to untrusted dims, for in-memory tensors.
+    fn checked_numel(shape: &[usize]) -> usize {
+        shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .expect("PackedTensor shape product overflows usize")
+    }
+
+    /// s = 2^k − 1 (`quant::code_levels`) — spelled as a local helper
+    /// because the runtime-facing `bitwidth_scale` switches to the
+    /// identity scale at k ≥ 24, which would not fit a k-bit code field.
     fn levels(bits: u32) -> f32 {
-        ((1u64 << bits) - 1) as f32
+        code_levels(bits) as f32
     }
 
     /// Store a tensor untouched (fp32 passthrough).
@@ -73,27 +88,32 @@ impl PackedTensor {
     }
 
     /// Quantize to `bits` ∈ 1..=24 on the symmetric s = 2^k − 1 grid.
+    /// Scale handling and the reciprocal are hoisted out of the
+    /// per-element loop; packing is the u64 word-at-a-time fast path.
     pub fn quantize(t: &Tensor, bits: u32) -> PackedTensor {
         assert!((1..=24).contains(&bits), "packed bits must be in 1..=24, got {bits}");
+        let n = Self::checked_numel(&t.shape);
         let s = Self::levels(bits);
         let scale = t.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-        let mut payload = vec![0u8; Self::packed_len(t.numel(), bits)];
-        for (i, &x) in t.data.iter().enumerate() {
-            let unit = if scale > 0.0 {
-                ((x / scale) * 0.5 + 0.5).clamp(0.0, 1.0)
-            } else {
-                0.5
-            };
-            let code = (unit * s).round() as u32;
-            write_bits(&mut payload, i * bits as usize, bits, code);
-        }
+        let codes: Vec<u32> = if scale > 0.0 {
+            let inv = 0.5 / scale;
+            t.data
+                .iter()
+                .map(|&x| ((x * inv + 0.5).clamp(0.0, 1.0) * s).round() as u32)
+                .collect()
+        } else {
+            vec![(0.5 * s).round() as u32; n]
+        };
+        let payload = pack::pack_codes(&codes, bits);
         PackedTensor { shape: t.shape.clone(), bits, scale, payload }
     }
 
     /// The f32 tensor the runtime consumes. Deterministic: the same
-    /// codes + scale always dequantize to bit-identical floats.
+    /// codes + scale always dequantize to bit-identical floats — value
+    /// = (2c − s)·Δ with Δ = scale/s, the exact folding the integer
+    /// kernels reproduce in their epilogue.
     pub fn dequantize(&self) -> Tensor {
-        let n = self.numel();
+        let n = Self::checked_numel(&self.shape);
         if self.bits == RAW_BITS {
             let data = self
                 .payload
@@ -102,12 +122,10 @@ impl PackedTensor {
                 .collect();
             return Tensor::new(self.shape.clone(), data);
         }
-        let s = Self::levels(self.bits);
-        let mut data = Vec::with_capacity(n);
-        for i in 0..n {
-            let code = read_bits(&self.payload, i * self.bits as usize, self.bits);
-            data.push((code as f32 / s * 2.0 - 1.0) * self.scale);
-        }
+        let s_i = code_levels(self.bits) as i32;
+        let step = self.scale / s_i as f32;
+        let codes = pack::unpack_codes(&self.payload, self.bits, n);
+        let data = codes.iter().map(|&c| (2 * c as i32 - s_i) as f32 * step).collect();
         Tensor::new(self.shape.clone(), data)
     }
 
@@ -115,40 +133,6 @@ impl PackedTensor {
     pub fn payload_bytes(&self) -> usize {
         self.payload.len()
     }
-}
-
-/// Write `bits` low bits of `code` at bit offset `off`, LSB-first.
-fn write_bits(buf: &mut [u8], off: usize, bits: u32, code: u32) {
-    let mut v = code as u64;
-    let mut off = off;
-    let mut rem = bits as usize;
-    while rem > 0 {
-        let byte = off / 8;
-        let shift = off % 8;
-        let take = (8 - shift).min(rem);
-        buf[byte] |= ((v & ((1u64 << take) - 1)) as u8) << shift;
-        v >>= take;
-        off += take;
-        rem -= take;
-    }
-}
-
-fn read_bits(buf: &[u8], off: usize, bits: u32) -> u32 {
-    let mut v = 0u64;
-    let mut got = 0usize;
-    let mut off = off;
-    let mut rem = bits as usize;
-    while rem > 0 {
-        let byte = off / 8;
-        let shift = off % 8;
-        let take = (8 - shift).min(rem);
-        let part = (buf[byte] as u64 >> shift) & ((1u64 << take) - 1);
-        v |= part << got;
-        got += take;
-        off += take;
-        rem -= take;
-    }
-    v as u32
 }
 
 /// A packed model: JSON metadata + named [`PackedTensor`]s.
@@ -338,17 +322,22 @@ mod tests {
 
     #[test]
     fn bit_packing_roundtrips_all_widths() {
+        // payload layout is owned by kernels::pack now; this pins the
+        // same LSB-first contract at the PackedTensor level
         for bits in [1u32, 2, 3, 4, 5, 7, 8, 11, 16, 24] {
             let max = (1u64 << bits) - 1;
             let codes: Vec<u32> =
                 (0..100u64).map(|i| ((i * 2654435761) % (max + 1)) as u32).collect();
-            let mut buf = vec![0u8; (codes.len() * bits as usize + 7) / 8];
+            let buf = pack::pack_codes(&codes, bits);
+            assert_eq!(buf.len(), (codes.len() * bits as usize + 7) / 8);
             for (i, &c) in codes.iter().enumerate() {
-                write_bits(&mut buf, i * bits as usize, bits, c);
+                assert_eq!(
+                    pack::read_bits_scalar(&buf, i * bits as usize, bits),
+                    c,
+                    "bits={bits} i={i}"
+                );
             }
-            for (i, &c) in codes.iter().enumerate() {
-                assert_eq!(read_bits(&buf, i * bits as usize, bits), c, "bits={bits} i={i}");
-            }
+            assert_eq!(pack::unpack_codes(&buf, bits, codes.len()), codes);
         }
     }
 

@@ -100,7 +100,9 @@ pub fn stats_line(m: &EngineMetrics) -> String {
         ("requests", Json::num(m.requests.load(Ordering::Relaxed) as f64)),
         ("failures", Json::num(m.failures.load(Ordering::Relaxed) as f64)),
         ("batches", Json::num(m.batches.load(Ordering::Relaxed) as f64)),
-        ("padded_rows", Json::num(m.padded.load(Ordering::Relaxed) as f64)),
+        // unfilled coalescing slots; only static-shape backends pad
+        // them with real zero rows (see EngineMetrics::padded)
+        ("unfilled_slots", Json::num(m.padded.load(Ordering::Relaxed) as f64)),
         ("queue_p50_ms", Json::num(round3(q.p50_ms))),
         ("queue_p95_ms", Json::num(round3(q.p95_ms))),
         ("queue_p99_ms", Json::num(round3(q.p99_ms))),

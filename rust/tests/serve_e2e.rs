@@ -92,6 +92,53 @@ fn serve_end_to_end_1k_requests_over_tcp() {
 }
 
 #[test]
+fn serve_mlp_end_to_end_through_integer_kernels() {
+    // The kernels-backed path: 2-layer ReLU demo MLP, 4-bit packed
+    // weights, 8-bit on-the-fly activations, i8 codes + i32
+    // accumulation, 2 GEMM threads per worker — full TCP stack, every
+    // prediction cross-checked against the direct (batch-1) forward.
+    // Per-row activation scales make that comparison exact: a request's
+    // codes never depend on its batch neighbours.
+    let ck = demo::demo_mlp_checkpoint(DatasetKind::Cifar10, 128, 8, 11, 16, 8);
+    let (q, report) = export_packed(&ck, 4).unwrap();
+    assert_eq!(report.quantized_tensors, 2, "fc1.w and fc2.w");
+    let q = Arc::new(q);
+    let q2 = Arc::clone(&q);
+    let engine = Engine::start(
+        EngineConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            max_delay: Duration::from_millis(2),
+        },
+        move |_| {
+            Ok(Box::new(ReferenceBackend::with_threads(&q2, 2)?) as Box<dyn Backend>)
+        },
+    )
+    .unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&engine)).unwrap();
+    let n = 512usize;
+    let ds = synth::generate(DatasetKind::Cifar10, n, 101, 1);
+    let images: Vec<(Vec<f32>, i32)> =
+        (0..n).map(|i| (ds.image(i).to_vec(), ds.labels[i])).collect();
+    let report = client::run(&server.addr.to_string(), &images, 32).unwrap();
+    assert_eq!(report.received, n);
+    assert_eq!(report.errors, 0);
+
+    let direct = ReferenceBackend::from_packed(&q).unwrap();
+    for (id, outcome) in &report.preds {
+        let want = direct.classify_one(ds.image(*id as usize));
+        assert_eq!(outcome.as_ref().ok().copied(), Some(want), "request {id}");
+    }
+    // centroid pairs reconstruct the linear demo's scores through the
+    // ReLU, so 4-bit MLP accuracy stays far above 10-class chance
+    let acc = report.correct as f64 / n as f64;
+    assert!(acc > 0.25, "served MLP accuracy only {acc:.3}");
+
+    server.stop();
+    engine.shutdown();
+}
+
+#[test]
 fn serve_sheds_load_instead_of_buffering_unboundedly() {
     // tiny queue + one slow-ish worker: the client must see explicit
     // backpressure errors, not hangs

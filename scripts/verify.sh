@@ -21,4 +21,10 @@ echo "== bench smoke: cargo test -q --benches =="
 # smoke-scale run or prints why it skipped
 cargo test -q --benches
 
+echo "== kernels bench: emit BENCH_kernels.json =="
+# f32-vs-quantized GEMM sweep (k x batch) on the demo MLP; the JSON at
+# the repo root is the perf trajectory later PRs must not regress
+cargo bench --bench kernels -- --iters 3 --out ../BENCH_kernels.json
+test -s ../BENCH_kernels.json
+
 echo "verify: OK"
