@@ -1,0 +1,100 @@
+//! Native training-backend throughput (DESIGN.md §12): steps/sec of
+//! the pure-Rust fake-quant train step at k ∈ {2, 4, 8} vs the fp32
+//! baseline path, written to `BENCH_train_native.json` by
+//! `scripts/verify.sh` so later PRs have a training-perf trajectory
+//! alongside the serving kernels' `BENCH_kernels.json`.
+//!
+//! Runs fully offline — no artifacts, no PJRT.
+//!
+//! ```bash
+//! cargo bench --bench train_native
+//! cargo bench --bench train_native -- --steps 40 --hidden 128 --out BENCH_train_native.json
+//! ```
+
+use std::path::PathBuf;
+
+use adaqat::backprop::NativeBackend;
+use adaqat::data::{loader::Loader, synth, DatasetKind};
+use adaqat::metrics::Table;
+use adaqat::runtime::StepBackend;
+use adaqat::util::bench::bench_args;
+use adaqat::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    adaqat::util::logger::init();
+    let args = bench_args();
+    // `cargo test --benches` runs this binary unoptimized (the bench
+    // smoke in scripts/verify.sh): fall back to smoke-scale defaults
+    // there, full scale under `cargo bench`.
+    let (def_steps, def_warmup, def_hw) =
+        if cfg!(debug_assertions) { (5usize, 2usize, 16usize) } else { (30, 5, 32) };
+    let steps: usize = args.get("steps", def_steps).map_err(|e| anyhow::anyhow!(e))?;
+    let warmup: usize = args.get("warmup", def_warmup).map_err(|e| anyhow::anyhow!(e))?;
+    let hidden: usize = args.get("hidden", 64).map_err(|e| anyhow::anyhow!(e))?;
+    let batch: usize = args.get("batch", 32).map_err(|e| anyhow::anyhow!(e))?;
+    let hw: usize = args.get("image_hw", def_hw).map_err(|e| anyhow::anyhow!(e))?;
+    let out = args.get_str("out", "");
+    let input = hw * hw * 3;
+
+    let backend = NativeBackend::new(batch, hw, 3, 10, &[hidden])?;
+    let ds = synth::generate_sized(DatasetKind::Cifar10, batch * 8, 1, 0, hw, hw).into_shared();
+    let loader = Loader::new(ds, batch, true);
+    let batches = loader.epoch(0);
+    println!(
+        "native train step: {input} -> {hidden} -> 10 MLP, batch {batch}, {steps} timed steps"
+    );
+
+    let mut table = Table::new(&["config", "ms/step", "steps/s", "final loss"]);
+    let mut rows_json: Vec<Json> = vec![];
+    for &(label, k, fp32) in
+        &[("fp32", 32u32, true), ("w8/a8", 8, false), ("w4/a8", 4, false), ("w2/a8", 2, false)]
+    {
+        let mut state = backend.init_state(0)?;
+        for i in 0..warmup {
+            backend.train_step(&mut state, &batches[i % batches.len()], 0.01, k, 8, fp32)?;
+        }
+        let t0 = std::time::Instant::now();
+        let mut loss = 0.0f32;
+        for i in 0..steps {
+            loss = backend
+                .train_step(&mut state, &batches[i % batches.len()], 0.01, k, 8, fp32)?
+                .loss;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let ms_per_step = secs * 1e3 / steps as f64;
+        let steps_per_sec = steps as f64 / secs;
+        anyhow::ensure!(loss.is_finite(), "{label}: diverged");
+        table.row(vec![
+            label.to_string(),
+            format!("{ms_per_step:.2}"),
+            format!("{steps_per_sec:.1}"),
+            format!("{loss:.4}"),
+        ]);
+        rows_json.push(Json::obj(vec![
+            ("config", Json::str(label)),
+            ("k_w", Json::num(k as f64)),
+            ("k_a", Json::num(8.0)),
+            ("fp32", Json::Bool(fp32)),
+            ("ms_per_step", Json::num(ms_per_step)),
+            ("steps_per_sec", Json::num(steps_per_sec)),
+        ]));
+    }
+    println!("{}", table.render());
+
+    if !out.is_empty() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("train_native")),
+            ("model", Json::str("native-mlp")),
+            ("input", Json::num(input as f64)),
+            ("hidden", Json::num(hidden as f64)),
+            ("classes", Json::num(10.0)),
+            ("batch", Json::num(batch as f64)),
+            ("steps", Json::num(steps as f64)),
+            ("results", Json::Arr(rows_json)),
+        ]);
+        let out = PathBuf::from(out);
+        std::fs::write(&out, doc.to_string())?;
+        println!("wrote {}", out.display());
+    }
+    Ok(())
+}

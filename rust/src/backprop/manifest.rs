@@ -1,0 +1,121 @@
+//! Synthetic in-Rust manifest for the native MLP backend.
+//!
+//! The PJRT path gets its [`ModelManifest`] from `python/compile/aot.py`
+//! via `manifest.json`; the native backend builds the same structure
+//! directly from a (batch, image size, hidden widths) description, so
+//! the rest of the system — trainer, cost model, checkpointing, export —
+//! consumes one contract regardless of backend and no Python is
+//! involved anywhere on the native path.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::manifest::{LayerGeom, ModelManifest, ParamSpec};
+
+/// Manifest key every native MLP reports (there is no artifact set to
+/// look it up in, so the key only has to be stable and recognizable).
+pub const NATIVE_MODEL_KEY: &str = "native-mlp";
+
+/// Build the manifest for a fully-connected ReLU stack over flattened
+/// `hw × hw × in_channels` images: layer i maps `dims[i] → dims[i+1]`
+/// with `dims = [hw²·c, hidden..., classes]`. Layers are named
+/// `fc1..fcN` — the `mlp_layers` convention the serving subsystem's
+/// [`crate::kernels::QuantMlp`] loads — with `.w`/`.b` tensors in
+/// `[d_in, d_out]` / `[d_out]` layout, Kaiming/zeros init, fc roles.
+///
+/// No layer is pinned at 8 bits (`fixed8 = false` everywhere): the MLP
+/// has no conv stem, and keeping every layer on the learned k_w makes
+/// WCR/BitOPs exact functions of the controller's output.
+pub fn native_manifest(
+    batch: usize,
+    hw: usize,
+    in_channels: usize,
+    classes: usize,
+    hidden: &[usize],
+) -> Result<ModelManifest, String> {
+    if batch == 0 {
+        return Err("native manifest: batch must be >= 1".into());
+    }
+    if hw == 0 || in_channels == 0 || classes < 2 {
+        return Err("native manifest: need hw >= 1, channels >= 1, classes >= 2".into());
+    }
+    let mut dims = vec![hw * hw * in_channels];
+    dims.extend_from_slice(hidden);
+    dims.push(classes);
+    if dims.iter().any(|&d| d == 0) {
+        return Err("native manifest: zero-width layer".into());
+    }
+
+    let mut params = vec![];
+    let mut geoms = vec![];
+    for (i, pair) in dims.windows(2).enumerate() {
+        let (d_in, d_out) = (pair[0], pair[1]);
+        let name = format!("fc{}", i + 1);
+        params.push(ParamSpec {
+            name: format!("{name}.w"),
+            shape: vec![d_in, d_out],
+            init: format!("kaiming:{d_in}"),
+            role: "fc_w".to_string(),
+        });
+        params.push(ParamSpec {
+            name: format!("{name}.b"),
+            shape: vec![d_out],
+            init: "zeros".to_string(),
+            role: "fc_b".to_string(),
+        });
+        geoms.push(LayerGeom {
+            name,
+            kind: "fc".to_string(),
+            weight_count: d_in * d_out,
+            macs: d_in * d_out,
+            fixed8: false,
+        });
+    }
+
+    Ok(ModelManifest {
+        key: NATIVE_MODEL_KEY.to_string(),
+        batch,
+        input_hw: (hw, hw),
+        in_channels,
+        num_classes: classes,
+        params,
+        bn: vec![],
+        geoms,
+        // no AOT artifacts: every graph this model needs is native Rust
+        artifacts: BTreeMap::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_names_and_geometry_line_up() {
+        let mm = native_manifest(16, 16, 3, 10, &[32]).unwrap();
+        assert_eq!(mm.key, NATIVE_MODEL_KEY);
+        assert_eq!(mm.batch, 16);
+        assert_eq!(mm.input_numel(), 16 * 16 * 16 * 3);
+        let names: Vec<&str> = mm.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["fc1.w", "fc1.b", "fc2.w", "fc2.b"]);
+        assert_eq!(mm.params[0].shape, vec![768, 32]);
+        assert_eq!(mm.params[2].shape, vec![32, 10]);
+        assert_eq!(mm.weight_count(), 768 * 32 + 32 * 10);
+        assert_eq!(mm.geoms.len(), 2);
+        assert!(mm.bn.is_empty() && mm.artifacts.is_empty());
+    }
+
+    #[test]
+    fn no_hidden_layer_is_a_single_fc(){
+        let mm = native_manifest(4, 8, 3, 10, &[]).unwrap();
+        assert_eq!(mm.params.len(), 2);
+        assert_eq!(mm.params[0].shape, vec![8 * 8 * 3, 10]);
+    }
+
+    #[test]
+    fn rejects_degenerate_shapes() {
+        assert!(native_manifest(0, 16, 3, 10, &[32]).is_err());
+        assert!(native_manifest(4, 0, 3, 10, &[32]).is_err());
+        assert!(native_manifest(4, 16, 3, 1, &[32]).is_err());
+        assert!(native_manifest(4, 16, 3, 10, &[0]).is_err());
+    }
+}

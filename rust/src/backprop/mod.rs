@@ -1,0 +1,767 @@
+//! Pure-Rust quantized training backend (DESIGN.md §12).
+//!
+//! The second [`StepBackend`]: an MLP trained entirely in-process —
+//! fake-quant forward on the shared s = 2^k − 1 grid, softmax
+//! cross-entropy, straight-through-estimator backward, SGD with
+//! momentum — so `Experiment::run` executes offline end-to-end with no
+//! PJRT artifacts and no Python anywhere. This is what lets the AdaQAT
+//! controller be driven by *measured* gradient-descent losses in CI,
+//! and what produces real checkpoints for the serve/kernels subsystems
+//! to consume (train → export → serve closes on any box).
+//!
+//! Quantizer semantics:
+//! * **Weights** — per-tensor symmetric max-abs grid, exactly
+//!   `PackedTensor::quantize ∘ dequantize` (`fake_quantize_tensor`), so
+//!   the weights the training forward sees are bit-identical to what an
+//!   exported `AQQCKPT1` checkpoint reconstructs. (The PJRT graphs use
+//!   DoReFa's tanh reparameterization instead — a deliberate
+//!   per-backend difference, documented in DESIGN.md §12.)
+//! * **Activations** — per-row max-abs grid via
+//!   [`crate::kernels::activ::fake_quantize_row`], the same function
+//!   the integer serving kernels evaluate.
+//! * **Backward** — straight-through: both quantizers differentiate as
+//!   identity (paper §III-A), ReLU masks by its forward output.
+//!
+//! Evaluation goes through [`NativeBackend::serving_mlp`]: the current
+//! weights are packed exactly as `adaqat export` packs them and run on
+//! the integer kernels ([`crate::kernels::QuantMlp`]), so the trainer's
+//! eval forward and the served model are the *same numbers* — the e2e
+//! test asserts every prediction matches.
+
+pub mod manifest;
+
+pub use manifest::{native_manifest, NATIVE_MODEL_KEY};
+
+use std::cell::{Cell, RefCell};
+
+use crate::config::ExperimentConfig;
+use crate::data::DatasetKind;
+use crate::kernels::{activ, QuantMlp};
+use crate::quant::code_levels;
+use crate::runtime::{
+    init_state_from_manifest, load_state_from_manifest, Batch, ModelManifest, StepBackend,
+    StepMetrics, TrainState,
+};
+use crate::serve::packed::{PackedTensor, QuantizedCheckpoint};
+use crate::tensor::checkpoint::Checkpoint;
+use crate::util::json::Json;
+
+/// SGD momentum, mirroring `python/compile/steps.py::MOMENTUM`.
+pub const MOMENTUM: f32 = 0.9;
+/// Weight decay on `.w` tensors, mirroring `steps.py::WEIGHT_DECAY`.
+pub const WEIGHT_DECAY: f32 = 1e-4;
+
+/// Fake-quantize a weight tensor on the packed-checkpoint grid —
+/// bit-for-bit `PackedTensor::quantize(t, bits).dequantize()`:
+/// s = 2^k − 1 symmetric levels over [−max|w|, +max|w|], value
+/// (2c − s)·Δ with Δ = max|w|/s. An all-zero tensor stays all-zero.
+pub fn fake_quantize_tensor(w: &[f32], bits: u32, out: &mut [f32]) {
+    debug_assert!((1..=24).contains(&bits), "fake_quantize_tensor wants bits in 1..=24");
+    debug_assert_eq!(w.len(), out.len());
+    let s = code_levels(bits) as f32;
+    let s_i = code_levels(bits) as i32;
+    let scale = w.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    if !(scale > 0.0) {
+        out.fill(0.0);
+        return;
+    }
+    let inv = 0.5 / scale;
+    let step = scale / s_i as f32;
+    for (o, &x) in out.iter_mut().zip(w) {
+        let c = ((x * inv + 0.5).clamp(0.0, 1.0) * s).round() as i32;
+        *o = (2 * c - s_i) as f32 * step;
+    }
+}
+
+/// Everything one forward pass leaves behind for the backward pass.
+/// The quantized copies are `None` when a signal was not quantized —
+/// the backward pass then reads the raw buffer (the batch, `act`, or
+/// the unmodified weights in `TrainState`) instead of a clone, so the
+/// fp32 path allocates nothing per layer beyond its outputs.
+struct ForwardPass {
+    /// Per layer: the fake-quantized input rows, `[rows × d_in]`
+    /// (`None` = input used as-is: `act[l−1]`, or the batch at l = 0).
+    xhat: Vec<Option<Vec<f32>>>,
+    /// Per layer: post-activation output (`[rows × d_out]`; the last
+    /// entry is the logits).
+    act: Vec<Vec<f32>>,
+    /// Per layer: the fake-quantized weights the forward used
+    /// (`None` = raw weights straight from the state).
+    wq: Vec<Option<Vec<f32>>>,
+    /// Softmax probabilities, `[rows × classes]`.
+    probs: Vec<f32>,
+    loss: f64,
+    correct: usize,
+}
+
+/// A memoized serving model: `evaluate` calls `eval_batch` once per
+/// test batch with identical weights, so the packed [`QuantMlp`] is
+/// rebuilt only when the weights or the bit-widths actually change.
+struct EvalCache {
+    fingerprint: u64,
+    k_w: u32,
+    k_a: u32,
+    mlp: QuantMlp,
+}
+
+/// The native MLP trainer. Holds the manifest-derived geometry plus an
+/// eval-only memo; all training state lives in the caller's
+/// [`TrainState`], exactly like the PJRT backend.
+pub struct NativeBackend {
+    mm: ModelManifest,
+    /// Per layer (d_in, d_out).
+    dims: Vec<(usize, usize)>,
+    eval_cache: RefCell<Option<EvalCache>>,
+    /// How many times the eval memo was (re)built — pinned by tests.
+    eval_builds: Cell<usize>,
+}
+
+/// FNV-1a over the bit patterns of every parameter — the cheap "did
+/// the weights change" key for the eval memo (one read pass, vs the
+/// quantize + bit-pack + unpack + transpose a rebuild costs).
+fn weight_fingerprint(state: &TrainState) -> u64 {
+    let mut h = crate::util::FNV1A_BASIS;
+    for t in &state.params {
+        for &v in &t.data {
+            h = crate::util::fnv1a_mix(h, v.to_bits() as u64);
+        }
+    }
+    h
+}
+
+impl NativeBackend {
+    pub fn new(
+        batch: usize,
+        hw: usize,
+        in_channels: usize,
+        classes: usize,
+        hidden: &[usize],
+    ) -> anyhow::Result<NativeBackend> {
+        let mm = native_manifest(batch, hw, in_channels, classes, hidden)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let dims = mm
+            .params
+            .iter()
+            .filter(|p| p.role == "fc_w")
+            .map(|p| (p.shape[0], p.shape[1]))
+            .collect();
+        Ok(NativeBackend {
+            mm,
+            dims,
+            eval_cache: RefCell::new(None),
+            eval_builds: Cell::new(0),
+        })
+    }
+
+    /// Build from an [`ExperimentConfig`] (`backend = "native"`): the
+    /// synthetic dataset fixes channels/classes, `image_hw`/`hidden`/
+    /// `batch` fix the geometry.
+    pub fn from_config(cfg: &ExperimentConfig) -> anyhow::Result<NativeBackend> {
+        let kind = DatasetKind::parse(&cfg.dataset).map_err(|e| anyhow::anyhow!(e))?;
+        NativeBackend::new(cfg.batch, cfg.image_hw, 3, kind.num_classes(), &cfg.hidden)
+    }
+
+    /// Layer names in `mlp_layers` order (`fc1`, `fc2`, …).
+    pub fn layer_names(&self) -> Vec<String> {
+        (1..=self.dims.len()).map(|i| format!("fc{i}")).collect()
+    }
+
+    fn check_batch(&self, batch: &Batch) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            batch.x.shape
+                == vec![
+                    self.mm.batch,
+                    self.mm.input_hw.0,
+                    self.mm.input_hw.1,
+                    self.mm.in_channels
+                ],
+            "native backend: batch x shape {:?} does not match manifest batch {}",
+            batch.x.shape,
+            self.mm.batch
+        );
+        anyhow::ensure!(batch.y.shape == vec![self.mm.batch], "native backend: bad y shape");
+        Ok(())
+    }
+
+    /// The training/probe forward: fake-quant at (k_w, k_a) when
+    /// `quant`, plain f32 otherwise. Loss/softmax accumulate in f64.
+    ///
+    /// Width thresholds mirror the packed/serving side exactly, so the
+    /// training forward and an exported checkpoint can never disagree:
+    /// weights quantize for k_w ∈ 1..=24 (the packable range — 24 is a
+    /// *real* grid here, unlike `bitwidth_scale`'s f32-identity scale)
+    /// and stay raw above; activations quantize for k_a < 24 (the
+    /// kernels' own fake-quant threshold in [`QuantMlp::forward`]).
+    fn forward(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+        quant: bool,
+    ) -> ForwardPass {
+        let rows = self.mm.batch;
+        let last = self.dims.len() - 1;
+        let mut xhat: Vec<Option<Vec<f32>>> = Vec::with_capacity(self.dims.len());
+        let mut act: Vec<Vec<f32>> = Vec::with_capacity(self.dims.len());
+        let mut wq: Vec<Option<Vec<f32>>> = Vec::with_capacity(self.dims.len());
+        for (l, &(d_in, d_out)) in self.dims.iter().enumerate() {
+            let w = &state.params[2 * l].data;
+            let bias = &state.params[2 * l + 1].data;
+            let src: &[f32] = if l == 0 { &batch.x.data } else { &act[l - 1] };
+            let xh = if quant && k_a < 24 {
+                let mut q = src.to_vec();
+                for r in 0..rows {
+                    activ::fake_quantize_row(&mut q[r * d_in..(r + 1) * d_in], k_a);
+                }
+                Some(q)
+            } else {
+                None
+            };
+            let wql = if quant && (1..=24).contains(&k_w) {
+                let mut q = vec![0.0f32; w.len()];
+                fake_quantize_tensor(w, k_w, &mut q);
+                Some(q)
+            } else {
+                None
+            };
+            let xin: &[f32] = xh.as_deref().unwrap_or(src);
+            let win: &[f32] = wql.as_deref().unwrap_or(w);
+            let mut out = vec![0.0f32; rows * d_out];
+            for r in 0..rows {
+                let xrow = &xin[r * d_in..(r + 1) * d_in];
+                let orow = &mut out[r * d_out..(r + 1) * d_out];
+                orow.copy_from_slice(bias);
+                for (i, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (o, &wv) in orow.iter_mut().zip(&win[i * d_out..(i + 1) * d_out]) {
+                        *o += xv * wv;
+                    }
+                }
+            }
+            if l != last {
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            xhat.push(xh);
+            wq.push(wql);
+            act.push(out);
+        }
+
+        let classes = self.dims[last].1;
+        let logits = &act[last];
+        let (loss, correct, probs) = softmax_metrics(logits, &batch.y.data, rows, classes);
+        ForwardPass { xhat, act, wq, probs, loss, correct }
+    }
+
+    /// STE backward + SGD-with-momentum update (mirrors the fused PJRT
+    /// train graph: momentum 0.9, weight decay 1e-4 on `.w` only, both
+    /// quantizers and the batch-mean CE differentiate straight-through
+    /// onto the fake-quantized forward values).
+    fn backward_update(
+        &self,
+        state: &mut TrainState,
+        fwd: &ForwardPass,
+        batch: &Batch,
+        lr: f32,
+    ) {
+        let rows = self.mm.batch;
+        let last = self.dims.len() - 1;
+        let classes = self.dims[last].1;
+        // δ at the logits: (softmax − one-hot) / rows
+        let mut delta: Vec<f32> = fwd.probs.clone();
+        for r in 0..rows {
+            delta[r * classes + batch.y.data[r] as usize] -= 1.0;
+        }
+        let inv_rows = 1.0 / rows as f32;
+        for v in delta.iter_mut() {
+            *v *= inv_rows;
+        }
+
+        for l in (0..=last).rev() {
+            let (d_in, d_out) = self.dims[l];
+            // the forward's input rows: the quantized copy, or (when the
+            // forward quantized nothing) the raw source it read directly
+            let xh: &[f32] = match &fwd.xhat[l] {
+                Some(x) => x,
+                None if l == 0 => &batch.x.data,
+                None => &fwd.act[l - 1],
+            };
+            // weight gradient x̂ᵀδ, then decay on the *raw* weights
+            let mut gw = vec![0.0f32; d_in * d_out];
+            for r in 0..rows {
+                let xrow = &xh[r * d_in..(r + 1) * d_in];
+                let drow = &delta[r * d_out..(r + 1) * d_out];
+                for (i, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (g, &dv) in gw[i * d_out..(i + 1) * d_out].iter_mut().zip(drow) {
+                        *g += xv * dv;
+                    }
+                }
+            }
+            for (g, &wv) in gw.iter_mut().zip(&state.params[2 * l].data) {
+                *g += WEIGHT_DECAY * wv;
+            }
+            let mut gb = vec![0.0f32; d_out];
+            for r in 0..rows {
+                for (g, &dv) in gb.iter_mut().zip(&delta[r * d_out..(r + 1) * d_out]) {
+                    *g += dv;
+                }
+            }
+            // propagate δ through ŵ and the previous ReLU before the
+            // parameters move: layer l's weights are untouched until the
+            // update below, so the raw-weight fallback still reads the
+            // forward's values
+            if l > 0 {
+                let wql: &[f32] = match &fwd.wq[l] {
+                    Some(q) => q,
+                    None => &state.params[2 * l].data,
+                };
+                let prev = &fwd.act[l - 1];
+                let mut nd = vec![0.0f32; rows * d_in];
+                for r in 0..rows {
+                    let drow = &delta[r * d_out..(r + 1) * d_out];
+                    let ndrow = &mut nd[r * d_in..(r + 1) * d_in];
+                    for i in 0..d_in {
+                        if prev[r * d_in + i] <= 0.0 {
+                            continue; // ReLU gate (quantizer is straight-through)
+                        }
+                        let mut s = 0.0f32;
+                        for (&wv, &dv) in wql[i * d_out..(i + 1) * d_out].iter().zip(drow) {
+                            s += wv * dv;
+                        }
+                        ndrow[i] = s;
+                    }
+                }
+                delta = nd;
+            }
+            // SGD + momentum: m ← 0.9m + g;  p ← p − lr·m
+            for ((w, m), &g) in state.params[2 * l]
+                .data
+                .iter_mut()
+                .zip(state.momentum[2 * l].data.iter_mut())
+                .zip(&gw)
+            {
+                *m = MOMENTUM * *m + g;
+                *w -= lr * *m;
+            }
+            for ((b, m), &g) in state.params[2 * l + 1]
+                .data
+                .iter_mut()
+                .zip(state.momentum[2 * l + 1].data.iter_mut())
+                .zip(&gb)
+            {
+                *m = MOMENTUM * *m + g;
+                *b -= lr * *m;
+            }
+        }
+    }
+
+    /// Pack the current weights exactly as `adaqat export` packs a
+    /// saved checkpoint and build the integer-kernel [`QuantMlp`] —
+    /// the serving-identical forward. k_w ≥ 25 keeps weights raw f32
+    /// (the "not quantized" rows); k_a flows through the meta so the
+    /// kernels quantize activations at the learned width.
+    pub fn serving_mlp(
+        &self,
+        state: &TrainState,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<QuantMlp> {
+        let names = self.layer_names();
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            ("k_a", Json::num(k_a as f64)),
+            (
+                "mlp_layers",
+                Json::Arr(names.iter().map(|n| Json::str(n.clone())).collect()),
+            ),
+        ]));
+        for (l, name) in names.iter().enumerate() {
+            let w = &state.params[2 * l];
+            let b = &state.params[2 * l + 1];
+            let pw = if (1..=24).contains(&k_w) {
+                PackedTensor::quantize(w, k_w)
+            } else {
+                PackedTensor::raw(w)
+            };
+            q.push(format!("{name}.w"), pw);
+            q.push(format!("{name}.b"), PackedTensor::raw(b));
+        }
+        QuantMlp::from_packed(&q)
+    }
+
+    /// [`NativeBackend::serving_mlp`] behind the fingerprint-keyed memo:
+    /// rebuilt only when the weights or the bit-widths changed since the
+    /// last call (evaluation sweeps and per-sample prediction loops pass
+    /// identical weights every time).
+    fn cached_serving_mlp(
+        &self,
+        state: &TrainState,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<std::cell::RefMut<'_, QuantMlp>> {
+        let fp = weight_fingerprint(state);
+        let mut cache = self.eval_cache.borrow_mut();
+        let hit = matches!(
+            &*cache,
+            Some(c) if c.fingerprint == fp && c.k_w == k_w && c.k_a == k_a
+        );
+        if !hit {
+            *cache = Some(EvalCache {
+                fingerprint: fp,
+                k_w,
+                k_a,
+                mlp: self.serving_mlp(state, k_w, k_a)?,
+            });
+            self.eval_builds.set(self.eval_builds.get() + 1);
+        }
+        Ok(std::cell::RefMut::map(cache, |c| {
+            &mut c.as_mut().expect("just populated").mlp
+        }))
+    }
+
+    /// Serving-identical predictions for `rows` flattened images — what
+    /// the e2e test cross-checks the exported/served model against.
+    /// Memoized like `eval_batch`: classifying a stream sample-by-sample
+    /// packs the model once, not once per sample.
+    pub fn predict(
+        &self,
+        state: &TrainState,
+        x: &[f32],
+        rows: usize,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<Vec<usize>> {
+        Ok(self.cached_serving_mlp(state, k_w, k_a)?.classify(x, rows, 1))
+    }
+}
+
+/// Mean CE loss (f64 log-sum-exp), correct count (argmax, lowest index
+/// on ties — the kernels' rule), and softmax probabilities.
+fn softmax_metrics(
+    logits: &[f32],
+    labels: &[i32],
+    rows: usize,
+    classes: usize,
+) -> (f64, usize, Vec<f32>) {
+    let mut probs = vec![0.0f32; rows * classes];
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for r in 0..rows {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let y = labels[r] as usize;
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut sum = 0.0f64;
+        for &v in row {
+            sum += ((v - max) as f64).exp();
+        }
+        loss += (max as f64 + sum.ln()) - row[y] as f64;
+        let mut best = 0usize;
+        let mut best_score = f32::NEG_INFINITY;
+        for (i, &v) in row.iter().enumerate() {
+            if v > best_score {
+                best_score = v;
+                best = i;
+            }
+        }
+        if best == y {
+            correct += 1;
+        }
+        for (p, &v) in probs[r * classes..(r + 1) * classes].iter_mut().zip(row) {
+            *p = (((v - max) as f64).exp() / sum) as f32;
+        }
+    }
+    (loss / rows.max(1) as f64, correct, probs)
+}
+
+impl StepBackend for NativeBackend {
+    fn mm(&self) -> &ModelManifest {
+        &self.mm
+    }
+
+    fn init_state(&self, seed: u64) -> anyhow::Result<TrainState> {
+        init_state_from_manifest(&self.mm, seed)
+    }
+
+    fn load_state(&self, ck: &Checkpoint, seed: u64) -> anyhow::Result<TrainState> {
+        load_state_from_manifest(&self.mm, ck, seed)
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        lr: f32,
+        k_w: u32,
+        k_a: u32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        let fwd = self.forward(state, batch, k_w, k_a, !fp32);
+        self.backward_update(state, &fwd, batch, lr);
+        Ok(StepMetrics { loss: fwd.loss as f32, correct: fwd.correct as f32 })
+    }
+
+    fn probe_loss(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        let fwd = self.forward(state, batch, k_w, k_a, true);
+        Ok(StepMetrics { loss: fwd.loss as f32, correct: fwd.correct as f32 })
+    }
+
+    fn eval_batch(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        if fp32 {
+            let fwd = self.forward(state, batch, 32, 32, false);
+            return Ok(StepMetrics { loss: fwd.loss as f32, correct: fwd.correct as f32 });
+        }
+        // quantized eval = the serving forward, so eval metrics and an
+        // exported checkpoint's served behavior can never drift apart;
+        // memoized because evaluate() sweeps many batches per rebuild
+        let rows = self.mm.batch;
+        let classes = self.mm.num_classes;
+        let mlp = self.cached_serving_mlp(state, k_w, k_a)?;
+        let logits = mlp.forward(&batch.x.data, rows, 1);
+        let (loss, correct, _) = softmax_metrics(&logits, &batch.y.data, rows, classes);
+        Ok(StepMetrics { loss: loss as f32, correct: correct as f32 })
+    }
+
+    fn has_fp32(&self) -> bool {
+        true
+    }
+
+    fn checkpoint_meta(&self) -> Vec<(String, Json)> {
+        vec![
+            ("backend".to_string(), Json::str("native")),
+            (
+                "mlp_layers".to_string(),
+                Json::Arr(self.layer_names().into_iter().map(Json::str).collect()),
+            ),
+            (
+                "input_hw".to_string(),
+                Json::Arr(vec![
+                    Json::num(self.mm.input_hw.0 as f64),
+                    Json::num(self.mm.input_hw.1 as f64),
+                ]),
+            ),
+            ("in_channels".to_string(), Json::num(self.mm.in_channels as f64)),
+            ("num_classes".to_string(), Json::num(self.mm.num_classes as f64)),
+            ("serve_batch".to_string(), Json::num(self.mm.batch as f64)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{loader::Loader, synth, DatasetKind};
+    use crate::tensor::Tensor;
+
+    /// A tiny backend + one real data batch for unit tests.
+    fn tiny(hidden: &[usize]) -> (NativeBackend, Batch) {
+        let backend = NativeBackend::new(8, 8, 3, 10, hidden).unwrap();
+        let ds = synth::generate_sized(DatasetKind::Cifar10, 8, 3, 0, 8, 8).into_shared();
+        let batch = Loader::new(ds, 8, false).epoch(0).remove(0);
+        (backend, batch)
+    }
+
+    #[test]
+    fn fake_quant_matches_packed_roundtrip_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        for bits in [1u32, 2, 3, 4, 8, 15, 24] {
+            let t = Tensor::new(vec![37, 5], (0..185).map(|_| rng.normal() * 0.3).collect());
+            let mut fq = vec![0.0f32; t.numel()];
+            fake_quantize_tensor(&t.data, bits, &mut fq);
+            let rt = PackedTensor::quantize(&t, bits).dequantize();
+            for (a, b) in fq.iter().zip(&rt.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bits={bits}");
+            }
+        }
+        // zero tensor stays zero
+        let mut z = vec![1.0f32; 4];
+        fake_quantize_tensor(&[0.0; 4], 4, &mut z);
+        assert!(z.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn forward_weight_grid_matches_packed_range_at_the_24_bit_edge() {
+        // export packs k_w ∈ 1..=24; the training forward must agree at
+        // the edge: 24 is a real grid, 25+ is raw — on both paths
+        let (backend, batch) = tiny(&[6]);
+        let state = backend.init_state(11).unwrap();
+        for (k, quantized) in [(24u32, true), (25, false), (32, false)] {
+            let fwd = backend.forward(&state, &batch, k, 8, true);
+            if quantized {
+                let expect = PackedTensor::quantize(&state.params[0], k).dequantize().data;
+                assert_eq!(fwd.wq[0].as_deref(), Some(&expect[..]), "k={k}");
+            } else {
+                assert!(fwd.wq[0].is_none(), "k={k}: raw weights must not be copied");
+            }
+        }
+    }
+
+    #[test]
+    fn fp32_gradients_match_finite_differences() {
+        // infer the analytic gradient from one momentum-free update
+        // (m0 = 0 ⇒ Δp = −lr·g) and check it against central
+        // differences of the fp32 forward loss.
+        let (backend, batch) = tiny(&[6]);
+        let state0 = backend.init_state(1).unwrap();
+        let lr = 1e-3f32;
+        let mut stepped = state0.clone();
+        backend
+            .train_step(&mut stepped, &batch, lr, 32, 32, true)
+            .unwrap();
+        let eps = 1e-2f32;
+        // a spread of weight/bias coordinates across both layers
+        for (pi, xi) in [(0usize, 0usize), (0, 777), (1, 3), (2, 11), (3, 5)] {
+            let analytic = (state0.params[pi].data[xi] - stepped.params[pi].data[xi]) / lr
+                - WEIGHT_DECAY
+                    * if pi % 2 == 0 { state0.params[pi].data[xi] } else { 0.0 };
+            let mut plus = state0.clone();
+            plus.params[pi].data[xi] += eps;
+            let lp = backend.probe_loss(&plus, &batch, 32, 32).unwrap().loss;
+            let mut minus = state0.clone();
+            minus.params[pi].data[xi] -= eps;
+            let lm = backend.probe_loss(&minus, &batch, 32, 32).unwrap().loss;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (analytic - fd).abs() <= 2e-2 * analytic.abs().max(fd.abs()).max(0.05),
+                "param {pi}[{xi}]: analytic {analytic} vs finite-diff {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_a_fixed_batch() {
+        let (backend, batch) = tiny(&[16]);
+        let mut state = backend.init_state(0).unwrap();
+        let first = backend.train_step(&mut state, &batch, 0.02, 8, 8, false).unwrap();
+        let mut last = first;
+        for _ in 0..80 {
+            last = backend.train_step(&mut state, &batch, 0.02, 8, 8, false).unwrap();
+        }
+        assert!(last.loss.is_finite());
+        assert!(
+            last.loss < first.loss * 0.7,
+            "loss did not decrease: {} -> {}",
+            first.loss,
+            last.loss
+        );
+        assert!(state.is_finite());
+    }
+
+    #[test]
+    fn quantized_training_works_and_low_bits_hurt() {
+        // after training at 8/8, the measured probe-loss surface must
+        // show the wall the controller feeds on: 1-bit ≫ 8-bit loss
+        let (backend, batch) = tiny(&[16]);
+        let mut state = backend.init_state(2).unwrap();
+        for _ in 0..80 {
+            backend.train_step(&mut state, &batch, 0.02, 8, 8, false).unwrap();
+        }
+        let l8 = backend.probe_loss(&state, &batch, 8, 8).unwrap().loss;
+        let l1 = backend.probe_loss(&state, &batch, 1, 8).unwrap().loss;
+        assert!(l8.is_finite() && l1.is_finite());
+        assert!(
+            l1 > l8 + 0.05,
+            "1-bit weights should hurt a trained net: L(1)={l1} vs L(8)={l8}"
+        );
+    }
+
+    #[test]
+    fn single_layer_training_forward_tracks_the_serving_kernels() {
+        // no hidden layer ⇒ both paths quantize the *same* input rows,
+        // so the fake-quant f32 forward and the integer kernels differ
+        // only by accumulation rounding.
+        let (backend, batch) = tiny(&[]);
+        let mut state = backend.init_state(4).unwrap();
+        for _ in 0..10 {
+            backend.train_step(&mut state, &batch, 0.02, 4, 8, false).unwrap();
+        }
+        let fwd = backend.forward(&state, &batch, 4, 8, true);
+        let mlp = backend.serving_mlp(&state, 4, 8).unwrap();
+        let served = mlp.forward(&batch.x.data, 8, 1);
+        let logits = &fwd.act[fwd.act.len() - 1];
+        for (i, (a, b)) in logits.iter().zip(&served).enumerate() {
+            assert!((a - b).abs() < 5e-3, "logit {i}: train {a} vs serve {b}");
+        }
+    }
+
+    #[test]
+    fn eval_batch_equals_serving_math_and_fp32_path_runs() {
+        let (backend, batch) = tiny(&[12]);
+        let state = backend.init_state(9).unwrap();
+        let ev = backend.eval_batch(&state, &batch, 4, 8, false).unwrap();
+        // recompute through the same serving mlp: must agree exactly
+        let mlp = backend.serving_mlp(&state, 4, 8).unwrap();
+        let logits = mlp.forward(&batch.x.data, 8, 1);
+        let (loss, correct, _) = softmax_metrics(&logits, &batch.y.data, 8, 10);
+        assert_eq!(ev.loss.to_bits(), (loss as f32).to_bits());
+        assert_eq!(ev.correct, correct as f32);
+        let fp = backend.eval_batch(&state, &batch, 32, 32, true).unwrap();
+        assert!(fp.loss.is_finite());
+    }
+
+    #[test]
+    fn eval_cache_reuses_the_packed_model_until_inputs_change() {
+        let (backend, batch) = tiny(&[6]);
+        let mut state = backend.init_state(8).unwrap();
+        let a = backend.eval_batch(&state, &batch, 4, 8, false).unwrap();
+        let b = backend.eval_batch(&state, &batch, 4, 8, false).unwrap();
+        assert_eq!(backend.eval_builds.get(), 1, "second eval must hit the memo");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        backend.eval_batch(&state, &batch, 2, 8, false).unwrap();
+        assert_eq!(backend.eval_builds.get(), 2, "bit-width change rebuilds");
+        backend.train_step(&mut state, &batch, 0.02, 8, 8, false).unwrap();
+        backend.eval_batch(&state, &batch, 2, 8, false).unwrap();
+        assert_eq!(backend.eval_builds.get(), 3, "weight change rebuilds");
+    }
+
+    #[test]
+    fn state_roundtrips_through_checkpoint() {
+        let (backend, batch) = tiny(&[6]);
+        let mut state = backend.init_state(5).unwrap();
+        for _ in 0..3 {
+            backend.train_step(&mut state, &batch, 0.02, 8, 8, false).unwrap();
+        }
+        let mut ck = Checkpoint::new(Json::Null);
+        for (spec, t) in backend.mm().params.iter().zip(&state.params) {
+            ck.push(spec.name.clone(), t.clone());
+        }
+        let restored = backend.load_state(&ck, 0).unwrap();
+        let a = backend.probe_loss(&state, &batch, 4, 4).unwrap();
+        let b = backend.probe_loss(&restored, &batch, 4, 4).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+
+    #[test]
+    fn bad_batch_shape_is_rejected() {
+        let (backend, _) = tiny(&[6]);
+        let state = backend.init_state(0).unwrap();
+        let bad = Batch {
+            x: Tensor::zeros(vec![8, 4, 4, 3]),
+            y: crate::tensor::IntTensor::new(vec![8], vec![0; 8]),
+        };
+        assert!(backend.probe_loss(&state, &bad, 8, 8).is_err());
+    }
+}

@@ -30,7 +30,8 @@ pub enum Scenario {
 
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
-    /// Manifest model key: smallcnn | resnet20 | resnet18 | smallcnn_pallas.
+    /// Manifest model key: smallcnn | resnet20 | resnet18 | smallcnn_pallas
+    /// (PJRT), or "native-mlp" for the native backend.
     pub model: String,
     /// Dataset: "cifar10" (10-class synthetic) | "imagenet-lite" (100-class).
     pub dataset: String,
@@ -38,6 +39,17 @@ pub struct ExperimentConfig {
     pub controller: ControllerKind,
     /// Run the fp32 baseline graph instead of the quantized one.
     pub fp32: bool,
+    /// Step backend: "pjrt" (compiled HLO artifacts) | "native" (the
+    /// pure-Rust `backprop` MLP trainer — runs offline, DESIGN.md §12).
+    pub backend: String,
+    /// Hidden-layer widths of the native MLP (ignored by pjrt).
+    pub hidden: Vec<usize>,
+    /// Batch size of the native backend (pjrt batch comes from the
+    /// compiled artifact's static shape).
+    pub batch: usize,
+    /// Synthetic image side length. The PJRT artifact models are
+    /// compiled for 32; the native backend accepts any size.
+    pub image_hw: usize,
 
     pub epochs: usize,
     pub train_size: usize,
@@ -79,6 +91,10 @@ impl ExperimentConfig {
             scenario: Scenario::Scratch,
             controller: ControllerKind::AdaQat,
             fp32: false,
+            backend: "pjrt".to_string(),
+            hidden: vec![64],
+            batch: 32,
+            image_hw: 32,
             epochs: 4,
             train_size,
             test_size,
@@ -106,6 +122,25 @@ impl ExperimentConfig {
             "model" => self.model = value.to_string(),
             "dataset" => self.dataset = value.to_string(),
             "fp32" => self.fp32 = p(key, value)?,
+            "backend" => {
+                if !["pjrt", "native"].contains(&value) {
+                    return Err(format!("backend: expected pjrt|native, got {value:?}"));
+                }
+                self.backend = value.to_string();
+            }
+            "hidden" => {
+                // comma-separated widths: "64" or "128,64"
+                self.hidden = value
+                    .split(',')
+                    .map(|v| {
+                        v.trim()
+                            .parse()
+                            .map_err(|_| format!("hidden: cannot parse {v:?}"))
+                    })
+                    .collect::<Result<Vec<usize>, String>>()?;
+            }
+            "batch" => self.batch = p(key, value)?,
+            "image_hw" => self.image_hw = p(key, value)?,
             "epochs" => self.epochs = p(key, value)?,
             "train_size" => self.train_size = p(key, value)?,
             "test_size" => self.test_size = p(key, value)?,
@@ -178,7 +213,8 @@ impl ExperimentConfig {
     /// Apply CLI overrides for every key present in `args`.
     pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
         for key in [
-            "model", "dataset", "fp32", "epochs", "train_size", "test_size",
+            "model", "dataset", "fp32", "backend", "hidden", "batch",
+            "image_hw", "epochs", "train_size", "test_size",
             "lr", "lambda", "eta_w", "eta_a", "init_nw", "init_na",
             "probe_interval", "osc_threshold", "seed", "out_dir",
             "checkpoint", "controller", "hard_cost",
@@ -206,6 +242,15 @@ impl ExperimentConfig {
         }
         if self.probe_interval == 0 {
             return Err("probe_interval must be >= 1".into());
+        }
+        if self.batch == 0 {
+            return Err("batch must be >= 1".into());
+        }
+        if !(4..=64).contains(&self.image_hw) {
+            return Err("image_hw must be in [4, 64]".into());
+        }
+        if self.backend == "native" && (self.hidden.is_empty() || self.hidden.contains(&0)) {
+            return Err("native backend needs at least one non-zero hidden width".into());
         }
         Ok(())
     }
@@ -334,6 +379,26 @@ mod tests {
         assert_eq!(c.controller, ControllerKind::AdaQat);
         assert!(c.validate().is_ok());
         c.set("epochs", "0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn native_backend_keys_parse_and_validate() {
+        let mut c = ExperimentConfig::default_for("native-mlp");
+        assert_eq!(c.backend, "pjrt");
+        assert_eq!(c.image_hw, 32);
+        c.set("backend", "native").unwrap();
+        c.set("hidden", "128, 64").unwrap();
+        c.set("batch", "16").unwrap();
+        c.set("image_hw", "16").unwrap();
+        assert_eq!(c.hidden, vec![128, 64]);
+        assert!(c.validate().is_ok());
+        assert!(c.set("backend", "cuda").is_err());
+        assert!(c.set("hidden", "12,x").is_err());
+        c.set("image_hw", "2").unwrap();
+        assert!(c.validate().is_err());
+        c.set("image_hw", "16").unwrap();
+        c.set("hidden", "0").unwrap();
         assert!(c.validate().is_err());
     }
 

@@ -11,14 +11,17 @@ use crate::adaqat::{AdaQatController, Controller, FixedController, FracBitsContr
 use crate::config::{ControllerKind, ExperimentConfig, Scenario};
 use crate::data::{loader::Loader, synth, Dataset, DatasetKind};
 use crate::quant::{CostModel, EnergyCost, FpgaLutCost, HardCost, MemoryCost, ProductCost};
-use crate::runtime::{ModelRuntime, Runtime};
+use crate::runtime::{ModelManifest, Runtime, StepBackend};
 use crate::tensor::checkpoint::Checkpoint;
 use crate::train::{self, RunResult};
 use crate::util::json::Json;
 
-/// A fully assembled experiment, ready to run.
+/// A fully assembled experiment, ready to run. Generic over the step
+/// backend: the PJRT `ModelRuntime` and the native `backprop` trainer
+/// both plug in here, so examples, the CLI, and the bench harnesses
+/// share one entry point regardless of how steps execute.
 pub struct Experiment<'rt> {
-    pub rt: &'rt ModelRuntime,
+    pub backend: &'rt dyn StepBackend,
     pub cfg: ExperimentConfig,
     pub train_loader: Loader,
     pub test_loader: Loader,
@@ -78,36 +81,52 @@ pub fn make_controller(cfg: &ExperimentConfig, steps_per_epoch: usize) -> Box<dy
 }
 
 /// Generate the train/test splits for a config (sizes rounded down to
-/// whole batches so every PJRT execution sees a full static batch).
+/// whole batches so every execution sees a full static batch). The
+/// image side length comes from `cfg.image_hw` (32 for the PJRT
+/// artifact models; the native backend takes any size).
 pub fn make_datasets(cfg: &ExperimentConfig, batch: usize) -> (Arc<Dataset>, Arc<Dataset>) {
     let kind = DatasetKind::parse(&cfg.dataset).expect("validated earlier");
     let round = |n: usize| (n / batch).max(1) * batch;
-    let train = synth::generate(kind, round(cfg.train_size), cfg.seed, 0).into_shared();
-    let test = synth::generate(kind, round(cfg.test_size), cfg.seed, 1).into_shared();
+    let hw = cfg.image_hw;
+    let train =
+        synth::generate_sized(kind, round(cfg.train_size), cfg.seed, 0, hw, hw).into_shared();
+    let test =
+        synth::generate_sized(kind, round(cfg.test_size), cfg.seed, 1, hw, hw).into_shared();
     (train, test)
 }
 
 impl<'rt> Experiment<'rt> {
-    pub fn new(rt: &'rt ModelRuntime, cfg: ExperimentConfig) -> anyhow::Result<Experiment<'rt>> {
+    pub fn new(
+        backend: &'rt dyn StepBackend,
+        cfg: ExperimentConfig,
+    ) -> anyhow::Result<Experiment<'rt>> {
         cfg.validate().map_err(|e| anyhow::anyhow!("config: {e}"))?;
         DatasetKind::parse(&cfg.dataset).map_err(|e| anyhow::anyhow!("config: {e}"))?;
-        let (train_ds, test_ds) = make_datasets(&cfg, rt.mm.batch);
-        let train_loader = Loader::new(train_ds, rt.mm.batch, true);
-        let test_loader = Loader::new(test_ds, rt.mm.batch, false);
-        Ok(Experiment { rt, cfg, train_loader, test_loader })
+        let mm = backend.mm();
+        anyhow::ensure!(
+            (mm.input_hw.0, mm.input_hw.1) == (cfg.image_hw, cfg.image_hw),
+            "config image_hw {} does not match the backend's input {}x{}",
+            cfg.image_hw,
+            mm.input_hw.0,
+            mm.input_hw.1
+        );
+        let (train_ds, test_ds) = make_datasets(&cfg, mm.batch);
+        let train_loader = Loader::new(train_ds, mm.batch, true);
+        let test_loader = Loader::new(test_ds, mm.batch, false);
+        Ok(Experiment { backend, cfg, train_loader, test_loader })
     }
 
     /// Run to completion: resolves the scenario (scratch vs fine-tune),
     /// trains, writes metrics/checkpoints into `cfg.out_dir` if set.
     pub fn run(&self) -> anyhow::Result<RunResult> {
         let mut state = match &self.cfg.scenario {
-            Scenario::Scratch => self.rt.init_state(self.cfg.seed),
+            Scenario::Scratch => self.backend.init_state(self.cfg.seed),
             Scenario::Finetune { checkpoint } => {
                 let ck = Checkpoint::load(checkpoint)?;
-                self.rt.load_state(&ck, self.cfg.seed)
+                self.backend.load_state(&ck, self.cfg.seed)
             }
         }?;
-        let cost = CostModel::from_manifest(&self.rt.mm);
+        let cost = CostModel::from_manifest(self.backend.mm());
         let mut controller = make_controller_with_cost(
             &self.cfg,
             self.train_loader.batches_per_epoch(),
@@ -125,7 +144,7 @@ impl<'rt> Experiment<'rt> {
             self.cfg.epochs,
         );
         let result = train::train(
-            self.rt,
+            self.backend,
             &self.cfg,
             controller.as_mut(),
             &mut state,
@@ -164,50 +183,78 @@ impl<'rt> Experiment<'rt> {
             ])?;
         }
         let (k_w, k_a) = result.final_bits;
-        train::save_checkpoint(
-            self.rt,
-            state,
-            Json::obj(vec![
-                ("model", Json::str(self.cfg.model.clone())),
-                ("controller", Json::str(controller.name())),
-                ("k_w", Json::num(k_w as f64)),
-                ("k_a", Json::num(k_a as f64)),
-                ("test_top1", Json::num(result.test_top1)),
-            ]),
-            &dir.join("final.ckpt"),
-        )?;
+        let mut meta = Json::obj(vec![
+            ("model", Json::str(self.cfg.model.clone())),
+            ("controller", Json::str(controller.name())),
+            ("k_w", Json::num(k_w as f64)),
+            ("k_a", Json::num(k_a as f64)),
+            ("test_top1", Json::num(result.test_top1)),
+        ]);
+        // backend-specific serving metadata (e.g. the native backend's
+        // mlp_layers/input_hw) so `adaqat export` output serves directly
+        if let Json::Obj(m) = &mut meta {
+            for (k, v) in self.backend.checkpoint_meta() {
+                m.insert(k, v);
+            }
+        }
+        train::save_checkpoint(self.backend, state, meta, &dir.join("final.ckpt"))?;
         Ok(())
     }
 }
 
+/// FNV-1a tag of a manifest's tensor geometry (batch, input size,
+/// parameter shapes). The pretrain cache key needs it because one model
+/// key can describe many shapes on the native backend (`hidden`,
+/// `image_hw`, `batch` are config knobs, not part of the key) — without
+/// it a stale cache hit would fail checkpoint loading with a confusing
+/// shape-mismatch error instead of regenerating.
+fn geometry_tag(mm: &ModelManifest) -> u64 {
+    use crate::util::{fnv1a_mix, FNV1A_BASIS};
+    let mut h = FNV1A_BASIS;
+    h = fnv1a_mix(h, mm.batch as u64);
+    h = fnv1a_mix(h, mm.input_hw.0 as u64);
+    h = fnv1a_mix(h, mm.input_hw.1 as u64);
+    h = fnv1a_mix(h, mm.in_channels as u64);
+    for p in &mm.params {
+        for &d in &p.shape {
+            h = fnv1a_mix(h, d as u64);
+        }
+        h = fnv1a_mix(h, u64::MAX); // shape separator
+    }
+    h
+}
+
 /// Train (or reuse a cached) fp32 model for the fine-tuning scenario:
 /// the Table I/II "pretrained full-precision model". Cached under
-/// `cache_dir/{model}_fp32_e{epochs}_s{seed}.ckpt`.
+/// `cache_dir/{model}_fp32_e{epochs}_s{seed}_g{geometry}.ckpt`.
 pub fn ensure_fp32_pretrain(
-    rt: &ModelRuntime,
+    backend: &dyn StepBackend,
     base_cfg: &ExperimentConfig,
     epochs: usize,
     cache_dir: &Path,
 ) -> anyhow::Result<PathBuf> {
     let path = cache_dir.join(format!(
-        "{}_fp32_e{}_s{}.ckpt",
-        base_cfg.model, epochs, base_cfg.seed
+        "{}_fp32_e{}_s{}_g{:016x}.ckpt",
+        base_cfg.model,
+        epochs,
+        base_cfg.seed,
+        geometry_tag(backend.mm())
     ));
     if path.exists() {
         log::info!("reusing fp32 pretrain {path:?}");
         return Ok(path);
     }
-    anyhow::ensure!(rt.has_fp32(), "{}: no fp32 artifacts", base_cfg.model);
+    anyhow::ensure!(backend.has_fp32(), "{}: no fp32 artifacts", base_cfg.model);
     let mut cfg = base_cfg.clone();
     cfg.fp32 = true;
     cfg.epochs = epochs;
     cfg.scenario = Scenario::Scratch;
     cfg.out_dir = None;
-    let exp = Experiment::new(rt, cfg)?;
-    let mut state = exp.rt.init_state(exp.cfg.seed)?;
+    let exp = Experiment::new(backend, cfg)?;
+    let mut state = exp.backend.init_state(exp.cfg.seed)?;
     let mut controller = FixedController::new(32, 32);
     let result = train::train(
-        exp.rt,
+        exp.backend,
         &exp.cfg,
         &mut controller,
         &mut state,
@@ -221,7 +268,7 @@ pub fn ensure_fp32_pretrain(
     );
     std::fs::create_dir_all(cache_dir)?;
     train::save_checkpoint(
-        exp.rt,
+        exp.backend,
         &state,
         Json::obj(vec![
             ("model", Json::str(exp.cfg.model.clone())),

@@ -52,15 +52,24 @@ impl Loader {
         }
     }
 
+    /// The single home of the drop-last rule and the per-batch
+    /// augmentation-RNG derivation — both epoch paths go through this,
+    /// so sync and prefetch iteration can never drift apart. Returns
+    /// `None` for a trailing partial chunk (dropped), otherwise the
+    /// assembled batch with its RNG forked from the chunk's first index.
+    fn batch_for_chunk(&self, epoch_seed: u64, chunk: &[usize]) -> Option<Batch> {
+        if chunk.len() < self.batch {
+            return None; // drop-last: partial batches never ship
+        }
+        let mut rng = Rng::new(epoch_seed ^ 0xA0_61).fork(chunk[0] as u64);
+        Some(self.assemble(chunk, &mut rng))
+    }
+
     /// One epoch of batches, synchronously.
     pub fn epoch(&self, epoch_seed: u64) -> Vec<Batch> {
         self.epoch_order(epoch_seed)
             .chunks(self.batch)
-            .filter(|c| c.len() == self.batch)
-            .map(|c| {
-                let mut rng = Rng::new(epoch_seed ^ 0xA0_61).fork(c[0] as u64);
-                self.assemble(c, &mut rng)
-            })
+            .filter_map(|c| self.batch_for_chunk(epoch_seed, c))
             .collect()
     }
 
@@ -86,13 +95,13 @@ impl Loader {
         std::thread::spawn(move || {
             let order = loader.epoch_order(epoch_seed);
             for c in order.chunks(loader.batch) {
-                if c.len() < loader.batch {
-                    break;
-                }
-                let mut rng = Rng::new(epoch_seed ^ 0xA0_61).fork(c[0] as u64);
-                let batch = loader.assemble(c, &mut rng);
-                if tx.send(batch).is_err() {
-                    break; // consumer dropped mid-epoch
+                match loader.batch_for_chunk(epoch_seed, c) {
+                    Some(batch) => {
+                        if tx.send(batch).is_err() {
+                            break; // consumer dropped mid-epoch
+                        }
+                    }
+                    None => break, // trailing partial chunk
                 }
             }
         });
@@ -145,13 +154,19 @@ mod tests {
 
     #[test]
     fn prefetch_matches_sync() {
-        let l = Loader::new(dataset(96), 32, true);
-        let sync: Vec<Batch> = l.epoch(5);
-        let pre: Vec<Batch> = l.epoch_prefetch(5).iter().collect();
-        assert_eq!(sync.len(), pre.len());
-        for (a, b) in sync.iter().zip(&pre) {
-            assert_eq!(a.x.data, b.x.data);
-            assert_eq!(a.y.data, b.y.data);
+        // multiple-of-batch and non-multiple sizes: the shared
+        // batch_for_chunk helper must give identical streams either way,
+        // including identical per-batch augmentation RNG draws
+        for n in [96usize, 100, 127] {
+            let l = Loader::new(dataset(n), 32, true);
+            let sync: Vec<Batch> = l.epoch(5);
+            let pre: Vec<Batch> = l.epoch_prefetch(5).iter().collect();
+            assert_eq!(sync.len(), n / 32, "n={n}: drop-last count");
+            assert_eq!(sync.len(), pre.len(), "n={n}");
+            for (a, b) in sync.iter().zip(&pre) {
+                assert_eq!(a.x.data, b.x.data);
+                assert_eq!(a.y.data, b.y.data);
+            }
         }
     }
 

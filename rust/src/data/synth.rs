@@ -111,10 +111,26 @@ pub fn render_sample(
     }
 }
 
-/// Build a full split. `split` ∈ {0: train, 1: test} decorrelates sample
-/// streams so splits never share pixels.
+/// Build a full split at the standard 32×32 size. `split` ∈ {0: train,
+/// 1: test} decorrelates sample streams so splits never share pixels.
 pub fn generate(kind: DatasetKind, n: usize, seed: u64, split: u64) -> Dataset {
-    let (h, w, c) = (32usize, 32usize, 3usize);
+    generate_sized(kind, n, seed, split, 32, 32)
+}
+
+/// [`generate`] at an arbitrary image size (the class prototypes are
+/// resolution-independent: textures/blobs are parameterized in [0, 1]²,
+/// so a 16×16 render is the 32×32 image sampled coarser). The native
+/// training backend uses small sizes to keep offline CI runs fast.
+pub fn generate_sized(
+    kind: DatasetKind,
+    n: usize,
+    seed: u64,
+    split: u64,
+    h: usize,
+    w: usize,
+) -> Dataset {
+    assert!(h > 0 && w > 0, "image size must be positive");
+    let c = 3usize;
     let nc = kind.num_classes();
     let mut images = vec![0.0f32; n * h * w * c];
     let mut labels = vec![0i32; n];
@@ -209,6 +225,28 @@ mod tests {
         // samples 0,10,20 are class 0; 1,11 class 1 (round-robin labels)
         let intra = dist(d.image(0), d.image(10)) + dist(d.image(0), d.image(20));
         let inter = dist(d.image(0), d.image(1)) + dist(d.image(0), d.image(5));
+        assert!(inter > intra * 0.5, "inter {inter} intra {intra}");
+    }
+
+    #[test]
+    fn sized_generation_matches_default_and_scales() {
+        // the 32×32 wrapper is exactly generate_sized at 32
+        let a = generate(DatasetKind::Cifar10, 16, 3, 0);
+        let b = generate_sized(DatasetKind::Cifar10, 16, 3, 0, 32, 32);
+        assert_eq!(a.images, b.images);
+        // small renders are well-formed, standardized, deterministic
+        let s1 = generate_sized(DatasetKind::Cifar10, 40, 9, 0, 16, 16);
+        let s2 = generate_sized(DatasetKind::Cifar10, 40, 9, 0, 16, 16);
+        assert_eq!(s1.images, s2.images);
+        assert_eq!((s1.h, s1.w, s1.c), (16, 16, 3));
+        assert_eq!(s1.images.len(), 40 * 16 * 16 * 3);
+        assert!(s1.images.iter().all(|x| x.is_finite()));
+        // classes still carry signal at 16×16 (round-robin labels)
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>()
+        };
+        let intra = dist(s1.image(0), s1.image(10)) + dist(s1.image(0), s1.image(20));
+        let inter = dist(s1.image(0), s1.image(1)) + dist(s1.image(0), s1.image(5));
         assert!(inter > intra * 0.5, "inter {inter} intra {intra}");
     }
 

@@ -10,6 +10,8 @@
 //!   training orchestrator ([`train`]), the synthetic data pipeline
 //!   ([`data`]), the hardware cost model ([`quant`]), the PJRT
 //!   runtime ([`runtime`]) that executes the compiled artifacts, the
+//!   pure-Rust training backend ([`backprop`]) that runs the same
+//!   experiments offline with no artifacts at all, the
 //!   quantized-inference serving subsystem ([`serve`]) that turns a
 //!   finished run into a batched TCP service, and the integer-domain
 //!   quantized kernel engine ([`kernels`]) that makes the learned
@@ -20,6 +22,7 @@
 //! paper-vs-measured record.
 
 pub mod adaqat;
+pub mod backprop;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -22,10 +22,12 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use adaqat::adaqat::FixedController;
+use adaqat::backprop::NativeBackend;
 use adaqat::config::{ExperimentConfig, ServeConfig};
 use adaqat::coordinator::{self, Experiment};
 use adaqat::data::DatasetKind;
 use adaqat::quant::CostModel;
+use adaqat::runtime::{ModelRuntime, StepBackend};
 use adaqat::serve::{
     demo, Backend, Engine, EngineConfig, QuantizedCheckpoint, ReferenceBackend,
     RuntimeBackend, Server,
@@ -34,7 +36,8 @@ use adaqat::tensor::checkpoint::Checkpoint;
 use adaqat::util::cli::Args;
 
 const TRAIN_FLAGS: &[&str] = &[
-    "model", "dataset", "fp32", "epochs", "train_size", "test_size", "lr",
+    "model", "dataset", "fp32", "backend", "hidden", "batch", "image_hw",
+    "epochs", "train_size", "test_size", "lr",
     "lambda", "eta_w", "eta_a", "init_nw", "init_na", "probe_interval",
     "osc_threshold", "seed", "out_dir", "checkpoint", "controller",
     "hard_cost", "config", "help",
@@ -98,15 +101,49 @@ fn config_from(args: &Args) -> anyhow::Result<ExperimentConfig> {
             .map_err(|e| anyhow::anyhow!(e))?;
     }
     cfg.apply_args(args).map_err(|e| anyhow::anyhow!(e))?;
+    // A native run with no model chosen anywhere (no --model flag, no
+    // `model =` line in the config file — i.e. cfg.model still holds
+    // the flag default) must not stamp checkpoints with the default
+    // PJRT key: on an artifact-bearing box, export would then resolve
+    // that model's manifest roles, match none of the fc1.w/… names,
+    // and silently pack every tensor raw.
+    if cfg.backend == "native" && !args.has("model") && cfg.model == model {
+        cfg.model = adaqat::backprop::NATIVE_MODEL_KEY.to_string();
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
 }
 
+/// The step backend a config asks for. The PJRT variant owns its
+/// `ModelRuntime` (which holds the client handle); both expose
+/// `&dyn StepBackend` for the shared train/eval code paths.
+enum BackendHolder {
+    Native(NativeBackend),
+    Pjrt(ModelRuntime),
+}
+
+impl BackendHolder {
+    fn build(cfg: &ExperimentConfig) -> anyhow::Result<BackendHolder> {
+        if cfg.backend == "native" {
+            Ok(BackendHolder::Native(NativeBackend::from_config(cfg)?))
+        } else {
+            let rt = coordinator::default_runtime()?;
+            Ok(BackendHolder::Pjrt(rt.load_model(&cfg.model)?))
+        }
+    }
+
+    fn step(&self) -> &dyn StepBackend {
+        match self {
+            BackendHolder::Native(b) => b,
+            BackendHolder::Pjrt(rt) => rt,
+        }
+    }
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
-    let rt = coordinator::default_runtime()?;
-    let model_rt = rt.load_model(&cfg.model)?;
-    let exp = Experiment::new(&model_rt, cfg)?;
+    let holder = BackendHolder::build(&cfg)?;
+    let exp = Experiment::new(holder.step(), cfg)?;
     let result = exp.run()?;
     let (k_w, k_a) = result.final_bits;
     println!("final bits:   {k_w}/{k_a}");
@@ -126,16 +163,15 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
     anyhow::ensure!(args.has("checkpoint"), "eval requires --checkpoint");
     let ck_path = PathBuf::from(args.get_str("checkpoint", ""));
-    let rt = coordinator::default_runtime()?;
-    let model_rt = rt.load_model(&cfg.model)?;
+    let holder = BackendHolder::build(&cfg)?;
     let ck = Checkpoint::load(&ck_path)?;
     let k_w = ck.meta.get("k_w").and_then(|j| j.as_f64()).unwrap_or(32.0) as u32;
     let k_a = ck.meta.get("k_a").and_then(|j| j.as_f64()).unwrap_or(32.0) as u32;
-    let state = model_rt.load_state(&ck, cfg.seed)?;
-    let exp = Experiment::new(&model_rt, cfg)?;
+    let state = holder.step().load_state(&ck, cfg.seed)?;
+    let exp = Experiment::new(holder.step(), cfg)?;
     let controller = FixedController::new(k_w, k_a);
     let (loss, acc) = adaqat::train::evaluate(
-        &model_rt,
+        holder.step(),
         &state,
         &exp.test_loader,
         &controller,
@@ -149,10 +185,9 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_pretrain(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
-    let rt = coordinator::default_runtime()?;
-    let model_rt = rt.load_model(&cfg.model)?;
+    let holder = BackendHolder::build(&cfg)?;
     let path = coordinator::ensure_fp32_pretrain(
-        &model_rt,
+        holder.step(),
         &cfg,
         cfg.epochs,
         Path::new("runs/pretrained"),
@@ -368,6 +403,11 @@ COMMANDS
 
 TRAIN/EVAL FLAGS
   --model NAME          smallcnn | resnet20 | resnet18 | smallcnn_pallas
+  --backend B           pjrt (compiled artifacts) | native (pure-Rust
+                        MLP trainer, runs offline)            [pjrt]
+  --hidden W[,W...]     native MLP hidden widths              [64]
+  --batch N             native batch size                     [32]
+  --image_hw N          synthetic image side (native; pjrt=32) [32]
   --config FILE         key = value config file (flags override it)
   --controller SPEC     adaqat | fixed:2:32 | fracbits:3:4   [adaqat]
   --lambda F            hardware-loss balance λ              [0.15]
@@ -399,6 +439,11 @@ Serving quickstart (no PJRT artifacts needed):
   adaqat demo-model --hidden 256 && adaqat export --checkpoint runs/demo/model.ckpt --bits 4
   adaqat serve --checkpoint runs/demo/model.aqq &
   adaqat client --n 1000 --window 64
+
+Offline train→export→serve (no PJRT artifacts needed):
+  adaqat train --backend native --hidden 64 --epochs 4 --out_dir runs/native
+  adaqat export --checkpoint runs/native/final.ckpt
+  adaqat serve --checkpoint runs/native/final.aqq
 
 Artifacts are loaded from $ADAQAT_ARTIFACTS (default ./artifacts);
 build them with `make artifacts`."

@@ -87,6 +87,8 @@ impl CostModel {
     }
 
     /// Weight compression rate vs fp32: 32 / (weighted mean weight bits).
+    /// A manifest with no weights at all (every layer's weight_count is
+    /// zero) compresses nothing: WCR = 1, not 0/0 = NaN.
     pub fn wcr(&self, k_w: u32) -> f64 {
         let mut bits = 0.0f64;
         let mut count = 0.0f64;
@@ -94,6 +96,9 @@ impl CostModel {
             let k = if fixed8 { 8.0 } else if k_w >= 24 { 32.0 } else { k_w as f64 };
             bits += wc as f64 * k;
             count += wc as f64;
+        }
+        if bits <= 0.0 {
+            return 1.0;
         }
         32.0 * count / bits
     }
@@ -167,6 +172,20 @@ mod tests {
         assert!((12.0..16.0).contains(&wcr), "{wcr}");
         let wcr32 = cm.wcr(32);
         assert!(wcr32 < 1.1, "{wcr32}");
+    }
+
+    #[test]
+    fn wcr_of_weightless_manifest_is_finite() {
+        // all-zero weight counts (e.g. a degenerate synthetic manifest):
+        // 0/0 must not leak NaN/inf into reports and bench JSON
+        let empty = CostModel::from_layers(vec![(0, 100, false), (0, 50, true)]);
+        for k in [1u32, 4, 32] {
+            let w = empty.wcr(k);
+            assert!(w.is_finite(), "wcr({k}) = {w}");
+            assert_eq!(w, 1.0);
+        }
+        let none = CostModel::from_layers(vec![]);
+        assert_eq!(none.wcr(4), 1.0);
     }
 
     #[test]

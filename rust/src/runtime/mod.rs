@@ -11,7 +11,9 @@ pub mod manifest;
 
 use std::path::Path;
 
+use crate::tensor::checkpoint::Checkpoint;
 use crate::tensor::{init::init_tensor, IntTensor, Tensor};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 pub use manifest::{Manifest, ModelManifest};
@@ -52,6 +54,124 @@ impl TrainState {
         self.params.iter().all(Tensor::is_finite)
             && self.bn.iter().all(Tensor::is_finite)
     }
+}
+
+/// What executes training steps — the seam between the orchestration
+/// layer ([`crate::train`], [`crate::coordinator`]) and the math.
+///
+/// Two implementations: the PJRT [`ModelRuntime`] (compiled HLO graphs,
+/// needs AOT artifacts) and the pure-Rust [`crate::backprop`] backend
+/// (offline MLP fake-quant training, DESIGN.md §12). Callers think in
+/// integer bit-widths `(k_w, k_a)`; each backend maps them onto its own
+/// quantizer representation (the PJRT graphs take `s = 2^k − 1` runtime
+/// scalars via [`bitwidth_scale`], the native backend quantizes on the
+/// same grid directly).
+pub trait StepBackend {
+    /// Shape/ordering contract for state, batches, and checkpoints.
+    fn mm(&self) -> &ModelManifest;
+
+    /// Fresh training state from the manifest init specs.
+    fn init_state(&self, seed: u64) -> anyhow::Result<TrainState>;
+
+    /// State from a checkpoint (missing tensors keep their fresh init).
+    fn load_state(&self, ck: &Checkpoint, seed: u64) -> anyhow::Result<TrainState>;
+
+    /// One SGD step at bit-widths (k_w, k_a); updates `state` in place.
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        lr: f32,
+        k_w: u32,
+        k_a: u32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics>;
+
+    /// Forward-only task loss on the SAME batch at neighbor bit-widths —
+    /// the finite-difference probe of paper §III-C.
+    fn probe_loss(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<StepMetrics>;
+
+    /// Inference-mode evaluation at (k_w, k_a).
+    fn eval_batch(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics>;
+
+    /// Whether the fp32 baseline path exists (pretraining needs it).
+    fn has_fp32(&self) -> bool;
+
+    /// Extra serving metadata for checkpoints this backend trains
+    /// (e.g. the native backend's `mlp_layers`/`input_hw` so exported
+    /// `AQQCKPT1` files drive `serve::ReferenceBackend` directly).
+    fn checkpoint_meta(&self) -> Vec<(String, Json)> {
+        vec![]
+    }
+}
+
+/// Initialize a [`TrainState`] from manifest init specs — shared by
+/// every [`StepBackend`]: one RNG stream consumed in manifest order, so
+/// a (manifest, seed) pair fixes the parameters regardless of backend.
+pub fn init_state_from_manifest(mm: &ModelManifest, seed: u64) -> anyhow::Result<TrainState> {
+    let mut rng = Rng::new(seed);
+    let mut params = vec![];
+    for p in &mm.params {
+        params.push(
+            init_tensor(&p.init, &p.shape, &mut rng)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", p.name))?,
+        );
+    }
+    let momentum = mm.params.iter().map(|p| Tensor::zeros(p.shape.clone())).collect();
+    let mut bn = vec![];
+    for b in &mm.bn {
+        bn.push(
+            init_tensor(&b.init, &b.shape, &mut rng)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", b.name))?,
+        );
+    }
+    Ok(TrainState { params, momentum, bn })
+}
+
+/// Load checkpoint tensors into a fresh state by name; momentum
+/// restarts at zero. Unknown checkpoint entries are ignored, missing
+/// ones keep their fresh init (e.g. `alpha` when fine-tuning from an
+/// fp32 pretrain that never trained it).
+pub fn load_state_from_manifest(
+    mm: &ModelManifest,
+    ck: &Checkpoint,
+    seed: u64,
+) -> anyhow::Result<TrainState> {
+    let mut state = init_state_from_manifest(mm, seed)?;
+    let map = ck.tensor_map();
+    let mut loaded = 0usize;
+    for (i, spec) in mm.params.iter().enumerate() {
+        if let Some(t) = map.get(spec.name.as_str()) {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "checkpoint {}: shape {:?} != manifest {:?}",
+                spec.name, t.shape, spec.shape
+            );
+            state.params[i] = (*t).clone();
+            loaded += 1;
+        }
+    }
+    for (i, spec) in mm.bn.iter().enumerate() {
+        if let Some(t) = map.get(spec.name.as_str()) {
+            state.bn[i] = (*t).clone();
+            loaded += 1;
+        }
+    }
+    log::info!("loaded {loaded} tensors from checkpoint");
+    Ok(state)
 }
 
 /// The PJRT client + loaded manifest; entry point of the runtime layer.
@@ -184,56 +304,17 @@ fn from_literal(l: &xla::Literal, shape: &[usize]) -> anyhow::Result<Tensor> {
 impl ModelRuntime {
     /// Initialize fresh training state from the manifest init specs.
     pub fn init_state(&self, seed: u64) -> anyhow::Result<TrainState> {
-        let mut rng = Rng::new(seed);
-        let mut params = vec![];
-        for p in &self.mm.params {
-            params.push(
-                init_tensor(&p.init, &p.shape, &mut rng)
-                    .map_err(|e| anyhow::anyhow!("{}: {e}", p.name))?,
-            );
-        }
-        let momentum = self.mm.params.iter().map(|p| Tensor::zeros(p.shape.clone())).collect();
-        let mut bn = vec![];
-        for b in &self.mm.bn {
-            bn.push(
-                init_tensor(&b.init, &b.shape, &mut rng)
-                    .map_err(|e| anyhow::anyhow!("{}: {e}", b.name))?,
-            );
-        }
-        Ok(TrainState { params, momentum, bn })
+        init_state_from_manifest(&self.mm, seed)
     }
 
     /// Load parameters (and BN stats) from checkpoint tensors by name;
-    /// momentum restarts at zero. Unknown checkpoint entries are ignored,
-    /// missing ones keep their fresh init (e.g. `alpha` when fine-tuning
-    /// from an fp32 pretrain that never trained it).
+    /// momentum restarts at zero (see [`load_state_from_manifest`]).
     pub fn load_state(
         &self,
         ck: &crate::tensor::checkpoint::Checkpoint,
         seed: u64,
     ) -> anyhow::Result<TrainState> {
-        let mut state = self.init_state(seed)?;
-        let map = ck.tensor_map();
-        let mut loaded = 0usize;
-        for (i, spec) in self.mm.params.iter().enumerate() {
-            if let Some(t) = map.get(spec.name.as_str()) {
-                anyhow::ensure!(
-                    t.shape == spec.shape,
-                    "checkpoint {}: shape {:?} != manifest {:?}",
-                    spec.name, t.shape, spec.shape
-                );
-                state.params[i] = (*t).clone();
-                loaded += 1;
-            }
-        }
-        for (i, spec) in self.mm.bn.iter().enumerate() {
-            if let Some(t) = map.get(spec.name.as_str()) {
-                state.bn[i] = (*t).clone();
-                loaded += 1;
-            }
-        }
-        log::info!("loaded {loaded} tensors from checkpoint");
-        Ok(state)
+        load_state_from_manifest(&self.mm, ck, seed)
     }
 
     fn check_batch(&self, batch: &Batch) -> anyhow::Result<()> {
@@ -411,6 +492,72 @@ impl ModelRuntime {
             self.mm.batch
         );
         Ok(preds.into_iter().map(|p| p.max(0.0) as usize).collect())
+    }
+}
+
+impl StepBackend for ModelRuntime {
+    fn mm(&self) -> &ModelManifest {
+        &self.mm
+    }
+
+    fn init_state(&self, seed: u64) -> anyhow::Result<TrainState> {
+        ModelRuntime::init_state(self, seed)
+    }
+
+    fn load_state(&self, ck: &Checkpoint, seed: u64) -> anyhow::Result<TrainState> {
+        ModelRuntime::load_state(self, ck, seed)
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        lr: f32,
+        k_w: u32,
+        k_a: u32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics> {
+        ModelRuntime::train_step(
+            self,
+            state,
+            batch,
+            lr,
+            bitwidth_scale(k_w),
+            bitwidth_scale(k_a),
+            fp32,
+        )
+    }
+
+    fn probe_loss(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<StepMetrics> {
+        ModelRuntime::probe_loss(self, state, batch, bitwidth_scale(k_w), bitwidth_scale(k_a))
+    }
+
+    fn eval_batch(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics> {
+        ModelRuntime::eval_batch(
+            self,
+            state,
+            batch,
+            bitwidth_scale(k_w),
+            bitwidth_scale(k_a),
+            fp32,
+        )
+    }
+
+    fn has_fp32(&self) -> bool {
+        ModelRuntime::has_fp32(self)
     }
 }
 

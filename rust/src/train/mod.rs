@@ -1,12 +1,13 @@
 //! Training orchestrator: epochs, LR schedule, controller probes,
 //! evaluation, checkpointing, and per-step tracing.
 //!
-//! This is where the three layers meet at runtime: batches stream in
-//! from the data pipeline's prefetch thread, the compiled HLO train step
-//! executes on PJRT, and the AdaQAT controller steers the bit-width
-//! scalars between steps (paper §III-C). The trainer is generic over
-//! [`Controller`], so AdaQAT and the Table I baselines run through the
-//! exact same loop.
+//! This is where the layers meet at runtime: batches stream in from the
+//! data pipeline's prefetch thread, a [`StepBackend`] executes the train
+//! step — the compiled HLO graphs on PJRT, or the pure-Rust
+//! [`crate::backprop`] backend — and the AdaQAT controller steers the
+//! bit-widths between steps (paper §III-C). The trainer is generic over
+//! both [`Controller`] and [`StepBackend`], so AdaQAT, the Table I
+//! baselines, and every backend run through the exact same loop.
 
 pub mod schedule;
 
@@ -16,8 +17,8 @@ use std::time::Instant;
 use crate::adaqat::Controller;
 use crate::config::ExperimentConfig;
 use crate::data::loader::Loader;
-use crate::quant::{bitwidth_scale, CostModel};
-use crate::runtime::{ModelRuntime, StepMetrics, TrainState};
+use crate::quant::CostModel;
+use crate::runtime::{StepBackend, StepMetrics, TrainState};
 use crate::tensor::checkpoint::Checkpoint;
 use crate::util::json::Json;
 
@@ -67,9 +68,9 @@ pub struct RunResult {
 }
 
 /// Train `state` under `cfg` with the given controller; returns the run
-/// record. `train`/`test` loaders must match the model's artifact batch.
+/// record. `train`/`test` loaders must match the backend's batch size.
 pub fn train(
-    rt: &ModelRuntime,
+    backend: &dyn StepBackend,
     cfg: &ExperimentConfig,
     controller: &mut dyn Controller,
     state: &mut TrainState,
@@ -79,7 +80,8 @@ pub fn train(
     let t0 = Instant::now();
     let steps_per_epoch = train_loader.batches_per_epoch();
     let sched = CosineSchedule::new(cfg.lr, cfg.epochs * steps_per_epoch);
-    let cost = CostModel::from_manifest(&rt.mm);
+    let cost = CostModel::from_manifest(backend.mm());
+    let batch_size = backend.mm().batch;
 
     let mut epochs = vec![];
     let mut trace = vec![];
@@ -87,6 +89,10 @@ pub fn train(
     let mut step_time = 0.0f64;
 
     for epoch in 0..cfg.epochs {
+        // the LR this epoch *starts* at — recorded in the epoch row
+        // (reading the schedule after the loop would report the next
+        // epoch's first-step LR, a value no step this epoch used)
+        let epoch_lr = sched.lr(step);
         let mut ep_loss = 0.0f64;
         let mut ep_correct = 0.0f64;
         let mut ep_batches = 0usize;
@@ -95,14 +101,7 @@ pub fn train(
             let lr = sched.lr(step) as f32;
             let (k_w, k_a) = controller.bits();
             let ts = Instant::now();
-            let m = rt.train_step(
-                state,
-                &batch,
-                lr,
-                bitwidth_scale(k_w),
-                bitwidth_scale(k_a),
-                cfg.fp32,
-            )?;
+            let m = backend.train_step(state, &batch, lr, k_w, k_a, cfg.fp32)?;
             step_time += ts.elapsed().as_secs_f64();
             anyhow::ensure!(
                 m.loss.is_finite(),
@@ -119,12 +118,7 @@ pub fn train(
                 let requests = controller.probes();
                 let mut probe_losses = Vec::with_capacity(requests.len());
                 for p in &requests {
-                    let pm = rt.probe_loss(
-                        state,
-                        &batch,
-                        bitwidth_scale(p.k_w),
-                        bitwidth_scale(p.k_a),
-                    )?;
+                    let pm = backend.probe_loss(state, &batch, p.k_w, p.k_a)?;
                     probe_losses.push(pm.loss as f64);
                 }
                 controller.update(m.loss as f64, &probe_losses);
@@ -138,7 +132,7 @@ pub fn train(
                     k_w: k_w2,
                     k_a: k_a2,
                     train_loss: m.loss as f64,
-                    train_acc: m.correct as f64 / rt.mm.batch as f64,
+                    train_acc: m.correct as f64 / batch_size as f64,
                     osc_w,
                     osc_a,
                 });
@@ -146,13 +140,14 @@ pub fn train(
             step += 1;
         }
 
-        let (test_loss, test_acc) = evaluate(rt, state, test_loader, controller, cfg.fp32)?;
+        let (test_loss, test_acc) =
+            evaluate(backend, state, test_loader, controller, cfg.fp32)?;
         let (k_w, k_a) = controller.bits();
         let rec = EpochRecord {
             epoch,
-            lr: sched.lr(step),
+            lr: epoch_lr,
             train_loss: ep_loss / ep_batches.max(1) as f64,
-            train_acc: ep_correct / (ep_batches.max(1) * rt.mm.batch) as f64,
+            train_acc: ep_correct / (ep_batches.max(1) * batch_size) as f64,
             test_loss,
             test_acc,
             k_w,
@@ -187,9 +182,9 @@ pub fn train(
     })
 }
 
-/// Run the eval graph over the whole test loader; returns (loss, top-1).
+/// Run the eval pass over the whole test loader; returns (loss, top-1).
 pub fn evaluate(
-    rt: &ModelRuntime,
+    backend: &dyn StepBackend,
     state: &TrainState,
     test_loader: &Loader,
     controller: &dyn Controller,
@@ -200,33 +195,27 @@ pub fn evaluate(
     let mut correct = 0.0f64;
     let mut batches = 0usize;
     for batch in test_loader.epoch(0) {
-        let m: StepMetrics = rt.eval_batch(
-            state,
-            &batch,
-            bitwidth_scale(k_w),
-            bitwidth_scale(k_a),
-            fp32,
-        )?;
+        let m: StepMetrics = backend.eval_batch(state, &batch, k_w, k_a, fp32)?;
         loss += m.loss as f64;
         correct += m.correct as f64;
         batches += 1;
     }
-    let n = (batches * rt.mm.batch) as f64;
+    let n = (batches * backend.mm().batch) as f64;
     Ok((loss / batches.max(1) as f64, correct / n.max(1.0)))
 }
 
 /// Save model parameters + BN stats under their manifest names.
 pub fn save_checkpoint(
-    rt: &ModelRuntime,
+    backend: &dyn StepBackend,
     state: &TrainState,
     meta: Json,
     path: &Path,
 ) -> anyhow::Result<()> {
     let mut ck = Checkpoint::new(meta);
-    for (spec, t) in rt.mm.params.iter().zip(&state.params) {
+    for (spec, t) in backend.mm().params.iter().zip(&state.params) {
         ck.push(spec.name.clone(), t.clone());
     }
-    for (spec, t) in rt.mm.bn.iter().zip(&state.bn) {
+    for (spec, t) in backend.mm().bn.iter().zip(&state.bn) {
         ck.push(spec.name.clone(), t.clone());
     }
     ck.save(path)?;

@@ -8,3 +8,29 @@ pub mod json;
 pub mod logger;
 pub mod prop;
 pub mod rng;
+
+/// FNV-1a offset basis — pair with [`fnv1a_mix`].
+pub const FNV1A_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One FNV-1a accumulation step. The single home of the constants for
+/// every in-repo content fingerprint (eval memo keys, pretrain cache
+/// geometry tags) — not a cryptographic hash.
+pub fn fnv1a_mix(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x100_0000_01b3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_reference_vector() {
+        // FNV-1a over the bytes "a", "b", "c" fed as u64s must be
+        // order-sensitive and nonzero (guards constant typos)
+        let h1 = fnv1a_mix(fnv1a_mix(FNV1A_BASIS, 97), 98);
+        let h2 = fnv1a_mix(fnv1a_mix(FNV1A_BASIS, 98), 97);
+        assert_ne!(h1, h2);
+        // byte-at-a-time FNV-1a of "a" is the published test vector
+        assert_eq!(fnv1a_mix(FNV1A_BASIS, 97), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -43,10 +43,29 @@ impl Rng {
         lo + (hi - lo) * self.uniform()
     }
 
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n) — exactly uniform for every `n`, via
+    /// Lemire's multiply-shift rejection (the plain `next_u64() % n`
+    /// this replaces over-weights small residues; negligible for tiny
+    /// `n`, but a shuffle/augmentation substrate should be unbiased by
+    /// construction, and near large power-of-two boundaries the modulo
+    /// bias is gross — see `below_unbiased_near_power_of_two_boundary`).
     pub fn below(&mut self, n: usize) -> usize {
         debug_assert!(n > 0);
-        (self.next_u64() % n as u64) as usize
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let lo = m as u64;
+            if lo < n {
+                // threshold = 2^64 mod n; draws with lo below it sit in
+                // the truncated final stripe and must be rejected
+                let threshold = n.wrapping_neg() % n;
+                if lo < threshold {
+                    continue;
+                }
+            }
+            return (m >> 64) as usize;
+        }
     }
 
     /// Standard normal via Box-Muller.
@@ -139,5 +158,44 @@ mod tests {
         for _ in 0..1000 {
             assert!(r.below(7) < 7);
         }
+        // n = 1 must not loop or panic
+        assert_eq!(r.below(1), 0);
+    }
+
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn below_unbiased_near_power_of_two_boundary() {
+        // n = 3·2^62: modulo reduction would map two full u64 stripes
+        // onto [0, n/3) and only one onto the rest, so P(x < n/3) would
+        // be 1/2. Unbiased sampling gives 1/3 — a ~20σ separation at
+        // this sample count, so the test cannot pass by luck.
+        let n: usize = 3usize << 62;
+        let mut r = Rng::new(123);
+        let draws = 5000usize;
+        let lo_third = (0..draws).filter(|_| r.below(n) < n / 3).count();
+        let frac = lo_third as f64 / draws as f64;
+        assert!(
+            (frac - 1.0 / 3.0).abs() < 0.035,
+            "P(x < n/3) = {frac}, want 1/3 (modulo bias gives 1/2)"
+        );
+    }
+
+    #[test]
+    fn below_small_n_roughly_uniform() {
+        // chi-square sanity at a small n (this also held pre-Lemire;
+        // it pins the new path's uniformity, not just its bounds)
+        let mut r = Rng::new(77);
+        let mut counts = [0usize; 7];
+        let draws = 70_000;
+        for _ in 0..draws {
+            counts[r.below(7)] += 1;
+        }
+        let expect = draws as f64 / 7.0;
+        let chi2: f64 = counts
+            .iter()
+            .map(|&c| (c as f64 - expect).powi(2) / expect)
+            .sum();
+        // df = 6; P(chi2 > 22.5) < 0.001
+        assert!(chi2 < 22.5, "chi2 {chi2}, counts {counts:?}");
     }
 }

@@ -27,4 +27,10 @@ echo "== kernels bench: emit BENCH_kernels.json =="
 cargo bench --bench kernels -- --iters 3 --out ../BENCH_kernels.json
 test -s ../BENCH_kernels.json
 
+echo "== native training bench: emit BENCH_train_native.json =="
+# steps/sec of the pure-Rust train step at k in {2,4,8} vs fp32
+# (DESIGN.md §12); runs fully offline, like the kernels sweep
+cargo bench --bench train_native -- --steps 20 --out ../BENCH_train_native.json
+test -s ../BENCH_train_native.json
+
 echo "verify: OK"
