@@ -1,0 +1,272 @@
+//! Integer conv serving sweep (DESIGN.md §13): direct-f32 convolution
+//! vs the im2col + integer-GEMM conv kernels over k_w ∈ {2,4,8} ×
+//! batch ∈ {1,8,32} on the native smallcnn, written to
+//! `BENCH_conv_native.json` by `scripts/verify.sh` so the conv path has
+//! a perf trajectory alongside `BENCH_kernels.json` and
+//! `BENCH_train_native.json` — and a ratio (`speedup_vs_direct`) the
+//! bench-regression gate (`scripts/check_bench.sh`) can compare across
+//! machines.
+//!
+//! Two forward paths per (k, batch) cell:
+//! * `direct` — the math serving would do without the kernel engine:
+//!   dequantized f32 kernels walked directly over the image (nested
+//!   ky/kx/c loops, bounds checks), folded BN, ReLU, 2×2 pool, strided
+//!   f32 fc head;
+//! * `quant` — [`QuantConvNet`]: im2col patches, per-patch activation
+//!   quantization at k_a = 8, i8 codes, exact i32 accumulation, BN in
+//!   the f64 epilogue.
+//!
+//! Runs fully offline — no artifacts, no PJRT.
+//!
+//! ```bash
+//! cargo bench --bench conv_native
+//! cargo bench --bench conv_native -- --iters 5 --image_hw 32 --out BENCH_conv_native.json
+//! ```
+
+use std::path::PathBuf;
+
+use adaqat::backprop::ConvNativeBackend;
+use adaqat::data::{synth, DatasetKind};
+use adaqat::kernels::conv::fold_bn;
+use adaqat::kernels::QuantConvNet;
+use adaqat::metrics::Table;
+use adaqat::runtime::StepBackend;
+use adaqat::serve::QuantizedCheckpoint;
+use adaqat::util::bench::{bench_args, measure};
+use adaqat::util::json::Json;
+
+/// The pre-kernels conv math, kept as the baseline under test:
+/// dequantized f32 kernels in checkpoint layout, direct convolution.
+struct DirectLayer {
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    /// `[3, 3, cin, cout]` dequantized.
+    weights: Vec<f32>,
+    gain: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+struct DirectNet {
+    layers: Vec<DirectLayer>,
+    fcw: Vec<f32>,
+    fcb: Vec<f32>,
+    flat: usize,
+    classes: usize,
+}
+
+impl DirectNet {
+    fn from_packed(q: &QuantizedCheckpoint, conv_names: &[String]) -> DirectNet {
+        let hw = q.meta.get("input_hw").and_then(|j| j.as_arr()).expect("input_hw");
+        let (mut h, mut w) = (hw[0].as_usize().unwrap(), hw[1].as_usize().unwrap());
+        let mut c = q.meta.get("in_channels").and_then(|j| j.as_usize()).expect("in_channels");
+        let mut layers = vec![];
+        for name in conv_names {
+            let wt = q.get(&format!("{name}.w")).expect("conv weight");
+            let cout = wt.shape[3];
+            let (gain, bias) = fold_bn(
+                &q.get(&format!("{name}.bn.g")).unwrap().dequantize().data,
+                &q.get(&format!("{name}.bn.b")).unwrap().dequantize().data,
+                &q.get(&format!("{name}.bn.mean")).unwrap().dequantize().data,
+                &q.get(&format!("{name}.bn.var")).unwrap().dequantize().data,
+            );
+            layers.push(DirectLayer {
+                h,
+                w,
+                cin: c,
+                cout,
+                weights: wt.dequantize().data,
+                gain,
+                bias,
+            });
+            h /= 2;
+            w /= 2;
+            c = cout;
+        }
+        let fcw = q.get("fc1.w").expect("fc1.w");
+        DirectNet {
+            flat: fcw.shape[0],
+            classes: fcw.shape[1],
+            fcw: fcw.dequantize().data,
+            fcb: q.get("fc1.b").expect("fc1.b").dequantize().data,
+            layers,
+        }
+    }
+
+    fn forward(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut cur = x.to_vec();
+        for l in &self.layers {
+            let (h, w, cin, cout) = (l.h, l.w, l.cin, l.cout);
+            let mut z = vec![0.0f32; rows * h * w * cout];
+            for r in 0..rows {
+                let img = &cur[r * h * w * cin..(r + 1) * h * w * cin];
+                for oy in 0..h {
+                    for ox in 0..w {
+                        let o0 = ((r * h + oy) * w + ox) * cout;
+                        for o in 0..cout {
+                            let mut acc = 0.0f32;
+                            for ky in 0..3usize {
+                                let iy = (oy + ky) as isize - 1;
+                                if iy < 0 || iy >= h as isize {
+                                    continue;
+                                }
+                                for kx in 0..3usize {
+                                    let ix = (ox + kx) as isize - 1;
+                                    if ix < 0 || ix >= w as isize {
+                                        continue;
+                                    }
+                                    let src = (iy as usize * w + ix as usize) * cin;
+                                    let wk = ((ky * 3 + kx) * cin) * cout + o;
+                                    for ci in 0..cin {
+                                        acc += img[src + ci] * l.weights[wk + ci * cout];
+                                    }
+                                }
+                            }
+                            let v = acc * l.gain[o] + l.bias[o];
+                            z[o0 + o] = if v < 0.0 { 0.0 } else { v };
+                        }
+                    }
+                }
+            }
+            // 2x2 average pool
+            let (ph, pw) = (h / 2, w / 2);
+            let mut pooled = vec![0.0f32; rows * ph * pw * cout];
+            for r in 0..rows {
+                let img = &z[r * h * w * cout..(r + 1) * h * w * cout];
+                for py in 0..ph {
+                    for px in 0..pw {
+                        let d0 = ((r * ph + py) * pw + px) * cout;
+                        let i00 = ((2 * py) * w + 2 * px) * cout;
+                        for ch in 0..cout {
+                            pooled[d0 + ch] = 0.25
+                                * (img[i00 + ch]
+                                    + img[i00 + cout + ch]
+                                    + img[i00 + w * cout + ch]
+                                    + img[i00 + w * cout + cout + ch]);
+                        }
+                    }
+                }
+            }
+            cur = pooled;
+        }
+        let mut logits = vec![0.0f32; rows * self.classes];
+        for r in 0..rows {
+            let xr = &cur[r * self.flat..(r + 1) * self.flat];
+            let orow = &mut logits[r * self.classes..(r + 1) * self.classes];
+            orow.copy_from_slice(&self.fcb);
+            for (i, &xv) in xr.iter().enumerate() {
+                for (o, &wv) in orow.iter_mut().zip(&self.fcw[i * self.classes..]) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        logits
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    adaqat::util::logger::init();
+    let args = bench_args();
+    // `cargo test --benches` runs this binary unoptimized (the bench
+    // smoke in scripts/verify.sh): smoke-scale iteration counts there,
+    // full scale under `cargo bench`.
+    let (def_iters, def_warmup) = if cfg!(debug_assertions) { (1usize, 0usize) } else { (3, 1) };
+    let iters: usize = args.get("iters", def_iters).map_err(|e| anyhow::anyhow!(e))?;
+    let warmup: usize = args.get("warmup", def_warmup).map_err(|e| anyhow::anyhow!(e))?;
+    let hw: usize = args.get("image_hw", 16).map_err(|e| anyhow::anyhow!(e))?;
+    let out = PathBuf::from(args.get_str("out", "../BENCH_conv_native.json"));
+    let channels = vec![8usize, 16];
+
+    let ks = [2u32, 4, 8];
+    let batches = [1usize, 8, 32];
+
+    // a native conv trainer state, packed exactly as `adaqat export`
+    // packs it — the same flow the serve path consumes
+    let trainer = ConvNativeBackend::new(8, hw, 3, 10, &channels)?;
+    let state = trainer.init_state(0)?;
+    let ck = trainer.to_checkpoint(&state, 8);
+    let conv_names = trainer.conv_layer_names();
+
+    let ds = synth::generate_sized(DatasetKind::Cifar10, 32, 3, 1, hw, hw);
+    let d = ds.sample_numel();
+    let mut x = vec![0.0f32; 32 * d];
+    for i in 0..32 {
+        x[i * d..(i + 1) * d].copy_from_slice(ds.image(i));
+    }
+
+    println!(
+        "=== integer conv vs direct f32 (smallcnn {hw}x{hw}x3, channels {channels:?}, k_a=8) ==="
+    );
+    let mut table = Table::new(&[
+        "k_w", "batch", "direct ms", "quant ms", "speedup", "img/s (quant)",
+    ]);
+    let mut rows_json: Vec<Json> = vec![];
+
+    for &k in &ks {
+        let q = QuantizedCheckpoint::from_checkpoint(&ck, k, |n| n.ends_with(".w"));
+        let quant = QuantConvNet::from_packed(&q)?;
+        anyhow::ensure!(
+            quant.conv.iter().all(|l| l.gemm.is_integer()),
+            "k={k}: expected the integer conv path"
+        );
+        let direct = DirectNet::from_packed(&q, &conv_names);
+        // sanity: both paths produce finite logits of the right shape
+        // (bit-exact serving-vs-trainer equality is pinned by
+        // tests/conv_native.rs — the two paths here deliberately differ
+        // in activation quantization, so argmax can diverge on ties)
+        let la = quant.forward(&x[..4 * d], 4, 1);
+        let lb = direct.forward(&x[..4 * d], 4);
+        anyhow::ensure!(la.len() == 40 && lb.len() == 40, "k={k}: bad logit shape");
+        anyhow::ensure!(
+            la.iter().chain(&lb).all(|v| v.is_finite()),
+            "k={k}: non-finite logits"
+        );
+
+        for &batch in &batches {
+            let xb = &x[..batch * d];
+            let s_direct = measure(warmup, iters, || {
+                std::hint::black_box(direct.forward(xb, batch));
+            });
+            let s_quant = measure(warmup, iters, || {
+                std::hint::black_box(quant.forward(xb, batch, 1));
+            });
+            let speedup = s_direct.p50_ms / s_quant.p50_ms;
+            let img_s = batch as f64 / (s_quant.p50_ms / 1e3);
+            table.row(vec![
+                k.to_string(),
+                batch.to_string(),
+                format!("{:.3}", s_direct.p50_ms),
+                format!("{:.3}", s_quant.p50_ms),
+                format!("{speedup:.2}x"),
+                format!("{img_s:.0}"),
+            ]);
+            rows_json.push(Json::obj(vec![
+                ("k_w", Json::num(k as f64)),
+                ("k_a", Json::num(8.0)),
+                ("batch", Json::num(batch as f64)),
+                ("direct_ms", Json::num(s_direct.p50_ms)),
+                ("quant_ms", Json::num(s_quant.p50_ms)),
+                ("speedup_vs_direct", Json::num(speedup)),
+                ("images_per_sec", Json::num(img_s)),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("conv_native")),
+        ("model", Json::str("native-smallcnn")),
+        ("image_hw", Json::num(hw as f64)),
+        (
+            "channels",
+            Json::Arr(channels.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+        ("classes", Json::num(10.0)),
+        ("iters", Json::num(iters as f64)),
+        ("results", Json::Arr(rows_json)),
+    ]);
+    std::fs::write(&out, doc.to_string())?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -65,7 +65,11 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let (k_w, k_a) = result.final_bits;
-    println!("\noscillations observed: W={} A={}", result.trace.last().map(|t| t.osc_w).unwrap_or(0), result.trace.last().map(|t| t.osc_a).unwrap_or(0));
+    println!(
+        "\noscillations observed: W={} A={}",
+        result.trace.last().map(|t| t.osc_w).unwrap_or(0),
+        result.trace.last().map(|t| t.osc_a).unwrap_or(0)
+    );
     match freeze_step_w {
         Some(s) => println!("weight bit-width froze at step {s} (threshold 6)"),
         None => println!("weight bit-width did not freeze in this budget (raise --epochs)"),

@@ -59,6 +59,9 @@ fn main() -> anyhow::Result<()> {
         eta_a: Option<f64>,
         lambda: f64,
     }
+    // one row per Table-I line: kept one-per-line for side-by-side
+    // readability, which is worth more than rustfmt's 8-line explosion
+    #[rustfmt::skip]
     let rows = vec![
         Row { label: "baseline fp32", ctl: ControllerKind::Fixed { k_w: 32, k_a: 32 }, scenario: ft(), fp32: true, init_na: 32.0, eta_a: None, lambda: 0.15 },
         Row { label: "static 2/32 scratch  [DoReFa]", ctl: ControllerKind::Fixed { k_w: 2, k_a: 32 }, scenario: Scenario::Scratch, fp32: false, init_na: 32.0, eta_a: None, lambda: 0.15 },

@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
         Experiment::new(&model, cfg)?.run()?.test_top1 * 100.0
     };
 
+    #[rustfmt::skip]
     let rows: Vec<(&str, ControllerKind, f64)> = vec![
         ("static 4/4 finetune [DoReFa/PACT/LQ-Net]", ControllerKind::Fixed { k_w: 4, k_a: 4 }, 0.15),
         ("sched 4/4 finetune  [FracBits]", ControllerKind::FracBits { k_w_target: 4, k_a_target: 4 }, 0.15),

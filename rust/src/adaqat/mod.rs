@@ -190,14 +190,24 @@ impl Controller for AdaQatController {
         // documented in DESIGN.md §10).
         if self.w.frozen.is_none() {
             if self.w.floor() != kw {
-                probes.push(ProbeRequest { axis: Axis::Weights, k_w: self.w.floor(), k_a: ka, up: false });
+                probes.push(ProbeRequest {
+                    axis: Axis::Weights,
+                    k_w: self.w.floor(),
+                    k_a: ka,
+                    up: false,
+                });
             } else if self.w.n <= 1.0 {
                 probes.push(ProbeRequest { axis: Axis::Weights, k_w: 2, k_a: ka, up: true });
             }
         }
         if self.a.frozen.is_none() {
             if self.a.floor() != ka {
-                probes.push(ProbeRequest { axis: Axis::Activations, k_w: kw, k_a: self.a.floor(), up: false });
+                probes.push(ProbeRequest {
+                    axis: Axis::Activations,
+                    k_w: kw,
+                    k_a: self.a.floor(),
+                    up: false,
+                });
             } else if self.a.n <= 1.0 {
                 probes.push(ProbeRequest { axis: Axis::Activations, k_w: kw, k_a: 2, up: true });
             }

@@ -1,0 +1,1032 @@
+//! Pure-Rust quantized conv training — the smallcnn half of the native
+//! backend (DESIGN.md §13).
+//!
+//! Until this module, the native backend trained fc stacks only: the
+//! paper's headline models are CNNs, so the conv architectures still
+//! hard-required PJRT artifacts and the full AdaQAT controller had never
+//! driven a conv net in CI. [`ConvNativeBackend`] closes that gap — the
+//! third [`StepBackend`]: conv→BN→ReLU→pool blocks plus an fc head,
+//! trained entirely in-process with the same offline closure the MLP
+//! backend established (train → export → serve, zero artifacts).
+//!
+//! Mechanics, mirroring the MLP backend wherever the two overlap:
+//! * **conv forward** — im2col ([`crate::kernels::conv::im2col`], shared
+//!   with the serving kernels) turns each conv into a GEMM over patch
+//!   rows; weights fake-quantize per tensor on the packed grid
+//!   ([`fake_quantize_tensor`]), activations per *patch row* at k_a
+//!   ([`crate::kernels::activ::fake_quantize_row`]) — the identical
+//!   quantizer placement the integer serving kernels evaluate, so the
+//!   training forward and a served checkpoint agree to accumulation
+//!   rounding.
+//! * **batch-norm** — training mode normalizes with batch statistics
+//!   over (batch × positions) per channel (ε = [`BN_EPS`], shared with
+//!   the serving fold) and updates the running mean/var held in
+//!   `TrainState::bn`; the backward pass is the full batch-stat BN
+//!   gradient (not a straight-through shortcut).
+//! * **backward** — straight-through through both quantizers, ReLU
+//!   gated by its forward output, 2×2 avg-pool distributing δ/4,
+//!   weight gradients from the quantized patches (`x̂ᵀδ`), input
+//!   gradients through the quantized kernels scattered back by
+//!   `col2im`. SGD + momentum 0.9, weight decay 1e-4 on `.w` only —
+//!   the same optimizer contract as every other backend.
+//! * **evaluation** — packs the live weights exactly as `adaqat export`
+//!   would and runs the integer conv kernels
+//!   ([`crate::kernels::conv::QuantConvNet`]), so trainer eval and the
+//!   served model are the *same numbers*; `tests/conv_native.rs`
+//!   asserts every served prediction matches.
+
+use std::cell::{Cell, RefCell};
+
+use crate::config::ExperimentConfig;
+use crate::data::DatasetKind;
+use crate::kernels::activ;
+use crate::kernels::conv::{avgpool2x2, im2col, ConvGeom, QuantConvNet, BN_EPS};
+use crate::runtime::{
+    init_state_from_manifest, load_state_from_manifest, Batch, ModelManifest, StepBackend,
+    StepMetrics, TrainState,
+};
+use crate::serve::packed::{PackedTensor, QuantizedCheckpoint};
+use crate::tensor::checkpoint::Checkpoint;
+use crate::util::json::Json;
+
+use super::manifest::native_smallcnn_manifest;
+use super::{fake_quantize_tensor, softmax_metrics, MOMENTUM, WEIGHT_DECAY};
+
+/// Running-statistics update rate: `r ← (1 − m)·r + m·batch`, the
+/// conventional BN momentum.
+pub const BN_MOMENTUM: f32 = 0.1;
+
+/// Everything one conv forward pass leaves behind for the backward
+/// pass. Per block, buffers are laid out over `prows = batch·h·w` patch
+/// rows of that block's (pre-pool) resolution.
+struct ConvForwardPass {
+    /// Per block: the im2col rows the GEMM consumed (fake-quantized at
+    /// k_a when quantizing, raw otherwise), `[prows × patch_len]`.
+    patches: Vec<Vec<f32>>,
+    /// Per block: fake-quantized conv kernel (`[patch_len · c_out]`
+    /// flat), `None` = the raw weights in `TrainState` were used.
+    wq: Vec<Option<Vec<f32>>>,
+    /// Per block: batch statistics the BN normalized with.
+    bn_mean: Vec<Vec<f32>>,
+    bn_var: Vec<Vec<f32>>,
+    /// Per block: 1/√(σ² + ε) per channel.
+    inv_std: Vec<Vec<f32>>,
+    /// Per block: normalized pre-scale activations, `[prows × c_out]`.
+    xhat: Vec<Vec<f32>>,
+    /// Per block: post-ReLU (pre-pool) activations, `[prows × c_out]`.
+    relu: Vec<Vec<f32>>,
+    /// Per block: pooled block output, `[rows × h/2 × w/2 × c_out]`.
+    out: Vec<Vec<f32>>,
+    /// Fake-quantized fc input rows (`None` = last pooled output used).
+    flat_q: Option<Vec<f32>>,
+    /// Fake-quantized fc weights (`None` = raw).
+    fc_wq: Option<Vec<f32>>,
+    probs: Vec<f32>,
+    loss: f64,
+    correct: usize,
+}
+
+/// A memoized serving model, keyed on (weights + BN stats, bit-widths):
+/// the conv analogue of the MLP backend's eval memo. BN statistics are
+/// part of the key because the folded inference epilogue bakes them in.
+struct ConvEvalCache {
+    fingerprint: u64,
+    k_w: u32,
+    k_a: u32,
+    net: QuantConvNet,
+}
+
+/// The native smallcnn trainer. Geometry lives here; all training state
+/// lives in the caller's [`TrainState`], like every other backend.
+pub struct ConvNativeBackend {
+    mm: ModelManifest,
+    /// Per conv block: the input-side geometry (3×3, stride 1, same
+    /// pad; output spatial == input spatial, then a 2×2 pool).
+    blocks: Vec<ConvGeom>,
+    /// fc head (flat_in, classes).
+    fc: (usize, usize),
+    eval_cache: RefCell<Option<ConvEvalCache>>,
+    /// How many times the eval memo was (re)built — pinned by tests.
+    eval_builds: Cell<usize>,
+}
+
+/// FNV-1a over parameters *and* BN statistics — the eval-memo key. The
+/// MLP backend hashes parameters only; here the running stats feed the
+/// folded serving epilogue, so they must invalidate the memo too.
+fn state_fingerprint(state: &TrainState) -> u64 {
+    let mut h = crate::util::FNV1A_BASIS;
+    for t in state.params.iter().chain(&state.bn) {
+        for &v in &t.data {
+            h = crate::util::fnv1a_mix(h, v.to_bits() as u64);
+        }
+    }
+    h
+}
+
+/// Scatter-add im2col-row gradients back onto the input grid — the
+/// exact adjoint of [`im2col`] (training-only, so it lives here rather
+/// than with the serving kernels).
+fn col2im(dp: &[f32], rows: usize, g: &ConvGeom, out: &mut [f32]) {
+    let (oh, ow) = g.out_hw();
+    let k = g.patch_len();
+    assert_eq!(dp.len(), rows * oh * ow * k);
+    assert_eq!(out.len(), rows * g.h * g.w * g.c_in);
+    out.fill(0.0);
+    let c = g.c_in;
+    for r in 0..rows {
+        let img = &mut out[r * g.h * g.w * c..(r + 1) * g.h * g.w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row0 = ((r * oh + oy) * ow + ox) * k;
+                for ky in 0..g.kh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let dst = (iy as usize * g.w + ix as usize) * c;
+                        let src = row0 + (ky * g.kw + kx) * c;
+                        for ch in 0..c {
+                            img[dst + ch] += dp[src + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl ConvNativeBackend {
+    pub fn new(
+        batch: usize,
+        hw: usize,
+        in_channels: usize,
+        classes: usize,
+        channels: &[usize],
+    ) -> anyhow::Result<ConvNativeBackend> {
+        let mm = native_smallcnn_manifest(batch, hw, in_channels, classes, channels)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let mut blocks = Vec::with_capacity(channels.len());
+        let mut side = hw;
+        let mut c_in = in_channels;
+        for &c_out in channels {
+            blocks.push(ConvGeom {
+                h: side,
+                w: side,
+                c_in,
+                c_out,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            });
+            side /= 2;
+            c_in = c_out;
+        }
+        let fc = (side * side * c_in, classes);
+        Ok(ConvNativeBackend {
+            mm,
+            blocks,
+            fc,
+            eval_cache: RefCell::new(None),
+            eval_builds: Cell::new(0),
+        })
+    }
+
+    /// Build from an [`ExperimentConfig`] (`backend = "native"`, a conv
+    /// model key): the synthetic dataset fixes channels/classes,
+    /// `image_hw`/`channels`/`batch` fix the geometry.
+    pub fn from_config(cfg: &ExperimentConfig) -> anyhow::Result<ConvNativeBackend> {
+        let kind = DatasetKind::parse(&cfg.dataset).map_err(|e| anyhow::anyhow!(e))?;
+        ConvNativeBackend::new(cfg.batch, cfg.image_hw, 3, kind.num_classes(), &cfg.channels)
+    }
+
+    /// Conv block names in `conv_layers` order (`conv1`, `conv2`, …).
+    pub fn conv_layer_names(&self) -> Vec<String> {
+        (1..=self.blocks.len()).map(|i| format!("conv{i}")).collect()
+    }
+
+    fn check_batch(&self, batch: &Batch) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            batch.x.shape
+                == vec![
+                    self.mm.batch,
+                    self.mm.input_hw.0,
+                    self.mm.input_hw.1,
+                    self.mm.in_channels
+                ],
+            "native conv backend: batch x shape {:?} does not match manifest batch {}",
+            batch.x.shape,
+            self.mm.batch
+        );
+        anyhow::ensure!(
+            batch.y.shape == vec![self.mm.batch],
+            "native conv backend: bad y shape"
+        );
+        Ok(())
+    }
+
+    /// The training/probe forward: batch-stat BN, fake-quant at
+    /// (k_w, k_a) when `quant` (same width thresholds as the MLP
+    /// backend: weights 1..=24, activations < 24), plain f32 otherwise.
+    fn forward(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+        quant: bool,
+    ) -> ConvForwardPass {
+        let rows = self.mm.batch;
+        let nb = self.blocks.len();
+        let mut patches = Vec::with_capacity(nb);
+        let mut wqs = Vec::with_capacity(nb);
+        let mut bn_mean = Vec::with_capacity(nb);
+        let mut bn_var = Vec::with_capacity(nb);
+        let mut inv_stds = Vec::with_capacity(nb);
+        let mut xhats = Vec::with_capacity(nb);
+        let mut relus = Vec::with_capacity(nb);
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(nb);
+
+        for (l, g) in self.blocks.iter().enumerate() {
+            let src: &[f32] = if l == 0 { &batch.x.data } else { &outs[l - 1] };
+            let (oh, ow) = g.out_hw();
+            let k = g.patch_len();
+            let cout = g.c_out;
+            let prows = rows * oh * ow;
+            let mut p = vec![0.0f32; prows * k];
+            im2col(src, rows, g, &mut p);
+            if quant && k_a < 24 {
+                for r in 0..prows {
+                    activ::fake_quantize_row(&mut p[r * k..(r + 1) * k], k_a);
+                }
+            }
+            let w = &state.params[3 * l].data;
+            let wql = if quant && (1..=24).contains(&k_w) {
+                let mut q = vec![0.0f32; w.len()];
+                fake_quantize_tensor(w, k_w, &mut q);
+                Some(q)
+            } else {
+                None
+            };
+            let win: &[f32] = wql.as_deref().unwrap_or(w);
+            // z = patches × W  (no conv bias; BN supplies the shift)
+            let mut z = vec![0.0f32; prows * cout];
+            for r in 0..prows {
+                let xrow = &p[r * k..(r + 1) * k];
+                let orow = &mut z[r * cout..(r + 1) * cout];
+                for (i, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (o, &wv) in orow.iter_mut().zip(&win[i * cout..(i + 1) * cout]) {
+                        *o += xv * wv;
+                    }
+                }
+            }
+            // batch-stat BN (two-pass, f64 accumulation per channel)
+            let n = prows as f64;
+            let mut mean = vec![0.0f32; cout];
+            let mut var = vec![0.0f32; cout];
+            let mut acc = vec![0.0f64; cout];
+            for r in 0..prows {
+                for (a, &v) in acc.iter_mut().zip(&z[r * cout..(r + 1) * cout]) {
+                    *a += v as f64;
+                }
+            }
+            for (m, &a) in mean.iter_mut().zip(&acc) {
+                *m = (a / n) as f32;
+            }
+            acc.fill(0.0);
+            for r in 0..prows {
+                for (o, (a, &v)) in acc.iter_mut().zip(&z[r * cout..(r + 1) * cout]).enumerate()
+                {
+                    let d = (v - mean[o]) as f64;
+                    *a += d * d;
+                }
+            }
+            for (v, &a) in var.iter_mut().zip(&acc) {
+                *v = (a / n) as f32;
+            }
+            let mut inv_std = vec![0.0f32; cout];
+            for (s, &v) in inv_std.iter_mut().zip(&var) {
+                *s = 1.0 / (v + BN_EPS).sqrt();
+            }
+            let gamma = &state.params[3 * l + 1].data;
+            let beta = &state.params[3 * l + 2].data;
+            let mut xhat = vec![0.0f32; prows * cout];
+            let mut y = vec![0.0f32; prows * cout];
+            for r in 0..prows {
+                for o in 0..cout {
+                    let xh = (z[r * cout + o] - mean[o]) * inv_std[o];
+                    xhat[r * cout + o] = xh;
+                    let v = gamma[o] * xh + beta[o];
+                    y[r * cout + o] = if v < 0.0 { 0.0 } else { v };
+                }
+            }
+            let pooled = avgpool2x2(&y, rows, oh, ow, cout);
+            patches.push(p);
+            wqs.push(wql);
+            bn_mean.push(mean);
+            bn_var.push(var);
+            inv_stds.push(inv_std);
+            xhats.push(xhat);
+            relus.push(y);
+            outs.push(pooled);
+        }
+
+        // fc head over the flattened (NHWC) pooled features
+        let (flat, classes) = self.fc;
+        let flat_q = if quant && k_a < 24 {
+            let mut q = outs[nb - 1].clone();
+            for r in 0..rows {
+                activ::fake_quantize_row(&mut q[r * flat..(r + 1) * flat], k_a);
+            }
+            Some(q)
+        } else {
+            None
+        };
+        let fcw = &state.params[3 * nb].data;
+        let fc_wq = if quant && (1..=24).contains(&k_w) {
+            let mut q = vec![0.0f32; fcw.len()];
+            fake_quantize_tensor(fcw, k_w, &mut q);
+            Some(q)
+        } else {
+            None
+        };
+        let fcb = &state.params[3 * nb + 1].data;
+        let xin: &[f32] = flat_q.as_deref().unwrap_or(&outs[nb - 1]);
+        let win: &[f32] = fc_wq.as_deref().unwrap_or(fcw);
+        let mut logits = vec![0.0f32; rows * classes];
+        for r in 0..rows {
+            let xrow = &xin[r * flat..(r + 1) * flat];
+            let orow = &mut logits[r * classes..(r + 1) * classes];
+            orow.copy_from_slice(fcb);
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                for (o, &wv) in orow.iter_mut().zip(&win[i * classes..(i + 1) * classes]) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        let (loss, correct, probs) = softmax_metrics(&logits, &batch.y.data, rows, classes);
+        ConvForwardPass {
+            patches,
+            wq: wqs,
+            bn_mean,
+            bn_var,
+            inv_std: inv_stds,
+            xhat: xhats,
+            relu: relus,
+            out: outs,
+            flat_q,
+            fc_wq,
+            probs,
+            loss,
+            correct,
+        }
+    }
+
+    /// STE backward + SGD-with-momentum update. Quantizers are
+    /// straight-through; BN backward is the full batch-statistics
+    /// gradient; pooling distributes δ/4; weight decay on `.w` only.
+    fn backward_update(
+        &self,
+        state: &mut TrainState,
+        fwd: &ConvForwardPass,
+        batch: &Batch,
+        lr: f32,
+    ) {
+        let rows = self.mm.batch;
+        let nb = self.blocks.len();
+        let (flat, classes) = self.fc;
+
+        // δ at the logits: (softmax − one-hot) / rows
+        let mut delta: Vec<f32> = fwd.probs.clone();
+        for r in 0..rows {
+            delta[r * classes + batch.y.data[r] as usize] -= 1.0;
+        }
+        let inv_rows = 1.0 / rows as f32;
+        for v in delta.iter_mut() {
+            *v *= inv_rows;
+        }
+
+        // ---- fc head
+        let xh: &[f32] = fwd.flat_q.as_deref().unwrap_or(&fwd.out[nb - 1]);
+        let mut gw = vec![0.0f32; flat * classes];
+        for r in 0..rows {
+            let xrow = &xh[r * flat..(r + 1) * flat];
+            let drow = &delta[r * classes..(r + 1) * classes];
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                for (g, &dv) in gw[i * classes..(i + 1) * classes].iter_mut().zip(drow) {
+                    *g += xv * dv;
+                }
+            }
+        }
+        for (g, &wv) in gw.iter_mut().zip(&state.params[3 * nb].data) {
+            *g += WEIGHT_DECAY * wv;
+        }
+        let mut gb = vec![0.0f32; classes];
+        for r in 0..rows {
+            for (g, &dv) in gb.iter_mut().zip(&delta[r * classes..(r + 1) * classes]) {
+                *g += dv;
+            }
+        }
+        // δ onto the flattened features, through ŵ (no ReLU here: the
+        // pool output feeds the head directly)
+        let fcw: &[f32] = fwd.fc_wq.as_deref().unwrap_or(&state.params[3 * nb].data);
+        let mut dcur = vec![0.0f32; rows * flat];
+        for r in 0..rows {
+            let drow = &delta[r * classes..(r + 1) * classes];
+            let ndrow = &mut dcur[r * flat..(r + 1) * flat];
+            for (i, nd) in ndrow.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for (&wv, &dv) in fcw[i * classes..(i + 1) * classes].iter().zip(drow) {
+                    s += wv * dv;
+                }
+                *nd = s;
+            }
+        }
+        sgd_update(&mut state.params[3 * nb].data, &mut state.momentum[3 * nb].data, &gw, lr);
+        sgd_update(
+            &mut state.params[3 * nb + 1].data,
+            &mut state.momentum[3 * nb + 1].data,
+            &gb,
+            lr,
+        );
+
+        // ---- conv blocks, last to first
+        for l in (0..nb).rev() {
+            let g = self.blocks[l];
+            let (oh, ow) = g.out_hw();
+            let cout = g.c_out;
+            let prows = rows * oh * ow;
+            let (ph, pw) = (oh / 2, ow / 2);
+
+            // unpool: each pooled δ spreads as δ/4 over its 2×2 window
+            let mut dy = vec![0.0f32; prows * cout];
+            for r in 0..rows {
+                for py in 0..ph {
+                    for px in 0..pw {
+                        let d0 = ((r * ph + py) * pw + px) * cout;
+                        for ch in 0..cout {
+                            let v = 0.25 * dcur[d0 + ch];
+                            let i00 = ((r * oh + 2 * py) * ow + 2 * px) * cout + ch;
+                            dy[i00] = v;
+                            dy[i00 + cout] = v;
+                            dy[i00 + ow * cout] = v;
+                            dy[i00 + ow * cout + cout] = v;
+                        }
+                    }
+                }
+            }
+            // ReLU gate by the forward output
+            for (dv, &rv) in dy.iter_mut().zip(&fwd.relu[l]) {
+                if rv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            // batch-norm backward (batch statistics)
+            let gamma = &state.params[3 * l + 1].data;
+            let inv_std = &fwd.inv_std[l];
+            let xhat = &fwd.xhat[l];
+            let n = prows as f64;
+            let mut sum_dy = vec![0.0f64; cout];
+            let mut sum_dy_xh = vec![0.0f64; cout];
+            for r in 0..prows {
+                for o in 0..cout {
+                    let d = dy[r * cout + o] as f64;
+                    sum_dy[o] += d;
+                    sum_dy_xh[o] += d * xhat[r * cout + o] as f64;
+                }
+            }
+            let ggamma: Vec<f32> = sum_dy_xh.iter().map(|&v| v as f32).collect();
+            let gbeta: Vec<f32> = sum_dy.iter().map(|&v| v as f32).collect();
+            let mut dz = vec![0.0f32; prows * cout];
+            for o in 0..cout {
+                let m1 = (sum_dy[o] / n) as f32;
+                let m2 = (sum_dy_xh[o] / n) as f32;
+                let f = gamma[o] * inv_std[o];
+                for r in 0..prows {
+                    dz[r * cout + o] =
+                        f * (dy[r * cout + o] - m1 - xhat[r * cout + o] * m2);
+                }
+            }
+            // weight gradient x̂ᵀδ over patch rows, then decay on raw w
+            let k = g.patch_len();
+            let mut gwc = vec![0.0f32; k * cout];
+            for r in 0..prows {
+                let xrow = &fwd.patches[l][r * k..(r + 1) * k];
+                let drow = &dz[r * cout..(r + 1) * cout];
+                for (i, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (gv, &dv) in gwc[i * cout..(i + 1) * cout].iter_mut().zip(drow) {
+                        *gv += xv * dv;
+                    }
+                }
+            }
+            for (gv, &wv) in gwc.iter_mut().zip(&state.params[3 * l].data) {
+                *gv += WEIGHT_DECAY * wv;
+            }
+            // input gradient through ŵ, scattered back through im2col
+            if l > 0 {
+                let win: &[f32] = fwd.wq[l].as_deref().unwrap_or(&state.params[3 * l].data);
+                let mut dp = vec![0.0f32; prows * k];
+                for r in 0..prows {
+                    let drow = &dz[r * cout..(r + 1) * cout];
+                    let prow = &mut dp[r * k..(r + 1) * k];
+                    for (i, pv) in prow.iter_mut().enumerate() {
+                        let mut s = 0.0f32;
+                        for (&wv, &dv) in win[i * cout..(i + 1) * cout].iter().zip(drow) {
+                            s += wv * dv;
+                        }
+                        *pv = s;
+                    }
+                }
+                let mut din = vec![0.0f32; rows * g.h * g.w * g.c_in];
+                col2im(&dp, rows, &g, &mut din);
+                dcur = din;
+            }
+            sgd_update(&mut state.params[3 * l].data, &mut state.momentum[3 * l].data, &gwc, lr);
+            sgd_update(
+                &mut state.params[3 * l + 1].data,
+                &mut state.momentum[3 * l + 1].data,
+                &ggamma,
+                lr,
+            );
+            sgd_update(
+                &mut state.params[3 * l + 2].data,
+                &mut state.momentum[3 * l + 2].data,
+                &gbeta,
+                lr,
+            );
+        }
+    }
+
+    /// Assemble a full serving checkpoint for the current state — the
+    /// same tensor set `train::save_checkpoint` writes, with this
+    /// backend's serving meta plus `k_a`. The engine tests and the conv
+    /// bench use this to pack a trainer state exactly like a finished
+    /// `adaqat train` run would.
+    pub fn to_checkpoint(&self, state: &TrainState, k_a: u32) -> Checkpoint {
+        let mut meta = Json::obj(vec![("k_a", Json::num(k_a as f64))]);
+        if let Json::Obj(m) = &mut meta {
+            for (k, v) in self.checkpoint_meta() {
+                m.insert(k, v);
+            }
+        }
+        let mut ck = Checkpoint::new(meta);
+        for (spec, t) in self.mm.params.iter().zip(&state.params) {
+            ck.push(spec.name.clone(), t.clone());
+        }
+        for (spec, t) in self.mm.bn.iter().zip(&state.bn) {
+            ck.push(spec.name.clone(), t.clone());
+        }
+        ck
+    }
+
+    /// Pack the current weights + BN statistics exactly as
+    /// `adaqat export` packs a saved checkpoint and build the integer
+    /// conv kernels — the serving-identical forward.
+    pub fn serving_convnet(
+        &self,
+        state: &TrainState,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<QuantConvNet> {
+        let conv_names = self.conv_layer_names();
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            ("k_a", Json::num(k_a as f64)),
+            (
+                "conv_layers",
+                Json::Arr(conv_names.iter().map(|n| Json::str(n.clone())).collect()),
+            ),
+            ("mlp_layers", Json::Arr(vec![Json::str("fc1")])),
+            (
+                "input_hw",
+                Json::Arr(vec![
+                    Json::num(self.mm.input_hw.0 as f64),
+                    Json::num(self.mm.input_hw.1 as f64),
+                ]),
+            ),
+            ("in_channels", Json::num(self.mm.in_channels as f64)),
+        ]));
+        let pack = |t: &crate::tensor::Tensor| -> PackedTensor {
+            if (1..=24).contains(&k_w) {
+                PackedTensor::quantize(t, k_w)
+            } else {
+                PackedTensor::raw(t)
+            }
+        };
+        for (l, name) in conv_names.iter().enumerate() {
+            q.push(format!("{name}.w"), pack(&state.params[3 * l]));
+            q.push(format!("{name}.bn.g"), PackedTensor::raw(&state.params[3 * l + 1]));
+            q.push(format!("{name}.bn.b"), PackedTensor::raw(&state.params[3 * l + 2]));
+            q.push(format!("{name}.bn.mean"), PackedTensor::raw(&state.bn[2 * l]));
+            q.push(format!("{name}.bn.var"), PackedTensor::raw(&state.bn[2 * l + 1]));
+        }
+        let nb = self.blocks.len();
+        q.push("fc1.w", pack(&state.params[3 * nb]));
+        q.push("fc1.b", PackedTensor::raw(&state.params[3 * nb + 1]));
+        QuantConvNet::from_packed(&q)
+    }
+
+    /// [`ConvNativeBackend::serving_convnet`] behind the
+    /// fingerprint-keyed memo (weights, BN stats, bit-widths).
+    fn cached_serving_convnet(
+        &self,
+        state: &TrainState,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<std::cell::RefMut<'_, QuantConvNet>> {
+        let fp = state_fingerprint(state);
+        let mut cache = self.eval_cache.borrow_mut();
+        let hit = matches!(
+            &*cache,
+            Some(c) if c.fingerprint == fp && c.k_w == k_w && c.k_a == k_a
+        );
+        if !hit {
+            *cache = Some(ConvEvalCache {
+                fingerprint: fp,
+                k_w,
+                k_a,
+                net: self.serving_convnet(state, k_w, k_a)?,
+            });
+            self.eval_builds.set(self.eval_builds.get() + 1);
+        }
+        Ok(std::cell::RefMut::map(cache, |c| {
+            &mut c.as_mut().expect("just populated").net
+        }))
+    }
+
+    /// Serving-identical predictions for `rows` flattened NHWC images —
+    /// what the conv e2e test cross-checks the served model against.
+    pub fn predict(
+        &self,
+        state: &TrainState,
+        x: &[f32],
+        rows: usize,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<Vec<usize>> {
+        Ok(self.cached_serving_convnet(state, k_w, k_a)?.classify(x, rows, 1))
+    }
+}
+
+/// SGD + momentum: `m ← 0.9·m + g; p ← p − lr·m` (the shared optimizer
+/// contract, `backprop::MOMENTUM`).
+fn sgd_update(p: &mut [f32], m: &mut [f32], grad: &[f32], lr: f32) {
+    for ((w, mv), &gv) in p.iter_mut().zip(m.iter_mut()).zip(grad) {
+        *mv = MOMENTUM * *mv + gv;
+        *w -= lr * *mv;
+    }
+}
+
+impl StepBackend for ConvNativeBackend {
+    fn mm(&self) -> &ModelManifest {
+        &self.mm
+    }
+
+    fn init_state(&self, seed: u64) -> anyhow::Result<TrainState> {
+        init_state_from_manifest(&self.mm, seed)
+    }
+
+    fn load_state(&self, ck: &Checkpoint, seed: u64) -> anyhow::Result<TrainState> {
+        load_state_from_manifest(&self.mm, ck, seed)
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        lr: f32,
+        k_w: u32,
+        k_a: u32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        let fwd = self.forward(state, batch, k_w, k_a, !fp32);
+        self.backward_update(state, &fwd, batch, lr);
+        // running statistics move only on real train steps (probes and
+        // evals are forward-only, like the PJRT graphs)
+        for l in 0..self.blocks.len() {
+            for (r, &b) in state.bn[2 * l].data.iter_mut().zip(&fwd.bn_mean[l]) {
+                *r = (1.0 - BN_MOMENTUM) * *r + BN_MOMENTUM * b;
+            }
+            for (r, &b) in state.bn[2 * l + 1].data.iter_mut().zip(&fwd.bn_var[l]) {
+                *r = (1.0 - BN_MOMENTUM) * *r + BN_MOMENTUM * b;
+            }
+        }
+        Ok(StepMetrics { loss: fwd.loss as f32, correct: fwd.correct as f32 })
+    }
+
+    fn probe_loss(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        let fwd = self.forward(state, batch, k_w, k_a, true);
+        Ok(StepMetrics { loss: fwd.loss as f32, correct: fwd.correct as f32 })
+    }
+
+    fn eval_batch(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        let rows = self.mm.batch;
+        let classes = self.mm.num_classes;
+        // eval = the serving forward (memoized), so eval metrics and an
+        // exported checkpoint can never drift apart. The fp32 path is
+        // the same net at the identity widths: k = 32 keeps weights raw
+        // and skips activation quantization, and the folded
+        // running-stat BN is width-independent.
+        let (k_w, k_a) = if fp32 { (32, 32) } else { (k_w, k_a) };
+        let net = self.cached_serving_convnet(state, k_w, k_a)?;
+        let logits = net.forward(&batch.x.data, rows, 1);
+        let (loss, correct, _) = softmax_metrics(&logits, &batch.y.data, rows, classes);
+        Ok(StepMetrics { loss: loss as f32, correct: correct as f32 })
+    }
+
+    fn has_fp32(&self) -> bool {
+        true
+    }
+
+    fn checkpoint_meta(&self) -> Vec<(String, Json)> {
+        vec![
+            ("backend".to_string(), Json::str("native")),
+            (
+                "conv_layers".to_string(),
+                Json::Arr(self.conv_layer_names().into_iter().map(Json::str).collect()),
+            ),
+            (
+                "mlp_layers".to_string(),
+                Json::Arr(vec![Json::str("fc1")]),
+            ),
+            (
+                "input_hw".to_string(),
+                Json::Arr(vec![
+                    Json::num(self.mm.input_hw.0 as f64),
+                    Json::num(self.mm.input_hw.1 as f64),
+                ]),
+            ),
+            ("in_channels".to_string(), Json::num(self.mm.in_channels as f64)),
+            ("num_classes".to_string(), Json::num(self.mm.num_classes as f64)),
+            ("serve_batch".to_string(), Json::num(self.mm.batch as f64)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backprop::manifest::NATIVE_SMALLCNN_KEY;
+    use crate::data::{loader::Loader, synth, DatasetKind};
+    use crate::tensor::{IntTensor, Tensor};
+
+    /// A tiny conv backend + one real data batch for unit tests:
+    /// 8×8×3 images, one 4-channel block, fc over 4·4·4 = 64 features.
+    fn tiny(channels: &[usize]) -> (ConvNativeBackend, Batch) {
+        let backend = ConvNativeBackend::new(8, 8, 3, 10, channels).unwrap();
+        let ds = synth::generate_sized(DatasetKind::Cifar10, 8, 3, 0, 8, 8).into_shared();
+        let batch = Loader::new(ds, 8, false).epoch(0).remove(0);
+        (backend, batch)
+    }
+
+    #[test]
+    fn geometry_and_param_layout_line_up() {
+        let (backend, _) = tiny(&[4, 6]);
+        assert_eq!(backend.blocks.len(), 2);
+        assert_eq!(backend.blocks[0].h, 8);
+        assert_eq!(backend.blocks[1].h, 4);
+        assert_eq!(backend.blocks[1].c_in, 4);
+        assert_eq!(backend.fc, (2 * 2 * 6, 10));
+        assert_eq!(backend.mm.params.len(), 3 * 2 + 2);
+        assert_eq!(backend.mm.bn.len(), 4);
+        assert_eq!(backend.conv_layer_names(), vec!["conv1", "conv2"]);
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y — the
+        // defining property of the transpose, which is exactly what the
+        // backward pass needs col2im to be.
+        let mut rng = crate::util::rng::Rng::new(17);
+        for (stride, pad) in [(1usize, 1usize), (2, 0)] {
+            let g = ConvGeom { h: 6, w: 5, c_in: 2, c_out: 1, kh: 3, kw: 3, stride, pad };
+            let rows = 2usize;
+            let (oh, ow) = g.out_hw();
+            let k = g.patch_len();
+            let x: Vec<f32> = (0..rows * g.h * g.w * 2).map(|_| rng.normal()).collect();
+            let y: Vec<f32> = (0..rows * oh * ow * k).map(|_| rng.normal()).collect();
+            let mut px = vec![0.0f32; rows * oh * ow * k];
+            im2col(&x, rows, &g, &mut px);
+            let mut cy = vec![0.0f32; rows * g.h * g.w * 2];
+            col2im(&y, rows, &g, &mut cy);
+            let lhs: f64 = px.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let rhs: f64 = x.iter().zip(&cy).map(|(&a, &b)| a as f64 * b as f64).sum();
+            assert!(
+                (lhs - rhs).abs() <= 1e-3 * lhs.abs().max(1.0),
+                "s={stride} p={pad}: <Ax,y>={lhs} vs <x,Aty>={rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn fp32_gradients_match_finite_differences() {
+        // infer the analytic gradient from one momentum-free update
+        // (m0 = 0 ⇒ Δp = −lr·g) and check it against central
+        // differences of the fp32 forward loss — this exercises the
+        // conv, BN (batch-stat), pooling, and fc backward paths.
+        let (backend, batch) = tiny(&[4]);
+        let state0 = backend.init_state(1).unwrap();
+        let lr = 1e-3f32;
+        let mut stepped = state0.clone();
+        backend.train_step(&mut stepped, &batch, lr, 32, 32, true).unwrap();
+        let eps = 1e-2f32;
+        // (param index, coordinate, weight-decayed?): conv w, BN γ/β,
+        // fc w, fc b
+        for (pi, xi, wd) in [
+            (0usize, 0usize, true),
+            (0, 61, true),
+            (1, 2, false),
+            (2, 3, false),
+            (3, 123, true),
+            (4, 5, false),
+        ] {
+            let analytic = (state0.params[pi].data[xi] - stepped.params[pi].data[xi]) / lr
+                - if wd { WEIGHT_DECAY * state0.params[pi].data[xi] } else { 0.0 };
+            let mut plus = state0.clone();
+            plus.params[pi].data[xi] += eps;
+            let lp = backend.probe_loss(&plus, &batch, 32, 32).unwrap().loss;
+            let mut minus = state0.clone();
+            minus.params[pi].data[xi] -= eps;
+            let lm = backend.probe_loss(&minus, &batch, 32, 32).unwrap().loss;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (analytic - fd).abs() <= 3e-2 * analytic.abs().max(fd.abs()).max(0.05),
+                "param {pi}[{xi}]: analytic {analytic} vs finite-diff {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_moves_running_stats() {
+        let (backend, batch) = tiny(&[4]);
+        let mut state = backend.init_state(0).unwrap();
+        let init_bn = state.bn[0].data.clone();
+        let first = backend.train_step(&mut state, &batch, 0.05, 8, 8, false).unwrap();
+        let mut last = first;
+        for _ in 0..80 {
+            last = backend.train_step(&mut state, &batch, 0.05, 8, 8, false).unwrap();
+        }
+        assert!(last.loss.is_finite());
+        assert!(
+            last.loss < first.loss * 0.8,
+            "loss did not decrease: {} -> {}",
+            first.loss,
+            last.loss
+        );
+        assert!(state.is_finite());
+        assert_ne!(state.bn[0].data, init_bn, "running mean never updated");
+    }
+
+    #[test]
+    fn probes_do_not_move_running_stats() {
+        let (backend, batch) = tiny(&[4]);
+        let state = backend.init_state(3).unwrap();
+        let before: Vec<Vec<f32>> = state.bn.iter().map(|t| t.data.clone()).collect();
+        backend.probe_loss(&state, &batch, 4, 8).unwrap();
+        backend.eval_batch(&state, &batch, 4, 8, false).unwrap();
+        for (t, b) in state.bn.iter().zip(&before) {
+            assert_eq!(&t.data, b);
+        }
+    }
+
+    #[test]
+    fn quantized_training_works_and_low_bits_hurt() {
+        // Train over FOUR batches, not one: with batch-stat BN
+        // renormalizing after quantization, a single memorized 8-sample
+        // batch can stay separable even at 1-bit weights (simulation:
+        // L(1) < L(8) on some seeds) — 32 samples restore the wall on
+        // every seed tried.
+        let (backend, _) = tiny(&[4]);
+        let ds = synth::generate_sized(DatasetKind::Cifar10, 32, 3, 0, 8, 8).into_shared();
+        let batches = Loader::new(ds, 8, false).epoch(0);
+        let mut state = backend.init_state(2).unwrap();
+        for i in 0..80 {
+            backend
+                .train_step(&mut state, &batches[i % 4], 0.05, 8, 8, false)
+                .unwrap();
+        }
+        let l8 = backend.probe_loss(&state, &batches[0], 8, 8).unwrap().loss;
+        let l1 = backend.probe_loss(&state, &batches[0], 1, 8).unwrap().loss;
+        assert!(l8.is_finite() && l1.is_finite());
+        assert!(
+            l1 > l8 + 0.05,
+            "1-bit weights should hurt a trained conv net: L(1)={l1} vs L(8)={l8}"
+        );
+    }
+
+    #[test]
+    fn eval_batch_equals_serving_math_and_fp32_path_runs() {
+        let (backend, batch) = tiny(&[4]);
+        let mut state = backend.init_state(9).unwrap();
+        for _ in 0..5 {
+            backend.train_step(&mut state, &batch, 0.05, 8, 8, false).unwrap();
+        }
+        let ev = backend.eval_batch(&state, &batch, 4, 8, false).unwrap();
+        // recompute through a fresh serving net: must agree exactly
+        let net = backend.serving_convnet(&state, 4, 8).unwrap();
+        let logits = net.forward(&batch.x.data, 8, 1);
+        let (loss, correct, _) = softmax_metrics(&logits, &batch.y.data, 8, 10);
+        assert_eq!(ev.loss.to_bits(), (loss as f32).to_bits());
+        assert_eq!(ev.correct, correct as f32);
+        let fp = backend.eval_batch(&state, &batch, 32, 32, true).unwrap();
+        assert!(fp.loss.is_finite());
+    }
+
+    #[test]
+    fn eval_cache_tracks_weights_bits_and_bn_stats() {
+        let (backend, batch) = tiny(&[4]);
+        let mut state = backend.init_state(8).unwrap();
+        let a = backend.eval_batch(&state, &batch, 4, 8, false).unwrap();
+        let b = backend.eval_batch(&state, &batch, 4, 8, false).unwrap();
+        assert_eq!(backend.eval_builds.get(), 1, "second eval must hit the memo");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        backend.eval_batch(&state, &batch, 2, 8, false).unwrap();
+        assert_eq!(backend.eval_builds.get(), 2, "bit-width change rebuilds");
+        // a train step moves weights AND running stats — either alone
+        // must invalidate; mutate only the BN stats to isolate them
+        state.bn[0].data[0] += 0.25;
+        backend.eval_batch(&state, &batch, 2, 8, false).unwrap();
+        assert_eq!(backend.eval_builds.get(), 3, "BN-stat change rebuilds");
+    }
+
+    #[test]
+    fn state_roundtrips_through_checkpoint() {
+        let (backend, batch) = tiny(&[4]);
+        let mut state = backend.init_state(5).unwrap();
+        for _ in 0..3 {
+            backend.train_step(&mut state, &batch, 0.05, 8, 8, false).unwrap();
+        }
+        let mut ck = Checkpoint::new(Json::Null);
+        for (spec, t) in backend.mm().params.iter().zip(&state.params) {
+            ck.push(spec.name.clone(), t.clone());
+        }
+        for (spec, t) in backend.mm().bn.iter().zip(&state.bn) {
+            ck.push(spec.name.clone(), t.clone());
+        }
+        let restored = backend.load_state(&ck, 0).unwrap();
+        let a = backend.probe_loss(&state, &batch, 4, 4).unwrap();
+        let b = backend.probe_loss(&restored, &batch, 4, 4).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        // and predictions go through the serving kernels identically
+        let pa = backend.predict(&state, &batch.x.data, 8, 4, 8).unwrap();
+        let pb = backend.predict(&restored, &batch.x.data, 8, 4, 8).unwrap();
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn bad_batch_shape_is_rejected() {
+        let (backend, _) = tiny(&[4]);
+        let state = backend.init_state(0).unwrap();
+        let bad = Batch {
+            x: Tensor::zeros(vec![8, 4, 4, 3]),
+            y: IntTensor::new(vec![8], vec![0; 8]),
+        };
+        assert!(backend.probe_loss(&state, &bad, 8, 8).is_err());
+        assert!(ConvNativeBackend::new(8, 10, 3, 10, &[4, 8]).is_err(), "10 % 4 != 0");
+    }
+
+    #[test]
+    fn from_config_uses_channels_and_model_key() {
+        let mut cfg = ExperimentConfig::default_for(NATIVE_SMALLCNN_KEY);
+        cfg.backend = "native".to_string();
+        cfg.image_hw = 8;
+        cfg.batch = 4;
+        cfg.channels = vec![4];
+        let backend = ConvNativeBackend::from_config(&cfg).unwrap();
+        assert_eq!(backend.mm().key, NATIVE_SMALLCNN_KEY);
+        assert_eq!(backend.mm().batch, 4);
+        assert_eq!(backend.blocks.len(), 1);
+    }
+}

@@ -1,19 +1,50 @@
-//! Synthetic in-Rust manifest for the native MLP backend.
+//! Synthetic in-Rust manifests for the native backends (MLP + smallcnn).
 //!
 //! The PJRT path gets its [`ModelManifest`] from `python/compile/aot.py`
-//! via `manifest.json`; the native backend builds the same structure
-//! directly from a (batch, image size, hidden widths) description, so
+//! via `manifest.json`; the native backends build the same structure
+//! directly from a (batch, image size, layer widths) description, so
 //! the rest of the system — trainer, cost model, checkpointing, export —
 //! consumes one contract regardless of backend and no Python is
 //! involved anywhere on the native path.
 
 use std::collections::BTreeMap;
 
-use crate::runtime::manifest::{LayerGeom, ModelManifest, ParamSpec};
+use crate::runtime::manifest::{BnSpec, LayerGeom, ModelManifest, ParamSpec};
 
 /// Manifest key every native MLP reports (there is no artifact set to
 /// look it up in, so the key only has to be stable and recognizable).
 pub const NATIVE_MODEL_KEY: &str = "native-mlp";
+
+/// Manifest key of the native conv model. Deliberately NOT "smallcnn":
+/// that key names the PJRT artifact model, and an exported checkpoint
+/// carrying it would resolve the *compiled* manifest's parameter roles
+/// on an artifact-bearing box — matching none of the conv1.w/… names
+/// and silently packing every tensor raw. `config_from` maps the
+/// user-facing `--model smallcnn --backend native` onto this key.
+pub const NATIVE_SMALLCNN_KEY: &str = "native-smallcnn";
+
+/// Whether a model key selects the native conv backend (vs the MLP).
+pub fn is_native_conv_model(model: &str) -> bool {
+    model == "smallcnn" || model == NATIVE_SMALLCNN_KEY
+}
+
+/// The smallcnn architecture's geometric contract, shared by the
+/// manifest builder and `ExperimentConfig::validate` so the CLI and
+/// the backend can never drift apart: at least one non-zero conv
+/// width, and an image side divisible by 2^blocks (each block ends in
+/// a 2×2 pool).
+pub fn validate_smallcnn_geometry(hw: usize, channels: &[usize]) -> Result<(), String> {
+    if channels.is_empty() || channels.contains(&0) {
+        return Err("native smallcnn: need at least one non-zero conv width".into());
+    }
+    if channels.len() >= usize::BITS as usize || hw % (1usize << channels.len()) != 0 {
+        return Err(format!(
+            "native smallcnn: image_hw {hw} must be divisible by 2^{} (one 2x2 pool per block)",
+            channels.len()
+        ));
+    }
+    Ok(())
+}
 
 /// Build the manifest for a fully-connected ReLU stack over flattened
 /// `hw × hw × in_channels` images: layer i maps `dims[i] → dims[i+1]`
@@ -85,6 +116,113 @@ pub fn native_manifest(
     })
 }
 
+/// Build the manifest for the native smallcnn: `channels.len()` blocks
+/// of [3×3 conv (stride 1, "same" pad, no bias) → BN → ReLU → 2×2 avg
+/// pool] over `hw × hw × in_channels` NHWC images, flattened into a
+/// single fc head. Per block i the parameters are `conv{i}.w`
+/// (`[3, 3, c_in, c_out]`, Kaiming over the 9·c_in fan-in), `conv{i}.bn.g`
+/// (ones) and `conv{i}.bn.b` (zeros); the running statistics
+/// `conv{i}.bn.mean`/`conv{i}.bn.var` live in the manifest's `bn` list —
+/// exactly the tensor set [`crate::kernels::conv::QuantConvNet`] loads.
+/// The head is `fc1.w`/`fc1.b` over the `hw/2^n`-pooled features.
+///
+/// Like the MLP manifest, no layer is pinned at 8 bits: WCR/BitOPs stay
+/// exact functions of the controller's output. MACs count each conv at
+/// its (pre-pool) output resolution.
+pub fn native_smallcnn_manifest(
+    batch: usize,
+    hw: usize,
+    in_channels: usize,
+    classes: usize,
+    channels: &[usize],
+) -> Result<ModelManifest, String> {
+    if batch == 0 {
+        return Err("native smallcnn: batch must be >= 1".into());
+    }
+    if hw == 0 || in_channels == 0 || classes < 2 {
+        return Err("native smallcnn: need hw >= 1, channels >= 1, classes >= 2".into());
+    }
+    validate_smallcnn_geometry(hw, channels)?;
+
+    let mut params = vec![];
+    let mut bn = vec![];
+    let mut geoms = vec![];
+    let mut side = hw;
+    let mut c_in = in_channels;
+    for (i, &c_out) in channels.iter().enumerate() {
+        let name = format!("conv{}", i + 1);
+        params.push(ParamSpec {
+            name: format!("{name}.w"),
+            shape: vec![3, 3, c_in, c_out],
+            init: format!("kaiming:{}", 9 * c_in),
+            role: "conv_w".to_string(),
+        });
+        params.push(ParamSpec {
+            name: format!("{name}.bn.g"),
+            shape: vec![c_out],
+            init: "ones".to_string(),
+            role: "bn_g".to_string(),
+        });
+        params.push(ParamSpec {
+            name: format!("{name}.bn.b"),
+            shape: vec![c_out],
+            init: "zeros".to_string(),
+            role: "bn_b".to_string(),
+        });
+        bn.push(BnSpec {
+            name: format!("{name}.bn.mean"),
+            shape: vec![c_out],
+            init: "zeros".to_string(),
+        });
+        bn.push(BnSpec {
+            name: format!("{name}.bn.var"),
+            shape: vec![c_out],
+            init: "ones".to_string(),
+        });
+        geoms.push(LayerGeom {
+            name,
+            kind: "conv".to_string(),
+            weight_count: 9 * c_in * c_out,
+            macs: 9 * c_in * c_out * side * side,
+            fixed8: false,
+        });
+        side /= 2;
+        c_in = c_out;
+    }
+    let flat = side * side * c_in;
+    params.push(ParamSpec {
+        name: "fc1.w".to_string(),
+        shape: vec![flat, classes],
+        init: format!("kaiming:{flat}"),
+        role: "fc_w".to_string(),
+    });
+    params.push(ParamSpec {
+        name: "fc1.b".to_string(),
+        shape: vec![classes],
+        init: "zeros".to_string(),
+        role: "fc_b".to_string(),
+    });
+    geoms.push(LayerGeom {
+        name: "fc1".to_string(),
+        kind: "fc".to_string(),
+        weight_count: flat * classes,
+        macs: flat * classes,
+        fixed8: false,
+    });
+
+    Ok(ModelManifest {
+        key: NATIVE_SMALLCNN_KEY.to_string(),
+        batch,
+        input_hw: (hw, hw),
+        in_channels,
+        num_classes: classes,
+        params,
+        bn,
+        geoms,
+        artifacts: BTreeMap::new(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,7 +243,7 @@ mod tests {
     }
 
     #[test]
-    fn no_hidden_layer_is_a_single_fc(){
+    fn no_hidden_layer_is_a_single_fc() {
         let mm = native_manifest(4, 8, 3, 10, &[]).unwrap();
         assert_eq!(mm.params.len(), 2);
         assert_eq!(mm.params[0].shape, vec![8 * 8 * 3, 10]);
@@ -117,5 +255,48 @@ mod tests {
         assert!(native_manifest(4, 0, 3, 10, &[32]).is_err());
         assert!(native_manifest(4, 16, 3, 1, &[32]).is_err());
         assert!(native_manifest(4, 16, 3, 10, &[0]).is_err());
+    }
+
+    #[test]
+    fn smallcnn_manifest_shapes_names_and_geometry_line_up() {
+        let mm = native_smallcnn_manifest(16, 16, 3, 10, &[8, 12]).unwrap();
+        assert_eq!(mm.key, NATIVE_SMALLCNN_KEY);
+        let names: Vec<&str> = mm.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "conv1.w", "conv1.bn.g", "conv1.bn.b", "conv2.w", "conv2.bn.g", "conv2.bn.b",
+                "fc1.w", "fc1.b",
+            ]
+        );
+        assert_eq!(mm.params[0].shape, vec![3, 3, 3, 8]);
+        assert_eq!(mm.params[0].init, "kaiming:27");
+        assert_eq!(mm.params[3].shape, vec![3, 3, 8, 12]);
+        // 16 -> pool 8 -> pool 4: fc over 4*4*12
+        assert_eq!(mm.params[6].shape, vec![4 * 4 * 12, 10]);
+        let bn_names: Vec<&str> = mm.bn.iter().map(|b| b.name.as_str()).collect();
+        assert_eq!(
+            bn_names,
+            vec!["conv1.bn.mean", "conv1.bn.var", "conv2.bn.mean", "conv2.bn.var"]
+        );
+        assert_eq!(mm.geoms.len(), 3);
+        assert_eq!(mm.geoms[0].macs, 9 * 3 * 8 * 16 * 16);
+        assert_eq!(mm.geoms[1].macs, 9 * 8 * 12 * 8 * 8);
+        assert_eq!(mm.weight_count(), 9 * 3 * 8 + 9 * 8 * 12 + 4 * 4 * 12 * 10);
+        assert!(mm.artifacts.is_empty());
+    }
+
+    #[test]
+    fn smallcnn_manifest_rejects_bad_geometry() {
+        // hw not divisible by 2^blocks
+        assert!(native_smallcnn_manifest(4, 12, 3, 10, &[8, 16, 32]).is_err());
+        assert!(native_smallcnn_manifest(4, 16, 3, 10, &[]).is_err());
+        assert!(native_smallcnn_manifest(4, 16, 3, 10, &[8, 0]).is_err());
+        assert!(native_smallcnn_manifest(0, 16, 3, 10, &[8]).is_err());
+        assert!(native_smallcnn_manifest(4, 16, 3, 1, &[8]).is_err());
+        // and the conv-model predicate names both spellings
+        assert!(is_native_conv_model("smallcnn"));
+        assert!(is_native_conv_model(NATIVE_SMALLCNN_KEY));
+        assert!(!is_native_conv_model(NATIVE_MODEL_KEY));
     }
 }

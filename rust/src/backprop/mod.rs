@@ -1,6 +1,10 @@
-//! Pure-Rust quantized training backend (DESIGN.md §12).
+//! Pure-Rust quantized training backend (DESIGN.md §12; conv in §13).
 //!
-//! The second [`StepBackend`]: an MLP trained entirely in-process —
+//! Two native [`StepBackend`]s live here: this module's MLP trainer and
+//! the smallcnn conv trainer in [`conv`] ([`ConvNativeBackend`]), both
+//! selected through [`build_native`].
+//!
+//! The MLP backend: a fc stack trained entirely in-process —
 //! fake-quant forward on the shared s = 2^k − 1 grid, softmax
 //! cross-entropy, straight-through-estimator backward, SGD with
 //! momentum — so `Experiment::run` executes offline end-to-end with no
@@ -28,9 +32,14 @@
 //! eval forward and the served model are the *same numbers* — the e2e
 //! test asserts every prediction matches.
 
+pub mod conv;
 pub mod manifest;
 
-pub use manifest::{native_manifest, NATIVE_MODEL_KEY};
+pub use conv::ConvNativeBackend;
+pub use manifest::{
+    is_native_conv_model, native_manifest, native_smallcnn_manifest,
+    validate_smallcnn_geometry, NATIVE_MODEL_KEY, NATIVE_SMALLCNN_KEY,
+};
 
 use std::cell::{Cell, RefCell};
 
@@ -443,9 +452,21 @@ impl NativeBackend {
     }
 }
 
+/// The native step backend a config's model key selects: a conv model
+/// key (`smallcnn`/[`NATIVE_SMALLCNN_KEY`]) builds the
+/// [`ConvNativeBackend`], anything else the MLP [`NativeBackend`] —
+/// the one dispatch point the CLI and tools share.
+pub fn build_native(cfg: &ExperimentConfig) -> anyhow::Result<Box<dyn StepBackend>> {
+    if is_native_conv_model(&cfg.model) {
+        Ok(Box::new(ConvNativeBackend::from_config(cfg)?))
+    } else {
+        Ok(Box::new(NativeBackend::from_config(cfg)?))
+    }
+}
+
 /// Mean CE loss (f64 log-sum-exp), correct count (argmax, lowest index
 /// on ties — the kernels' rule), and softmax probabilities.
-fn softmax_metrics(
+pub(crate) fn softmax_metrics(
     logits: &[f32],
     labels: &[i32],
     rows: usize,

@@ -44,6 +44,9 @@ pub struct ExperimentConfig {
     pub backend: String,
     /// Hidden-layer widths of the native MLP (ignored by pjrt).
     pub hidden: Vec<usize>,
+    /// Conv channel widths of the native smallcnn, one per
+    /// conv→BN→ReLU→pool block (ignored by pjrt and the native MLP).
+    pub channels: Vec<usize>,
     /// Batch size of the native backend (pjrt batch comes from the
     /// compiled artifact's static shape).
     pub batch: usize,
@@ -93,6 +96,7 @@ impl ExperimentConfig {
             fp32: false,
             backend: "pjrt".to_string(),
             hidden: vec![64],
+            channels: vec![8, 16],
             batch: 32,
             image_hw: 32,
             epochs: 4,
@@ -136,6 +140,17 @@ impl ExperimentConfig {
                         v.trim()
                             .parse()
                             .map_err(|_| format!("hidden: cannot parse {v:?}"))
+                    })
+                    .collect::<Result<Vec<usize>, String>>()?;
+            }
+            "channels" => {
+                // comma-separated conv widths: "8,16" or "16,32,64"
+                self.channels = value
+                    .split(',')
+                    .map(|v| {
+                        v.trim()
+                            .parse()
+                            .map_err(|_| format!("channels: cannot parse {v:?}"))
                     })
                     .collect::<Result<Vec<usize>, String>>()?;
             }
@@ -213,7 +228,7 @@ impl ExperimentConfig {
     /// Apply CLI overrides for every key present in `args`.
     pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
         for key in [
-            "model", "dataset", "fp32", "backend", "hidden", "batch",
+            "model", "dataset", "fp32", "backend", "hidden", "channels", "batch",
             "image_hw", "epochs", "train_size", "test_size",
             "lr", "lambda", "eta_w", "eta_a", "init_nw", "init_na",
             "probe_interval", "osc_threshold", "seed", "out_dir",
@@ -249,8 +264,13 @@ impl ExperimentConfig {
         if !(4..=64).contains(&self.image_hw) {
             return Err("image_hw must be in [4, 64]".into());
         }
-        if self.backend == "native" && (self.hidden.is_empty() || self.hidden.contains(&0)) {
-            return Err("native backend needs at least one non-zero hidden width".into());
+        if self.backend == "native" {
+            if crate::backprop::is_native_conv_model(&self.model) {
+                // one geometry contract, owned by the manifest builder
+                crate::backprop::validate_smallcnn_geometry(self.image_hw, &self.channels)?;
+            } else if self.hidden.is_empty() || self.hidden.contains(&0) {
+                return Err("native backend needs at least one non-zero hidden width".into());
+            }
         }
         Ok(())
     }
@@ -398,6 +418,30 @@ mod tests {
         c.set("image_hw", "2").unwrap();
         assert!(c.validate().is_err());
         c.set("image_hw", "16").unwrap();
+        c.set("hidden", "0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn native_conv_keys_parse_and_validate() {
+        let mut c = ExperimentConfig::default_for("smallcnn");
+        assert_eq!(c.channels, vec![8, 16]);
+        c.set("backend", "native").unwrap();
+        c.set("channels", "4, 8").unwrap();
+        c.set("image_hw", "16").unwrap();
+        assert_eq!(c.channels, vec![4, 8]);
+        assert!(c.validate().is_ok());
+        assert!(c.set("channels", "4,x").is_err());
+        c.set("channels", "0").unwrap();
+        assert!(c.validate().is_err(), "zero conv width");
+        // one pool per block: hw must divide by 2^blocks
+        c.set("channels", "4,8,16").unwrap();
+        c.set("image_hw", "12").unwrap();
+        assert!(c.validate().is_err(), "12 % 8 != 0");
+        c.set("image_hw", "16").unwrap();
+        assert!(c.validate().is_ok());
+        // the MLP hidden-width rule still applies to non-conv models
+        c.set("model", "native-mlp").unwrap();
         c.set("hidden", "0").unwrap();
         assert!(c.validate().is_err());
     }

@@ -347,7 +347,9 @@ pub fn export_packed(
         None
     };
     if weight_names.is_none() {
-        log::info!("export: no manifest roles for this checkpoint; using the `.w` naming convention");
+        log::info!(
+            "export: no manifest roles for this checkpoint; using the `.w` naming convention"
+        );
     }
     let is_weight = |name: &str| match &weight_names {
         Some(set) => set.contains(name),

@@ -1,0 +1,797 @@
+//! Integer-domain 2-d convolution over im2col patches (DESIGN.md §13).
+//!
+//! A convolution is a GEMM in disguise: expanding each output position's
+//! receptive field into a row (im2col) turns `conv2d(x, w)` into
+//! `patches · W` with `W` the checkpoint's `[kh, kw, c_in, c_out]`
+//! kernel flattened to `[kh·kw·c_in, c_out]` — exactly the shape
+//! [`QuantGemm`] plans already execute. This module adds the pieces that
+//! make the learned conv bit-widths buy integer compute on the serving
+//! path, the same way [`super::QuantMlp`] does for fc stacks:
+//!
+//! * [`im2col`] — patch expansion, zero-filled outside the image, patch
+//!   element order `(ky, kx, c)` matching the kernel layout;
+//! * activation quantization *per patch row* via [`super::activ`], the
+//!   same `2^k − 1` grid as training — a patch's codes depend only on
+//!   its own values, so batch composition never changes a sample;
+//! * batch-norm folded into the GEMM epilogue ([`fold_bn`]): inference
+//!   BN is an affine map per channel, so `γ·(z − μ)/√(σ² + ε) + β`
+//!   collapses into the kernels' one-f64-multiply epilogue
+//!   ([`QuantGemm::forward_quant_scaled`]);
+//! * [`avgpool2x2`] — the 2×2/stride-2 average pool between blocks;
+//! * [`QuantConvNet`] — conv→BN→ReLU→pool blocks plus a [`QuantMlp`]
+//!   fc head, loaded from one packed checkpoint whose meta carries
+//!   `conv_layers` next to the existing `mlp_layers`.
+//!
+//! The native conv trainer ([`crate::backprop::conv`]) evaluates through
+//! this exact code, so trainer eval and the served model are the same
+//! numbers — the guarantee the MLP path already gives.
+
+use crate::serve::packed::QuantizedCheckpoint;
+use crate::util::json::Json;
+
+use super::activ;
+use super::gemm::QuantGemm;
+use super::QuantMlp;
+
+/// Batch-norm epsilon — one constant shared by the native trainer's
+/// batch-stat normalization and the folded inference epilogue, so the
+/// two sides can never disagree on the stabilizer.
+pub const BN_EPS: f32 = 1e-5;
+
+/// Geometry of one 2-d convolution over NHWC input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    /// Input spatial size.
+    pub h: usize,
+    pub w: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    /// Kernel spatial size.
+    pub kh: usize,
+    pub kw: usize,
+    /// Stride, both dimensions.
+    pub stride: usize,
+    /// Zero padding, both dimensions.
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    /// Output spatial size: `(dim + 2·pad − k)/stride + 1` per axis.
+    pub fn out_hw(&self) -> (usize, usize) {
+        (
+            (self.h + 2 * self.pad - self.kh) / self.stride + 1,
+            (self.w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+
+    /// im2col row length: `kh·kw·c_in`.
+    pub fn patch_len(&self) -> usize {
+        self.kh * self.kw * self.c_in
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.h == 0 || self.w == 0 || self.c_in == 0 || self.c_out == 0 {
+            return Err(format!("conv geometry has a zero dimension: {self:?}"));
+        }
+        if self.kh == 0 || self.kw == 0 || self.stride == 0 {
+            return Err(format!("conv kernel/stride must be >= 1: {self:?}"));
+        }
+        if self.h + 2 * self.pad < self.kh || self.w + 2 * self.pad < self.kw {
+            return Err(format!("kernel larger than padded input: {self:?}"));
+        }
+        Ok(())
+    }
+}
+
+/// Expand `rows` NHWC images (`x.len() == rows·h·w·c_in`) into im2col
+/// patch rows: `out` row `r·oh·ow + oy·ow + ox` holds the `(ky, kx, c)`
+/// window anchored at `stride·(oy, ox) − pad`, zero where the window
+/// hangs off the image. The element order matches the checkpoint's
+/// `[kh, kw, c_in, c_out]` kernel flattened to `[kh·kw·c_in, c_out]`.
+pub fn im2col(x: &[f32], rows: usize, g: &ConvGeom, out: &mut [f32]) {
+    let (oh, ow) = g.out_hw();
+    let k = g.patch_len();
+    assert_eq!(x.len(), rows * g.h * g.w * g.c_in, "im2col: bad input length");
+    assert_eq!(out.len(), rows * oh * ow * k, "im2col: bad output length");
+    out.fill(0.0);
+    let c = g.c_in;
+    for r in 0..rows {
+        let img = &x[r * g.h * g.w * c..(r + 1) * g.h * g.w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row0 = ((r * oh + oy) * ow + ox) * k;
+                for ky in 0..g.kh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let src = (iy as usize * g.w + ix as usize) * c;
+                        let dst = row0 + (ky * g.kw + kx) * c;
+                        out[dst..dst + c].copy_from_slice(&img[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2×2 average pool with stride 2 over NHWC input; spatial dims must be
+/// even. Each output is `0.25·(a + b + c + d)` — a power-of-two factor,
+/// so pooling is exact whenever the four inputs sum exactly.
+pub fn avgpool2x2(x: &[f32], rows: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    assert!(h % 2 == 0 && w % 2 == 0, "avgpool2x2 wants even spatial dims, got {h}x{w}");
+    assert_eq!(x.len(), rows * h * w * c, "avgpool2x2: bad input length");
+    let (ph, pw) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; rows * ph * pw * c];
+    for r in 0..rows {
+        let img = &x[r * h * w * c..(r + 1) * h * w * c];
+        for py in 0..ph {
+            for px in 0..pw {
+                let o0 = ((r * ph + py) * pw + px) * c;
+                let i00 = ((2 * py) * w + 2 * px) * c;
+                let i01 = i00 + c;
+                let i10 = i00 + w * c;
+                let i11 = i10 + c;
+                for ch in 0..c {
+                    out[o0 + ch] = 0.25
+                        * (img[i00 + ch] + img[i01 + ch] + img[i10 + ch] + img[i11 + ch]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fold inference batch-norm into a per-channel affine epilogue:
+/// `γ·(z − μ)/√(σ² + ε) + β  =  z·gain + bias` with
+/// `gain = γ/√(σ² + ε)` and `bias = β − μ·gain`. Both the packed-model
+/// loader and the native trainer's eval path go through this one
+/// function, so the fold is bitwise-identical on both sides.
+pub fn fold_bn(gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    assert!(
+        gamma.len() == beta.len() && gamma.len() == mean.len() && gamma.len() == var.len(),
+        "fold_bn: mismatched channel counts"
+    );
+    let mut gain = vec![0.0f32; gamma.len()];
+    let mut bias = vec![0.0f32; gamma.len()];
+    for o in 0..gamma.len() {
+        gain[o] = gamma[o] / (var[o] + BN_EPS).sqrt();
+        bias[o] = beta[o] - mean[o] * gain[o];
+    }
+    (gain, bias)
+}
+
+/// One conv→BN(folded)→ReLU→(pool) block: a [`QuantGemm`] plan over the
+/// flattened kernel, driven across im2col patch rows with per-patch
+/// activation quantization at `k_a`.
+pub struct QuantConvLayer {
+    pub name: String,
+    pub geom: ConvGeom,
+    pub gemm: QuantGemm,
+    /// Folded-BN per-channel multiplier (γ/√(σ² + ε)).
+    pub gain: Vec<f32>,
+    /// Folded-BN per-channel shift (β − μ·gain).
+    pub bias: Vec<f32>,
+    pub k_a: u32,
+    /// Whether a 2×2 average pool follows the ReLU.
+    pub pool: bool,
+}
+
+impl QuantConvLayer {
+    /// Forward `rows` NHWC images through conv→BN→ReLU(→pool). Output is
+    /// NHWC `[rows, oh(/2), ow(/2), c_out]`.
+    pub fn forward(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let g = &self.geom;
+        let (oh, ow) = g.out_hw();
+        let k = g.patch_len();
+        let prows = rows * oh * ow;
+        let mut patches = vec![0.0f32; prows * k];
+        im2col(x, rows, g, &mut patches);
+        let mut out = vec![0.0f32; prows * g.c_out];
+        if self.gemm.is_integer() {
+            let mut qa = vec![0i16; prows * k];
+            let mut steps = vec![0.0f32; prows];
+            for p in 0..prows {
+                steps[p] = activ::quantize_row_centered(
+                    &patches[p * k..(p + 1) * k],
+                    self.k_a,
+                    &mut qa[p * k..(p + 1) * k],
+                );
+            }
+            self.gemm
+                .forward_quant_scaled(&qa, &steps, prows, &self.gain, &self.bias, &mut out);
+        } else {
+            if self.k_a < 24 {
+                for p in 0..prows {
+                    activ::fake_quantize_row(&mut patches[p * k..(p + 1) * k], self.k_a);
+                }
+            }
+            self.gemm
+                .forward_f32_scaled(&patches, prows, &self.gain, &self.bias, &mut out);
+        }
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        if self.pool {
+            avgpool2x2(&out, rows, oh, ow, g.c_out)
+        } else {
+            out
+        }
+    }
+}
+
+/// A conv stack plus fc head loaded from one packed checkpoint — the
+/// conv sibling of [`QuantMlp`]. Architecture contract (what the native
+/// smallcnn manifest emits): every `conv_layers` entry is a square
+/// odd-kernel conv at stride 1 with "same" padding, followed by folded
+/// BN, ReLU, and a 2×2 average pool; the pooled features flatten (NHWC
+/// order) into the `mlp_layers` head.
+pub struct QuantConvNet {
+    pub conv: Vec<QuantConvLayer>,
+    pub head: QuantMlp,
+    /// Input image shape (h, w, c).
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+}
+
+impl QuantConvNet {
+    /// Build from a packed checkpoint. Requires meta `conv_layers`
+    /// (names), `input_hw`, `in_channels`, plus the per-layer tensors
+    /// `L.w` (`[kh, kw, c_in, c_out]`) and raw BN statistics `L.bn.g`,
+    /// `L.bn.b`, `L.bn.mean`, `L.bn.var` (`[c_out]` each). Activation
+    /// widths resolve like the MLP: meta `k_a` globally, `layer_k_a`
+    /// per-layer overrides; k_w is per-tensor (each packed width).
+    pub fn from_packed(q: &QuantizedCheckpoint) -> anyhow::Result<QuantConvNet> {
+        let names = q.meta_layer_names("conv_layers")?.ok_or_else(|| {
+            anyhow::anyhow!("packed meta lacks conv_layers — not a conv checkpoint")
+        })?;
+        let hw = q
+            .meta
+            .get("input_hw")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("conv checkpoint meta lacks input_hw"))?;
+        anyhow::ensure!(hw.len() == 2, "input_hw must have 2 entries");
+        let h0 = hw[0].as_usize().ok_or_else(|| anyhow::anyhow!("bad input_hw"))?;
+        let w0 = hw[1].as_usize().ok_or_else(|| anyhow::anyhow!("bad input_hw"))?;
+        let c0 = q
+            .meta
+            .get("in_channels")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("conv checkpoint meta lacks in_channels"))?;
+        let global_k_a = q.meta.get("k_a").and_then(Json::as_f64).unwrap_or(32.0) as u32;
+        let per_layer = q.meta.get("layer_k_a");
+
+        let raw_vec = |name: String, len: usize| -> anyhow::Result<Vec<f32>> {
+            let t = q
+                .get(&name)
+                .ok_or_else(|| anyhow::anyhow!("packed checkpoint lacks {name}"))?;
+            anyhow::ensure!(
+                t.shape == vec![len],
+                "{name}: shape {:?} != [{len}]",
+                t.shape
+            );
+            Ok(t.dequantize().data)
+        };
+
+        let (mut h, mut w, mut c) = (h0, w0, c0);
+        let mut conv = Vec::with_capacity(names.len());
+        for name in &names {
+            let wt = q
+                .get(&format!("{name}.w"))
+                .ok_or_else(|| anyhow::anyhow!("packed checkpoint lacks {name}.w"))?;
+            anyhow::ensure!(
+                wt.shape.len() == 4,
+                "{name}.w: conv kernels are [kh, kw, c_in, c_out], got {:?}",
+                wt.shape
+            );
+            let (kh, kw, ci, co) = (wt.shape[0], wt.shape[1], wt.shape[2], wt.shape[3]);
+            anyhow::ensure!(
+                kh == kw && kh % 2 == 1,
+                "{name}.w: kernel must be square with odd size, got {kh}x{kw}"
+            );
+            anyhow::ensure!(
+                ci == c,
+                "{name}.w expects {ci} input channels but the chain carries {c}"
+            );
+            let geom = ConvGeom {
+                h,
+                w,
+                c_in: c,
+                c_out: co,
+                kh,
+                kw,
+                stride: 1,
+                pad: (kh - 1) / 2,
+            };
+            geom.validate().map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+            let k_a = per_layer
+                .and_then(|m| m.get(name))
+                .and_then(Json::as_f64)
+                .map(|v| v as u32)
+                .unwrap_or(global_k_a);
+            anyhow::ensure!(k_a >= 1, "{name}: k_a must be >= 1");
+            // the 4-d kernel flattens row-major to the [kh·kw·c_in, c_out]
+            // matrix the GEMM plans consume — reshape is payload-free
+            let mut w2 = wt.clone();
+            w2.shape = vec![geom.patch_len(), co];
+            let gemm = QuantGemm::from_packed(&w2, k_a)
+                .map_err(|e| anyhow::anyhow!("{name}.w: {e}"))?;
+            let gamma = raw_vec(format!("{name}.bn.g"), co)?;
+            let beta = raw_vec(format!("{name}.bn.b"), co)?;
+            let mean = raw_vec(format!("{name}.bn.mean"), co)?;
+            let var = raw_vec(format!("{name}.bn.var"), co)?;
+            let (gain, bias) = fold_bn(&gamma, &beta, &mean, &var);
+            let (oh, ow) = geom.out_hw();
+            anyhow::ensure!(
+                oh % 2 == 0 && ow % 2 == 0,
+                "{name}: {oh}x{ow} feature map cannot 2x2-pool"
+            );
+            conv.push(QuantConvLayer {
+                name: name.clone(),
+                geom,
+                gemm,
+                gain,
+                bias,
+                k_a,
+                pool: true,
+            });
+            h = oh / 2;
+            w = ow / 2;
+            c = co;
+        }
+        let head = QuantMlp::from_packed(q)?;
+        anyhow::ensure!(
+            head.input == h * w * c,
+            "fc head expects {} inputs but the conv stack produces {}x{}x{} = {}",
+            head.input,
+            h,
+            w,
+            c,
+            h * w * c
+        );
+        let classes = head.classes;
+        Ok(QuantConvNet { conv, head, h: h0, w: w0, c: c0, classes })
+    }
+
+    /// Per-sample input feature count (`h·w·c`).
+    pub fn input_numel(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// The conv stack only: `rows` NHWC images → flattened pooled
+    /// features `[rows, head.input]`.
+    fn features(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut cur = x.to_vec();
+        for layer in &self.conv {
+            cur = layer.forward(&cur, rows);
+        }
+        cur
+    }
+
+    /// Logits for `rows` stacked NHWC images. `threads` splits the batch
+    /// into contiguous sample chunks (std::thread, like [`QuantMlp`]);
+    /// per-patch activation scales make every sample independent of its
+    /// neighbours, so thread count and batch composition never change a
+    /// result.
+    pub fn forward(&self, x: &[f32], rows: usize, threads: usize) -> Vec<f32> {
+        let sz = self.input_numel();
+        assert_eq!(x.len(), rows * sz, "bad input length");
+        let t = threads.max(1).min(rows.max(1));
+        let feats = if t <= 1 {
+            self.features(x, rows)
+        } else {
+            let chunk = rows.div_ceil(t);
+            let flat = self.head.input;
+            let mut feats = vec![0.0f32; rows * flat];
+            std::thread::scope(|s| {
+                for (ci, out_chunk) in feats.chunks_mut(chunk * flat).enumerate() {
+                    let r0 = ci * chunk;
+                    let r1 = (r0 + chunk).min(rows);
+                    let xin = &x[r0 * sz..r1 * sz];
+                    s.spawn(move || {
+                        out_chunk.copy_from_slice(&self.features(xin, r1 - r0));
+                    });
+                }
+            });
+            feats
+        };
+        self.head.forward(&feats, rows, threads)
+    }
+
+    /// Argmax class per row (lowest index on ties — the shared rule).
+    pub fn classify(&self, x: &[f32], rows: usize, threads: usize) -> Vec<usize> {
+        let logits = self.forward(x, rows, threads);
+        (0..rows)
+            .map(|r| super::argmax(&logits[r * self.classes..(r + 1) * self.classes]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::pack;
+    use crate::quant::code_levels;
+    use crate::serve::packed::PackedTensor;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn random_tensor(shape: Vec<usize>, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.normal() * 0.3).collect())
+    }
+
+    /// Gather one patch directly from the image (independent of im2col).
+    fn naive_patch(x: &[f32], r: usize, g: &ConvGeom, oy: usize, ox: usize) -> Vec<f32> {
+        let mut p = vec![0.0f32; g.patch_len()];
+        let img = &x[r * g.h * g.w * g.c_in..(r + 1) * g.h * g.w * g.c_in];
+        for ky in 0..g.kh {
+            for kx in 0..g.kw {
+                let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                if iy < 0 || iy >= g.h as isize || ix < 0 || ix >= g.w as isize {
+                    continue;
+                }
+                for ch in 0..g.c_in {
+                    p[(ky * g.kw + kx) * g.c_in + ch] =
+                        img[(iy as usize * g.w + ix as usize) * g.c_in + ch];
+                }
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn im2col_matches_naive_gather_across_geometries() {
+        let mut rng = Rng::new(3);
+        for (h, w) in [(5usize, 7usize), (4, 4), (7, 5)] {
+            for k in [1usize, 3] {
+                for stride in [1usize, 2] {
+                    for pad in [0usize, 1] {
+                        let g = ConvGeom { h, w, c_in: 3, c_out: 1, kh: k, kw: k, stride, pad };
+                        if g.validate().is_err() {
+                            continue;
+                        }
+                        let rows = 2usize;
+                        let x: Vec<f32> =
+                            (0..rows * h * w * 3).map(|_| rng.normal()).collect();
+                        let (oh, ow) = g.out_hw();
+                        let kl = g.patch_len();
+                        let mut out = vec![f32::NAN; rows * oh * ow * kl];
+                        im2col(&x, rows, &g, &mut out);
+                        for r in 0..rows {
+                            for oy in 0..oh {
+                                for ox in 0..ow {
+                                    let row = ((r * oh + oy) * ow + ox) * kl;
+                                    assert_eq!(
+                                        &out[row..row + kl],
+                                        &naive_patch(&x, r, &g, oy, ox)[..],
+                                        "h={h} w={w} k={k} s={stride} p={pad} r={r} ({oy},{ox})"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The integer conv layer must equal a from-scratch direct
+    /// convolution — naive patch gather, scalar per-element weight
+    /// unpack, i64 accumulation, same f64 epilogue — bitwise, for every
+    /// width 2..=8 across odd spatial sizes and stride/padding edges.
+    #[test]
+    fn integer_conv_matches_direct_scalar_oracle_all_widths() {
+        let mut rng = Rng::new(11);
+        let (cin, cout) = (3usize, 5usize);
+        for k in 2..=8u32 {
+            for (stride, pad) in [(1usize, 1usize), (1, 0), (2, 1), (2, 0)] {
+                let g = ConvGeom { h: 5, w: 7, c_in: cin, c_out: cout, kh: 3, kw: 3, stride, pad };
+                g.validate().unwrap();
+                let src = random_tensor(vec![3, 3, cin, cout], 40 + k as u64);
+                let wt = PackedTensor::quantize(&src, k);
+                let mut w2 = wt.clone();
+                w2.shape = vec![g.patch_len(), cout];
+                let gemm = QuantGemm::from_packed(&w2, k).unwrap();
+                assert!(gemm.is_integer(), "k={k}");
+                let gain: Vec<f32> = (0..cout).map(|_| 0.5 + rng.uniform()).collect();
+                let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+                let layer = QuantConvLayer {
+                    name: "t".to_string(),
+                    geom: g,
+                    gemm,
+                    gain: gain.clone(),
+                    bias: bias.clone(),
+                    k_a: k,
+                    pool: false,
+                };
+                let rows = 2usize;
+                let x: Vec<f32> = (0..rows * g.h * g.w * cin).map(|_| rng.normal()).collect();
+                let got = layer.forward(&x, rows);
+
+                let (oh, ow) = g.out_hw();
+                let s_i = code_levels(k) as i64;
+                let sw = (if wt.scale > 0.0 { wt.scale / s_i as f32 } else { 0.0 }) as f64;
+                let kl = g.patch_len();
+                for r in 0..rows {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let patch = naive_patch(&x, r, &g, oy, ox);
+                            let mut qa = vec![0i16; kl];
+                            let step = activ::quantize_row_centered(&patch, k, &mut qa);
+                            for o in 0..cout {
+                                let mut acc = 0i64;
+                                for i in 0..kl {
+                                    let c = pack::read_bits_scalar(
+                                        &wt.payload,
+                                        (i * cout + o) * k as usize,
+                                        k,
+                                    ) as i64;
+                                    acc += qa[i] as i64 * (2 * c - s_i);
+                                }
+                                assert!(acc.abs() <= i32::MAX as i64, "k={k}: bound violated");
+                                let scale = step as f64 * sw * gain[o] as f64;
+                                let pre = (acc as f64 * scale) as f32 + bias[o];
+                                let want = if pre < 0.0 { 0.0 } else { pre };
+                                let got_v = got[(((r * oh + oy) * ow + ox) * cout) + o];
+                                assert_eq!(
+                                    got_v.to_bits(),
+                                    want.to_bits(),
+                                    "k={k} s={stride} p={pad} r={r} ({oy},{ox}) o={o}: {got_v} vs {want}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The f32 fallback path (raw weights, identity k_a) must equal a
+    /// direct f32 convolution that walks the kernel window over the
+    /// original image — no im2col buffer, weights read in checkpoint
+    /// layout — bitwise (padded positions contribute literal 0.0·w, the
+    /// same operation the im2col zeros feed the GEMM).
+    #[test]
+    fn f32_conv_path_matches_direct_convolution_bitwise() {
+        let mut rng = Rng::new(13);
+        let (cin, cout) = (2usize, 4usize);
+        for (stride, pad) in [(1usize, 1usize), (2, 0)] {
+            let g = ConvGeom { h: 7, w: 5, c_in: cin, c_out: cout, kh: 3, kw: 3, stride, pad };
+            g.validate().unwrap();
+            let wsrc = random_tensor(vec![3, 3, cin, cout], 77);
+            let wt = PackedTensor::raw(&wsrc);
+            let mut w2 = wt.clone();
+            w2.shape = vec![g.patch_len(), cout];
+            let gemm = QuantGemm::from_packed(&w2, 32).unwrap();
+            assert!(!gemm.is_integer());
+            let gain: Vec<f32> = (0..cout).map(|_| 0.5 + rng.uniform()).collect();
+            let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+            let layer = QuantConvLayer {
+                name: "t".to_string(),
+                geom: g,
+                gemm,
+                gain: gain.clone(),
+                bias: bias.clone(),
+                k_a: 32,
+                pool: false,
+            };
+            let rows = 2usize;
+            let x: Vec<f32> = (0..rows * g.h * g.w * cin).map(|_| rng.normal()).collect();
+            let got = layer.forward(&x, rows);
+
+            let (oh, ow) = g.out_hw();
+            for r in 0..rows {
+                let img = &x[r * g.h * g.w * cin..(r + 1) * g.h * g.w * cin];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for o in 0..cout {
+                            let mut acc = 0.0f32;
+                            for ky in 0..3 {
+                                for kx in 0..3 {
+                                    let iy = (oy * stride + ky) as isize - pad as isize;
+                                    let ix = (ox * stride + kx) as isize - pad as isize;
+                                    for ch in 0..cin {
+                                        let xv = if iy < 0
+                                            || iy >= g.h as isize
+                                            || ix < 0
+                                            || ix >= g.w as isize
+                                        {
+                                            0.0
+                                        } else {
+                                            img[(iy as usize * g.w + ix as usize) * cin + ch]
+                                        };
+                                        acc += xv
+                                            * wsrc.data[((ky * 3 + kx) * cin + ch) * cout + o];
+                                    }
+                                }
+                            }
+                            let pre = (acc as f64 * gain[o] as f64) as f32 + bias[o];
+                            let want = if pre < 0.0 { 0.0 } else { pre };
+                            let got_v = got[(((r * oh + oy) * ow + ox) * cout) + o];
+                            assert_eq!(
+                                got_v.to_bits(),
+                                want.to_bits(),
+                                "s={stride} p={pad} r={r} ({oy},{ox}) o={o}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avgpool_halves_and_averages() {
+        // one channel, 4x4: pooled (0,0) = mean of the top-left 2x2
+        let mut x = vec![0.0f32; 16];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let p = avgpool2x2(&x, 1, 4, 4, 1);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p[0], (0.0 + 1.0 + 4.0 + 5.0) * 0.25);
+        assert_eq!(p[1], (2.0 + 3.0 + 6.0 + 7.0) * 0.25);
+        assert_eq!(p[2], (8.0 + 9.0 + 12.0 + 13.0) * 0.25);
+        assert_eq!(p[3], (10.0 + 11.0 + 14.0 + 15.0) * 0.25);
+        // channels stay interleaved
+        let two = avgpool2x2(&random_tensor(vec![1, 4, 4, 2], 5).data, 1, 4, 4, 2);
+        assert_eq!(two.len(), 2 * 2 * 2);
+    }
+
+    #[test]
+    fn fold_bn_matches_direct_normalization() {
+        let mut rng = Rng::new(21);
+        let n = 6usize;
+        let gamma: Vec<f32> = (0..n).map(|_| 0.5 + rng.uniform()).collect();
+        let beta: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mean: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let var: Vec<f32> = (0..n).map(|_| rng.uniform() * 2.0).collect();
+        let (gain, bias) = fold_bn(&gamma, &beta, &mean, &var);
+        for o in 0..n {
+            let z = rng.normal() * 3.0;
+            let direct = gamma[o] * (z - mean[o]) / (var[o] + BN_EPS).sqrt() + beta[o];
+            let folded = z * gain[o] + bias[o];
+            assert!(
+                (direct - folded).abs() <= 1e-4 * direct.abs().max(1.0),
+                "o={o}: {direct} vs {folded}"
+            );
+        }
+    }
+
+    /// A full synthetic conv checkpoint: conv1 (3→4) + conv2 (4→6) over
+    /// 8×8 inputs, fc head 6·2·2 → classes.
+    fn conv_checkpoint(k_w: u32, k_a: f64, seed: u64) -> QuantizedCheckpoint {
+        let classes = 3usize;
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            ("k_a", Json::num(k_a)),
+            (
+                "conv_layers",
+                Json::Arr(vec![Json::str("conv1"), Json::str("conv2")]),
+            ),
+            ("mlp_layers", Json::Arr(vec![Json::str("fc1")])),
+            (
+                "input_hw",
+                Json::Arr(vec![Json::num(8.0), Json::num(8.0)]),
+            ),
+            ("in_channels", Json::num(3.0)),
+            ("num_classes", Json::num(classes as f64)),
+            ("serve_batch", Json::num(8.0)),
+        ]));
+        let quant = |t: &Tensor| -> PackedTensor {
+            if (1..=24).contains(&k_w) {
+                PackedTensor::quantize(t, k_w)
+            } else {
+                PackedTensor::raw(t)
+            }
+        };
+        for (i, &(ci, co)) in [(3usize, 4usize), (4, 6)].iter().enumerate() {
+            let name = format!("conv{}", i + 1);
+            let s = seed + i as u64;
+            q.push(
+                format!("{name}.w"),
+                quant(&random_tensor(vec![3, 3, ci, co], s)),
+            );
+            for (suffix, off) in [("g", 10u64), ("b", 20), ("mean", 30)] {
+                q.push(
+                    format!("{name}.bn.{suffix}"),
+                    PackedTensor::raw(&random_tensor(vec![co], s + off)),
+                );
+            }
+            q.push(
+                format!("{name}.bn.var"),
+                PackedTensor::raw(&Tensor::new(
+                    vec![co],
+                    (0..co).map(|j| 0.5 + 0.1 * j as f32).collect(),
+                )),
+            );
+        }
+        q.push("fc1.w", quant(&random_tensor(vec![6 * 2 * 2, classes], seed + 40)));
+        q.push("fc1.b", PackedTensor::raw(&random_tensor(vec![classes], seed + 41)));
+        q
+    }
+
+    #[test]
+    fn conv_net_loads_and_batch_and_threads_are_invariant() {
+        let q = conv_checkpoint(4, 8.0, 100);
+        let net = QuantConvNet::from_packed(&q).unwrap();
+        assert_eq!(net.conv.len(), 2);
+        assert_eq!((net.h, net.w, net.c), (8, 8, 3));
+        assert_eq!(net.classes, 3);
+        assert!(net.conv.iter().all(|l| l.gemm.is_integer()));
+        let mut rng = Rng::new(1);
+        let rows = 6usize;
+        let x: Vec<f32> = (0..rows * net.input_numel()).map(|_| rng.normal()).collect();
+        let base = net.forward(&x, rows, 1);
+        assert_eq!(base.len(), rows * net.classes);
+        assert!(base.iter().all(|v| v.is_finite()));
+        // thread invariance
+        for threads in [2usize, 3, 8] {
+            let got = net.forward(&x, rows, threads);
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+        // batch invariance: row 4 alone == row 4 in the batch
+        let sz = net.input_numel();
+        let solo = net.forward(&x[4 * sz..5 * sz], 1, 1);
+        for (a, b) in base[4 * net.classes..5 * net.classes].iter().zip(&solo) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let preds = net.classify(&x, rows, 2);
+        assert!(preds.iter().all(|&p| p < net.classes));
+    }
+
+    #[test]
+    fn conv_net_rejects_malformed_checkpoints() {
+        // missing a BN tensor
+        let mut q = conv_checkpoint(4, 8.0, 200);
+        q.tensors.retain(|(n, _)| n != "conv2.bn.var");
+        assert!(QuantConvNet::from_packed(&q).is_err());
+        // fc head that does not match the conv output size
+        let mut q2 = conv_checkpoint(4, 8.0, 201);
+        q2.tensors.retain(|(n, _)| n != "fc1.w");
+        q2.push("fc1.w", PackedTensor::quantize(&random_tensor(vec![99, 3], 9), 4));
+        assert!(QuantConvNet::from_packed(&q2).is_err());
+        // odd feature map cannot pool
+        let mut q3 = conv_checkpoint(4, 8.0, 202);
+        if let Json::Obj(m) = &mut q3.meta {
+            m.insert(
+                "input_hw".to_string(),
+                Json::Arr(vec![Json::num(5.0), Json::num(5.0)]),
+            );
+        }
+        assert!(QuantConvNet::from_packed(&q3).is_err());
+        // wrong channel chain
+        let mut q4 = conv_checkpoint(4, 8.0, 203);
+        if let Json::Obj(m) = &mut q4.meta {
+            m.insert("in_channels".to_string(), Json::num(5.0));
+        }
+        assert!(QuantConvNet::from_packed(&q4).is_err());
+        // not a conv checkpoint at all
+        let q5 = QuantizedCheckpoint::new(Json::obj(vec![("k_a", Json::num(8.0))]));
+        assert!(QuantConvNet::from_packed(&q5).is_err());
+    }
+
+    #[test]
+    fn raw_weights_fall_back_to_f32_plans() {
+        let q = conv_checkpoint(32, 8.0, 300);
+        let net = QuantConvNet::from_packed(&q).unwrap();
+        assert!(net.conv.iter().all(|l| !l.gemm.is_integer()));
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..2 * net.input_numel()).map(|_| rng.normal()).collect();
+        let logits = net.forward(&x, 2, 1);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}

@@ -139,6 +139,37 @@ impl QuantGemm {
         bias: &[f32],
         out: &mut [f32],
     ) {
+        self.run_quant(qa, step_a, rows, None, bias, out);
+    }
+
+    /// [`forward_quant`] with a per-output-channel epilogue gain — the
+    /// folded batch-norm path of the conv kernels (DESIGN.md §13):
+    /// `out[r,o] = (Σ_i qa·qw) · Δ_a[r]·Δ_w·gain[o] + bias[o]`, all
+    /// scale factors folded in f64 and rounded once to f32.
+    ///
+    /// [`forward_quant`]: QuantGemm::forward_quant
+    pub fn forward_quant_scaled(
+        &self,
+        qa: &[i16],
+        step_a: &[f32],
+        rows: usize,
+        gain: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(gain.len(), self.n_out);
+        self.run_quant(qa, step_a, rows, Some(gain), bias, out);
+    }
+
+    fn run_quant(
+        &self,
+        qa: &[i16],
+        step_a: &[f32],
+        rows: usize,
+        gain: Option<&[f32]>,
+        bias: &[f32],
+        out: &mut [f32],
+    ) {
         assert!(self.is_integer(), "f32 plan driven through forward_quant");
         assert_eq!(qa.len(), rows * self.d);
         assert_eq!(step_a.len(), rows);
@@ -147,38 +178,10 @@ impl QuantGemm {
         let sw = self.step_w as f64;
         match &self.weights {
             Weights::I8(w) => {
-                for o0 in (0..self.n_out).step_by(OUT_TILE) {
-                    let o1 = (o0 + OUT_TILE).min(self.n_out);
-                    for r in 0..rows {
-                        let a = &qa[r * self.d..(r + 1) * self.d];
-                        let da = step_a[r] as f64 * sw;
-                        for o in o0..o1 {
-                            let wr = &w[o * self.d..(o + 1) * self.d];
-                            let mut acc = 0i32;
-                            for (&x, &y) in a.iter().zip(wr) {
-                                acc += x as i32 * y as i32;
-                            }
-                            out[r * self.n_out + o] = (acc as f64 * da) as f32 + bias[o];
-                        }
-                    }
-                }
+                quant_rows(w, self.d, self.n_out, sw, qa, step_a, rows, gain, bias, out)
             }
             Weights::I16(w) => {
-                for o0 in (0..self.n_out).step_by(OUT_TILE) {
-                    let o1 = (o0 + OUT_TILE).min(self.n_out);
-                    for r in 0..rows {
-                        let a = &qa[r * self.d..(r + 1) * self.d];
-                        let da = step_a[r] as f64 * sw;
-                        for o in o0..o1 {
-                            let wr = &w[o * self.d..(o + 1) * self.d];
-                            let mut acc = 0i32;
-                            for (&x, &y) in a.iter().zip(wr) {
-                                acc += x as i32 * y as i32;
-                            }
-                            out[r * self.n_out + o] = (acc as f64 * da) as f32 + bias[o];
-                        }
-                    }
-                }
+                quant_rows(w, self.d, self.n_out, sw, qa, step_a, rows, gain, bias, out)
             }
             Weights::F32(_) => unreachable!("guarded by is_integer"),
         }
@@ -209,6 +212,86 @@ impl QuantGemm {
                     }
                     out[r * self.n_out + o] = acc;
                 }
+            }
+        }
+    }
+
+    /// [`forward_f32`] with a per-output-channel epilogue gain (the f32
+    /// fallback of the folded-BN conv path). Unlike the unscaled
+    /// variant there is no legacy bit-pattern to reproduce, so the
+    /// accumulator starts at zero and the epilogue mirrors the integer
+    /// kernel's: `out[r,o] = (Σ_i x·w) · gain[o] + bias[o]` with the
+    /// gain applied in f64 and one rounding to f32.
+    ///
+    /// [`forward_f32`]: QuantGemm::forward_f32
+    pub fn forward_f32_scaled(
+        &self,
+        x: &[f32],
+        rows: usize,
+        gain: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), rows * self.d);
+        assert_eq!(gain.len(), self.n_out);
+        assert_eq!(bias.len(), self.n_out);
+        assert_eq!(out.len(), rows * self.n_out);
+        let w = match &self.weights {
+            Weights::F32(w) => w,
+            _ => panic!("integer plan driven through forward_f32_scaled"),
+        };
+        for o0 in (0..self.n_out).step_by(OUT_TILE) {
+            let o1 = (o0 + OUT_TILE).min(self.n_out);
+            for r in 0..rows {
+                let a = &x[r * self.d..(r + 1) * self.d];
+                for o in o0..o1 {
+                    let wr = &w[o * self.d..(o + 1) * self.d];
+                    let mut acc = 0.0f32;
+                    for (&xv, &yv) in a.iter().zip(wr) {
+                        acc += xv * yv;
+                    }
+                    out[r * self.n_out + o] = (acc as f64 * gain[o] as f64) as f32 + bias[o];
+                }
+            }
+        }
+    }
+}
+
+/// The shared integer inner loop over i8 or i16 weight storage: exact
+/// i32 accumulation, OUT_TILE-blocked weight streaming, and the f64
+/// epilogue — `gain = None` reproduces [`QuantGemm::forward_quant`]'s
+/// arithmetic exactly (the per-channel factor is never multiplied in).
+#[allow(clippy::too_many_arguments)]
+fn quant_rows<T: Copy>(
+    w: &[T],
+    d: usize,
+    n_out: usize,
+    sw: f64,
+    qa: &[i16],
+    step_a: &[f32],
+    rows: usize,
+    gain: Option<&[f32]>,
+    bias: &[f32],
+    out: &mut [f32],
+) where
+    i32: From<T>,
+{
+    for o0 in (0..n_out).step_by(OUT_TILE) {
+        let o1 = (o0 + OUT_TILE).min(n_out);
+        for r in 0..rows {
+            let a = &qa[r * d..(r + 1) * d];
+            let da = step_a[r] as f64 * sw;
+            for o in o0..o1 {
+                let wr = &w[o * d..(o + 1) * d];
+                let mut acc = 0i32;
+                for (&x, &y) in a.iter().zip(wr) {
+                    acc += x as i32 * i32::from(y);
+                }
+                let scale = match gain {
+                    Some(g) => da * g[o] as f64,
+                    None => da,
+                };
+                out[r * n_out + o] = (acc as f64 * scale) as f32 + bias[o];
             }
         }
     }
@@ -400,6 +483,81 @@ mod tests {
         // k_a = 32 (identity) forces the f32 plan even for packed weights
         let gemm = QuantGemm::from_packed(&wt, 32).unwrap();
         assert!(!gemm.is_integer());
+    }
+
+    #[test]
+    fn scaled_epilogue_matches_unscaled_at_unit_gain_and_oracle_otherwise() {
+        let mut rng = Rng::new(29);
+        for k in [2u32, 4, 8] {
+            let (d, n_out, rows) = (45usize, 9usize, 3usize);
+            let wdata: Vec<f32> = (0..d * n_out).map(|_| rng.normal() * 0.2).collect();
+            let wt = PackedTensor::quantize(&Tensor::new(vec![d, n_out], wdata), k);
+            let gemm = QuantGemm::from_packed(&wt, k).unwrap();
+            assert!(gemm.is_integer(), "k={k}");
+            let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+            let mut qa = vec![0i16; rows * d];
+            let mut steps = vec![0.0f32; rows];
+            for r in 0..rows {
+                steps[r] =
+                    quantize_row_centered(&x[r * d..(r + 1) * d], k, &mut qa[r * d..(r + 1) * d]);
+            }
+            let bias: Vec<f32> = (0..n_out).map(|_| rng.normal() * 0.1).collect();
+
+            // unit gain: f64 ·1.0 is exact, so scaled == unscaled bitwise
+            let mut plain = vec![0.0f32; rows * n_out];
+            gemm.forward_quant(&qa, &steps, rows, &bias, &mut plain);
+            let mut unit = vec![0.0f32; rows * n_out];
+            gemm.forward_quant_scaled(&qa, &steps, rows, &vec![1.0; n_out], &bias, &mut unit);
+            for (a, b) in plain.iter().zip(&unit) {
+                assert_eq!(a.to_bits(), b.to_bits(), "k={k}");
+            }
+
+            // random per-channel gain vs the scalar i64 oracle with the
+            // same f64 epilogue folding
+            let gain: Vec<f32> = (0..n_out).map(|_| 0.5 + rng.uniform()).collect();
+            let mut got = vec![0.0f32; rows * n_out];
+            gemm.forward_quant_scaled(&qa, &steps, rows, &gain, &bias, &mut got);
+            let s_i = code_levels(k) as i64;
+            let sw = if wt.scale > 0.0 { wt.scale / s_i as f32 } else { 0.0 };
+            for r in 0..rows {
+                for o in 0..n_out {
+                    let mut acc = 0i64;
+                    for i in 0..d {
+                        let c = pack::read_bits_scalar(&wt.payload, (i * n_out + o) * k as usize, k)
+                            as i64;
+                        acc += qa[r * d + i] as i64 * (2 * c - s_i);
+                    }
+                    let scale = steps[r] as f64 * sw as f64 * gain[o] as f64;
+                    let want = (acc as f64 * scale) as f32 + bias[o];
+                    assert_eq!(got[r * n_out + o].to_bits(), want.to_bits(), "k={k} r={r} o={o}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_scaled_epilogue_matches_direct_dot() {
+        let mut rng = Rng::new(31);
+        let (d, n_out, rows) = (23usize, 6usize, 2usize);
+        let wdata: Vec<f32> = (0..d * n_out).map(|_| rng.normal()).collect();
+        let wt = PackedTensor::raw(&Tensor::new(vec![d, n_out], wdata.clone()));
+        let gemm = QuantGemm::from_packed(&wt, 32).unwrap();
+        assert!(!gemm.is_integer());
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let gain: Vec<f32> = (0..n_out).map(|_| 0.5 + rng.uniform()).collect();
+        let bias: Vec<f32> = (0..n_out).map(|_| rng.normal()).collect();
+        let mut got = vec![0.0f32; rows * n_out];
+        gemm.forward_f32_scaled(&x, rows, &gain, &bias, &mut got);
+        for r in 0..rows {
+            for o in 0..n_out {
+                let mut acc = 0.0f32;
+                for i in 0..d {
+                    acc += x[r * d + i] * wdata[i * n_out + o];
+                }
+                let want = (acc as f64 * gain[o] as f64) as f32 + bias[o];
+                assert_eq!(got[r * n_out + o].to_bits(), want.to_bits(), "r={r} o={o}");
+            }
+        }
     }
 
     #[test]

@@ -20,10 +20,12 @@
 //! `serve::ReferenceBackend` is a thin adapter over [`QuantMlp`].
 
 pub mod activ;
+pub mod conv;
 pub mod gemm;
 pub mod pack;
 
 pub use activ::{fake_quantize_row, quantize_row_centered, MAX_INT_ACT_BITS};
+pub use conv::QuantConvNet;
 pub use gemm::QuantGemm;
 
 use crate::serve::packed::QuantizedCheckpoint;
@@ -58,19 +60,9 @@ impl QuantMlp {
     /// k_w is per-tensor by construction (each `PackedTensor` carries
     /// its own bit-width), so mixed-precision stacks need no extra meta.
     pub fn from_packed(q: &QuantizedCheckpoint) -> anyhow::Result<QuantMlp> {
-        let names: Vec<String> = match q.meta.get("mlp_layers").and_then(Json::as_arr) {
-            Some(arr) => {
-                anyhow::ensure!(!arr.is_empty(), "mlp_layers is empty");
-                arr.iter()
-                    .map(|j| {
-                        j.as_str().map(str::to_string).ok_or_else(|| {
-                            anyhow::anyhow!("mlp_layers entries must be strings")
-                        })
-                    })
-                    .collect::<anyhow::Result<_>>()?
-            }
-            None => vec!["fc".to_string()],
-        };
+        let names: Vec<String> = q
+            .meta_layer_names("mlp_layers")?
+            .unwrap_or_else(|| vec!["fc".to_string()]);
         let global_k_a =
             q.meta.get("k_a").and_then(Json::as_f64).unwrap_or(32.0) as u32;
         let per_layer = q.meta.get("layer_k_a");
@@ -206,7 +198,7 @@ impl QuantMlp {
     }
 }
 
-fn argmax(scores: &[f32]) -> usize {
+pub(crate) fn argmax(scores: &[f32]) -> usize {
     let mut best = 0usize;
     let mut best_score = f32::NEG_INFINITY;
     for (i, &s) in scores.iter().enumerate() {

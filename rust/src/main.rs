@@ -22,7 +22,6 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use adaqat::adaqat::FixedController;
-use adaqat::backprop::NativeBackend;
 use adaqat::config::{ExperimentConfig, ServeConfig};
 use adaqat::coordinator::{self, Experiment};
 use adaqat::data::DatasetKind;
@@ -36,7 +35,7 @@ use adaqat::tensor::checkpoint::Checkpoint;
 use adaqat::util::cli::Args;
 
 const TRAIN_FLAGS: &[&str] = &[
-    "model", "dataset", "fp32", "backend", "hidden", "batch", "image_hw",
+    "model", "dataset", "fp32", "backend", "hidden", "channels", "batch", "image_hw",
     "epochs", "train_size", "test_size", "lr",
     "lambda", "eta_w", "eta_a", "init_nw", "init_na", "probe_interval",
     "osc_threshold", "seed", "out_dir", "checkpoint", "controller",
@@ -110,22 +109,30 @@ fn config_from(args: &Args) -> anyhow::Result<ExperimentConfig> {
     if cfg.backend == "native" && !args.has("model") && cfg.model == model {
         cfg.model = adaqat::backprop::NATIVE_MODEL_KEY.to_string();
     }
+    // The native conv trainer is addressed by the familiar name
+    // (`--backend native --model smallcnn`) but its checkpoints carry
+    // the native key, for the same artifact-box reason as above.
+    if cfg.backend == "native" && cfg.model == "smallcnn" {
+        cfg.model = adaqat::backprop::NATIVE_SMALLCNN_KEY.to_string();
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
 }
 
 /// The step backend a config asks for. The PJRT variant owns its
-/// `ModelRuntime` (which holds the client handle); both expose
-/// `&dyn StepBackend` for the shared train/eval code paths.
+/// `ModelRuntime` (which holds the client handle); the native variant
+/// is whichever trainer the model key selects (MLP or conv) behind
+/// `backprop::build_native`. Both expose `&dyn StepBackend` for the
+/// shared train/eval code paths.
 enum BackendHolder {
-    Native(NativeBackend),
+    Native(Box<dyn StepBackend>),
     Pjrt(ModelRuntime),
 }
 
 impl BackendHolder {
     fn build(cfg: &ExperimentConfig) -> anyhow::Result<BackendHolder> {
         if cfg.backend == "native" {
-            Ok(BackendHolder::Native(NativeBackend::from_config(cfg)?))
+            Ok(BackendHolder::Native(adaqat::backprop::build_native(cfg)?))
         } else {
             let rt = coordinator::default_runtime()?;
             Ok(BackendHolder::Pjrt(rt.load_model(&cfg.model)?))
@@ -134,7 +141,7 @@ impl BackendHolder {
 
     fn step(&self) -> &dyn StepBackend {
         match self {
-            BackendHolder::Native(b) => b,
+            BackendHolder::Native(b) => b.as_ref(),
             BackendHolder::Pjrt(rt) => rt,
         }
     }
@@ -242,7 +249,9 @@ fn cmd_export(args: &Args) -> anyhow::Result<()> {
         match ck.meta.get("k_w").and_then(|j| j.as_f64()).map(|k| k as u32) {
             Some(k) if (1..=24).contains(&k) => k,
             Some(k) => {
-                log::info!("meta k_w = {k} is not packable; defaulting to 8 (pass --bits to override)");
+                log::info!(
+                    "meta k_w = {k} is not packable; defaulting to 8 (pass --bits to override)"
+                );
                 8
             }
             None => 8,
@@ -339,7 +348,11 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
         100.0 * report.correct as f64 / report.received.max(1) as f64,
         report.correct
     );
-    println!("throughput:  {:.0} req/s over {:.2}s", report.requests_per_second(), report.wall_seconds);
+    println!(
+        "throughput:  {:.0} req/s over {:.2}s",
+        report.requests_per_second(),
+        report.wall_seconds
+    );
     println!("{}", report.latency.row("latency"));
     Ok(())
 }
@@ -404,8 +417,12 @@ COMMANDS
 TRAIN/EVAL FLAGS
   --model NAME          smallcnn | resnet20 | resnet18 | smallcnn_pallas
   --backend B           pjrt (compiled artifacts) | native (pure-Rust
-                        MLP trainer, runs offline)            [pjrt]
+                        trainers, run offline)                [pjrt]
+                        native models: the MLP (default) and smallcnn
+                        (conv+BN blocks, --model smallcnn)
   --hidden W[,W...]     native MLP hidden widths              [64]
+  --channels C[,C...]   native smallcnn conv widths, one per
+                        conv-BN-ReLU-pool block               [8,16]
   --batch N             native batch size                     [32]
   --image_hw N          synthetic image side (native; pjrt=32) [32]
   --config FILE         key = value config file (flags override it)
@@ -444,6 +461,9 @@ Offline train→export→serve (no PJRT artifacts needed):
   adaqat train --backend native --hidden 64 --epochs 4 --out_dir runs/native
   adaqat export --checkpoint runs/native/final.ckpt
   adaqat serve --checkpoint runs/native/final.aqq
+Same loop on the conv model (im2col conv + BN, integer conv serving):
+  adaqat train --backend native --model smallcnn --channels 8,16 \
+               --epochs 4 --out_dir runs/cnn
 
 Artifacts are loaded from $ADAQAT_ARTIFACTS (default ./artifacts);
 build them with `make artifacts`."

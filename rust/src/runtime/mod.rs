@@ -230,7 +230,11 @@ struct LazyExe {
 }
 
 impl LazyExe {
-    fn get(&self, client: &xla::PjRtClient, key: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+    fn get(
+        &self,
+        client: &xla::PjRtClient,
+        key: &str,
+    ) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
         let path = self
             .path
             .as_ref()

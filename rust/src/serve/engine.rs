@@ -24,7 +24,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::kernels::QuantMlp;
+use crate::kernels::{QuantConvNet, QuantMlp};
 use crate::metrics::Histogram;
 use crate::quant::bitwidth_scale;
 use crate::runtime::{ModelRuntime, Runtime, TrainState};
@@ -338,15 +338,47 @@ fn worker_loop(
 
 // ------------------------------------------------------------- backends
 
+/// The quantized network a packed checkpoint serves: an fc stack
+/// ([`QuantMlp`]) or, when the meta carries `conv_layers`, the conv
+/// blocks + fc head of a [`QuantConvNet`] (DESIGN.md §13).
+enum ServedNet {
+    Mlp(QuantMlp),
+    Conv(QuantConvNet),
+}
+
+impl ServedNet {
+    fn input_numel(&self) -> usize {
+        match self {
+            ServedNet::Mlp(m) => m.input,
+            ServedNet::Conv(c) => c.input_numel(),
+        }
+    }
+
+    fn classes(&self) -> usize {
+        match self {
+            ServedNet::Mlp(m) => m.classes,
+            ServedNet::Conv(c) => c.classes,
+        }
+    }
+
+    fn classify(&self, x: &[f32], rows: usize, threads: usize) -> Vec<usize> {
+        match self {
+            ServedNet::Mlp(m) => m.classify(x, rows, threads),
+            ServedNet::Conv(c) => c.classify(x, rows, threads),
+        }
+    }
+}
+
 /// Pure-Rust quantized backend: a [`QuantMlp`] (single fc layer or an
-/// `mlp_layers` stack with ReLU) over a packed checkpoint whose meta
-/// carries `input_hw`, `in_channels`, `num_classes`, `serve_batch`
-/// (written by `adaqat demo-model` / `serve::demo`). Packed weight
-/// tensors run in the integer domain (i8/i16 codes, i32 accumulation,
+/// `mlp_layers` stack with ReLU) or a [`QuantConvNet`] (`conv_layers`
+/// meta) over a packed checkpoint whose meta carries `input_hw`,
+/// `in_channels`, `num_classes`, `serve_batch` (written by
+/// `adaqat demo-model` / the native trainers). Packed weight tensors
+/// run in the integer domain (i8/i16 codes, i32 accumulation,
 /// activations quantized on the fly at the learned k_a) instead of the
-/// old dequantize-to-f32 strided dot — see DESIGN.md §11.
+/// old dequantize-to-f32 strided dot — see DESIGN.md §11/§13.
 pub struct ReferenceBackend {
-    mlp: QuantMlp,
+    net: ServedNet,
     h: usize,
     wid: usize,
     c: usize,
@@ -393,26 +425,35 @@ impl ReferenceBackend {
             .get("serve_batch")
             .and_then(|j| j.as_usize())
             .unwrap_or(16);
-        let mlp = QuantMlp::from_packed(q)?;
+        let net = if q.meta.get("conv_layers").is_some() {
+            // the conv loader derives its input shape from these same
+            // meta keys and validates the tensor chain against them
+            // internally, so no cross-check is possible (or needed) here
+            ServedNet::Conv(QuantConvNet::from_packed(q)?)
+        } else {
+            let mlp = QuantMlp::from_packed(q)?;
+            // mlp.input comes from the tensors; the meta must agree
+            anyhow::ensure!(
+                mlp.input == h * wid * c,
+                "model expects {} inputs but meta says {}x{}x{}",
+                mlp.input,
+                h,
+                wid,
+                c
+            );
+            ServedNet::Mlp(mlp)
+        };
         anyhow::ensure!(
-            mlp.input == h * wid * c,
-            "model expects {} inputs but meta says {}x{}x{}",
-            mlp.input,
-            h,
-            wid,
-            c
-        );
-        anyhow::ensure!(
-            mlp.classes == classes,
+            net.classes() == classes,
             "model has {} outputs but meta num_classes is {classes}",
-            mlp.classes
+            net.classes()
         );
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
         };
-        Ok(ReferenceBackend { mlp, h, wid, c, batch, threads })
+        Ok(ReferenceBackend { net, h, wid, c, batch, threads })
     }
 
     /// Direct (non-batched) forward for one image — the ground truth the
@@ -421,7 +462,7 @@ impl ReferenceBackend {
     /// batch, so the comparison is exact, not approximate.
     pub fn classify_one(&self, pixels: &[f32]) -> usize {
         debug_assert_eq!(pixels.len(), self.h * self.wid * self.c);
-        self.mlp.classify(pixels, 1, 1)[0]
+        self.net.classify(pixels, 1, 1)[0]
     }
 }
 
@@ -435,7 +476,7 @@ impl Backend for ReferenceBackend {
     }
 
     fn num_classes(&self) -> usize {
-        self.mlp.classes
+        self.net.classes()
     }
 
     fn infer(&self, x: &Tensor) -> anyhow::Result<Vec<usize>> {
@@ -453,7 +494,7 @@ impl Backend for ReferenceBackend {
             "reference backend: {rows} rows exceeds serve batch {}",
             self.batch
         );
-        Ok(self.mlp.classify(&x.data, rows, self.threads))
+        Ok(self.net.classify(&x.data, rows, self.threads))
     }
 }
 
@@ -647,6 +688,46 @@ mod tests {
         // oversized batches are rejected, not silently truncated
         let too_big = Tensor::zeros(vec![9, h, w, c]);
         assert!(backend.infer(&too_big).is_err());
+    }
+
+    #[test]
+    fn conv_checkpoint_serves_through_the_engine() {
+        // a native conv trainer's state, packed with full serving meta,
+        // must load as a QuantConvNet and answer through the pipelined
+        // engine exactly like the trainer's own serving forward
+        use crate::backprop::ConvNativeBackend;
+        use crate::runtime::StepBackend;
+
+        let trainer = ConvNativeBackend::new(8, 8, 3, 10, &[4]).unwrap();
+        let state = trainer.init_state(7).unwrap();
+        let ck = trainer.to_checkpoint(&state, 8);
+        let q = Arc::new(QuantizedCheckpoint::from_checkpoint(&ck, 4, |n| {
+            n.ends_with(".w")
+        }));
+        let q2 = Arc::clone(&q);
+        let engine = Engine::start(
+            EngineConfig {
+                workers: 2,
+                queue_capacity: 64,
+                max_delay: Duration::from_millis(2),
+            },
+            move |_| {
+                Ok(Box::new(ReferenceBackend::with_threads(&q2, 2)?) as Box<dyn Backend>)
+            },
+        )
+        .unwrap();
+        let ds = crate::data::synth::generate_sized(DatasetKind::Cifar10, 16, 5, 1, 8, 8);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..16 {
+            engine.submit(i as u64, ds.image(i).to_vec(), tx.clone()).unwrap();
+        }
+        for _ in 0..16 {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            let i = resp.id as usize;
+            let want = trainer.predict(&state, ds.image(i), 1, 4, 8).unwrap()[0];
+            assert_eq!(resp.result, Ok(want), "request {i}");
+        }
+        engine.shutdown();
     }
 
     #[test]

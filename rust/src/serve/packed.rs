@@ -197,6 +197,30 @@ impl QuantizedCheckpoint {
         self.tensors.iter().map(|(_, t)| t.payload_bytes()).sum()
     }
 
+    /// A meta array of layer names (`mlp_layers`, `conv_layers`):
+    /// `Ok(None)` when the key is absent, `Err` when it is present but
+    /// malformed — an empty array or non-string entries. One parser for
+    /// every layer-stack loader ([`crate::kernels::QuantMlp`],
+    /// [`crate::kernels::conv::QuantConvNet`]).
+    pub fn meta_layer_names(&self, key: &str) -> anyhow::Result<Option<Vec<String>>> {
+        let Some(j) = self.meta.get(key) else {
+            return Ok(None);
+        };
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("meta {key} must be an array of layer names"))?;
+        anyhow::ensure!(!arr.is_empty(), "meta {key} is empty");
+        let names = arr
+            .iter()
+            .map(|e| {
+                e.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("{key} entries must be strings"))
+            })
+            .collect::<anyhow::Result<Vec<String>>>()?;
+        Ok(Some(names))
+    }
+
     // ---------------------------------------------------------------- io
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
@@ -437,6 +461,32 @@ mod tests {
         );
         std::fs::remove_file(fp32_path).ok();
         std::fs::remove_file(packed_path).ok();
+    }
+
+    #[test]
+    fn meta_layer_names_absent_valid_and_malformed() {
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            (
+                "mlp_layers",
+                Json::Arr(vec![Json::str("fc1"), Json::str("fc2")]),
+            ),
+            ("conv_layers", Json::Arr(vec![])),
+            ("k_a", Json::num(8.0)),
+        ]));
+        assert_eq!(
+            q.meta_layer_names("mlp_layers").unwrap(),
+            Some(vec!["fc1".to_string(), "fc2".to_string()])
+        );
+        assert_eq!(q.meta_layer_names("missing").unwrap(), None);
+        assert!(q.meta_layer_names("conv_layers").is_err(), "empty array");
+        assert!(q.meta_layer_names("k_a").is_err(), "not an array");
+        if let Json::Obj(m) = &mut q.meta {
+            m.insert(
+                "bad".to_string(),
+                Json::Arr(vec![Json::str("x"), Json::num(1.0)]),
+            );
+        }
+        assert!(q.meta_layer_names("bad").is_err(), "non-string entry");
     }
 
     #[test]

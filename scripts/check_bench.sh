@@ -1,0 +1,101 @@
+#!/usr/bin/env bash
+# Bench-regression gate (ISSUE 4): compare the freshly emitted
+# BENCH_*.json files at the repo root against the committed baselines in
+# bench_baselines/, failing when a throughput metric regresses by more
+# than 25%.
+#
+# Absolute ms/step numbers do not travel between machines, so the gate
+# compares *ratio* metrics only — dimensionless speedups that measure
+# the kernels against a same-run baseline executed on the same box:
+#
+#   BENCH_kernels.json       speedup_vs_legacy   per (k_w, batch)
+#   BENCH_conv_native.json   speedup_vs_direct   per (k_w, batch)
+#   BENCH_train_native.json  steps_per_sec / fp32 steps_per_sec
+#                                                per quantized config
+#
+# The committed baselines are deliberately conservative floors (they
+# sit below the acceptance numbers in DESIGN.md §11/§13); to ratchet
+# them up, copy a fresh BENCH_*.json from a healthy run into
+# bench_baselines/ — the files share one format.
+#
+# Usage: scripts/check_bench.sh   (from the repo root or anywhere)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PY=python3
+command -v "$PY" >/dev/null 2>&1 || PY=python
+
+"$PY" - <<'EOF'
+import json, os, sys
+
+TOLERANCE = 0.75  # fresh must be >= 25% of the way below baseline
+
+def rows_by_key(doc, key_fields):
+    out = {}
+    for row in doc.get("results", []):
+        out[tuple(row.get(f) for f in key_fields)] = row
+    return out
+
+def ratio_metric(doc, metric, key_fields):
+    """(key -> ratio) straight from a per-row ratio field."""
+    return {k: r[metric] for k, r in rows_by_key(doc, key_fields).items()
+            if metric in r}
+
+def train_relative(doc):
+    """steps_per_sec of each quantized config relative to the same
+    run's fp32 row — machine-independent."""
+    rows = {r["config"]: r for r in doc.get("results", [])}
+    fp32 = rows.get("fp32", {}).get("steps_per_sec")
+    if not fp32:
+        return {}
+    return {(c,): r["steps_per_sec"] / fp32
+            for c, r in rows.items() if c != "fp32"}
+
+CHECKS = [
+    ("BENCH_kernels.json",      "speedup_vs_legacy",
+     lambda d: ratio_metric(d, "speedup_vs_legacy", ("k_w", "batch"))),
+    ("BENCH_conv_native.json",  "speedup_vs_direct",
+     lambda d: ratio_metric(d, "speedup_vs_direct", ("k_w", "batch"))),
+    ("BENCH_train_native.json", "steps_per_sec vs fp32",
+     train_relative),
+]
+
+failures = []
+for fname, label, extract in CHECKS:
+    base_path = os.path.join("bench_baselines", fname)
+    if not os.path.exists(base_path):
+        failures.append(f"{fname}: missing baseline {base_path}")
+        continue
+    if not os.path.exists(fname):
+        failures.append(f"{fname}: bench output missing — run scripts/verify.sh first")
+        continue
+    with open(base_path) as f:
+        baseline = extract(json.load(f))
+    with open(fname) as f:
+        fresh = extract(json.load(f))
+    if not baseline:
+        failures.append(f"{base_path}: no comparable rows — baseline malformed?")
+        continue
+    print(f"== {fname} ({label}; fail below {TOLERANCE:.2f}x baseline) ==")
+    for key, want in sorted(baseline.items(), key=str):
+        got = fresh.get(key)
+        tag = "/".join(str(k) for k in key)
+        if got is None:
+            failures.append(f"{fname} {tag}: row missing from fresh output")
+            print(f"  {tag:>12}: baseline {want:6.2f}  fresh MISSING")
+            continue
+        ok = got >= want * TOLERANCE
+        print(f"  {tag:>12}: baseline {want:6.2f}  fresh {got:6.2f}  "
+              f"{'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(
+                f"{fname} {tag}: {label} {got:.2f} < {TOLERANCE:.2f} x "
+                f"baseline {want:.2f}")
+
+if failures:
+    print("\nbench-regression gate FAILED:", file=sys.stderr)
+    for f in failures:
+        print(f"  - {f}", file=sys.stderr)
+    sys.exit(1)
+print("\nbench-regression gate: OK")
+EOF

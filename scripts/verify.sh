@@ -1,12 +1,24 @@
 #!/usr/bin/env bash
-# Tier-1 verification (ROADMAP.md) + bench smoke.
+# Tier-1 verification (ROADMAP.md) + bench smoke + bench emission.
 #
-#   scripts/verify.sh           # build, unit+integration tests, bench smoke
+#   scripts/verify.sh           # build, unit+integration tests, bench
+#                               # smoke, BENCH_*.json emission
 #
 # Works offline: integration tests and the paper benches skip themselves
-# when AOT artifacts are absent (DESIGN.md §3); the serve bench runs
-# fully on the pure-Rust reference backend, so the serving subsystem is
-# exercised end-to-end either way.
+# when AOT artifacts are absent (DESIGN.md §3); the serve bench and the
+# native training/conv benches run fully on the pure-Rust backends, so
+# the serving and training subsystems are exercised end-to-end either
+# way.
+#
+# CI gates layered on top of this script (.github/workflows/ci.yml):
+#   lint        cargo fmt --check + cargo clippy --all-targets -D warnings
+#               (style-lint allowances live in rust/Cargo.toml [lints])
+#   verify      this script
+#   e2e         release-mode tests/train_native.rs + tests/conv_native.rs
+#               (the offline train→export→serve closures, MLP and conv)
+#   bench gate  scripts/check_bench.sh — the BENCH_*.json ratio metrics
+#               emitted below vs the committed bench_baselines/*.json,
+#               failing on a >25% throughput regression
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -32,5 +44,14 @@ echo "== native training bench: emit BENCH_train_native.json =="
 # (DESIGN.md §12); runs fully offline, like the kernels sweep
 cargo bench --bench train_native -- --steps 20 --out ../BENCH_train_native.json
 test -s ../BENCH_train_native.json
+
+echo "== native conv bench: emit BENCH_conv_native.json =="
+# integer im2col conv vs direct f32 convolution on the native smallcnn
+# (DESIGN.md §13); the speedup_vs_direct ratios feed the CI bench gate
+# (scripts/check_bench.sh — run there as its own step so a perf
+# regression is its own red X, not a failure buried inside this script;
+# run it by hand after this script for the same check locally)
+cargo bench --bench conv_native -- --iters 3 --out ../BENCH_conv_native.json
+test -s ../BENCH_conv_native.json
 
 echo "verify: OK"
