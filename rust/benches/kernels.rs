@@ -1,18 +1,27 @@
-//! Quantized-kernel benchmarks (DESIGN.md §11): f32-vs-integer GEMM
+//! Quantized-kernel benchmarks (DESIGN.md §11/§14): f32-vs-integer GEMM
 //! sweep over k_w ∈ {2,3,4,8} × batch ∈ {1,16,64} on the 2-layer demo
-//! MLP, written to `BENCH_kernels.json` so later PRs have a perf
-//! trajectory to beat.
+//! MLP, plus the bitserial-vs-dense-i8 sweep at k_w = k_a = k ∈ 1..=4,
+//! written to `BENCH_kernels.json` so later PRs have a perf trajectory
+//! to beat.
 //!
-//! Three forward paths per (k, batch) cell:
+//! Three forward paths per `mode: "quant"` (k, batch) cell:
 //! * `legacy` — the pre-kernels serving math: dequantize the packed
 //!   weights to f32 once, then the cache-hostile strided scalar dot
 //!   (`w[i·n_out + o]` strides by `n_out` every element);
 //! * `f32` — the kernels' f32 fallback: same dequantized weights,
 //!   transposed contiguous layout (isolates the layout win);
-//! * `quant` — the integer path: i8/i16 codes, on-the-fly activation
-//!   quantization at k_a = 8, i32 accumulation, f64 epilogue.
+//! * `quant` — the integer path under automatic plan selection
+//!   (bitserial planes at small k_w·k_a, dense i8/i16 otherwise).
 //!
-//! Acceptance floor (ISSUE 2): quant ≥ 2× legacy at k_w = 4, batch 64.
+//! The `mode: "bitserial"` rows race the two *forced* integer plans on
+//! one layer (the demo MLP's fc1, 3072 → hidden) at k_w = k_a = k,
+//! single-threaded, identical pre-quantized inputs — isolating the
+//! §14 claim that popcount work scales with k_w·k_a where the dense
+//! path is flat in k: `speedup_vs_i8` must improve monotonically as k
+//! shrinks.
+//!
+//! Acceptance floors: quant ≥ 2× legacy at k_w = 4, batch 64 (ISSUE 2);
+//! bitserial ≥ 1.5× dense i8 at k_w = k_a = 2, batch 64 (ISSUE 5).
 //!
 //! ```bash
 //! cargo bench --bench kernels
@@ -22,7 +31,7 @@
 use std::path::PathBuf;
 
 use adaqat::data::DatasetKind;
-use adaqat::kernels::QuantMlp;
+use adaqat::kernels::{quantize_row_centered, PlanChoice, QuantGemm, QuantMlp, Scratch};
 use adaqat::metrics::Table;
 use adaqat::serve::{demo, QuantizedCheckpoint};
 use adaqat::util::bench::{bench_args, measure};
@@ -146,6 +155,7 @@ fn main() -> anyhow::Result<()> {
                 format!("{vs_f32:.1}x"),
             ]);
             rows_json.push(Json::obj(vec![
+                ("mode", Json::str("quant")),
                 ("k_w", Json::num(k as f64)),
                 ("k_a", Json::num(8.0)),
                 ("batch", Json::num(batch as f64)),
@@ -163,6 +173,86 @@ fn main() -> anyhow::Result<()> {
         println!(
             "acceptance (k_w=4, batch=64): quant is {sp:.1}x the legacy path {}",
             if sp >= 2.0 { "(>= 2x: OK)" } else { "(< 2x — REGRESSION, investigate!)" }
+        );
+    }
+
+    // --- bitserial vs dense i8 (DESIGN.md §14): k_w = k_a = k, fc1 only,
+    // single thread, both plans forced so the race is path-vs-path ---
+    let n_out = hidden; // fc1 is [d, hidden]
+    println!(
+        "=== bit-sliced popcount vs dense i8 GEMM (fc1 {d}->{n_out}, k_w=k_a=k, 1 thread) ==="
+    );
+    let mut btable = Table::new(&["k", "batch", "i8 ms", "bitserial ms", "vs i8"]);
+    let mut baccept: Option<f64> = None;
+    // per-batch p50 ms by k, for the monotone-in-k trend report
+    let mut trend: Vec<(u32, usize, f64)> = vec![];
+    for &k in &[1u32, 2, 3, 4] {
+        let q = QuantizedCheckpoint::from_checkpoint(&ck, k, |n| n.ends_with(".w"));
+        let wt = q.get("fc1.w").expect("fc1.w");
+        let dense = QuantGemm::from_packed_with(wt, k, PlanChoice::DenseInt)?;
+        let bits = QuantGemm::from_packed_with(wt, k, PlanChoice::Bitserial)?;
+        let bias = vec![0.0f32; dense.n_out];
+        for &batch in &batches {
+            let mut qa = vec![0i16; batch * d];
+            let mut steps = vec![0.0f32; batch];
+            for r in 0..batch {
+                steps[r] =
+                    quantize_row_centered(&x[r * d..(r + 1) * d], k, &mut qa[r * d..(r + 1) * d]);
+            }
+            let mut out = vec![0.0f32; batch * dense.n_out];
+            let s_dense = measure(warmup, iters, || {
+                dense.forward_quant(&qa, &steps, batch, &bias, &mut out);
+                std::hint::black_box(&out);
+            });
+            let mut scratch = Scratch::default();
+            let s_bits = measure(warmup, iters, || {
+                bits.forward_quant_arena(&qa, &steps, batch, &bias, &mut out, &mut scratch);
+                std::hint::black_box(&out);
+            });
+            let vs_i8 = s_dense.p50_ms / s_bits.p50_ms;
+            if k == 2 && batch == 64 {
+                baccept = Some(vs_i8);
+            }
+            trend.push((k, batch, s_bits.p50_ms));
+            btable.row(vec![
+                k.to_string(),
+                batch.to_string(),
+                format!("{:.3}", s_dense.p50_ms),
+                format!("{:.3}", s_bits.p50_ms),
+                format!("{vs_i8:.1}x"),
+            ]);
+            rows_json.push(Json::obj(vec![
+                ("mode", Json::str("bitserial")),
+                ("k_w", Json::num(k as f64)),
+                ("k_a", Json::num(k as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("i8_ms", Json::num(s_dense.p50_ms)),
+                ("bitserial_ms", Json::num(s_bits.p50_ms)),
+                ("speedup_vs_i8", Json::num(vs_i8)),
+            ]));
+        }
+    }
+    println!("{}", btable.render());
+    if let Some(sp) = baccept {
+        println!(
+            "acceptance (k_w=k_a=2, batch=64): bitserial is {sp:.2}x the dense i8 path {}",
+            if sp >= 1.5 { "(>= 1.5x: OK)" } else { "(< 1.5x — REGRESSION, investigate!)" }
+        );
+    }
+    // inner-loop work is ∝ k_w·k_a, so bitserial time should rise
+    // monotonically in k at every batch size — report any inversion
+    for &batch in &batches {
+        let mut ms: Vec<(u32, f64)> = trend
+            .iter()
+            .filter(|(_, b, _)| *b == batch)
+            .map(|&(k, _, m)| (k, m))
+            .collect();
+        ms.sort_by_key(|&(k, _)| k);
+        let monotone = ms.windows(2).all(|w| w[0].1 <= w[1].1 * 1.05); // 5% noise slack
+        println!(
+            "trend (batch {batch}): bitserial ms by k {:?} {}",
+            ms.iter().map(|&(k, m)| format!("k{k}={m:.3}")).collect::<Vec<_>>(),
+            if monotone { "(monotone in k_w·k_a: OK)" } else { "(NOT monotone — investigate)" }
         );
     }
 

@@ -49,6 +49,17 @@ pub fn quantize_row_centered(x: &[f32], bits: u32, out: &mut [i16]) -> f32 {
     scale / s
 }
 
+/// Undo the centering: the raw grid code c = (q + s)/2 of a centered
+/// code q = 2c − s (exact — q always carries the parity of s, so the
+/// shift never truncates). The bit-sliced kernels ([`super::bitserial`])
+/// decompose these raw codes into planes; keeping the inverse next to
+/// the quantizer pins the two conventions together.
+#[inline]
+pub fn raw_code(q: i16, s: i32) -> u32 {
+    debug_assert!((q as i32).abs() <= s && ((q as i32) & 1) == (s & 1));
+    ((q as i32 + s) >> 1) as u32
+}
+
 /// Fake-quantize a row in place (quantize + dequantize to the grid's
 /// f32 points, x̂ = q·Δ). The f32 fallback layers use this so a model's
 /// learned k_a is honoured even when the integer path is unavailable
@@ -115,6 +126,17 @@ mod tests {
                 assert_eq!((qi as i32 & 1), (s & 1), "bits={bits}");
                 let err = (x - qi as f32 * step).abs();
                 assert!(err <= step + 1e-6, "bits={bits}: {x} vs {}", qi as f32 * step);
+            }
+        }
+    }
+
+    #[test]
+    fn raw_code_inverts_centering_on_the_whole_grid() {
+        for bits in [1u32, 2, 4, 15] {
+            let s = code_levels(bits) as i32;
+            for c in 0..=s {
+                let q = (2 * c - s) as i16;
+                assert_eq!(raw_code(q, s), c as u32, "bits={bits} c={c}");
             }
         }
     }

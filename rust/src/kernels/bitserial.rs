@@ -1,0 +1,544 @@
+//! Bit-sliced popcount GEMM (DESIGN.md §14): inner-loop work ∝ k_w·k_a.
+//!
+//! The dense integer plans (§11) execute the same i8/i16 multiply at
+//! k = 2 as at k = 8 — the learned bit-widths save cache bytes but the
+//! instruction count is flat in k, while the cost model (and the paper's
+//! hardware model) charge compute ∝ k_w·k_a. This module makes that
+//! proportionality physical. Centered codes q = 2c − s are *decomposed
+//! by binary digit*: the raw codes c ∈ [0, s] of one weight output row
+//! (and, on the fly, of one activation row) are scattered into k
+//! bit planes of u64 words, and the exact integer dot falls out of pure
+//! AND + popcount over those planes via the centering identity
+//!
+//! ```text
+//!   Σᵢ q_aᵢ·q_wᵢ = Σᵢ (2c_aᵢ − s_a)(2c_wᵢ − s_w)
+//!               = 4·P − 2·s_w·A − 2·s_a·W + d·s_a·s_w
+//!   P = Σ_{j<k_a} Σ_{l<k_w} 2^{j+l} · popcount(a_plane_j & w_plane_l)
+//!   A = Σᵢ c_aᵢ   (per activation row, folded out during slicing)
+//!   W = Σᵢ c_wᵢ   (per weight row, precomputed at plan build)
+//! ```
+//!
+//! so one AND+popcount word consumes **64 elements of one plane pair**
+//! and the inner loop runs exactly k_w·k_a plane pairs: W2·A2 costs 4
+//! word-ops per 64 elements where W4·A4 costs 16 — serving throughput
+//! finally ratchets as the controller drives bits down. Every quantity
+//! is an exact integer (tail bits past d are zero in both operands and
+//! contribute nothing; the constant term uses the true d), so the
+//! result equals the dense i8/i16 accumulator *bit for bit* and all
+//! §11 guarantees — order independence, batch/thread invariance —
+//! carry over unchanged. The property tests pin bitserial against the
+//! dense path and against a scalar i64 oracle at every width pair.
+//!
+//! Popcount runs through one of three backends picked once at plan
+//! build by runtime CPU detection: AVX2 (Mula nibble-LUT, 4 words per
+//! step), the `popcnt` instruction, or the portable software fallback —
+//! results are identical by construction (pinned by a test that runs
+//! every available backend on the same planes).
+
+use crate::quant::code_levels;
+
+use super::activ::raw_code;
+use super::gemm::OUT_TILE;
+use super::pack;
+use super::{grab, Scratch};
+
+/// Largest k_w·k_a product for which [`super::QuantGemm`] auto-selects
+/// the bitserial plan (`PlanChoice::Auto`). The crossover is where
+/// k_w·k_a popcount pairs per 64 elements stop beating 64 dense
+/// multiply-adds — measured on the bench sweep (`benches/kernels.rs`,
+/// bitserial-vs-i8 rows); 9 keeps W3·A3 and W2·A4 on the popcount path
+/// and leaves W4·A4 on the dense one. Forced construction via
+/// `PlanChoice::Bitserial` ignores this (the bench sweeps k ∈ 1..=4).
+pub const BITSERIAL_MAX_PRODUCT: u32 = 9;
+
+/// Which popcount backend a plan runs (detected once at build).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PopImpl {
+    Portable,
+    #[cfg(target_arch = "x86_64")]
+    Popcnt,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+fn detect_popcount() -> PopImpl {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return PopImpl::Avx2;
+        }
+        if is_x86_feature_detected!("popcnt") {
+            return PopImpl::Popcnt;
+        }
+    }
+    PopImpl::Portable
+}
+
+/// Bit-sliced weight planes for one GEMM: built once at checkpoint load
+/// from the raw codes, driven per batch with on-the-fly activation
+/// slicing into a [`Scratch`] arena.
+pub struct BitserialGemm {
+    d: usize,
+    n_out: usize,
+    k_a: u32,
+    s_a: i32,
+    s_w: i32,
+    /// Words per plane: ⌈d/64⌉.
+    words: usize,
+    /// Weight planes, row-major `[n_out][k_w][words]`.
+    planes: Vec<u64>,
+    /// Σ c_w per output row (the W term of the centering identity).
+    wsum: Vec<i64>,
+    /// The constant term d·s_a·s_w.
+    base: i64,
+    k_w: u32,
+    imp: PopImpl,
+}
+
+impl BitserialGemm {
+    /// Whether `PlanChoice::Auto` should pick bitserial at this width
+    /// pair (the dense integer path must already be admissible).
+    pub fn preferred(k_w: u32, k_a: u32) -> bool {
+        k_w * k_a <= BITSERIAL_MAX_PRODUCT
+    }
+
+    /// Build planes from raw codes in the checkpoint's `[d, n_out]`
+    /// row-major layout (the same `unpack_codes` output the dense plans
+    /// center and transpose). Caller guarantees `integer_bound_ok`.
+    pub fn from_codes(codes: &[u32], d: usize, n_out: usize, k_w: u32, k_a: u32) -> BitserialGemm {
+        assert_eq!(codes.len(), d * n_out);
+        let words = (d + 63) / 64;
+        let per_out = k_w as usize * words;
+        let mut planes = vec![0u64; n_out * per_out];
+        let mut wsum = vec![0i64; n_out];
+        for o in 0..n_out {
+            wsum[o] = pack::codes_to_bitplanes(
+                codes,
+                o,
+                n_out,
+                d,
+                k_w,
+                &mut planes[o * per_out..(o + 1) * per_out],
+            ) as i64;
+        }
+        let s_a = code_levels(k_a) as i32;
+        let s_w = code_levels(k_w) as i32;
+        BitserialGemm {
+            d,
+            n_out,
+            k_a,
+            s_a,
+            s_w,
+            words,
+            planes,
+            wsum,
+            base: d as i64 * s_a as i64 * s_w as i64,
+            k_w,
+            imp: detect_popcount(),
+        }
+    }
+
+    /// The exact-integer forward over centered activation codes —
+    /// identical arithmetic contract to the dense `quant_rows` loop
+    /// (`sw` is Δ_w as f64; `gain = None` reproduces the unscaled
+    /// epilogue): `out[r,o] = (acc·Δ_a[r]·Δ_w[·gain[o]]) + bias[o]`
+    /// with acc the exact Σ q_a·q_w. Activation rows are sliced into
+    /// the scratch arena's plane buffer (no allocation once warm).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        qa: &[i16],
+        step_a: &[f32],
+        rows: usize,
+        sw: f64,
+        gain: Option<&[f32]>,
+        bias: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let d = self.d;
+        let words = self.words;
+        let ka = self.k_a as usize;
+        let kw = self.k_w as usize;
+        let per_row = ka * words;
+        let per_out = kw * words;
+        let Scratch { planes: aplanes, asum, grow_events, .. } = scratch;
+        grab(aplanes, rows * per_row, grow_events);
+        grab(asum, rows, grow_events);
+        for r in 0..rows {
+            // An all-zero row is the quantizer's Δ = 0 sentinel: its
+            // centered codes are all 0, which is *off* the parity grid,
+            // so the centering identity does not apply — its exact
+            // integer dot is simply 0 (what the dense path computes),
+            // forced below. The row's planes are left unwritten (stale
+            // arena contents); the acc short-circuit never reads them.
+            if step_a[r] != 0.0 {
+                asum[r] = slice_row(
+                    &qa[r * d..(r + 1) * d],
+                    self.s_a,
+                    self.k_a,
+                    &mut aplanes[r * per_row..(r + 1) * per_row],
+                );
+            } else {
+                asum[r] = 0;
+            }
+        }
+        for o0 in (0..self.n_out).step_by(OUT_TILE) {
+            let o1 = (o0 + OUT_TILE).min(self.n_out);
+            for r in 0..rows {
+                let ap = &aplanes[r * per_row..(r + 1) * per_row];
+                let da = step_a[r] as f64 * sw;
+                let live = step_a[r] != 0.0;
+                for o in o0..o1 {
+                    let acc = if live {
+                        let wp = &self.planes[o * per_out..(o + 1) * per_out];
+                        let p = weighted_and_popcount(ap, wp, words, ka, kw, self.imp);
+                        4 * p - 2 * (self.s_w as i64) * asum[r]
+                            - 2 * (self.s_a as i64) * self.wsum[o]
+                            + self.base
+                    } else {
+                        0
+                    };
+                    let scale = match gain {
+                        Some(g) => da * g[o] as f64,
+                        None => da,
+                    };
+                    out[r * self.n_out + o] = (acc as f64 * scale) as f32 + bias[o];
+                }
+            }
+        }
+    }
+}
+
+/// Slice one centered activation row into `bits` planes of raw codes
+/// (c = (q + s)/2, see [`raw_code`]); returns Σc. Writes every word of
+/// `planes` (tail bits zero), so the buffer needs no pre-clearing.
+fn slice_row(q: &[i16], s_a: i32, bits: u32, planes: &mut [u64]) -> i64 {
+    let d = q.len();
+    let words = (d + 63) / 64;
+    debug_assert_eq!(planes.len(), bits as usize * words);
+    let ka = bits as usize;
+    let mut sum = 0i64;
+    // k_a ≤ 15 always holds (the integer path's i16 bound)
+    let mut regs = [0u64; 16];
+    for w in 0..words {
+        regs[..ka].fill(0);
+        let i0 = w * 64;
+        let i1 = (i0 + 64).min(d);
+        for (b, &qi) in q[i0..i1].iter().enumerate() {
+            let c = raw_code(qi, s_a) as u64;
+            sum += c as i64;
+            for (j, reg) in regs[..ka].iter_mut().enumerate() {
+                *reg |= ((c >> j) & 1) << b;
+            }
+        }
+        for (j, &reg) in regs[..ka].iter().enumerate() {
+            planes[j * words + w] = reg;
+        }
+    }
+    sum
+}
+
+/// P = Σ_{j,l} 2^{j+l}·popcount(a_j & w_l) over `ka × kw` plane pairs,
+/// dispatched to the backend detected at plan build. All backends
+/// return identical integers (pinned by `popcount_backends_agree`).
+fn weighted_and_popcount(
+    a: &[u64],
+    w: &[u64],
+    words: usize,
+    ka: usize,
+    kw: usize,
+    imp: PopImpl,
+) -> i64 {
+    match imp {
+        PopImpl::Portable => weighted_pairs(a, w, words, ka, kw),
+        #[cfg(target_arch = "x86_64")]
+        PopImpl::Popcnt => unsafe { weighted_pairs_popcnt(a, w, words, ka, kw) },
+        #[cfg(target_arch = "x86_64")]
+        PopImpl::Avx2 => unsafe { weighted_pairs_avx2(a, w, words, ka, kw) },
+    }
+}
+
+/// Portable pair loop. `#[inline(always)]` so the `popcnt`-enabled
+/// wrapper compiles this body with the hardware instruction.
+#[inline(always)]
+fn weighted_pairs(a: &[u64], w: &[u64], words: usize, ka: usize, kw: usize) -> i64 {
+    let mut p = 0i64;
+    for j in 0..ka {
+        let aj = &a[j * words..(j + 1) * words];
+        for l in 0..kw {
+            let wl = &w[l * words..(l + 1) * words];
+            let mut cnt = 0u32;
+            for (&x, &y) in aj.iter().zip(wl) {
+                cnt += (x & y).count_ones();
+            }
+            p += (cnt as i64) << (j + l);
+        }
+    }
+    p
+}
+
+/// [`weighted_pairs`] compiled with the hardware `popcnt` instruction
+/// (one word per op instead of the ~12-op software fold).
+///
+/// # Safety
+/// Caller must have verified `popcnt` support (detection at plan build).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn weighted_pairs_popcnt(a: &[u64], w: &[u64], words: usize, ka: usize, kw: usize) -> i64 {
+    weighted_pairs(a, w, words, ka, kw)
+}
+
+/// AVX2 pair loop: Mula's nibble-LUT popcount (`vpshufb` on both
+/// nibbles, byte sums folded through `vpsadbw`), 4 words of AND per
+/// step, scalar remainder for the ≤ 3 tail words.
+///
+/// # Safety
+/// Caller must have verified AVX2 support (detection at plan build).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn weighted_pairs_avx2(a: &[u64], w: &[u64], words: usize, ka: usize, kw: usize) -> i64 {
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi64, _mm256_add_epi8, _mm256_and_si256, _mm256_loadu_si256,
+        _mm256_sad_epu8, _mm256_set1_epi8, _mm256_setr_epi8, _mm256_setzero_si256,
+        _mm256_shuffle_epi8, _mm256_srli_epi16, _mm256_storeu_si256,
+    };
+    unsafe {
+        #[rustfmt::skip]
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let chunks = words / 4;
+        let mut p = 0i64;
+        for j in 0..ka {
+            let aj = &a[j * words..(j + 1) * words];
+            for l in 0..kw {
+                let wl = &w[l * words..(l + 1) * words];
+                let mut acc = zero;
+                for t in 0..chunks {
+                    let va = _mm256_loadu_si256(aj.as_ptr().add(4 * t) as *const __m256i);
+                    let vb = _mm256_loadu_si256(wl.as_ptr().add(4 * t) as *const __m256i);
+                    let v = _mm256_and_si256(va, vb);
+                    let lo = _mm256_shuffle_epi8(lut, _mm256_and_si256(v, low));
+                    let nib = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+                    let hi = _mm256_shuffle_epi8(lut, nib);
+                    acc = _mm256_add_epi64(acc, _mm256_sad_epu8(_mm256_add_epi8(lo, hi), zero));
+                }
+                let mut lanes = [0u64; 4];
+                _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+                let mut cnt = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+                for t in 4 * chunks..words {
+                    cnt += (aj[t] & wl[t]).count_ones() as u64;
+                }
+                p += (cnt as i64) << (j + l);
+            }
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::activ::quantize_row_centered;
+    use crate::kernels::gemm::{PlanChoice, PlanKind, QuantGemm};
+    use crate::serve::packed::PackedTensor;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn random_tensor(shape: Vec<usize>, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.normal() * 0.2).collect())
+    }
+
+    fn quantized_rows(x: &[f32], rows: usize, d: usize, k_a: u32) -> (Vec<i16>, Vec<f32>) {
+        let mut qa = vec![0i16; rows * d];
+        let mut steps = vec![0.0f32; rows];
+        for r in 0..rows {
+            steps[r] =
+                quantize_row_centered(&x[r * d..(r + 1) * d], k_a, &mut qa[r * d..(r + 1) * d]);
+        }
+        (qa, steps)
+    }
+
+    /// Every available popcount backend must return the same weighted
+    /// sum on the same planes — this is the test that pins the AVX2
+    /// intrinsics against the portable loop.
+    #[test]
+    fn popcount_backends_agree() {
+        let mut rng = Rng::new(91);
+        for (ka, kw, words) in [(1usize, 1usize, 1usize), (2, 2, 5), (3, 3, 7), (4, 2, 48)] {
+            let a: Vec<u64> = (0..ka * words).map(|_| rng.next_u64()).collect();
+            let w: Vec<u64> = (0..kw * words).map(|_| rng.next_u64()).collect();
+            let want = weighted_pairs(&a, &w, words, ka, kw);
+            #[cfg(target_arch = "x86_64")]
+            {
+                if is_x86_feature_detected!("popcnt") {
+                    let got = unsafe { weighted_pairs_popcnt(&a, &w, words, ka, kw) };
+                    assert_eq!(got, want, "popcnt backend ka={ka} kw={kw} words={words}");
+                }
+                if is_x86_feature_detected!("avx2") {
+                    let got = unsafe { weighted_pairs_avx2(&a, &w, words, ka, kw) };
+                    assert_eq!(got, want, "avx2 backend ka={ka} kw={kw} words={words}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_row_scatters_raw_codes_and_sums() {
+        let mut rng = Rng::new(17);
+        for bits in [1u32, 2, 3, 4] {
+            let d = 131usize; // tail word with 3 live bits
+            let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let mut qa = vec![0i16; d];
+            quantize_row_centered(&x, bits, &mut qa);
+            let s = code_levels(bits) as i32;
+            let words = (d + 63) / 64;
+            let mut planes = vec![u64::MAX; bits as usize * words];
+            let sum = slice_row(&qa, s, bits, &mut planes);
+            let mut want_sum = 0i64;
+            for (i, &q) in qa.iter().enumerate() {
+                let c = raw_code(q, s);
+                want_sum += c as i64;
+                for j in 0..bits as usize {
+                    assert_eq!(
+                        (planes[j * words + i / 64] >> (i % 64)) & 1,
+                        ((c >> j) & 1) as u64,
+                        "bits={bits} i={i} j={j}"
+                    );
+                }
+            }
+            assert_eq!(sum, want_sum, "bits={bits}");
+            for j in 0..bits as usize {
+                for i in d..words * 64 {
+                    assert_eq!(
+                        (planes[j * words + i / 64] >> (i % 64)) & 1,
+                        0,
+                        "bits={bits}: tail bit {i} set"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Bitserial vs the dense i8 path, bit for bit, across every width
+    /// pair k_w, k_a ∈ 1..=4 and reduction lengths that hit whole-word,
+    /// one-word and tail-word shapes — arbitrary scales, with and
+    /// without the per-channel gain epilogue.
+    #[test]
+    fn bitserial_matches_dense_integer_path_bitwise() {
+        let mut rng = Rng::new(5);
+        for &d in &[63usize, 64, 67, 131, 200] {
+            for k_w in 1..=4u32 {
+                for k_a in 1..=4u32 {
+                    let n_out = 9usize;
+                    let rows = 3usize;
+                    let wt = PackedTensor::quantize(&random_tensor(vec![d, n_out], d as u64), k_w);
+                    let dense =
+                        QuantGemm::from_packed_with(&wt, k_a, PlanChoice::DenseInt).unwrap();
+                    let bits =
+                        QuantGemm::from_packed_with(&wt, k_a, PlanChoice::Bitserial).unwrap();
+                    assert_eq!(dense.plan_kind(), PlanKind::Int8);
+                    assert_eq!(bits.plan_kind(), PlanKind::Bitserial);
+                    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+                    let (qa, steps) = quantized_rows(&x, rows, d, k_a);
+                    let bias: Vec<f32> = (0..n_out).map(|_| rng.normal() * 0.1).collect();
+                    let gain: Vec<f32> = (0..n_out).map(|_| 0.5 + rng.uniform()).collect();
+
+                    let mut want = vec![0.0f32; rows * n_out];
+                    dense.forward_quant(&qa, &steps, rows, &bias, &mut want);
+                    let mut got = vec![0.0f32; rows * n_out];
+                    bits.forward_quant(&qa, &steps, rows, &bias, &mut got);
+                    for (a, b) in want.iter().zip(&got) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "d={d} k_w={k_w} k_a={k_a}");
+                    }
+
+                    dense.forward_quant_scaled(&qa, &steps, rows, &gain, &bias, &mut want);
+                    bits.forward_quant_scaled(&qa, &steps, rows, &gain, &bias, &mut got);
+                    for (a, b) in want.iter().zip(&got) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "scaled d={d} k_w={k_w} k_a={k_a}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bitserial vs a from-scratch scalar oracle: per-element payload
+    /// unpack, centered i64 dot, the same f64 epilogue — no planes, no
+    /// popcounts, no shared code with the kernel under test.
+    #[test]
+    fn bitserial_matches_scalar_i64_oracle() {
+        let mut rng = Rng::new(23);
+        for k in 1..=4u32 {
+            let d = 131usize;
+            let n_out = 7usize;
+            let rows = 4usize;
+            let wt = PackedTensor::quantize(&random_tensor(vec![d, n_out], 300 + k as u64), k);
+            let gemm = QuantGemm::from_packed_with(&wt, k, PlanChoice::Bitserial).unwrap();
+            let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+            let (qa, steps) = quantized_rows(&x, rows, d, k);
+            let bias = vec![0.5f32; n_out];
+            let mut got = vec![0.0f32; rows * n_out];
+            gemm.forward_quant(&qa, &steps, rows, &bias, &mut got);
+
+            let s_i = code_levels(k) as i64;
+            let sw = if wt.scale > 0.0 { wt.scale / s_i as f32 } else { 0.0 };
+            for r in 0..rows {
+                for o in 0..n_out {
+                    let mut acc = 0i64;
+                    for i in 0..d {
+                        let c =
+                            pack::read_bits_scalar(&wt.payload, (i * n_out + o) * k as usize, k)
+                                as i64;
+                        acc += qa[r * d + i] as i64 * (2 * c - s_i);
+                    }
+                    let want = (acc as f64 * (steps[r] as f64 * sw as f64)) as f32 + bias[o];
+                    assert_eq!(got[r * n_out + o].to_bits(), want.to_bits(), "k={k} r={r} o={o}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_and_zero_scale_stay_exact() {
+        // an all-zero activation row has Δ = 0 and all-zero codes; the
+        // identity's constant terms must still cancel to bias exactly
+        let d = 70usize;
+        let n_out = 3usize;
+        let wt = PackedTensor::quantize(&random_tensor(vec![d, n_out], 9), 2);
+        let gemm = QuantGemm::from_packed_with(&wt, 2, PlanChoice::Bitserial).unwrap();
+        let x = vec![0.0f32; d];
+        let (qa, steps) = quantized_rows(&x, 1, d, 2);
+        assert_eq!(steps[0], 0.0);
+        let mut out = vec![0.0f32; n_out];
+        gemm.forward_quant(&qa, &steps, 1, &[1.0, 2.0, 3.0], &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+
+        // zero-scale weights: every code is 0, Δ_w = 0 ⇒ logits = bias
+        let wz = PackedTensor::quantize(&Tensor::zeros(vec![d, n_out]), 2);
+        assert_eq!(wz.scale, 0.0);
+        let gz = QuantGemm::from_packed_with(&wz, 2, PlanChoice::Bitserial).unwrap();
+        let xs = vec![1.0f32; d];
+        let (qa, steps) = quantized_rows(&xs, 1, d, 2);
+        let mut out = vec![0.0f32; n_out];
+        gz.forward_quant(&qa, &steps, 1, &[4.0, 5.0, 6.0], &mut out);
+        assert_eq!(out, vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn preferred_follows_the_product_threshold() {
+        assert!(BitserialGemm::preferred(1, 1));
+        assert!(BitserialGemm::preferred(2, 2));
+        assert!(BitserialGemm::preferred(3, 3));
+        assert!(BitserialGemm::preferred(2, 4));
+        assert!(BitserialGemm::preferred(1, 8));
+        assert!(!BitserialGemm::preferred(2, 5));
+        assert!(!BitserialGemm::preferred(4, 4));
+        assert!(!BitserialGemm::preferred(2, 8));
+    }
+}

@@ -31,7 +31,7 @@ use crate::util::json::Json;
 
 use super::activ;
 use super::gemm::QuantGemm;
-use super::QuantMlp;
+use super::{chunk_range, grab, QuantMlp, Scratch, SplitMut, WorkerPool};
 
 /// Batch-norm epsilon — one constant shared by the native trainer's
 /// batch-stat normalization and the folded inference epilogue, so the
@@ -123,11 +123,21 @@ pub fn im2col(x: &[f32], rows: usize, g: &ConvGeom, out: &mut [f32]) {
 /// 2×2 average pool with stride 2 over NHWC input; spatial dims must be
 /// even. Each output is `0.25·(a + b + c + d)` — a power-of-two factor,
 /// so pooling is exact whenever the four inputs sum exactly.
+/// Allocating convenience over [`avgpool2x2_into`] (the training
+/// backward and tests; serving pools into an arena buffer).
 pub fn avgpool2x2(x: &[f32], rows: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * (h / 2) * (w / 2) * c];
+    avgpool2x2_into(x, rows, h, w, c, &mut out);
+    out
+}
+
+/// [`avgpool2x2`] into a caller-owned buffer of exactly
+/// `rows·(h/2)·(w/2)·c` elements.
+pub fn avgpool2x2_into(x: &[f32], rows: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
     assert!(h % 2 == 0 && w % 2 == 0, "avgpool2x2 wants even spatial dims, got {h}x{w}");
     assert_eq!(x.len(), rows * h * w * c, "avgpool2x2: bad input length");
     let (ph, pw) = (h / 2, w / 2);
-    let mut out = vec![0.0f32; rows * ph * pw * c];
+    assert_eq!(out.len(), rows * ph * pw * c, "avgpool2x2: bad output length");
     for r in 0..rows {
         let img = &x[r * h * w * c..(r + 1) * h * w * c];
         for py in 0..ph {
@@ -144,7 +154,6 @@ pub fn avgpool2x2(x: &[f32], rows: usize, h: usize, w: usize, c: usize) -> Vec<f
             }
         }
     }
-    out
 }
 
 /// Fold inference batch-norm into a per-channel affine epilogue:
@@ -184,18 +193,37 @@ pub struct QuantConvLayer {
 
 impl QuantConvLayer {
     /// Forward `rows` NHWC images through conv→BN→ReLU(→pool). Output is
-    /// NHWC `[rows, oh(/2), ow(/2), c_out]`.
+    /// NHWC `[rows, oh(/2), ow(/2), c_out]`. Allocating convenience
+    /// over [`forward_scratch`] (tests and one-off callers).
+    ///
+    /// [`forward_scratch`]: QuantConvLayer::forward_scratch
     pub fn forward(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.forward_scratch(x, rows, &mut Scratch::default(), &mut out);
+        out
+    }
+
+    /// [`forward`](QuantConvLayer::forward) with every transient buffer
+    /// — im2col patches, quantized patch rows, activation bit planes,
+    /// the pre-pool feature map — drawn from (and recycled through) the
+    /// arena, so repeat requests allocate nothing: the arena-reuse test
+    /// pins the pool's grow counter flat across requests. `out` is
+    /// resized in place and counts against the same arena budget.
+    pub fn forward_scratch(&self, x: &[f32], rows: usize, s: &mut Scratch, out: &mut Vec<f32>) {
         let g = &self.geom;
         let (oh, ow) = g.out_hw();
         let k = g.patch_len();
         let prows = rows * oh * ow;
-        let mut patches = vec![0.0f32; prows * k];
+        let mut patches = std::mem::take(&mut s.patches);
+        grab(&mut patches, prows * k, &s.grow_events);
         im2col(x, rows, g, &mut patches);
-        let mut out = vec![0.0f32; prows * g.c_out];
+        let mut pre = std::mem::take(&mut s.conv_out);
+        grab(&mut pre, prows * g.c_out, &s.grow_events);
         if self.gemm.is_integer() {
-            let mut qa = vec![0i16; prows * k];
-            let mut steps = vec![0.0f32; prows];
+            let mut qa = std::mem::take(&mut s.qa);
+            let mut steps = std::mem::take(&mut s.steps);
+            grab(&mut qa, prows * k, &s.grow_events);
+            grab(&mut steps, prows, &s.grow_events);
             for p in 0..prows {
                 steps[p] = activ::quantize_row_centered(
                     &patches[p * k..(p + 1) * k],
@@ -203,8 +231,17 @@ impl QuantConvLayer {
                     &mut qa[p * k..(p + 1) * k],
                 );
             }
-            self.gemm
-                .forward_quant_scaled(&qa, &steps, prows, &self.gain, &self.bias, &mut out);
+            self.gemm.forward_quant_scaled_arena(
+                &qa,
+                &steps,
+                prows,
+                &self.gain,
+                &self.bias,
+                &mut pre,
+                s,
+            );
+            s.qa = qa;
+            s.steps = steps;
         } else {
             if self.k_a < 24 {
                 for p in 0..prows {
@@ -212,17 +249,23 @@ impl QuantConvLayer {
                 }
             }
             self.gemm
-                .forward_f32_scaled(&patches, prows, &self.gain, &self.bias, &mut out);
+                .forward_f32_scaled(&patches, prows, &self.gain, &self.bias, &mut pre);
         }
-        for v in out.iter_mut() {
+        s.patches = patches;
+        for v in pre.iter_mut() {
             if *v < 0.0 {
                 *v = 0.0;
             }
         }
         if self.pool {
-            avgpool2x2(&out, rows, oh, ow, g.c_out)
+            grab(out, rows * (oh / 2) * (ow / 2) * g.c_out, &s.grow_events);
+            avgpool2x2_into(&pre, rows, oh, ow, g.c_out, out);
+            s.conv_out = pre;
         } else {
-            out
+            // the computed map becomes the output; the caller's old
+            // buffer cycles back into the arena for the next block
+            std::mem::swap(out, &mut pre);
+            s.conv_out = pre;
         }
     }
 }
@@ -368,48 +411,82 @@ impl QuantConvNet {
     }
 
     /// The conv stack only: `rows` NHWC images → flattened pooled
-    /// features `[rows, head.input]`.
-    fn features(&self, x: &[f32], rows: usize) -> Vec<f32> {
-        let mut cur = x.to_vec();
+    /// features written into `out` (`rows·head.input` elements), every
+    /// intermediate drawn from the arena.
+    fn features_scratch(&self, x: &[f32], rows: usize, s: &mut Scratch, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), rows * self.head.input);
+        let mut cur = std::mem::take(&mut s.buf_a);
+        grab(&mut cur, x.len(), &s.grow_events);
+        cur.copy_from_slice(x);
+        let mut nxt = std::mem::take(&mut s.buf_b);
         for layer in &self.conv {
-            cur = layer.forward(&cur, rows);
+            layer.forward_scratch(&cur, rows, s, &mut nxt);
+            std::mem::swap(&mut cur, &mut nxt);
         }
-        cur
+        out.copy_from_slice(&cur[..out.len()]);
+        // undo ping-pong parity (see QuantMlp::forward_pooled): each
+        // buffer returns to the arena slot it came from so capacities
+        // stay stable across requests
+        if self.conv.len() % 2 == 1 {
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        s.buf_a = cur;
+        s.buf_b = nxt;
     }
 
-    /// Logits for `rows` stacked NHWC images. `threads` splits the batch
-    /// into contiguous sample chunks (std::thread, like [`QuantMlp`]);
-    /// per-patch activation scales make every sample independent of its
-    /// neighbours, so thread count and batch composition never change a
-    /// result.
+    /// Logits for `rows` stacked NHWC images on a transient pool of
+    /// `threads` lanes (≤ 1 inline; 0 clamps to 1 like the old inline
+    /// path — per-core auto-sizing belongs to the persistent pool) —
+    /// the convenience form; serving holds a persistent [`WorkerPool`]
+    /// and calls [`forward_pooled`].
+    ///
+    /// [`forward_pooled`]: QuantConvNet::forward_pooled
     pub fn forward(&self, x: &[f32], rows: usize, threads: usize) -> Vec<f32> {
+        self.forward_pooled(x, rows, &WorkerPool::new(threads.max(1)))
+    }
+
+    /// Logits for `rows` stacked NHWC images: the batch splits into
+    /// contiguous sample chunks, one per pool lane, each lane running
+    /// the whole conv stack out of its own arena; the fc head then runs
+    /// [`QuantMlp::forward_pooled`] over the gathered features.
+    /// Per-patch activation scales make every sample independent of its
+    /// neighbours, so lane count and batch composition never change a
+    /// result.
+    pub fn forward_pooled(&self, x: &[f32], rows: usize, pool: &WorkerPool) -> Vec<f32> {
         let sz = self.input_numel();
         assert_eq!(x.len(), rows * sz, "bad input length");
-        let t = threads.max(1).min(rows.max(1));
-        let feats = if t <= 1 {
-            self.features(x, rows)
-        } else {
-            let chunk = rows.div_ceil(t);
-            let flat = self.head.input;
-            let mut feats = vec![0.0f32; rows * flat];
-            std::thread::scope(|s| {
-                for (ci, out_chunk) in feats.chunks_mut(chunk * flat).enumerate() {
-                    let r0 = ci * chunk;
-                    let r1 = (r0 + chunk).min(rows);
-                    let xin = &x[r0 * sz..r1 * sz];
-                    s.spawn(move || {
-                        out_chunk.copy_from_slice(&self.features(xin, r1 - r0));
-                    });
-                }
-            });
-            feats
+        let flat = self.head.input;
+        let (mut feats, grew) = {
+            let mut st = pool.stage_scratch();
+            (std::mem::take(&mut st.patches), st.grow_events.clone())
         };
-        self.head.forward(&feats, rows, threads)
+        grab(&mut feats, rows * flat, &grew);
+        let parts = pool.threads().min(rows.max(1));
+        {
+            let split = SplitMut::new(&mut feats);
+            pool.run_active(parts, |wid, ws| {
+                let (r0, r1) = chunk_range(rows, parts, wid);
+                if r0 >= r1 {
+                    return;
+                }
+                // Safety: chunk_range partitions — ranges disjoint.
+                let out = unsafe { split.range(r0 * flat, (r1 - r0) * flat) };
+                self.features_scratch(&x[r0 * sz..r1 * sz], r1 - r0, ws, out);
+            });
+        }
+        let logits = self.head.forward_pooled(&feats, rows, pool);
+        pool.stage_scratch().patches = feats;
+        logits
     }
 
     /// Argmax class per row (lowest index on ties — the shared rule).
     pub fn classify(&self, x: &[f32], rows: usize, threads: usize) -> Vec<usize> {
-        let logits = self.forward(x, rows, threads);
+        self.classify_pooled(x, rows, &WorkerPool::new(threads.max(1)))
+    }
+
+    /// [`classify`](QuantConvNet::classify) on a persistent pool.
+    pub fn classify_pooled(&self, x: &[f32], rows: usize, pool: &WorkerPool) -> Vec<usize> {
+        let logits = self.forward_pooled(x, rows, pool);
         (0..rows)
             .map(|r| super::argmax(&logits[r * self.classes..(r + 1) * self.classes]))
             .collect()
@@ -782,6 +859,41 @@ mod tests {
         // not a conv checkpoint at all
         let q5 = QuantizedCheckpoint::new(Json::obj(vec![("k_a", Json::num(8.0))]));
         assert!(QuantConvNet::from_packed(&q5).is_err());
+    }
+
+    #[test]
+    fn conv_arena_stops_allocating_after_warmup() {
+        // the satellite contract: im2col patches, quantized patch rows
+        // and feature maps are recycled through the pool's arenas — the
+        // first request populates them, every later request allocates
+        // nothing (the debug grow counter freezes), and answers stay
+        // bit-identical throughout.
+        let q = conv_checkpoint(2, 2.0, 400);
+        let net = QuantConvNet::from_packed(&q).unwrap();
+        // W2·A2: the conv blocks ride the bitserial popcount planes
+        assert!(net
+            .conv
+            .iter()
+            .all(|l| l.gemm.plan_kind() == crate::kernels::PlanKind::Bitserial));
+        let pool = WorkerPool::new(2);
+        let mut rng = Rng::new(3);
+        let rows = 6usize;
+        let x: Vec<f32> = (0..rows * net.input_numel()).map(|_| rng.normal()).collect();
+        let first = net.forward_pooled(&x, rows, &pool);
+        let warm = pool.grow_events();
+        assert!(warm > 0, "warm-up should have populated the arenas");
+        for _ in 0..4 {
+            let again = net.forward_pooled(&x, rows, &pool);
+            for (a, b) in first.iter().zip(&again) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert_eq!(pool.grow_events(), warm, "conv hot path allocated after warm-up");
+        // and the pooled path agrees with the transient-inline one
+        let inline = net.forward(&x, rows, 1);
+        for (a, b) in first.iter().zip(&inline) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -19,12 +19,21 @@
 //! Codes wider than i16 (k > 15), raw-f32 tensors, identity-scale
 //! activations (k_a ≥ 24) and bound violations fall back to an f32 plan
 //! over the canonical dequantized weights, same transposed layout.
+//!
+//! Small width products take a third form: when k_w·k_a ≤
+//! [`BITSERIAL_MAX_PRODUCT`](super::bitserial::BITSERIAL_MAX_PRODUCT)
+//! the plan stores bit-sliced weight planes instead of dense codes and
+//! the dot runs on AND+popcount (§14, [`super::bitserial`]) — same
+//! exact integer accumulator, so the three integer forms are
+//! interchangeable bit for bit and callers never see which one ran.
 
 use crate::quant::code_levels;
 use crate::serve::packed::{PackedTensor, RAW_BITS};
 
 use super::activ::MAX_INT_ACT_BITS;
+use super::bitserial::BitserialGemm;
 use super::pack;
+use super::Scratch;
 
 /// Weight storage: centered integer codes when the integer path is
 /// usable, canonical dequantized f32 otherwise. All row-major
@@ -34,14 +43,40 @@ enum Weights {
     I8(Vec<i8>),
     /// 8 ≤ k_w ≤ 15: |q| ≤ 32767 fits i16.
     I16(Vec<i16>),
+    /// Bit-sliced planes: inner-loop work ∝ k_w·k_a (DESIGN.md §14).
+    Bits(BitserialGemm),
     /// Fallback: canonical `PackedTensor::dequantize` values.
     F32(Vec<f32>),
+}
+
+/// Which representation a plan executes (selection is observable so the
+/// dispatch-boundary tests and the bench sweep can pin it down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    Bitserial,
+    Int8,
+    Int16,
+    F32,
+}
+
+/// Plan-selection override for [`QuantGemm::from_packed_with`]. `Auto`
+/// (what [`QuantGemm::from_packed`] uses) picks bitserial for small
+/// k_w·k_a, the dense i8/i16 path otherwise, f32 when the integer path
+/// is inadmissible; the forced variants exist for the bench sweep and
+/// the cross-path property tests and error out when the requested path
+/// is unavailable (rather than silently falling back).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanChoice {
+    Auto,
+    DenseInt,
+    Bitserial,
+    F32,
 }
 
 /// Output-neuron tile: one tile of weight rows (tile × d codes) is
 /// streamed while every batch row's activations stay resident, so the
 /// weight matrix is read once per tile instead of once per batch row.
-const OUT_TILE: usize = 16;
+pub(crate) const OUT_TILE: usize = 16;
 
 pub struct QuantGemm {
     /// Input features (contiguous inner/reduction dimension).
@@ -69,10 +104,24 @@ impl QuantGemm {
         (d as u128) * sw * sa <= i32::MAX as u128
     }
 
-    /// Build a plan from a packed weight tensor of shape `[d, n_out]`.
-    /// `k_a` is the activation width the plan will be driven at; it
-    /// decides integer-vs-f32 representation up front.
+    /// Build a plan from a packed weight tensor of shape `[d, n_out]`
+    /// with automatic representation selection. `k_a` is the activation
+    /// width the plan will be driven at; it decides the representation
+    /// up front.
     pub fn from_packed(t: &PackedTensor, k_a: u32) -> anyhow::Result<QuantGemm> {
+        Self::from_packed_with(t, k_a, PlanChoice::Auto)
+    }
+
+    /// [`from_packed`] with an explicit [`PlanChoice`]. Forced integer
+    /// choices error when the integer path is inadmissible (raw
+    /// weights, identity k_a, i32 bound) instead of falling back.
+    ///
+    /// [`from_packed`]: QuantGemm::from_packed
+    pub fn from_packed_with(
+        t: &PackedTensor,
+        k_a: u32,
+        choice: PlanChoice,
+    ) -> anyhow::Result<QuantGemm> {
         anyhow::ensure!(
             t.shape.len() == 2,
             "QuantGemm wants a 2-d weight tensor, got shape {:?}",
@@ -81,9 +130,22 @@ impl QuantGemm {
         let d = t.shape[0];
         let n_out = t.shape[1];
         anyhow::ensure!(d > 0 && n_out > 0, "degenerate weight shape {:?}", t.shape);
-        let integer = t.bits != RAW_BITS
+        let integer_ok = t.bits != RAW_BITS
             && k_a < 24
             && Self::integer_bound_ok(d, t.bits, k_a);
+        let integer = match choice {
+            PlanChoice::F32 => false,
+            PlanChoice::Auto => integer_ok,
+            PlanChoice::DenseInt | PlanChoice::Bitserial => {
+                anyhow::ensure!(
+                    integer_ok,
+                    "forced {choice:?} plan but the integer path is inadmissible \
+                     (bits {}, k_a {k_a}, d {d})",
+                    t.bits
+                );
+                true
+            }
+        };
         if !integer {
             let deq = t.dequantize().data;
             let mut w = vec![0.0f32; d * n_out];
@@ -98,7 +160,14 @@ impl QuantGemm {
         let s = s_i as f32;
         let step_w = if t.scale > 0.0 { t.scale / s } else { 0.0 };
         let codes = pack::unpack_codes(&t.payload, t.bits, d * n_out);
-        let weights = if t.bits <= 7 {
+        let bitserial = match choice {
+            PlanChoice::Bitserial => true,
+            PlanChoice::Auto => BitserialGemm::preferred(t.bits, k_a),
+            _ => false,
+        };
+        let weights = if bitserial {
+            Weights::Bits(BitserialGemm::from_codes(&codes, d, n_out, t.bits, k_a))
+        } else if t.bits <= 7 {
             let mut w = vec![0i8; d * n_out];
             for i in 0..d {
                 for o in 0..n_out {
@@ -118,6 +187,16 @@ impl QuantGemm {
         Ok(QuantGemm { d, n_out, bits: t.bits, step_w, weights })
     }
 
+    /// Which representation this plan executes.
+    pub fn plan_kind(&self) -> PlanKind {
+        match &self.weights {
+            Weights::Bits(_) => PlanKind::Bitserial,
+            Weights::I8(_) => PlanKind::Int8,
+            Weights::I16(_) => PlanKind::Int16,
+            Weights::F32(_) => PlanKind::F32,
+        }
+    }
+
     /// Whether this plan runs the integer path (drive it with
     /// [`forward_quant`]; otherwise use [`forward_f32`]).
     ///
@@ -130,7 +209,11 @@ impl QuantGemm {
     /// Integer-domain forward over `rows` quantized activation rows:
     /// `out[r·n_out + o] = (Σ_i qa[r·d+i]·qw[o·d+i]) · Δ_a[r]·Δ_w + bias[o]`.
     /// The accumulator is exact i32; the epilogue folds both steps in
-    /// f64 and rounds once to f32.
+    /// f64 and rounds once to f32. Convenience form with a throwaway
+    /// workspace — serving hot paths use [`forward_quant_arena`] so a
+    /// bitserial plan slices into a reused per-worker arena instead.
+    ///
+    /// [`forward_quant_arena`]: QuantGemm::forward_quant_arena
     pub fn forward_quant(
         &self,
         qa: &[i16],
@@ -139,7 +222,23 @@ impl QuantGemm {
         bias: &[f32],
         out: &mut [f32],
     ) {
-        self.run_quant(qa, step_a, rows, None, bias, out);
+        self.run_quant(qa, step_a, rows, None, bias, out, &mut Scratch::default());
+    }
+
+    /// [`forward_quant`] against a caller-owned [`Scratch`] arena (the
+    /// allocation-free hot path; dense plans never touch the arena).
+    ///
+    /// [`forward_quant`]: QuantGemm::forward_quant
+    pub fn forward_quant_arena(
+        &self,
+        qa: &[i16],
+        step_a: &[f32],
+        rows: usize,
+        bias: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        self.run_quant(qa, step_a, rows, None, bias, out, scratch);
     }
 
     /// [`forward_quant`] with a per-output-channel epilogue gain — the
@@ -158,9 +257,29 @@ impl QuantGemm {
         out: &mut [f32],
     ) {
         assert_eq!(gain.len(), self.n_out);
-        self.run_quant(qa, step_a, rows, Some(gain), bias, out);
+        self.run_quant(qa, step_a, rows, Some(gain), bias, out, &mut Scratch::default());
     }
 
+    /// [`forward_quant_scaled`] against a caller-owned [`Scratch`]
+    /// arena (the conv serving hot path).
+    ///
+    /// [`forward_quant_scaled`]: QuantGemm::forward_quant_scaled
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_quant_scaled_arena(
+        &self,
+        qa: &[i16],
+        step_a: &[f32],
+        rows: usize,
+        gain: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        assert_eq!(gain.len(), self.n_out);
+        self.run_quant(qa, step_a, rows, Some(gain), bias, out, scratch);
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn run_quant(
         &self,
         qa: &[i16],
@@ -169,6 +288,7 @@ impl QuantGemm {
         gain: Option<&[f32]>,
         bias: &[f32],
         out: &mut [f32],
+        scratch: &mut Scratch,
     ) {
         assert!(self.is_integer(), "f32 plan driven through forward_quant");
         assert_eq!(qa.len(), rows * self.d);
@@ -183,6 +303,7 @@ impl QuantGemm {
             Weights::I16(w) => {
                 quant_rows(w, self.d, self.n_out, sw, qa, step_a, rows, gain, bias, out)
             }
+            Weights::Bits(b) => b.run(qa, step_a, rows, sw, gain, bias, out, scratch),
             Weights::F32(_) => unreachable!("guarded by is_integer"),
         }
     }
@@ -558,6 +679,45 @@ mod tests {
                 assert_eq!(got[r * n_out + o].to_bits(), want.to_bits(), "r={r} o={o}");
             }
         }
+    }
+
+    #[test]
+    fn plan_selection_dispatch_boundaries() {
+        let mut rng = Rng::new(41);
+        let t = Tensor::new(vec![40, 5], (0..40 * 5).map(|_| rng.normal()).collect());
+        let plan = |k_w: u32, k_a: u32| {
+            QuantGemm::from_packed(&PackedTensor::quantize(&t, k_w), k_a)
+                .unwrap()
+                .plan_kind()
+        };
+        // k_w·k_a ≤ BITSERIAL_MAX_PRODUCT rides the popcount planes
+        assert_eq!(plan(1, 1), PlanKind::Bitserial);
+        assert_eq!(plan(2, 2), PlanKind::Bitserial);
+        assert_eq!(plan(3, 3), PlanKind::Bitserial);
+        assert_eq!(plan(2, 4), PlanKind::Bitserial);
+        assert_eq!(plan(1, 8), PlanKind::Bitserial);
+        // past the product threshold: dense centered codes
+        assert_eq!(plan(2, 5), PlanKind::Int8);
+        assert_eq!(plan(4, 4), PlanKind::Int8);
+        assert_eq!(plan(8, 8), PlanKind::Int8);
+        assert_eq!(plan(12, 2), PlanKind::Int16);
+        // inadmissible integer path: f32 fallback
+        assert_eq!(plan(4, 32), PlanKind::F32);
+        assert_eq!(
+            QuantGemm::from_packed(&PackedTensor::raw(&t), 8).unwrap().plan_kind(),
+            PlanKind::F32
+        );
+        // forced choices override the heuristic but never admissibility
+        let wt = PackedTensor::quantize(&t, 2);
+        let forced = QuantGemm::from_packed_with(&wt, 2, PlanChoice::DenseInt).unwrap();
+        assert_eq!(forced.plan_kind(), PlanKind::Int8);
+        let forced = QuantGemm::from_packed_with(&wt, 8, PlanChoice::Bitserial).unwrap();
+        assert_eq!(forced.plan_kind(), PlanKind::Bitserial);
+        let forced = QuantGemm::from_packed_with(&wt, 2, PlanChoice::F32).unwrap();
+        assert_eq!(forced.plan_kind(), PlanKind::F32);
+        assert!(QuantGemm::from_packed_with(&PackedTensor::raw(&t), 2, PlanChoice::Bitserial)
+            .is_err());
+        assert!(QuantGemm::from_packed_with(&wt, 32, PlanChoice::DenseInt).is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Pure-Rust quantized compute subsystem (DESIGN.md §11).
+//! Pure-Rust quantized compute subsystem (DESIGN.md §11/§14).
 //!
 //! The cost model (`quant::CostModel`) charges compute proportional to
 //! k_w·k_a — but until this module existed the serving path dequantized
@@ -6,30 +6,398 @@
 //! learned bit-widths saved disk bytes and zero compute. `kernels`
 //! operates directly on the low-bit codes instead:
 //!
-//! * [`pack`] — u64 word-at-a-time bit-stream pack/unpack (the
-//!   per-element loops survive only as property-test oracles);
-//! * [`gemm`] — [`QuantGemm`] plans: codes unpacked once at load,
-//!   centered, transposed to contiguous `[n_out][d]`, i8/i16 storage,
-//!   exact i32 accumulation, scales folded into one epilogue multiply;
+//! * [`pack`] — u64 word-at-a-time bit-stream pack/unpack plus the
+//!   bit-plane scatter (the per-element loops survive only as
+//!   property-test oracles);
+//! * [`gemm`] — [`QuantGemm`] plans: codes unpacked once at load and
+//!   stored as one of three interchangeable-by-the-bit forms — dense
+//!   centered i8/i16 codes (transposed contiguous `[n_out][d]`, exact
+//!   i32 accumulation), bit-sliced popcount planes for small k_w·k_a
+//!   ([`bitserial`], §14 — inner-loop work genuinely ∝ k_w·k_a, 64
+//!   elements per AND+popcount word), or a dequantized f32 fallback;
 //! * [`activ`] — per-row on-the-fly activation quantization at the
 //!   checkpoint's learned k_a, same s = 2^k − 1 grid as training;
 //! * [`QuantMlp`] (here) — the multi-layer forward: fc stacks with
 //!   ReLU, per-layer mixed k_w (each tensor's packed width) and k_a
-//!   (checkpoint meta), row-parallel across std::thread workers.
+//!   (checkpoint meta), row-parallel across a [`WorkerPool`].
 //!
-//! `serve::ReferenceBackend` is a thin adapter over [`QuantMlp`].
+//! **Pool & arena lifecycle (§14).** A [`WorkerPool`] is built once per
+//! backend (`ReferenceBackend` construction resolves `--threads`,
+//! 0 = per core, at that point — never per request) and owns N−1
+//! persistent worker threads plus three [`Scratch`] arenas: one per
+//! worker, one for the calling thread, and one batch-staging arena for
+//! the layer ping-pong/quantization buffers. Every per-request buffer —
+//! im2col patches, quantized rows, activation bit planes, layer
+//! activations — lives in an arena and is recycled across requests, so
+//! after the first batch the forward path performs no heap allocation
+//! (`Scratch` counts capacity growths on a shared debug counter;
+//! the arena-reuse tests pin the counter flat across requests).
+//! `QuantMlp::forward(x, rows, threads)` remains as a convenience that
+//! runs a transient pool (inline for `threads ≤ 1`).
+//!
+//! `serve::ReferenceBackend` is a thin adapter over [`QuantMlp`] /
+//! [`QuantConvNet`] plus its persistent pool.
 
 pub mod activ;
+pub mod bitserial;
 pub mod conv;
 pub mod gemm;
 pub mod pack;
 
-pub use activ::{fake_quantize_row, quantize_row_centered, MAX_INT_ACT_BITS};
+pub use activ::{fake_quantize_row, quantize_row_centered, raw_code, MAX_INT_ACT_BITS};
+pub use bitserial::{BitserialGemm, BITSERIAL_MAX_PRODUCT};
 pub use conv::QuantConvNet;
-pub use gemm::QuantGemm;
+pub use gemm::{PlanChoice, PlanKind, QuantGemm};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::serve::packed::QuantizedCheckpoint;
 use crate::util::json::Json;
+
+/// Resolve a requested GEMM thread count (0 = one per available core —
+/// looked up here, at construction time, never on the request path).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Reusable per-worker buffers: every transient buffer the forward
+/// paths need (quantized rows, activation bit planes, im2col patches,
+/// layer ping-pong) lives here so the hot path allocates nothing once
+/// warm. Capacity growths tick the pool's shared debug counter — the
+/// arena-reuse tests assert it stays flat across requests.
+#[derive(Default)]
+pub struct Scratch {
+    /// Activation bit planes for one bitserial GEMM chunk.
+    pub(crate) planes: Vec<u64>,
+    /// Per-row raw-code sums matching `planes`.
+    pub(crate) asum: Vec<i64>,
+    /// Quantized activation rows (centered i16 codes).
+    pub(crate) qa: Vec<i16>,
+    /// Per-row activation steps Δ_a.
+    pub(crate) steps: Vec<f32>,
+    /// Layer ping-pong buffers (MLP stages, conv feature maps).
+    pub(crate) buf_a: Vec<f32>,
+    pub(crate) buf_b: Vec<f32>,
+    /// im2col patch rows (conv); doubles as the conv feature staging
+    /// buffer at the net level (the two uses never overlap).
+    pub(crate) patches: Vec<f32>,
+    /// Pre-pool conv block output.
+    pub(crate) conv_out: Vec<f32>,
+    /// Pool-shared allocation counter (None outside a pool).
+    pub(crate) grow_events: Option<Arc<AtomicU64>>,
+}
+
+impl Scratch {
+    fn with_counter(counter: Arc<AtomicU64>) -> Scratch {
+        Scratch { grow_events: Some(counter), ..Scratch::default() }
+    }
+}
+
+/// Resize `v` to `n` elements for reuse, ticking the pool's debug
+/// counter when the capacity had to grow (i.e. a real allocation).
+/// A same-length re-grab is free — no clear, no refill: every consumer
+/// fully writes its buffer (im2col zero-fills its own output,
+/// quantize/slice/GEMM loops cover every element, and the bitserial
+/// zero-Δ rows never read their planes), so stale contents are never
+/// observable and the per-request memset the arenas exist to avoid is
+/// actually avoided.
+pub(crate) fn grab<T: Clone + Default>(v: &mut Vec<T>, n: usize, grew: &Option<Arc<AtomicU64>>) {
+    if v.len() == n {
+        return;
+    }
+    if v.capacity() < n {
+        if let Some(c) = grew {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    v.clear();
+    v.resize(n, T::default());
+}
+
+/// Lock an arena, shrugging off poisoning: a panicked job may have
+/// poisoned the mutex while unwinding, but `Scratch` holds only plain
+/// reusable buffers that every consumer resizes/overwrites before
+/// reading, so a poisoned arena is still perfectly usable — without
+/// this, one panicked job would wedge the pool forever even though its
+/// workers are healthy (`run` already reports the panic itself).
+fn lock_scratch(m: &Mutex<Scratch>) -> MutexGuard<'_, Scratch> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// The job pointer handed to pool workers: a borrowed closure with its
+/// lifetime erased. Sound because [`WorkerPool::run_dyn`] blocks until
+/// every worker has finished the generation the pointer was published
+/// for, and `run_lock` serializes generations.
+#[derive(Clone, Copy)]
+struct Job(*const (dyn Fn(usize, &mut Scratch) + Sync));
+
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct PoolState {
+    job: Option<Job>,
+    generation: u64,
+    /// Workers still running the current generation.
+    remaining: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new generation.
+    work: Condvar,
+    /// The caller waits here for `remaining == 0`.
+    done: Condvar,
+}
+
+/// Persistent scoped worker pool (DESIGN.md §14): N−1 worker threads
+/// spawned once at backend construction replace the per-batch
+/// `std::thread::scope` spawns the forward paths used to pay. Each
+/// `run` publishes one borrowed job closure; every worker (the calling
+/// thread participates as worker 0) invokes it once with its worker id
+/// and its own persistent [`Scratch`] arena, and `run` returns when all
+/// have finished — the same barrier semantics as a scoped spawn,
+/// without the thread setup/teardown per batch. Rayon-free: the
+/// offline crate universe has no dependencies (DESIGN.md §3).
+pub struct WorkerPool {
+    threads: usize,
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes concurrent `run` calls (one generation in flight).
+    run_lock: Mutex<()>,
+    /// Worker 0's (the calling thread's) arena.
+    main_scratch: Mutex<Scratch>,
+    /// Batch-staging arena: layer ping-pong + quantization buffers the
+    /// calling thread fills before fanning row chunks out.
+    stage: Mutex<Scratch>,
+    grow_events: Arc<AtomicU64>,
+}
+
+impl WorkerPool {
+    /// Build a pool with `threads` total lanes (0 = one per core via
+    /// [`resolve_threads`]); `threads ≤ 1` spawns nothing and `run`
+    /// executes inline.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = resolve_threads(threads);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                generation: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let grow_events = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for wid in 1..threads {
+            let shared = Arc::clone(&shared);
+            let counter = Arc::clone(&grow_events);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gemm-worker-{wid}"))
+                    .spawn(move || {
+                        let mut scratch = Scratch::with_counter(counter);
+                        pool_worker_loop(&shared, wid, &mut scratch);
+                    })
+                    .expect("spawn gemm worker"),
+            );
+        }
+        WorkerPool {
+            threads,
+            main_scratch: Mutex::new(Scratch::with_counter(Arc::clone(&grow_events))),
+            stage: Mutex::new(Scratch::with_counter(Arc::clone(&grow_events))),
+            grow_events,
+            shared,
+            handles,
+            run_lock: Mutex::new(()),
+        }
+    }
+
+    /// Resolved lane count (worker threads + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Total arena capacity growths since pool construction — the debug
+    /// counter the allocation-free-hot-path tests pin down: it must
+    /// stop moving once the pool has served a warm-up request.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events.load(Ordering::Relaxed)
+    }
+
+    /// Run `f(worker_id, scratch)` once on every lane (ids
+    /// `0..threads()`) and return when all lanes have finished.
+    /// Panics if any lane's job panicked.
+    pub fn run<F>(&self, f: F)
+    where
+        F: Fn(usize, &mut Scratch) + Sync,
+    {
+        self.run_dyn(&f);
+    }
+
+    /// [`run`](WorkerPool::run), skipping the worker broadcast when at
+    /// most one lane would do work: a batch-1 request (or any
+    /// `parts == 1` split) executes inline on the caller with zero
+    /// synchronization — the same fast path the pre-pool scoped-spawn
+    /// code had — instead of waking N−1 workers to return immediately.
+    /// Results are identical either way (lane 0 covers the whole
+    /// range; the kernels are order-independent).
+    pub fn run_active<F>(&self, active: usize, f: F)
+    where
+        F: Fn(usize, &mut Scratch) + Sync,
+    {
+        if active <= 1 {
+            let mut scratch = lock_scratch(&self.main_scratch);
+            f(0, &mut scratch);
+            return;
+        }
+        self.run_dyn(&f);
+    }
+
+    fn run_dyn<'a>(&'a self, f: &'a (dyn Fn(usize, &mut Scratch) + Sync + 'a)) {
+        if self.handles.is_empty() {
+            let mut scratch = lock_scratch(&self.main_scratch);
+            f(0, &mut scratch);
+            return;
+        }
+        let serial = self.run_lock.lock().unwrap();
+        let ptr: *const (dyn Fn(usize, &mut Scratch) + Sync + 'a) = f;
+        // Safety (lifetime erasure): this function does not return
+        // until every worker reports done, so `f` outlives all uses.
+        #[allow(clippy::useless_transmute)]
+        let job = Job(unsafe {
+            std::mem::transmute::<
+                *const (dyn Fn(usize, &mut Scratch) + Sync + 'a),
+                *const (dyn Fn(usize, &mut Scratch) + Sync + 'static),
+            >(ptr)
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.generation += 1;
+            st.remaining = self.handles.len();
+            self.shared.work.notify_all();
+        }
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut scratch = lock_scratch(&self.main_scratch);
+            f(0, &mut scratch);
+        }));
+        let mut st = self.shared.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let worker_panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        drop(serial);
+        if caller.is_err() || worker_panicked {
+            panic!("worker pool job panicked");
+        }
+    }
+
+    /// The batch-staging arena (callers must release the guard before
+    /// invoking `run` — workers never touch this arena, but holding it
+    /// across a nested `*_pooled` call would self-deadlock).
+    pub(crate) fn stage_scratch(&self) -> MutexGuard<'_, Scratch> {
+        lock_scratch(&self.stage)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        match self.shared.state.lock() {
+            Ok(mut st) => st.shutdown = true,
+            Err(poisoned) => poisoned.into_inner().shutdown = true,
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn pool_worker_loop(shared: &PoolShared, wid: usize, scratch: &mut Scratch) {
+    let mut my_gen = 0u64;
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if st.generation != my_gen {
+            my_gen = st.generation;
+            let job = st.job.expect("pool generation published without a job");
+            drop(st);
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // Safety: the pointer stays valid until `remaining`
+                // reaches zero, which cannot happen before this call
+                // returns (we decrement below).
+                let f = unsafe { &*job.0 };
+                f(wid, &mut *scratch);
+            }))
+            .is_ok();
+            let mut after = shared.state.lock().unwrap();
+            if !ok {
+                after.panicked = true;
+            }
+            after.remaining -= 1;
+            if after.remaining == 0 {
+                shared.done.notify_all();
+            }
+            st = after;
+        } else {
+            st = shared.work.wait(st).unwrap();
+        }
+    }
+}
+
+/// Contiguous chunk `i` of `n` items split across `parts` lanes (empty
+/// for trailing lanes when `n < parts`). With the kernels'
+/// order-independent exact accumulation, the split can never change
+/// results — only wall-clock.
+pub(crate) fn chunk_range(n: usize, parts: usize, i: usize) -> (usize, usize) {
+    let chunk = n.div_ceil(parts.max(1));
+    let r0 = (i * chunk).min(n);
+    let r1 = (r0 + chunk).min(n);
+    (r0, r1)
+}
+
+/// Mutable view of one output buffer that pool jobs carve into disjoint
+/// ranges by worker id — the borrow checker cannot see the disjointness
+/// through the shared job closure, so the carve is unsafe-but-audited.
+pub(crate) struct SplitMut<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _life: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for SplitMut<'_> {}
+unsafe impl Sync for SplitMut<'_> {}
+
+impl<'a> SplitMut<'a> {
+    pub(crate) fn new(buf: &'a mut [f32]) -> SplitMut<'a> {
+        SplitMut { ptr: buf.as_mut_ptr(), len: buf.len(), _life: std::marker::PhantomData }
+    }
+
+    /// # Safety
+    /// Concurrent callers must take non-overlapping `(start, len)`
+    /// ranges (the forward paths derive them from [`chunk_range`],
+    /// which partitions).
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn range(&self, start: usize, len: usize) -> &mut [f32] {
+        assert!(start + len <= self.len, "SplitMut range out of bounds");
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
+    }
+}
 
 /// One fc layer: a weight plan, bias, the activation width its *input*
 /// is quantized at, and whether a ReLU follows it.
@@ -115,23 +483,52 @@ impl QuantMlp {
         Ok(QuantMlp { layers, input, classes })
     }
 
-    /// Logits for `rows` stacked input rows (`x.len() == rows·input`),
-    /// row-parallel across `threads` std::thread workers (≤ 1 runs
-    /// inline). Integer layers quantize their input rows on the fly;
-    /// f32-fallback layers fake-quantize when k_a < 24 so the learned
-    /// activation width is honoured either way. Per-row activation
-    /// scales make results independent of batch composition: a row
-    /// computes bit-identically at batch 1 and inside a full batch.
+    /// Logits for `rows` stacked input rows (`x.len() == rows·input`)
+    /// on a transient pool of `threads` lanes (≤ 1 runs inline with no
+    /// thread spawn; 0 clamps to 1, matching the old inline behavior —
+    /// per-core auto-sizing is the *pool's* convention, resolved once
+    /// at backend construction) — the convenience form; serving holds a
+    /// persistent [`WorkerPool`] and calls [`forward_pooled`] instead.
+    /// Identical bits either way: the kernels are order-independent.
+    ///
+    /// [`forward_pooled`]: QuantMlp::forward_pooled
     pub fn forward(&self, x: &[f32], rows: usize, threads: usize) -> Vec<f32> {
+        self.forward_pooled(x, rows, &WorkerPool::new(threads.max(1)))
+    }
+
+    /// Logits for `rows` stacked input rows, row-parallel across the
+    /// pool's lanes, every transient buffer drawn from the pool's
+    /// arenas (allocation-free once warm). Integer layers quantize
+    /// their input rows on the fly; f32-fallback layers fake-quantize
+    /// when k_a < 24 so the learned activation width is honoured either
+    /// way. Per-row activation scales make results independent of batch
+    /// composition: a row computes bit-identically at batch 1 and
+    /// inside a full batch.
+    pub fn forward_pooled(&self, x: &[f32], rows: usize, pool: &WorkerPool) -> Vec<f32> {
         assert_eq!(x.len(), rows * self.input, "bad input length");
-        let mut cur = x.to_vec();
+        // Take the staging buffers out of the arena (releasing the
+        // guard — holding it across pool.run would block nothing, but
+        // holding it across a nested *_pooled call would deadlock).
+        let (mut cur, mut nxt, mut qa, mut steps, grew) = {
+            let mut st = pool.stage_scratch();
+            (
+                std::mem::take(&mut st.buf_a),
+                std::mem::take(&mut st.buf_b),
+                std::mem::take(&mut st.qa),
+                std::mem::take(&mut st.steps),
+                st.grow_events.clone(),
+            )
+        };
+        grab(&mut cur, x.len(), &grew);
+        cur.copy_from_slice(x);
         for layer in &self.layers {
             let d = layer.gemm.d;
             let n_out = layer.gemm.n_out;
-            let mut next = vec![0.0f32; rows * n_out];
+            grab(&mut nxt, rows * n_out, &grew);
+            let parts = pool.threads().min(rows.max(1));
             if layer.gemm.is_integer() {
-                let mut qa = vec![0i16; rows * d];
-                let mut steps = vec![0.0f32; rows];
+                grab(&mut qa, rows * d, &grew);
+                grab(&mut steps, rows, &grew);
                 for r in 0..rows {
                     steps[r] = activ::quantize_row_centered(
                         &cur[r * d..(r + 1) * d],
@@ -139,21 +536,25 @@ impl QuantMlp {
                         &mut qa[r * d..(r + 1) * d],
                     );
                 }
-                run_row_chunks(
-                    threads,
-                    rows,
-                    n_out,
-                    &mut next,
-                    &|r0: usize, r1: usize, out: &mut [f32]| {
-                        layer.gemm.forward_quant(
-                            &qa[r0 * d..r1 * d],
-                            &steps[r0..r1],
-                            r1 - r0,
-                            &layer.bias,
-                            out,
-                        );
-                    },
-                );
+                let qa_ref = &qa;
+                let steps_ref = &steps;
+                let split = SplitMut::new(&mut nxt);
+                pool.run_active(parts, |wid, ws| {
+                    let (r0, r1) = chunk_range(rows, parts, wid);
+                    if r0 >= r1 {
+                        return;
+                    }
+                    // Safety: chunk_range partitions — ranges disjoint.
+                    let out = unsafe { split.range(r0 * n_out, (r1 - r0) * n_out) };
+                    layer.gemm.forward_quant_arena(
+                        &qa_ref[r0 * d..r1 * d],
+                        &steps_ref[r0..r1],
+                        r1 - r0,
+                        &layer.bias,
+                        out,
+                        ws,
+                    );
+                });
             } else {
                 if layer.k_a < 24 {
                     for r in 0..rows {
@@ -161,37 +562,50 @@ impl QuantMlp {
                     }
                 }
                 let xin = &cur;
-                run_row_chunks(
-                    threads,
-                    rows,
-                    n_out,
-                    &mut next,
-                    &|r0: usize, r1: usize, out: &mut [f32]| {
-                        layer.gemm.forward_f32(
-                            &xin[r0 * d..r1 * d],
-                            r1 - r0,
-                            &layer.bias,
-                            out,
-                        );
-                    },
-                );
+                let split = SplitMut::new(&mut nxt);
+                pool.run_active(parts, |wid, _ws| {
+                    let (r0, r1) = chunk_range(rows, parts, wid);
+                    if r0 >= r1 {
+                        return;
+                    }
+                    // Safety: chunk_range partitions — ranges disjoint.
+                    let out = unsafe { split.range(r0 * n_out, (r1 - r0) * n_out) };
+                    layer.gemm.forward_f32(&xin[r0 * d..r1 * d], r1 - r0, &layer.bias, out);
+                });
             }
             if layer.relu {
-                for v in next.iter_mut() {
+                for v in nxt.iter_mut() {
                     if *v < 0.0 {
                         *v = 0.0;
                     }
                 }
             }
-            cur = next;
+            std::mem::swap(&mut cur, &mut nxt);
         }
-        cur
+        let logits = cur[..rows * self.classes].to_vec();
+        // undo ping-pong parity so each buffer returns to the arena
+        // slot it came from — keeps capacities stable across requests
+        // (an odd layer count would otherwise re-grow on request 2)
+        if self.layers.len() % 2 == 1 {
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        let mut st = pool.stage_scratch();
+        st.buf_a = cur;
+        st.buf_b = nxt;
+        st.qa = qa;
+        st.steps = steps;
+        logits
     }
 
     /// Argmax class per row (ties break to the lowest class id, the
     /// same rule the pre-kernels serving loop used).
     pub fn classify(&self, x: &[f32], rows: usize, threads: usize) -> Vec<usize> {
-        let logits = self.forward(x, rows, threads);
+        self.classify_pooled(x, rows, &WorkerPool::new(threads.max(1)))
+    }
+
+    /// [`classify`](QuantMlp::classify) on a persistent pool.
+    pub fn classify_pooled(&self, x: &[f32], rows: usize, pool: &WorkerPool) -> Vec<usize> {
+        let logits = self.forward_pooled(x, rows, pool);
         (0..rows)
             .map(|r| argmax(&logits[r * self.classes..(r + 1) * self.classes]))
             .collect()
@@ -208,31 +622,6 @@ pub(crate) fn argmax(scores: &[f32]) -> usize {
         }
     }
     best
-}
-
-/// Split `rows` into contiguous chunks and run `f(r0, r1, out_chunk)`
-/// on up to `threads` scoped std::threads (rayon-free: the offline
-/// crate universe has no dependencies, DESIGN.md §3). `threads ≤ 1`
-/// runs inline. Chunking is by whole rows, so with the kernels'
-/// order-independent integer accumulation the thread count never
-/// changes results.
-fn run_row_chunks<F>(threads: usize, rows: usize, n_out: usize, out: &mut [f32], f: &F)
-where
-    F: Fn(usize, usize, &mut [f32]) + Sync,
-{
-    let t = threads.max(1).min(rows.max(1));
-    if t <= 1 {
-        f(0, rows, out);
-        return;
-    }
-    let chunk = (rows + t - 1) / t;
-    std::thread::scope(|s| {
-        for (ci, out_chunk) in out.chunks_mut(chunk * n_out).enumerate() {
-            let r0 = ci * chunk;
-            let r1 = (r0 + chunk).min(rows);
-            s.spawn(move || f(r0, r1, out_chunk));
-        }
-    });
 }
 
 #[cfg(test)]
@@ -360,6 +749,97 @@ mod tests {
         for (a, b) in batch[3 * 7..4 * 7].iter().zip(&solo) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn pool_runs_every_lane_once_per_generation() {
+        use std::sync::atomic::AtomicUsize;
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let hits = AtomicUsize::new(0);
+        let mask = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(|wid, _s| {
+                hits.fetch_add(1, Ordering::SeqCst);
+                mask.fetch_or(1 << wid, Ordering::SeqCst);
+            });
+        }
+        // 50 generations × 4 lanes, every lane id seen
+        assert_eq!(hits.load(Ordering::SeqCst), 200);
+        assert_eq!(mask.load(Ordering::SeqCst), 0b1111);
+    }
+
+    #[test]
+    fn pool_single_lane_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let tid = std::thread::current().id();
+        pool.run(|wid, _s| {
+            assert_eq!(wid, 0);
+            assert_eq!(std::thread::current().id(), tid, "inline lane left the caller");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool job panicked")]
+    fn pool_propagates_worker_panics() {
+        let pool = WorkerPool::new(3);
+        pool.run(|wid, _s| {
+            if wid == 2 {
+                panic!("boom on worker 2");
+            }
+        });
+    }
+
+    #[test]
+    fn persistent_pool_matches_transient_forward_bitwise() {
+        let (d, h, classes) = (64usize, 32usize, 10usize);
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            ("k_a", Json::num(4.0)), // k_w·k_a = 16/8: dense + bitserial mix
+            (
+                "mlp_layers",
+                Json::Arr(vec![Json::str("fc1"), Json::str("fc2")]),
+            ),
+        ]));
+        q.push("fc1.w", PackedTensor::quantize(&random_tensor(vec![d, h], 61), 4));
+        q.push("fc2.w", PackedTensor::quantize(&random_tensor(vec![h, classes], 62), 2));
+        let mlp = QuantMlp::from_packed(&q).unwrap();
+        assert_eq!(mlp.layers[0].gemm.plan_kind(), gemm::PlanKind::Int8);
+        assert_eq!(mlp.layers[1].gemm.plan_kind(), gemm::PlanKind::Bitserial);
+        let mut rng = Rng::new(63);
+        let rows = 11usize;
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let base = mlp.forward(&x, rows, 1);
+        let pool = WorkerPool::new(3);
+        for _ in 0..3 {
+            let got = mlp.forward_pooled(&x, rows, &pool);
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_arena_stops_allocating_after_warmup() {
+        // bitserial layers slice activation planes per request — after
+        // the first (warm-up) batch every buffer must come from the
+        // arenas: the pool's grow counter freezes.
+        let q = single_layer_packed(96, 10, 2, 2.0);
+        let mlp = QuantMlp::from_packed(&q).unwrap();
+        assert_eq!(mlp.layers[0].gemm.plan_kind(), gemm::PlanKind::Bitserial);
+        let pool = WorkerPool::new(2);
+        let mut rng = Rng::new(77);
+        let x: Vec<f32> = (0..8 * 96).map(|_| rng.normal()).collect();
+        let first = mlp.forward_pooled(&x, 8, &pool);
+        let warm = pool.grow_events();
+        assert!(warm > 0, "warm-up should have populated the arenas");
+        for _ in 0..5 {
+            let again = mlp.forward_pooled(&x, 8, &pool);
+            for (a, b) in first.iter().zip(&again) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert_eq!(pool.grow_events(), warm, "hot path allocated after warm-up");
     }
 
     #[test]

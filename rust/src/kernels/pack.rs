@@ -78,6 +78,45 @@ pub fn pack_codes(codes: &[u32], bits: u32) -> Vec<u8> {
     out
 }
 
+/// Scatter `n` codes into `bits` LSB-first u64 bit planes (the
+/// bit-sliced weight layout of [`super::bitserial`]): plane `j` holds
+/// the 2^j digit of every code, element `i` at word `i/64`, bit `i%64`.
+/// Codes are read from `codes[offset + i·stride]` so a `[d, n_out]`
+/// weight matrix transposes into per-output planes without an
+/// intermediate buffer. Bits past `n` in the tail word stay zero (a
+/// zero bit contributes nothing to a popcount, which is exactly what
+/// the centering identity needs). Returns Σc over the scattered codes —
+/// the per-row code sum the bitserial dot folds back out.
+pub fn codes_to_bitplanes(
+    codes: &[u32],
+    offset: usize,
+    stride: usize,
+    n: usize,
+    bits: u32,
+    planes: &mut [u64],
+) -> u64 {
+    assert!((1..=24).contains(&bits), "plane width must be in 1..=24, got {bits}");
+    let words = (n + 63) / 64;
+    assert_eq!(
+        planes.len(),
+        bits as usize * words,
+        "plane buffer wants {} words for {n} codes at {bits} bits",
+        bits as usize * words
+    );
+    planes.fill(0);
+    let mut sum = 0u64;
+    for i in 0..n {
+        let c = codes[offset + i * stride];
+        sum += c as u64;
+        let word = i / 64;
+        let bit = i % 64;
+        for j in 0..bits as usize {
+            planes[j * words + word] |= (((c >> j) & 1) as u64) << bit;
+        }
+    }
+    sum
+}
+
 /// Unpack `n` codes at `bits` each from an LSB-first byte stream.
 /// Mirror image of [`pack_codes`]; panics if the payload is shorter
 /// than [`packed_len`]`(n, bits)` (callers validate sizes at load).
@@ -163,5 +202,40 @@ mod tests {
     #[should_panic(expected = "payload")]
     fn short_payload_panics_not_reads_garbage() {
         unpack_codes(&[0u8; 2], 8, 3);
+    }
+
+    #[test]
+    fn bitplanes_match_per_bit_reads_and_sum_codes() {
+        // odd n exercises the partial tail word; stride 3 exercises the
+        // transposing read the weight planes use
+        for bits in [1u32, 2, 3, 4, 7] {
+            for n in [1usize, 63, 64, 65, 131] {
+                let stride = 3usize;
+                let codes = random_codes(n * stride, bits, 0xBEEF ^ (bits as u64 * 131 + n as u64));
+                let words = (n + 63) / 64;
+                let mut planes = vec![u64::MAX; bits as usize * words];
+                let sum = codes_to_bitplanes(&codes, 1, stride, n, bits, &mut planes);
+                let mut want_sum = 0u64;
+                for i in 0..n {
+                    let c = codes[1 + i * stride];
+                    want_sum += c as u64;
+                    for j in 0..bits as usize {
+                        let got = (planes[j * words + i / 64] >> (i % 64)) & 1;
+                        assert_eq!(got, ((c >> j) & 1) as u64, "bits={bits} n={n} i={i} j={j}");
+                    }
+                }
+                assert_eq!(sum, want_sum, "bits={bits} n={n}");
+                // tail bits past n must be zero in every plane
+                for j in 0..bits as usize {
+                    for i in n..words * 64 {
+                        assert_eq!(
+                            (planes[j * words + i / 64] >> (i % 64)) & 1,
+                            0,
+                            "bits={bits} n={n}: tail bit {i} set in plane {j}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

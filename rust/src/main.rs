@@ -312,8 +312,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     scfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     let engine = engine_from(&scfg)?;
     let server = Server::start(&scfg.addr, Arc::clone(&engine))?;
+    // the GEMM pool only exists on the reference backend (the PJRT
+    // backend's compute lives in the compiled graph)
+    let gemm_note = if scfg.backend == "reference" {
+        format!(
+            ", {} gemm thread(s)/worker",
+            adaqat::kernels::resolve_threads(scfg.threads)
+        )
+    } else {
+        String::new()
+    };
     println!(
-        "serving {} on {} ({} workers, batch {}, window {} ms)",
+        "serving {} on {} ({} workers, batch {}, window {} ms{gemm_note})",
         scfg.checkpoint.display(),
         server.addr,
         scfg.workers,

@@ -24,7 +24,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::kernels::{QuantConvNet, QuantMlp};
+use crate::kernels::{QuantConvNet, QuantMlp, WorkerPool};
 use crate::metrics::Histogram;
 use crate::quant::bitwidth_scale;
 use crate::runtime::{ModelRuntime, Runtime, TrainState};
@@ -361,10 +361,10 @@ impl ServedNet {
         }
     }
 
-    fn classify(&self, x: &[f32], rows: usize, threads: usize) -> Vec<usize> {
+    fn classify(&self, x: &[f32], rows: usize, pool: &WorkerPool) -> Vec<usize> {
         match self {
-            ServedNet::Mlp(m) => m.classify(x, rows, threads),
-            ServedNet::Conv(c) => c.classify(x, rows, threads),
+            ServedNet::Mlp(m) => m.classify_pooled(x, rows, pool),
+            ServedNet::Conv(c) => c.classify_pooled(x, rows, pool),
         }
     }
 }
@@ -383,7 +383,11 @@ pub struct ReferenceBackend {
     wid: usize,
     c: usize,
     batch: usize,
-    threads: usize,
+    /// Persistent worker pool + scratch arenas (DESIGN.md §14): thread
+    /// count resolved once here at construction, workers spawned once,
+    /// buffers recycled across requests — the request path spawns
+    /// nothing and (once warm) allocates nothing.
+    pool: WorkerPool,
 }
 
 impl ReferenceBackend {
@@ -392,9 +396,10 @@ impl ReferenceBackend {
     }
 
     /// `threads` sizes the per-batch row parallelism inside the GEMMs
-    /// (std::thread, `--threads` in `ServeConfig`); 0 means one per
-    /// available core. Thread count never changes results — the integer
-    /// kernels are order-independent.
+    /// (`--threads` in `ServeConfig`); 0 means one per available core,
+    /// resolved here — backend construction — not per request. Thread
+    /// count never changes results — the integer kernels are
+    /// order-independent.
     pub fn with_threads(
         q: &QuantizedCheckpoint,
         threads: usize,
@@ -448,12 +453,12 @@ impl ReferenceBackend {
             "model has {} outputs but meta num_classes is {classes}",
             net.classes()
         );
-        let threads = if threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            threads
-        };
-        Ok(ReferenceBackend { net, h, wid, c, batch, threads })
+        let pool = WorkerPool::new(threads);
+        log::info!(
+            "reference backend: {} gemm thread(s) (requested {threads}; 0 = per core)",
+            pool.threads()
+        );
+        Ok(ReferenceBackend { net, h, wid, c, batch, pool })
     }
 
     /// Direct (non-batched) forward for one image — the ground truth the
@@ -462,7 +467,7 @@ impl ReferenceBackend {
     /// batch, so the comparison is exact, not approximate.
     pub fn classify_one(&self, pixels: &[f32]) -> usize {
         debug_assert_eq!(pixels.len(), self.h * self.wid * self.c);
-        self.net.classify(pixels, 1, 1)[0]
+        self.net.classify(pixels, 1, &self.pool)[0]
     }
 }
 
@@ -494,7 +499,7 @@ impl Backend for ReferenceBackend {
             "reference backend: {rows} rows exceeds serve batch {}",
             self.batch
         );
-        Ok(self.net.classify(&x.data, rows, self.threads))
+        Ok(self.net.classify(&x.data, rows, &self.pool))
     }
 }
 

@@ -8,7 +8,12 @@
 # compares *ratio* metrics only — dimensionless speedups that measure
 # the kernels against a same-run baseline executed on the same box:
 #
-#   BENCH_kernels.json       speedup_vs_legacy   per (k_w, batch)
+#   BENCH_kernels.json       speedup_vs_legacy   per (mode, k_w, batch)
+#   BENCH_kernels.json       speedup_vs_i8       per (mode, k_w, batch)
+#                            (mode "bitserial": the §14 popcount GEMM
+#                             vs the dense i8 path at k_w = k_a = k —
+#                             floors fall as k grows because popcount
+#                             work is ∝ k_w·k_a while i8 work is flat)
 #   BENCH_conv_native.json   speedup_vs_direct   per (k_w, batch)
 #   BENCH_train_native.json  steps_per_sec / fp32 steps_per_sec
 #                                                per quantized config
@@ -33,7 +38,10 @@ TOLERANCE = 0.75  # fresh must be >= 25% of the way below baseline
 def rows_by_key(doc, key_fields):
     out = {}
     for row in doc.get("results", []):
-        out[tuple(row.get(f) for f in key_fields)] = row
+        # "mode" defaults to "quant" so pre-bitserial files still key
+        key = tuple(row.get(f, "quant") if f == "mode" else row.get(f)
+                    for f in key_fields)
+        out[key] = row
     return out
 
 def ratio_metric(doc, metric, key_fields):
@@ -53,7 +61,9 @@ def train_relative(doc):
 
 CHECKS = [
     ("BENCH_kernels.json",      "speedup_vs_legacy",
-     lambda d: ratio_metric(d, "speedup_vs_legacy", ("k_w", "batch"))),
+     lambda d: ratio_metric(d, "speedup_vs_legacy", ("mode", "k_w", "batch"))),
+    ("BENCH_kernels.json",      "speedup_vs_i8",
+     lambda d: ratio_metric(d, "speedup_vs_i8", ("mode", "k_w", "batch"))),
     ("BENCH_conv_native.json",  "speedup_vs_direct",
      lambda d: ratio_metric(d, "speedup_vs_direct", ("k_w", "batch"))),
     ("BENCH_train_native.json", "steps_per_sec vs fp32",
