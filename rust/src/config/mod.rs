@@ -303,6 +303,10 @@ pub struct ServeConfig {
     /// Total compute threads ≈ workers × threads, so the default keeps
     /// one GEMM thread per serving worker.
     pub threads: usize,
+    /// When set, the serve loop rewrites this file with the Prometheus
+    /// text exposition at every stats interval (DESIGN.md §15) — a
+    /// file-scrape surface for setups without a TCP scraper.
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -316,6 +320,7 @@ impl Default for ServeConfig {
             backend: "reference".to_string(),
             model: "resnet20".to_string(),
             threads: 1,
+            metrics_out: None,
         }
     }
 }
@@ -332,6 +337,7 @@ impl ServeConfig {
             "queue_capacity" => self.queue_capacity = p(key, value)?,
             "max_delay_ms" => self.max_delay_ms = p(key, value)?,
             "threads" => self.threads = p(key, value)?,
+            "metrics_out" => self.metrics_out = Some(PathBuf::from(value)),
             "model" => self.model = value.to_string(),
             "backend" => {
                 if !["reference", "runtime"].contains(&value) {
@@ -349,7 +355,7 @@ impl ServeConfig {
     pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
         for key in [
             "checkpoint", "addr", "workers", "queue_capacity", "max_delay_ms",
-            "backend", "model", "threads",
+            "backend", "model", "threads", "metrics_out",
         ] {
             if args.has(key) {
                 let v = args.get_str(key, "");
@@ -492,8 +498,9 @@ mod tests {
     fn serve_config_defaults_overrides_and_validation() {
         let mut s = ServeConfig::default();
         assert!(s.validate().is_err(), "checkpoint is required");
+        assert_eq!(s.metrics_out, None, "no exposition dump unless asked");
         let args = Args::parse(
-            "--checkpoint runs/demo/packed.aqq --workers 4 --max_delay_ms 2 --backend runtime --model smallcnn --threads 0"
+            "--checkpoint runs/demo/packed.aqq --workers 4 --max_delay_ms 2 --backend runtime --model smallcnn --threads 0 --metrics_out runs/demo/metrics.prom"
                 .split_whitespace()
                 .map(String::from),
         )
@@ -506,6 +513,7 @@ mod tests {
         assert_eq!(s.model, "smallcnn");
         assert_eq!(s.threads, 0, "0 = auto-size to the machine");
         assert_eq!(s.addr, "127.0.0.1:7878");
+        assert_eq!(s.metrics_out, Some(PathBuf::from("runs/demo/metrics.prom")));
     }
 
     #[test]

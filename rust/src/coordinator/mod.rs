@@ -166,6 +166,10 @@ impl<'rt> Experiment<'rt> {
     ) -> anyhow::Result<()> {
         std::fs::create_dir_all(dir)?;
         train::save_trace(&result.trace, &dir.join("trace.csv"))?;
+        // Prometheus exposition of the global registry — the training
+        // trajectory gauges (adaqat_train_bits/frac/osc, freeze and
+        // probe counters) land next to trace.csv (DESIGN.md §15)
+        std::fs::write(dir.join("metrics.prom"), crate::obs::global().render_prometheus())?;
         let mut epochs = crate::metrics::CsvWriter::create(
             &dir.join("epochs.csv"),
             &["epoch", "lr", "train_loss", "train_acc", "test_loss", "test_acc", "k_w", "k_a"],

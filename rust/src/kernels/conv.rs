@@ -26,12 +26,15 @@
 //! this exact code, so trainer eval and the served model are the same
 //! numbers — the guarantee the MLP path already gives.
 
+use std::time::Instant;
+
+use crate::obs;
 use crate::serve::packed::QuantizedCheckpoint;
 use crate::util::json::Json;
 
 use super::activ;
 use super::gemm::QuantGemm;
-use super::{chunk_range, grab, QuantMlp, Scratch, SplitMut, WorkerPool};
+use super::{chunk_range, grab, LayerObs, QuantMlp, Scratch, SplitMut, WorkerPool};
 
 /// Batch-norm epsilon — one constant shared by the native trainer's
 /// batch-stat normalization and the folded inference epilogue, so the
@@ -284,6 +287,9 @@ pub struct QuantConvNet {
     pub w: usize,
     pub c: usize,
     pub classes: usize,
+    /// Registry handles parallel to `conv` (see [`LayerObs`]); the fc
+    /// head carries its own inside [`QuantMlp`].
+    obs: Vec<LayerObs>,
 }
 
 impl QuantConvNet {
@@ -402,7 +408,11 @@ impl QuantConvNet {
             h * w * c
         );
         let classes = head.classes;
-        Ok(QuantConvNet { conv, head, h: h0, w: w0, c: c0, classes })
+        let obs = conv
+            .iter()
+            .map(|l| LayerObs::register(&l.name, l.gemm.plan_kind(), l.gemm.bits, l.k_a))
+            .collect();
+        Ok(QuantConvNet { conv, head, h: h0, w: w0, c: c0, classes, obs })
     }
 
     /// Per-sample input feature count (`h·w·c`).
@@ -419,8 +429,16 @@ impl QuantConvNet {
         grab(&mut cur, x.len(), &s.grow_events);
         cur.copy_from_slice(x);
         let mut nxt = std::mem::take(&mut s.buf_b);
-        for layer in &self.conv {
+        // per-layer telemetry: this runs once per pool lane over that
+        // lane's sample chunk, so the rows counters sum to the batch
+        // total across lanes while the histogram sees per-lane spans
+        let obs_on = obs::global().enabled();
+        for (li, layer) in self.conv.iter().enumerate() {
+            let t_layer = if obs_on { Some(Instant::now()) } else { None };
             layer.forward_scratch(&cur, rows, s, &mut nxt);
+            if let Some(t0) = t_layer {
+                self.obs[li].record(rows, t0);
+            }
             std::mem::swap(&mut cur, &mut nxt);
         }
         out.copy_from_slice(&cur[..out.len()]);

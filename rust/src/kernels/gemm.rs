@@ -59,6 +59,20 @@ pub enum PlanKind {
     F32,
 }
 
+impl PlanKind {
+    /// Stable lowercase token for metric labels (`plan="bitserial"` in
+    /// the per-layer series, DESIGN.md §15) — decoupled from the Debug
+    /// spelling so renames cannot silently churn series names.
+    pub fn label(self) -> &'static str {
+        match self {
+            PlanKind::Bitserial => "bitserial",
+            PlanKind::Int8 => "int8",
+            PlanKind::Int16 => "int16",
+            PlanKind::F32 => "f32",
+        }
+    }
+}
+
 /// Plan-selection override for [`QuantGemm::from_packed_with`]. `Auto`
 /// (what [`QuantGemm::from_packed`] uses) picks bitserial for small
 /// k_w·k_a, the dense i8/i16 path otherwise, f32 when the integer path

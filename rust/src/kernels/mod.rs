@@ -51,7 +51,9 @@ pub use gemm::{PlanChoice, PlanKind, QuantGemm};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
 
+use crate::obs;
 use crate::serve::packed::QuantizedCheckpoint;
 use crate::util::json::Json;
 
@@ -156,6 +158,25 @@ struct PoolShared {
     done: Condvar,
 }
 
+/// The pool's registry handles (DESIGN.md §15): a live occupancy gauge
+/// (lanes currently executing a job, summed across pools sharing the
+/// registry) and a lifetime job counter. Registered once per pool at
+/// construction.
+struct PoolObs {
+    active: Arc<obs::Gauge>,
+    jobs_total: Arc<obs::Counter>,
+}
+
+impl PoolObs {
+    fn register() -> PoolObs {
+        let reg = obs::global();
+        PoolObs {
+            active: reg.gauge("adaqat_pool_active", &[]),
+            jobs_total: reg.counter("adaqat_pool_jobs_total", &[]),
+        }
+    }
+}
+
 /// Persistent scoped worker pool (DESIGN.md §14): N−1 worker threads
 /// spawned once at backend construction replace the per-batch
 /// `std::thread::scope` spawns the forward paths used to pay. Each
@@ -177,6 +198,7 @@ pub struct WorkerPool {
     /// calling thread fills before fanning row chunks out.
     stage: Mutex<Scratch>,
     grow_events: Arc<AtomicU64>,
+    obs: PoolObs,
 }
 
 impl WorkerPool {
@@ -219,6 +241,7 @@ impl WorkerPool {
             shared,
             handles,
             run_lock: Mutex::new(()),
+            obs: PoolObs::register(),
         }
     }
 
@@ -256,8 +279,12 @@ impl WorkerPool {
         F: Fn(usize, &mut Scratch) + Sync,
     {
         if active <= 1 {
+            self.obs.jobs_total.inc();
+            self.obs.active.add(1.0);
             let mut scratch = lock_scratch(&self.main_scratch);
             f(0, &mut scratch);
+            drop(scratch);
+            self.obs.active.add(-1.0);
             return;
         }
         self.run_dyn(&f);
@@ -265,10 +292,21 @@ impl WorkerPool {
 
     fn run_dyn<'a>(&'a self, f: &'a (dyn Fn(usize, &mut Scratch) + Sync + 'a)) {
         if self.handles.is_empty() {
+            self.obs.jobs_total.inc();
+            self.obs.active.add(1.0);
             let mut scratch = lock_scratch(&self.main_scratch);
             f(0, &mut scratch);
+            drop(scratch);
+            self.obs.active.add(-1.0);
             return;
         }
+        self.obs.jobs_total.inc();
+        // occupancy gauge: all lanes (workers + caller) count as busy
+        // for the span of the generation — a coarse but truthful view
+        // of pool saturation, paired +/- so the gauge is drift-free on
+        // every non-panicking path (a panicking job tears the worker
+        // down anyway)
+        self.obs.active.add(self.threads as f64);
         let serial = self.run_lock.lock().unwrap();
         let ptr: *const (dyn Fn(usize, &mut Scratch) + Sync + 'a) = f;
         // Safety (lifetime erasure): this function does not return
@@ -300,6 +338,7 @@ impl WorkerPool {
         st.panicked = false;
         drop(st);
         drop(serial);
+        self.obs.active.add(-(self.threads as f64));
         if caller.is_err() || worker_panicked {
             panic!("worker pool job panicked");
         }
@@ -399,6 +438,45 @@ impl<'a> SplitMut<'a> {
     }
 }
 
+/// Per-layer telemetry handles (DESIGN.md §15): one forward-wall-time
+/// histogram and one rows counter per `(layer, plan, k_w, k_a)` series
+/// in the global registry. Registered once when a net is built from a
+/// packed checkpoint — the labels are exactly the serving cost profile
+/// AdaQAT's learned bit-widths are supposed to change, so the series
+/// answer "which plan does layer X actually run, and what does it
+/// cost" per scrape. Nets hold these in a `Vec` parallel to their
+/// layer list (rather than on the layer structs) so layer literals in
+/// tests stay registry-free.
+pub struct LayerObs {
+    forward_ms: Arc<obs::HistHandle>,
+    rows_total: Arc<obs::Counter>,
+}
+
+impl LayerObs {
+    pub fn register(layer: &str, plan: PlanKind, k_w: u32, k_a: u32) -> LayerObs {
+        let (k_w, k_a) = (k_w.to_string(), k_a.to_string());
+        let labels = [
+            ("layer", layer),
+            ("plan", plan.label()),
+            ("k_w", k_w.as_str()),
+            ("k_a", k_a.as_str()),
+        ];
+        let reg = obs::global();
+        LayerObs {
+            forward_ms: reg.histogram("adaqat_layer_forward_ms", &labels),
+            rows_total: reg.counter("adaqat_layer_rows_total", &labels),
+        }
+    }
+
+    /// Record one timed span over `rows` rows. Callers gate the
+    /// `Instant::now()` pair on [`obs::Registry::enabled`], so a
+    /// disabled registry pays nothing here.
+    pub fn record(&self, rows: usize, t0: Instant) {
+        self.forward_ms.record_ms(t0.elapsed().as_secs_f64() * 1e3);
+        self.rows_total.add(rows as u64);
+    }
+}
+
 /// One fc layer: a weight plan, bias, the activation width its *input*
 /// is quantized at, and whether a ReLU follows it.
 pub struct QuantLayer {
@@ -416,6 +494,8 @@ pub struct QuantMlp {
     pub input: usize,
     /// Output count of the last layer.
     pub classes: usize,
+    /// Registry handles parallel to `layers` (see [`LayerObs`]).
+    obs: Vec<LayerObs>,
 }
 
 impl QuantMlp {
@@ -480,7 +560,11 @@ impl QuantMlp {
         }
         let input = layers[0].gemm.d;
         let classes = layers[layers.len() - 1].gemm.n_out;
-        Ok(QuantMlp { layers, input, classes })
+        let obs = layers
+            .iter()
+            .map(|l| LayerObs::register(&l.name, l.gemm.plan_kind(), l.gemm.bits, l.k_a))
+            .collect();
+        Ok(QuantMlp { layers, input, classes, obs })
     }
 
     /// Logits for `rows` stacked input rows (`x.len() == rows·input`)
@@ -521,7 +605,11 @@ impl QuantMlp {
         };
         grab(&mut cur, x.len(), &grew);
         cur.copy_from_slice(x);
-        for layer in &self.layers {
+        // per-layer telemetry: one enabled check per forward, one
+        // Instant pair per layer when on, nothing when off
+        let obs_on = obs::global().enabled();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let t_layer = if obs_on { Some(Instant::now()) } else { None };
             let d = layer.gemm.d;
             let n_out = layer.gemm.n_out;
             grab(&mut nxt, rows * n_out, &grew);
@@ -579,6 +667,9 @@ impl QuantMlp {
                         *v = 0.0;
                     }
                 }
+            }
+            if let Some(t0) = t_layer {
+                self.obs[li].record(rows, t0);
             }
             std::mem::swap(&mut cur, &mut nxt);
         }

@@ -28,6 +28,7 @@ pub mod coordinator;
 pub mod data;
 pub mod kernels;
 pub mod metrics;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -46,7 +46,7 @@ const EXPORT_FLAGS: &[&str] = &["checkpoint", "out", "bits", "help"];
 
 const SERVE_FLAGS: &[&str] = &[
     "checkpoint", "addr", "workers", "queue_capacity", "max_delay_ms",
-    "backend", "model", "threads", "help",
+    "backend", "model", "threads", "metrics_out", "help",
 ];
 
 const CLIENT_FLAGS: &[&str] =
@@ -330,10 +330,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         engine.batch(),
         scfg.max_delay_ms
     );
+    let dump_metrics = |engine: &Engine| {
+        if let Some(path) = &scfg.metrics_out {
+            if let Err(e) = std::fs::write(path, engine.prometheus()) {
+                log::warn!("metrics_out: cannot write {}: {e}", path.display());
+            }
+        }
+    };
+    if let Some(path) = &scfg.metrics_out {
+        println!("metrics exposition -> {}", path.display());
+    }
+    // write once at startup so scrapers see the file immediately
+    dump_metrics(&engine);
     // Foreground service: report latency stats until the process is
     // killed (no signal handling in the offline std-only build).
     loop {
         std::thread::sleep(Duration::from_secs(10));
+        dump_metrics(&engine);
         if engine.metrics.requests.load(std::sync::atomic::Ordering::Relaxed) > 0 {
             log::info!("\n{}", engine.metrics.report());
         }
@@ -456,6 +469,8 @@ SERVING FLAGS
               [--queue_capacity N] [--max_delay_ms N]
               [--backend reference|runtime] [--model NAME]
               [--threads N (GEMM threads per backend; 0 = per core)]
+              [--metrics_out FILE (rewrite Prometheus exposition
+               every 10s; also served via the metrics command)]
   client:     [--addr HOST:PORT] [--n N] [--window N] [--dataset D] [--seed N]
   demo-model: [--out FILE] [--dataset D] [--samples PER_CLASS]
               [--serve_batch N] [--seed N]

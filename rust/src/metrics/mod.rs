@@ -224,6 +224,10 @@ impl Histogram {
 
     pub fn snapshot(&self) -> LatencySnapshot {
         let count = self.count();
+        let max_ms = self.max_ns.load(Ordering::Relaxed) as f64 / 1e6;
+        // percentile() reports bucket midpoints, and the top sample's
+        // log-bucket midpoint can sit *above* the recorded maximum — a
+        // snapshot must never claim a percentile beyond its own max
         LatencySnapshot {
             count,
             mean_ms: if count == 0 {
@@ -231,10 +235,10 @@ impl Histogram {
             } else {
                 self.sum_ns.load(Ordering::Relaxed) as f64 / 1e6 / count as f64
             },
-            p50_ms: self.percentile(0.50),
-            p95_ms: self.percentile(0.95),
-            p99_ms: self.percentile(0.99),
-            max_ms: self.max_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            p50_ms: self.percentile(0.50).min(max_ms),
+            p95_ms: self.percentile(0.95).min(max_ms),
+            p99_ms: self.percentile(0.99).min(max_ms),
+            max_ms,
         }
     }
 }
@@ -326,6 +330,21 @@ mod tests {
         h.record_ms(1e9);
         assert_eq!(h.count(), 4);
         assert!(h.snapshot().max_ms >= 1e9 - 1.0);
+    }
+
+    #[test]
+    fn snapshot_percentiles_never_exceed_observed_max() {
+        // regression: a single 5 ms sample lands in a log bucket whose
+        // geometric midpoint is ≈ 5.31 ms, so the raw percentile sits
+        // above the recorded maximum — the snapshot must clamp
+        let h = Histogram::new();
+        h.record_ms(5.0);
+        assert!(h.percentile(0.99) > 5.0, "premise: midpoint exceeds the sample");
+        let s = h.snapshot();
+        assert!((s.max_ms - 5.0).abs() < 1e-6);
+        assert!(s.p50_ms <= s.max_ms, "p50 {} > max {}", s.p50_ms, s.max_ms);
+        assert!(s.p95_ms <= s.max_ms, "p95 {} > max {}", s.p95_ms, s.max_ms);
+        assert!(s.p99_ms <= s.max_ms, "p99 {} > max {}", s.p99_ms, s.max_ms);
     }
 
     #[test]

@@ -1,0 +1,615 @@
+//! Unified observability layer (DESIGN.md §15).
+//!
+//! One process-wide [`Registry`] of named + labeled series — counters,
+//! gauges, and log-bucketed histograms (the existing
+//! [`crate::metrics::Histogram`] is the storage engine) — that the
+//! serve queue, batcher, worker pool, kernels, and training loop all
+//! register into, plus a fixed-size [`TraceRing`] of per-request spans.
+//!
+//! Design split, chosen for the serving hot path:
+//! * **Registration** (naming a series, first lookup) takes a `Mutex`
+//!   and allocates — done once, at construction time (backend build,
+//!   pool build, queue build), never per request.
+//! * **Updates** go through pre-registered handles ([`Counter`],
+//!   [`Gauge`], [`HistHandle`]) and are single relaxed atomic ops — no
+//!   lock, no allocation, no branch beyond the enable check.
+//! * **Rendering** ([`Registry::render_prometheus`]) takes the
+//!   registration lock and snapshots every series into Prometheus text
+//!   exposition format: every emitted line is `name{labels} value`
+//!   (histograms expand to `_count`/`_sum`/quantile/`_max` lines).
+//!
+//! The enable switch ([`Registry::set_enabled`]) gates the *samplers* —
+//! counters and histograms skip their atomic write when disabled, and
+//! instrumentation sites skip their `Instant::now()` calls by checking
+//! [`Registry::enabled`] first. Gauges deliberately ignore the switch:
+//! they track live structural state (queue depth, pool occupancy) via
+//! paired `add(+1)/add(-1)` calls, and honoring a mid-flight toggle
+//! would leave them skewed forever. `benches/obs.rs` uses the switch to
+//! measure the instrumented-vs-uninstrumented serve throughput ratio
+//! that `scripts/check_bench.sh` gates at ≤ 5% overhead.
+//!
+//! Label cardinality budget: series registration is capped at
+//! [`MAX_SERIES`]. Callers must only label by *bounded* dimensions
+//! (layer name, plan kind, bit-width, axis, reason) — never by request
+//! id or other unbounded values; those belong in the trace ring.
+//! Overflowing the cap warns once and hands back detached handles that
+//! update normally but never render, so a labeling bug degrades
+//! exposition instead of memory.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::metrics::{Histogram, LatencySnapshot};
+
+/// Hard cap on registered series (the label cardinality budget,
+/// DESIGN.md §15). Per-layer series are `layers × plans × widths`, all
+/// small and bounded; 4096 leaves two orders of magnitude of headroom.
+pub const MAX_SERIES: usize = 4096;
+
+/// How many request traces the ring keeps (newest win).
+pub const TRACE_RING_CAPACITY: usize = 256;
+
+/// Monotonically increasing event count. Updates are one relaxed
+/// `fetch_add`; disabled registries skip the write entirely.
+pub struct Counter {
+    v: AtomicU64,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Counter {
+    fn new(enabled: Arc<AtomicBool>) -> Counter {
+        Counter { v: AtomicU64::new(0), enabled }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A current-value series (queue depth, pool occupancy, controller
+/// bit-width). Stored as f64 bits in one atomic; `add` is a CAS loop
+/// (uncontended in practice — each gauge has a handful of writers).
+/// Gauges ignore the registry's enable switch — see the module docs.
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: f64) {
+        let _ = self.bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+            Some((f64::from_bits(b) + d).to_bits())
+        });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// A registered log-bucketed histogram: [`crate::metrics::Histogram`]
+/// (the storage engine — 96 log-spaced buckets, relaxed atomics) behind
+/// the registry's enable switch.
+pub struct HistHandle {
+    h: Histogram,
+    enabled: Arc<AtomicBool>,
+}
+
+impl HistHandle {
+    fn new(enabled: Arc<AtomicBool>) -> HistHandle {
+        HistHandle { h: Histogram::new(), enabled }
+    }
+
+    pub fn record_ms(&self, ms: f64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.h.record_ms(ms);
+        }
+    }
+
+    /// Unit-agnostic alias: the log-bucket storage works for any
+    /// non-negative magnitude (e.g. rows per batch), not just
+    /// milliseconds — the series name carries the unit.
+    pub fn record(&self, v: f64) {
+        self.record_ms(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.h.count()
+    }
+
+    pub fn snapshot(&self) -> LatencySnapshot {
+        self.h.snapshot()
+    }
+}
+
+enum Handle {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<HistHandle>),
+}
+
+struct SeriesEntry {
+    name: String,
+    /// Pre-rendered label block: `{k="v",…}`, or `""` when unlabeled.
+    labels: String,
+    handle: Handle,
+}
+
+/// The series table. One process-wide instance lives behind
+/// [`global()`]; tests build isolated instances via [`Registry::new`]
+/// so gauge assertions stay deterministic under parallel test threads.
+pub struct Registry {
+    series: Mutex<BTreeMap<String, SeriesEntry>>,
+    enabled: Arc<AtomicBool>,
+    overflow_warned: AtomicBool,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+/// The process-wide registry every production call site registers into.
+pub fn global() -> &'static Registry {
+    static G: OnceLock<Registry> = OnceLock::new();
+    G.get_or_init(Registry::new)
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            series: Mutex::new(BTreeMap::new()),
+            enabled: Arc::new(AtomicBool::new(true)),
+            overflow_warned: AtomicBool::new(false),
+        }
+    }
+
+    /// Whether samplers record. Instrumentation sites with setup cost
+    /// (an `Instant::now()` per layer) check this first and skip the
+    /// whole block when off.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Flip sampling on/off (counters + histograms; gauges keep
+    /// tracking — see the module docs). The obs bench uses this to
+    /// measure overhead; operators could use it as a kill switch.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Get-or-register a counter. Same `(name, labels)` → the same
+    /// underlying series, so re-construction (a rebuilt backend, a
+    /// second engine) keeps accumulating rather than resetting.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let labels_s = format_labels(labels);
+        let key = format!("{name}{labels_s}");
+        let mut g = self.series.lock().unwrap();
+        if let Some(e) = g.get(&key) {
+            if let Handle::Counter(c) = &e.handle {
+                return Arc::clone(c);
+            }
+            log::warn!("obs: {key} already registered as a different type");
+            return Arc::new(Counter::new(Arc::clone(&self.enabled)));
+        }
+        if self.over_budget(&g) {
+            return Arc::new(Counter::new(Arc::clone(&self.enabled)));
+        }
+        let c = Arc::new(Counter::new(Arc::clone(&self.enabled)));
+        g.insert(
+            key,
+            SeriesEntry {
+                name: name.to_string(),
+                labels: labels_s,
+                handle: Handle::Counter(Arc::clone(&c)),
+            },
+        );
+        c
+    }
+
+    /// Get-or-register a gauge (see [`Registry::counter`] for the
+    /// get-or-register contract).
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let labels_s = format_labels(labels);
+        let key = format!("{name}{labels_s}");
+        let mut g = self.series.lock().unwrap();
+        if let Some(e) = g.get(&key) {
+            if let Handle::Gauge(v) = &e.handle {
+                return Arc::clone(v);
+            }
+            log::warn!("obs: {key} already registered as a different type");
+            return Arc::new(Gauge::new());
+        }
+        if self.over_budget(&g) {
+            return Arc::new(Gauge::new());
+        }
+        let v = Arc::new(Gauge::new());
+        g.insert(
+            key,
+            SeriesEntry {
+                name: name.to_string(),
+                labels: labels_s,
+                handle: Handle::Gauge(Arc::clone(&v)),
+            },
+        );
+        v
+    }
+
+    /// Get-or-register a histogram (see [`Registry::counter`] for the
+    /// get-or-register contract).
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<HistHandle> {
+        let labels_s = format_labels(labels);
+        let key = format!("{name}{labels_s}");
+        let mut g = self.series.lock().unwrap();
+        if let Some(e) = g.get(&key) {
+            if let Handle::Hist(h) = &e.handle {
+                return Arc::clone(h);
+            }
+            log::warn!("obs: {key} already registered as a different type");
+            return Arc::new(HistHandle::new(Arc::clone(&self.enabled)));
+        }
+        if self.over_budget(&g) {
+            return Arc::new(HistHandle::new(Arc::clone(&self.enabled)));
+        }
+        let h = Arc::new(HistHandle::new(Arc::clone(&self.enabled)));
+        g.insert(
+            key,
+            SeriesEntry {
+                name: name.to_string(),
+                labels: labels_s,
+                handle: Handle::Hist(Arc::clone(&h)),
+            },
+        );
+        h
+    }
+
+    fn over_budget(&self, g: &BTreeMap<String, SeriesEntry>) -> bool {
+        if g.len() < MAX_SERIES {
+            return false;
+        }
+        if !self.overflow_warned.swap(true, Ordering::Relaxed) {
+            log::warn!(
+                "obs: series cap {MAX_SERIES} reached — new series get detached \
+                 handles and are dropped from exposition (label cardinality \
+                 budget, DESIGN.md §15)"
+            );
+        }
+        true
+    }
+
+    /// Number of registered series (tests + budget monitoring).
+    pub fn series_count(&self) -> usize {
+        self.series.lock().unwrap().len()
+    }
+
+    /// Render every series as Prometheus text exposition. Counters and
+    /// gauges emit one `name{labels} value` line; histograms emit a
+    /// summary block (`_count`, `_sum`, `quantile="…"`, `_max`) whose
+    /// every line still parses as `name{labels} value`.
+    pub fn render_prometheus(&self) -> String {
+        let g = self.series.lock().unwrap();
+        let mut out = String::new();
+        for e in g.values() {
+            match &e.handle {
+                Handle::Counter(c) => {
+                    let _ = writeln!(out, "{}{} {}", e.name, e.labels, c.get());
+                }
+                Handle::Gauge(v) => {
+                    let _ = writeln!(out, "{}{} {}", e.name, e.labels, fmt_f64(v.get()));
+                }
+                Handle::Hist(h) => {
+                    render_latency_lines(&mut out, &e.name, &e.labels, &h.snapshot());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Append a histogram snapshot as summary-style exposition lines.
+/// `labels` is a pre-rendered block from [`format_labels`] (or `""`).
+/// Shared by the registry renderer and `Engine::prometheus`, which
+/// mirrors its unregistered per-engine histograms through it.
+pub fn render_latency_lines(out: &mut String, name: &str, labels: &str, s: &LatencySnapshot) {
+    let _ = writeln!(out, "{name}_count{labels} {}", s.count);
+    let _ = writeln!(out, "{name}_sum{labels} {}", fmt_f64(s.mean_ms * s.count as f64));
+    for (q, v) in [("0.5", s.p50_ms), ("0.95", s.p95_ms), ("0.99", s.p99_ms)] {
+        let with_q = splice_label(labels, &format!("quantile=\"{q}\""));
+        let _ = writeln!(out, "{name}{with_q} {}", fmt_f64(v));
+    }
+    let _ = writeln!(out, "{name}_max{labels} {}", fmt_f64(s.max_ms));
+}
+
+/// Render `[("k","v"),…]` as `{k="v",…}` (empty slice → empty string).
+/// Values get `\` / `"` / newline escaped per the exposition format;
+/// keys are trusted (they are compile-time literals at every call site).
+pub fn format_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut s = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => s.push_str("\\\\"),
+                '"' => s.push_str("\\\""),
+                '\n' => s.push_str("\\n"),
+                c => s.push(c),
+            }
+        }
+        s.push('"');
+    }
+    s.push('}');
+    s
+}
+
+/// Insert one extra `k="v"` pair into a pre-rendered label block.
+fn splice_label(labels: &str, extra: &str) -> String {
+    if labels.is_empty() {
+        format!("{{{extra}}}")
+    } else {
+        format!("{},{extra}}}", &labels[..labels.len() - 1])
+    }
+}
+
+/// Exposition-safe float: Rust's `Display` never emits scientific
+/// notation, so the only parse hazards are NaN/inf — map them to 0.
+fn fmt_f64(v: f64) -> String {
+    format!("{}", if v.is_finite() { v } else { 0.0 })
+}
+
+// ------------------------------------------------------------- tracing
+
+/// One request's span through the pipeline, timestamps in µs relative
+/// to the owning [`TraceRing`]'s epoch (so they compare and serialize
+/// without wall-clock plumbing). `enqueue ≤ batch ≤ compute_done ≤
+/// reply` by construction — the e2e test pins the monotonicity down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestTrace {
+    pub id: u64,
+    /// When the request entered the queue.
+    pub enqueue_us: u64,
+    /// When a worker picked the batch containing it.
+    pub batch_us: u64,
+    /// When that batch's forward pass finished.
+    pub compute_done_us: u64,
+    /// When the response was handed to the reply channel.
+    pub reply_us: u64,
+    /// Rows in the batch it rode in.
+    pub rows: u32,
+    pub ok: bool,
+}
+
+struct TraceRingInner {
+    buf: Vec<RequestTrace>,
+    /// Next write slot (wraps at capacity).
+    next: usize,
+    total: u64,
+}
+
+/// Fixed-size ring of recent [`RequestTrace`]s. Push is a short mutex
+/// hold + one copy; memory is bounded by construction, so tracing can
+/// stay on in production. Each engine owns one (inside
+/// `EngineMetrics`), keeping traces per-engine and tests deterministic.
+pub struct TraceRing {
+    epoch: Instant,
+    inner: Mutex<TraceRingInner>,
+    capacity: usize,
+}
+
+impl Default for TraceRing {
+    fn default() -> TraceRing {
+        TraceRing::new(TRACE_RING_CAPACITY)
+    }
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        assert!(capacity > 0, "trace ring capacity must be positive");
+        TraceRing {
+            epoch: Instant::now(),
+            inner: Mutex::new(TraceRingInner {
+                buf: Vec::with_capacity(capacity),
+                next: 0,
+                total: 0,
+            }),
+            capacity,
+        }
+    }
+
+    /// Microseconds from the ring's epoch to `t` (0 if `t` predates it).
+    pub fn us_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    pub fn push(&self, t: RequestTrace) {
+        let mut g = self.inner.lock().unwrap();
+        if g.buf.len() < self.capacity {
+            g.buf.push(t);
+        } else {
+            let slot = g.next;
+            g.buf[slot] = t;
+        }
+        g.next = (g.next + 1) % self.capacity;
+        g.total += 1;
+    }
+
+    /// All retained traces, oldest first.
+    pub fn snapshot(&self) -> Vec<RequestTrace> {
+        let g = self.inner.lock().unwrap();
+        if g.buf.len() < self.capacity {
+            g.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.capacity);
+            out.extend_from_slice(&g.buf[g.next..]);
+            out.extend_from_slice(&g.buf[..g.next]);
+            out
+        }
+    }
+
+    /// Lifetime push count (≥ retained length).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_line(line: &str) -> Option<(String, f64)> {
+        // the format the e2e test also enforces: name{labels} value
+        let (head, val) = line.rsplit_once(' ')?;
+        let val: f64 = val.parse().ok()?;
+        let name = match head.split_once('{') {
+            Some((n, rest)) => {
+                if !rest.ends_with('}') {
+                    return None;
+                }
+                n
+            }
+            None => head,
+        };
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_')
+            || name.chars().next().unwrap().is_ascii_digit()
+        {
+            return None;
+        }
+        Some((name.to_string(), val))
+    }
+
+    #[test]
+    fn get_or_register_returns_the_same_series() {
+        let reg = Registry::new();
+        let a = reg.counter("t_total", &[("k", "1")]);
+        let b = reg.counter("t_total", &[("k", "1")]);
+        let c = reg.counter("t_total", &[("k", "2")]);
+        a.inc();
+        b.add(2);
+        c.inc();
+        assert_eq!(a.get(), 3, "same (name, labels) must share storage");
+        assert_eq!(c.get(), 1);
+        assert_eq!(reg.series_count(), 2);
+    }
+
+    #[test]
+    fn disabled_registry_skips_samplers_but_not_gauges() {
+        let reg = Registry::new();
+        let c = reg.counter("c_total", &[]);
+        let h = reg.histogram("h_ms", &[]);
+        let g = reg.gauge("g", &[]);
+        reg.set_enabled(false);
+        c.inc();
+        h.record_ms(1.0);
+        g.add(2.0);
+        assert_eq!(c.get(), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(g.get(), 2.0, "gauges track live state regardless");
+        reg.set_enabled(true);
+        c.inc();
+        h.record_ms(1.0);
+        assert_eq!(c.get(), 1);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn render_emits_parseable_lines_with_labels() {
+        let reg = Registry::new();
+        reg.counter("req_total", &[("plan", "int8"), ("k_w", "4")]).add(7);
+        reg.gauge("depth", &[]).set(3.5);
+        reg.histogram("lat_ms", &[("layer", "fc1")]).record_ms(2.0);
+        let text = reg.render_prometheus();
+        let mut names = vec![];
+        for line in text.lines() {
+            let (name, _) = parse_line(line)
+                .unwrap_or_else(|| panic!("unparseable exposition line: {line:?}"));
+            names.push(name);
+        }
+        assert!(text.contains("req_total{plan=\"int8\",k_w=\"4\"} 7"), "{text}");
+        assert!(text.contains("depth 3.5"), "{text}");
+        assert!(text.contains("lat_ms_count{layer=\"fc1\"} 1"), "{text}");
+        assert!(
+            text.contains("lat_ms{layer=\"fc1\",quantile=\"0.5\"}"),
+            "{text}"
+        );
+        assert!(names.contains(&"lat_ms_max".to_string()));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let s = format_labels(&[("k", "a\"b\\c")]);
+        assert_eq!(s, "{k=\"a\\\"b\\\\c\"}");
+    }
+
+    #[test]
+    fn type_mismatch_hands_back_a_detached_handle() {
+        let reg = Registry::new();
+        reg.counter("x", &[]).inc();
+        let g = reg.gauge("x", &[]); // wrong type for an existing name
+        g.set(9.0);
+        assert_eq!(reg.series_count(), 1);
+        assert!(
+            !reg.render_prometheus().contains('9'),
+            "detached handle must not render"
+        );
+    }
+
+    #[test]
+    fn trace_ring_wraps_keeping_newest() {
+        let ring = TraceRing::new(4);
+        let mk = |i: u64| RequestTrace {
+            id: i,
+            enqueue_us: i,
+            batch_us: i + 1,
+            compute_done_us: i + 2,
+            reply_us: i + 3,
+            rows: 1,
+            ok: true,
+        };
+        for i in 0..6 {
+            ring.push(mk(i));
+        }
+        let got = ring.snapshot();
+        assert_eq!(got.len(), 4);
+        assert_eq!(got.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3, 4, 5]);
+        assert_eq!(ring.total(), 6);
+    }
+
+    #[test]
+    fn trace_timestamps_are_relative_to_the_epoch() {
+        let ring = TraceRing::new(2);
+        let before = ring.us_since_epoch(Instant::now());
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let after = ring.us_since_epoch(Instant::now());
+        assert!(after > before);
+    }
+}

@@ -11,6 +11,8 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::obs::{self, HistHandle};
+
 use super::queue::{Pop, RequestQueue, ServeRequest};
 
 /// Poll granularity while idle-waiting for the *first* request; bounds
@@ -21,12 +23,16 @@ pub struct DynamicBatcher {
     queue: Arc<RequestQueue>,
     batch: usize,
     max_delay: Duration,
+    /// Coalesced-rows distribution (`adaqat_batch_rows`, DESIGN.md §15)
+    /// — the occupancy dial this module's deadline policy controls.
+    batch_rows: Arc<HistHandle>,
 }
 
 impl DynamicBatcher {
     pub fn new(queue: Arc<RequestQueue>, batch: usize, max_delay: Duration) -> DynamicBatcher {
         assert!(batch > 0, "batch must be positive");
-        DynamicBatcher { queue, batch, max_delay }
+        let batch_rows = obs::global().histogram("adaqat_batch_rows", &[]);
+        DynamicBatcher { queue, batch, max_delay, batch_rows }
     }
 
     /// Next coalesced batch (1..=batch requests), or `None` once the
@@ -53,6 +59,7 @@ impl DynamicBatcher {
                 Pop::TimedOut | Pop::Closed => break,
             }
         }
+        self.batch_rows.record(out.len() as f64);
         Some(out)
     }
 }

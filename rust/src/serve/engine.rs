@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 
 use crate::kernels::{QuantConvNet, QuantMlp, WorkerPool};
 use crate::metrics::Histogram;
+use crate::obs::{self, RequestTrace, TraceRing};
 use crate::quant::bitwidth_scale;
 use crate::runtime::{ModelRuntime, Runtime, TrainState};
 use crate::tensor::Tensor;
@@ -69,21 +70,35 @@ pub struct EngineMetrics {
     pub padded: AtomicU64,
     /// Static rows per batch (set once at engine start; denominators).
     pub batch_rows: AtomicU64,
+    /// Last-N request spans, enqueue → batch → compute → reply
+    /// (DESIGN.md §15); the `trace` protocol command reads this.
+    pub trace: TraceRing,
 }
 
 impl EngineMetrics {
     pub fn report(&self) -> String {
         let batches = self.batches.load(Ordering::Relaxed);
-        // clamp only the occupancy denominator, not the displayed count
-        let denom = (batches.max(1) * self.batch_rows.load(Ordering::Relaxed).max(1)) as f64;
+        let batch_rows = self.batch_rows.load(Ordering::Relaxed);
+        // before the first batch lands there is no occupancy to speak
+        // of — the old max(1) denominator clamp made an idle engine
+        // read a perfect "100.0%" instead of admitting it has no data
+        let occupancy = if batches == 0 || batch_rows == 0 {
+            "n/a".to_string()
+        } else {
+            let denom = (batches * batch_rows) as f64;
+            format!(
+                "{:.1}%",
+                100.0 * (1.0 - self.padded.load(Ordering::Relaxed) as f64 / denom)
+            )
+        };
         format!(
-            "{}\n{}\nrequests {}  failures {}  batches {}  mean occupancy {:.1}%",
+            "{}\n{}\nrequests {}  failures {}  batches {}  mean occupancy {}",
             self.queue.snapshot().row("queue"),
             self.compute.snapshot().row("compute"),
             self.requests.load(Ordering::Relaxed),
             self.failures.load(Ordering::Relaxed),
             batches,
-            100.0 * (1.0 - self.padded.load(Ordering::Relaxed) as f64 / denom),
+            occupancy,
         )
     }
 }
@@ -264,6 +279,42 @@ impl Engine {
             .map_err(|_| anyhow::anyhow!("engine dropped the request"))
     }
 
+    /// Current queue backlog (mirrors the `adaqat_queue_depth` gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// (full, closed) shed counts from the request queue.
+    pub fn shed_counts(&self) -> (u64, u64) {
+        self.queue.shed_counts()
+    }
+
+    /// Full Prometheus text exposition: every series in the global
+    /// registry (per-layer kernels, queue, pool, training) plus this
+    /// engine's own counters and latency summaries mirrored under the
+    /// same naming scheme (DESIGN.md §15).
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = obs::global().render_prometheus();
+        let m = &self.metrics;
+        let _ = writeln!(out, "adaqat_requests_total {}", m.requests.load(Ordering::Relaxed));
+        let _ = writeln!(out, "adaqat_failures_total {}", m.failures.load(Ordering::Relaxed));
+        let _ = writeln!(out, "adaqat_batches_total {}", m.batches.load(Ordering::Relaxed));
+        let _ = writeln!(
+            out,
+            "adaqat_unfilled_slots_total {}",
+            m.padded.load(Ordering::Relaxed)
+        );
+        obs::render_latency_lines(&mut out, "adaqat_request_queue_ms", "", &m.queue.snapshot());
+        obs::render_latency_lines(
+            &mut out,
+            "adaqat_request_compute_ms",
+            "",
+            &m.compute.snapshot(),
+        );
+        out
+    }
+
     /// Stop accepting work, drain the queue, join the workers.
     pub fn shutdown(&self) {
         self.queue.close();
@@ -294,7 +345,8 @@ fn worker_loop(
         }
         let t0 = Instant::now();
         let outcome = backend.infer(&Tensor::new(vec![rows, h, w, c], x));
-        let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let done = Instant::now();
+        let compute_ms = done.duration_since(t0).as_secs_f64() * 1e3;
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.padded.fetch_add((bs - rows) as u64, Ordering::Relaxed);
         match outcome {
@@ -305,6 +357,7 @@ fn worker_loop(
                     metrics.queue.record_ms(queue_ms);
                     metrics.compute.record_ms(compute_ms);
                     metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    push_trace(metrics, &r, picked, done, rows as u32, true);
                     let _ = r.resp.send(ServeResponse {
                         id: r.id,
                         result: Ok(classes[i]),
@@ -324,6 +377,7 @@ fn worker_loop(
                     metrics.queue.record_ms(queue_ms);
                     metrics.compute.record_ms(compute_ms);
                     metrics.failures.fetch_add(1, Ordering::Relaxed);
+                    push_trace(metrics, &r, picked, done, rows as u32, false);
                     let _ = r.resp.send(ServeResponse {
                         id: r.id,
                         result: Err(msg.clone()),
@@ -334,6 +388,35 @@ fn worker_loop(
             }
         }
     }
+}
+
+/// Record one request's span — enqueue → batch pickup → compute done →
+/// reply — into the engine's trace ring. Called *before* the response
+/// channel send so a client that issues `trace` right after receiving
+/// its answer always finds its own entry; `rows` is the size of the
+/// batch the request rode in. Skips entirely (no ring lock) when the
+/// registry's sampler switch is off.
+fn push_trace(
+    metrics: &EngineMetrics,
+    r: &ServeRequest,
+    picked: Instant,
+    done: Instant,
+    rows: u32,
+    ok: bool,
+) {
+    if !obs::global().enabled() {
+        return;
+    }
+    let ring = &metrics.trace;
+    ring.push(RequestTrace {
+        id: r.id,
+        enqueue_us: ring.us_since_epoch(r.enqueued),
+        batch_us: ring.us_since_epoch(picked),
+        compute_done_us: ring.us_since_epoch(done),
+        reply_us: ring.us_since_epoch(Instant::now()),
+        rows,
+        ok,
+    });
 }
 
 // ------------------------------------------------------------- backends
@@ -650,6 +733,24 @@ mod tests {
         engine.shutdown();
         let (tx, _rx) = mpsc::channel();
         assert_eq!(engine.submit(0, vec![0.0; numel], tx).unwrap_err(), SubmitError::Closed);
+    }
+
+    #[test]
+    fn report_occupancy_is_na_before_first_batch() {
+        let m = EngineMetrics::default();
+        assert!(
+            m.report().contains("mean occupancy n/a"),
+            "idle engine must not claim perfect occupancy: {}",
+            m.report()
+        );
+        m.batch_rows.store(8, Ordering::Relaxed);
+        m.batches.store(1, Ordering::Relaxed);
+        m.padded.store(2, Ordering::Relaxed);
+        assert!(
+            m.report().contains("mean occupancy 75.0%"),
+            "6 of 8 slots filled: {}",
+            m.report()
+        );
     }
 
     #[test]

@@ -7,14 +7,19 @@
 //!   → {"id": 7, "image": [f32 × h·w·c]}      classify one image
 //!   → {"cmd": "ping"}                        liveness probe
 //!   → {"cmd": "stats"}                       latency/throughput counters
+//!   → {"cmd": "metrics"}                     Prometheus text exposition
+//!   → {"cmd": "trace"}                       recent request spans
 //!   ← {"id": 7, "class": 3, "queue_ms": 0.8, "compute_ms": 1.9}
 //!   ← {"id": 7, "error": "queue full (backpressure)"}
 //!   ← {"ok": true}                           pong
 //!   ← {"requests": …, "queue_p50_ms": …, …}  stats
+//!   ← {"metrics": "adaqat_…{…} v\n…"}        exposition as one string
+//!   ← {"traces": [{"id": …, "enqueue_us": …, …}, …]}
 //! ```
 
 use std::sync::atomic::Ordering;
 
+use crate::obs::RequestTrace;
 use crate::util::json::Json;
 
 use super::engine::EngineMetrics;
@@ -26,6 +31,10 @@ pub enum Request {
     Infer { id: u64, pixels: Vec<f32> },
     Ping,
     Stats,
+    /// Prometheus text exposition of every registered series.
+    Metrics,
+    /// Recent request spans from the engine's trace ring.
+    Trace,
 }
 
 /// Parse one request line. Errors are strings ready to ship back via
@@ -36,6 +45,8 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         return match cmd {
             "ping" => Ok(Request::Ping),
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
+            "trace" => Ok(Request::Trace),
             other => Err(format!("unknown cmd {other:?}")),
         };
     }
@@ -92,8 +103,10 @@ pub fn pong_line() -> String {
     Json::obj(vec![("ok", Json::Bool(true))]).to_string()
 }
 
-/// Snapshot the engine counters as one stats object.
-pub fn stats_line(m: &EngineMetrics) -> String {
+/// Snapshot the engine counters as one stats object. `queue_depth` and
+/// the shed counts come from the live queue (the engine owns it, the
+/// metrics struct does not), so the server passes them alongside.
+pub fn stats_line(m: &EngineMetrics, queue_depth: usize, shed: (u64, u64)) -> String {
     let q = m.queue.snapshot();
     let c = m.compute.snapshot();
     Json::obj(vec![
@@ -103,6 +116,9 @@ pub fn stats_line(m: &EngineMetrics) -> String {
         // unfilled coalescing slots; only static-shape backends pad
         // them with real zero rows (see EngineMetrics::padded)
         ("unfilled_slots", Json::num(m.padded.load(Ordering::Relaxed) as f64)),
+        ("queue_depth", Json::num(queue_depth as f64)),
+        ("shed_full", Json::num(shed.0 as f64)),
+        ("shed_closed", Json::num(shed.1 as f64)),
         ("queue_p50_ms", Json::num(round3(q.p50_ms))),
         ("queue_p95_ms", Json::num(round3(q.p95_ms))),
         ("queue_p99_ms", Json::num(round3(q.p99_ms))),
@@ -111,6 +127,31 @@ pub fn stats_line(m: &EngineMetrics) -> String {
         ("compute_p99_ms", Json::num(round3(c.p99_ms))),
     ])
     .to_string()
+}
+
+/// Wrap the (multi-line) Prometheus exposition in a one-line JSON
+/// object — `util::json` escapes the newlines, so NDJSON framing holds.
+pub fn metrics_line(text: &str) -> String {
+    Json::obj(vec![("metrics", Json::str(text))]).to_string()
+}
+
+/// Serialize the trace-ring snapshot, oldest span first.
+pub fn trace_line(traces: &[RequestTrace]) -> String {
+    let arr = traces
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("id", Json::num(t.id as f64)),
+                ("enqueue_us", Json::num(t.enqueue_us as f64)),
+                ("batch_us", Json::num(t.batch_us as f64)),
+                ("compute_done_us", Json::num(t.compute_done_us as f64)),
+                ("reply_us", Json::num(t.reply_us as f64)),
+                ("rows", Json::num(t.rows as f64)),
+                ("ok", Json::Bool(t.ok)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("traces", Json::Arr(arr))]).to_string()
 }
 
 /// Keep emitted latencies short and round-trippable.
@@ -135,6 +176,8 @@ mod tests {
     fn parses_commands_and_rejects_garbage() {
         assert_eq!(parse_request(r#"{"cmd": "ping"}"#).unwrap(), Request::Ping);
         assert_eq!(parse_request(r#"{"cmd": "stats"}"#).unwrap(), Request::Stats);
+        assert_eq!(parse_request(r#"{"cmd": "metrics"}"#).unwrap(), Request::Metrics);
+        assert_eq!(parse_request(r#"{"cmd": "trace"}"#).unwrap(), Request::Trace);
         assert!(parse_request(r#"{"cmd": "reboot"}"#).is_err());
         assert!(parse_request("not json").is_err());
         assert!(parse_request(r#"{"id": 1}"#).is_err());
@@ -194,9 +237,56 @@ mod tests {
         m.requests.store(12, Ordering::Relaxed);
         m.queue.record_ms(1.0);
         m.compute.record_ms(2.0);
-        let j = Json::parse(&stats_line(&m)).unwrap();
+        let j = Json::parse(&stats_line(&m, 3, (5, 1))).unwrap();
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(12.0));
+        assert_eq!(j.get("queue_depth").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("shed_full").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("shed_closed").unwrap().as_f64(), Some(1.0));
         assert!(j.get("queue_p50_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.get("compute_p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn metrics_line_survives_ndjson_framing() {
+        // the exposition is multi-line by nature; the frame must not be
+        let text = "adaqat_queue_depth 0\nadaqat_pool_active 1\n";
+        let line = metrics_line(text);
+        assert!(!line.contains('\n'), "frame must stay a single line");
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("metrics").unwrap().as_str(), Some(text));
+    }
+
+    #[test]
+    fn trace_line_serializes_spans_in_order() {
+        let traces = [
+            RequestTrace {
+                id: 7,
+                enqueue_us: 10,
+                batch_us: 20,
+                compute_done_us: 30,
+                reply_us: 40,
+                rows: 4,
+                ok: true,
+            },
+            RequestTrace {
+                id: 8,
+                enqueue_us: 50,
+                batch_us: 60,
+                compute_done_us: 70,
+                reply_us: 80,
+                rows: 1,
+                ok: false,
+            },
+        ];
+        let j = Json::parse(&trace_line(&traces)).unwrap();
+        let arr = j.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("id").unwrap().as_f64(), Some(7.0));
+        assert_eq!(arr[0].get("enqueue_us").unwrap().as_f64(), Some(10.0));
+        assert_eq!(arr[0].get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(arr[1].get("rows").unwrap().as_f64(), Some(1.0));
+        assert_eq!(arr[1].get("ok").unwrap().as_bool(), Some(false));
+        let empty = Json::parse(&trace_line(&[])).unwrap();
+        assert_eq!(empty.get("traces").unwrap().as_arr().unwrap().len(), 0);
     }
 }

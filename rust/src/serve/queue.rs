@@ -14,6 +14,8 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::obs::{self, Counter, Gauge, Registry};
+
 /// One inference request traveling through the pipeline.
 pub struct ServeRequest {
     /// Client-chosen id, echoed back in the response (ids are scoped to
@@ -70,32 +72,65 @@ struct Inner {
     closed: bool,
 }
 
+/// The queue's registry handles (DESIGN.md §15): a live depth gauge and
+/// shed counters labeled by reason. Registered once at queue
+/// construction; updated under the queue lock, so the gauge never
+/// disagrees with `len()` at a quiescent point.
+struct QueueObs {
+    depth: Arc<Gauge>,
+    shed_full: Arc<Counter>,
+    shed_closed: Arc<Counter>,
+}
+
+impl QueueObs {
+    fn register(reg: &Registry) -> QueueObs {
+        QueueObs {
+            depth: reg.gauge("adaqat_queue_depth", &[]),
+            shed_full: reg.counter("adaqat_queue_shed_total", &[("reason", "full")]),
+            shed_closed: reg.counter("adaqat_queue_shed_total", &[("reason", "closed")]),
+        }
+    }
+}
+
 /// The bounded queue itself; shared via `Arc`.
 pub struct RequestQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
     capacity: usize,
+    obs: QueueObs,
 }
 
 impl RequestQueue {
     pub fn new(capacity: usize) -> Arc<RequestQueue> {
+        Self::with_obs(capacity, obs::global())
+    }
+
+    /// [`new`](RequestQueue::new) against an explicit registry. Tests
+    /// use an isolated [`Registry`] so depth-gauge assertions stay
+    /// deterministic while other tests serve traffic through the
+    /// global one in parallel.
+    pub fn with_obs(capacity: usize, reg: &Registry) -> Arc<RequestQueue> {
         assert!(capacity > 0, "queue capacity must be positive");
         Arc::new(RequestQueue {
             inner: Mutex::new(Inner { q: VecDeque::with_capacity(capacity), closed: false }),
             cv: Condvar::new(),
             capacity,
+            obs: QueueObs::register(reg),
         })
     }
 
     pub fn push(&self, req: ServeRequest) -> Result<(), PushError> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
+            self.obs.shed_closed.inc();
             return Err(PushError::Closed);
         }
         if g.q.len() >= self.capacity {
+            self.obs.shed_full.inc();
             return Err(PushError::Full);
         }
         g.q.push_back(req);
+        self.obs.depth.add(1.0);
         drop(g);
         self.cv.notify_one();
         Ok(())
@@ -107,6 +142,7 @@ impl RequestQueue {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(req) = g.q.pop_front() {
+                self.obs.depth.add(-1.0);
                 return Pop::Item(req);
             }
             if g.closed {
@@ -134,6 +170,13 @@ impl RequestQueue {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// (full, closed) shed counts as this queue's registry series
+    /// report them. Queues sharing a registry (production: the global
+    /// one) share the series, so a multi-queue process reads totals.
+    pub fn shed_counts(&self) -> (u64, u64) {
+        (self.obs.shed_full.get(), self.obs.shed_closed.get())
     }
 }
 
@@ -208,6 +251,32 @@ mod tests {
         }
         assert!(start.elapsed() < Duration::from_secs(4), "pop did not wake early");
         t.join().unwrap();
+    }
+
+    #[test]
+    fn depth_gauge_and_shed_counters_track_queue_events() {
+        // isolated registry: the global one is shared with every other
+        // test in this binary, so its gauge is not deterministic here
+        let reg = Registry::new();
+        let q = RequestQueue::with_obs(2, &reg);
+        let depth = reg.gauge("adaqat_queue_depth", &[]);
+        let (r0, _k0) = req(0);
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        q.push(r0).unwrap();
+        q.push(r1).unwrap();
+        assert_eq!(depth.get(), 2.0);
+        assert_eq!(q.push(r2).unwrap_err(), PushError::Full);
+        assert_eq!(q.shed_counts(), (1, 0), "full shed counted, depth untouched");
+        assert_eq!(depth.get(), 2.0);
+        assert!(matches!(q.pop(Duration::from_millis(1)), Pop::Item(_)));
+        assert!(matches!(q.pop(Duration::from_millis(1)), Pop::Item(_)));
+        assert_eq!(depth.get(), 0.0, "gauge returns to 0 after drain");
+        q.close();
+        let (r3, _k3) = req(3);
+        assert_eq!(q.push(r3).unwrap_err(), PushError::Closed);
+        assert_eq!(q.shed_counts(), (1, 1));
+        assert_eq!(depth.get(), 0.0);
     }
 
     #[test]

@@ -149,8 +149,19 @@ fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
         }
         let keep_going = match protocol::parse_request(line) {
             Ok(Request::Ping) => write_line(&out, &protocol::pong_line()),
-            Ok(Request::Stats) => {
-                write_line(&out, &protocol::stats_line(&engine.metrics))
+            Ok(Request::Stats) => write_line(
+                &out,
+                &protocol::stats_line(
+                    &engine.metrics,
+                    engine.queue_depth(),
+                    engine.shed_counts(),
+                ),
+            ),
+            Ok(Request::Metrics) => {
+                write_line(&out, &protocol::metrics_line(&engine.prometheus()))
+            }
+            Ok(Request::Trace) => {
+                write_line(&out, &protocol::trace_line(&engine.metrics.trace.snapshot()))
             }
             Ok(Request::Infer { id, pixels }) => {
                 match engine.submit(id, pixels, tx.clone()) {

@@ -83,6 +83,31 @@ pub fn train(
     let cost = CostModel::from_manifest(backend.mm());
     let batch_size = backend.mm().batch;
 
+    // Controller trajectory in the same registry the serving side uses
+    // (DESIGN.md §15): live bit-width/oscillation gauges per axis plus
+    // probe/freeze counters, updated at every probe. The coordinator
+    // dumps the registry next to trace.csv, so a run's final exposition
+    // carries the trajectory endpoint alongside the serving series.
+    let reg = crate::obs::global();
+    let bits_g = [
+        reg.gauge("adaqat_train_bits", &[("axis", "w")]),
+        reg.gauge("adaqat_train_bits", &[("axis", "a")]),
+    ];
+    let frac_g = [
+        reg.gauge("adaqat_train_frac_bits", &[("axis", "w")]),
+        reg.gauge("adaqat_train_frac_bits", &[("axis", "a")]),
+    ];
+    let osc_g = [
+        reg.gauge("adaqat_train_osc", &[("axis", "w")]),
+        reg.gauge("adaqat_train_osc", &[("axis", "a")]),
+    ];
+    let freezes_c = [
+        reg.counter("adaqat_train_freezes_total", &[("axis", "w")]),
+        reg.counter("adaqat_train_freezes_total", &[("axis", "a")]),
+    ];
+    let probes_c = reg.counter("adaqat_train_probes_total", &[]);
+    let mut was_frozen = controller.frozen();
+
     let mut epochs = vec![];
     let mut trace = vec![];
     let mut step = 0usize;
@@ -136,6 +161,21 @@ pub fn train(
                     osc_w,
                     osc_a,
                 });
+                probes_c.inc();
+                bits_g[0].set(k_w2 as f64);
+                bits_g[1].set(k_a2 as f64);
+                frac_g[0].set(n_w);
+                frac_g[1].set(n_a);
+                osc_g[0].set(osc_w as f64);
+                osc_g[1].set(osc_a as f64);
+                let frozen_now = controller.frozen();
+                if frozen_now.0 && !was_frozen.0 {
+                    freezes_c[0].inc();
+                }
+                if frozen_now.1 && !was_frozen.1 {
+                    freezes_c[1].inc();
+                }
+                was_frozen = frozen_now;
             }
             step += 1;
         }

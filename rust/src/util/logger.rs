@@ -1,7 +1,10 @@
 //! Tiny `log` backend: stderr with elapsed-time stamps.
 //!
-//! Level comes from `ADAQAT_LOG` (error|warn|info|debug|trace), default
-//! `info`. Installed once by `init()`; safe to call repeatedly.
+//! Level comes from `ADAQAT_LOG` (error|warn|info|debug|trace, any
+//! case), default `info`. An unrecognized value falls back to `info`
+//! *and says so* — once, on the first `init()` — instead of silently
+//! swallowing a typo like `ADAQAT_LOG=verbose`. Installed once by
+//! `init()`; safe to call repeatedly.
 
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -28,16 +31,67 @@ impl log::Log for StderrLogger {
 
 static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 
+/// Parse one `ADAQAT_LOG` value, case-insensitively. `None` means the
+/// value is unrecognized (the caller decides the fallback and warns).
+pub fn parse_level(s: &str) -> Option<log::LevelFilter> {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Some(log::LevelFilter::Error),
+        "warn" => Some(log::LevelFilter::Warn),
+        "info" => Some(log::LevelFilter::Info),
+        "debug" => Some(log::LevelFilter::Debug),
+        "trace" => Some(log::LevelFilter::Trace),
+        _ => None,
+    }
+}
+
 pub fn init() {
-    let level = match std::env::var("ADAQAT_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
+    let raw = std::env::var("ADAQAT_LOG").ok();
+    let (level, unrecognized) = match raw.as_deref() {
+        None => (log::LevelFilter::Info, None),
+        Some(v) => match parse_level(v) {
+            Some(l) => (l, None),
+            None => (log::LevelFilter::Info, Some(v.to_string())),
+        },
     };
+    let first = LOGGER.get().is_none();
     let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
     // Err means a logger is already set (e.g. repeated init in tests) — fine.
     let _ = log::set_logger(logger);
-    log::set_max_level(level);
+    // the *installed* logger's level, not this call's: a repeated init
+    // must not silently re-raise the max level past the filter the
+    // first install decided on
+    log::set_max_level(logger.level);
+    if first {
+        if let Some(bad) = unrecognized {
+            log::warn!(
+                "ADAQAT_LOG: unrecognized level {bad:?} \
+                 (expected error|warn|info|debug|trace) — using info"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_case_insensitively() {
+        assert_eq!(parse_level("error"), Some(log::LevelFilter::Error));
+        assert_eq!(parse_level("WARN"), Some(log::LevelFilter::Warn));
+        assert_eq!(parse_level("Info"), Some(log::LevelFilter::Info));
+        assert_eq!(parse_level("DeBuG"), Some(log::LevelFilter::Debug));
+        assert_eq!(parse_level("trace"), Some(log::LevelFilter::Trace));
+    }
+
+    #[test]
+    fn unknown_levels_are_reported_not_absorbed() {
+        // the old match had no "info" arm and a catch-all `_ => Info`,
+        // so "info", "verbose", and "wran" were indistinguishable —
+        // parse_level makes the unknowns visible to init()'s warning
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level("wran"), None);
+        assert_eq!(parse_level(""), None);
+        assert_eq!(parse_level("info "), None, "no trimming — exact tokens only");
+    }
 }

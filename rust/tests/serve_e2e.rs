@@ -138,6 +138,114 @@ fn serve_mlp_end_to_end_through_integer_kernels() {
     engine.shutdown();
 }
 
+/// Every exposition line must parse as `name{labels} value` (label
+/// values in this codebase never contain spaces, so the value is the
+/// last space-separated token). Returns the metric name.
+fn parse_prom_line(line: &str) -> String {
+    let (lhs, val) = line
+        .rsplit_once(' ')
+        .unwrap_or_else(|| panic!("no value separator in {line:?}"));
+    val.parse::<f64>().unwrap_or_else(|_| panic!("unparseable value in {line:?}"));
+    let name = match lhs.split_once('{') {
+        Some((name, rest)) => {
+            assert!(rest.ends_with('}'), "unterminated label block in {line:?}");
+            name
+        }
+        None => lhs,
+    };
+    let well_formed = name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_');
+    assert!(!name.is_empty() && well_formed, "bad metric name in {line:?}");
+    name.to_string()
+}
+
+#[test]
+fn serve_metrics_exposition_and_trace_over_tcp() {
+    // DESIGN.md §15: after one classified request, the `metrics` command
+    // must return a parseable Prometheus exposition carrying the
+    // per-layer kernel series, and the `trace` command must return that
+    // request's span with monotone pipeline timestamps. The trace is
+    // pushed before the reply is sent, so reading our own answer first
+    // makes both checks deterministic.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    use adaqat::util::json::Json;
+
+    let ck = demo::demo_mlp_checkpoint(DatasetKind::Cifar10, 64, 4, 21, 8, 8);
+    let (q, _) = export_packed(&ck, 4).unwrap();
+    let q = Arc::new(q);
+    let q2 = Arc::clone(&q);
+    let engine = Engine::start(
+        EngineConfig {
+            workers: 1,
+            queue_capacity: 64,
+            max_delay: Duration::from_millis(1),
+        },
+        move |_| Ok(Box::new(ReferenceBackend::with_threads(&q2, 2)?) as Box<dyn Backend>),
+    )
+    .unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&engine)).unwrap();
+
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+
+    // 1. one inference so the layer histograms and trace ring have data
+    let ds = synth::generate(DatasetKind::Cifar10, 4, 13, 1);
+    let image = Json::Arr(ds.image(0).iter().map(|&v| Json::num(v as f64)).collect());
+    let req = Json::obj(vec![("id", Json::num(42.0)), ("image", image)]).to_string();
+    writeln!(stream, "{req}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(&line).unwrap();
+    assert_eq!(resp.get("id").and_then(Json::as_f64), Some(42.0));
+    assert!(resp.get("class").is_some(), "infer failed: {line}");
+
+    // 2. metrics: single NDJSON frame wrapping the multi-line exposition
+    writeln!(stream, r#"{{"cmd": "metrics"}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.matches('\n').count(), 1, "frame must be one line");
+    let j = Json::parse(&line).unwrap();
+    let text = j.get("metrics").unwrap().as_str().unwrap().to_string();
+    let names: Vec<String> = text.lines().map(parse_prom_line).collect();
+    assert!(!names.is_empty());
+    // per-layer kernel telemetry with the full label set
+    let layer_series = text.lines().any(|l| {
+        l.starts_with("adaqat_layer_forward_ms") && l.contains("plan=\"") && l.contains("k_w=\"")
+    });
+    assert!(layer_series, "no labeled per-layer series in:\n{text}");
+    // queue + pool gauges (live regardless of the sampler switch)
+    assert!(names.iter().any(|n| n == "adaqat_queue_depth"), "{text}");
+    assert!(names.iter().any(|n| n == "adaqat_pool_active"), "{text}");
+    // engine mirror counters accounted for our request
+    let mirror = "adaqat_requests_total";
+    let counted = text.lines().any(|l| l.starts_with(mirror) && !l.ends_with(" 0"));
+    assert!(counted, "requests_total still zero in:\n{text}");
+
+    // 3. trace: our span is present with monotone timestamps
+    writeln!(stream, r#"{{"cmd": "trace"}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    let traces = j.get("traces").unwrap().as_arr().unwrap().to_vec();
+    let span = traces
+        .iter()
+        .find(|t| t.get("id").and_then(Json::as_f64) == Some(42.0))
+        .unwrap_or_else(|| panic!("request 42 not traced: {line}"));
+    let us = |k: &str| span.get(k).and_then(Json::as_f64).unwrap();
+    let (enq, bat, comp, rep) =
+        (us("enqueue_us"), us("batch_us"), us("compute_done_us"), us("reply_us"));
+    assert!(
+        enq <= bat && bat <= comp && comp <= rep,
+        "span not monotone: {enq} {bat} {comp} {rep}"
+    );
+    assert!(us("rows") >= 1.0, "span must cover at least its own row");
+    assert_eq!(span.get("ok").and_then(Json::as_bool), Some(true));
+
+    server.stop();
+    engine.shutdown();
+}
+
 #[test]
 fn serve_sheds_load_instead_of_buffering_unboundedly() {
     // tiny queue + one slow-ish worker: the client must see explicit

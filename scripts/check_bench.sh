@@ -17,6 +17,9 @@
 #   BENCH_conv_native.json   speedup_vs_direct   per (k_w, batch)
 #   BENCH_train_native.json  steps_per_sec / fp32 steps_per_sec
 #                                                per quantized config
+#   BENCH_obs.json           overhead_ratio      instrumented / plain
+#                            serve throughput — an *absolute* floor
+#                            (0.95 = 5% budget), no tolerance applied
 #
 # The committed baselines are deliberately conservative floors (they
 # sit below the acceptance numbers in DESIGN.md §11/§13); to ratchet
@@ -101,6 +104,43 @@ for fname, label, extract in CHECKS:
             failures.append(
                 f"{fname} {tag}: {label} {got:.2f} < {TOLERANCE:.2f} x "
                 f"baseline {want:.2f}")
+
+# --- observability overhead gate (DESIGN.md §15) -----------------------
+# Unlike the throughput ratchets above, this is an *absolute floor*: the
+# committed baseline overhead_ratio (0.95 = at most 5% overhead) is the
+# budget itself, so no TOLERANCE multiplier is applied — both sides are
+# same-run, same-box ratios and travel between machines as-is.
+OBS = "BENCH_obs.json"
+obs_base_path = os.path.join("bench_baselines", OBS)
+if not os.path.exists(obs_base_path):
+    failures.append(f"{OBS}: missing baseline {obs_base_path}")
+elif not os.path.exists(OBS):
+    failures.append(f"{OBS}: bench output missing — run scripts/verify.sh first")
+else:
+    with open(obs_base_path) as f:
+        obs_floor = {r["metric"]: r["overhead_ratio"]
+                     for r in json.load(f).get("results", [])
+                     if "overhead_ratio" in r}
+    with open(OBS) as f:
+        obs_fresh = {r["metric"]: r["overhead_ratio"]
+                     for r in json.load(f).get("results", [])
+                     if "overhead_ratio" in r}
+    if not obs_floor:
+        failures.append(f"{obs_base_path}: no overhead_ratio rows — baseline malformed?")
+    print(f"== {OBS} (overhead_ratio; absolute floor, no tolerance) ==")
+    for metric, floor in sorted(obs_floor.items()):
+        got = obs_fresh.get(metric)
+        if got is None:
+            failures.append(f"{OBS} {metric}: row missing from fresh output")
+            print(f"  {metric:>14}: floor {floor:6.2f}  fresh MISSING")
+            continue
+        ok = got >= floor
+        print(f"  {metric:>14}: floor {floor:6.2f}  fresh {got:6.2f}  "
+              f"{'ok' if ok else 'OVER BUDGET'}")
+        if not ok:
+            failures.append(
+                f"{OBS} {metric}: overhead_ratio {got:.3f} < floor {floor:.2f} "
+                f"(instrumentation overhead exceeds the 5% budget)")
 
 if failures:
     print("\nbench-regression gate FAILED:", file=sys.stderr)

@@ -54,4 +54,11 @@ echo "== native conv bench: emit BENCH_conv_native.json =="
 cargo bench --bench conv_native -- --iters 3 --out ../BENCH_conv_native.json
 test -s ../BENCH_conv_native.json
 
+echo "== obs bench: emit BENCH_obs.json =="
+# serve throughput with the metrics samplers on vs off (DESIGN.md §15);
+# the overhead_ratio feeds the CI bench gate, which holds it >= 0.95
+# (instrumentation may cost at most 5% of uninstrumented throughput)
+cargo bench --bench obs -- --iters 3 --out ../BENCH_obs.json
+test -s ../BENCH_obs.json
+
 echo "verify: OK"
