@@ -40,38 +40,50 @@ use crate::quant::code_levels;
 use super::activ::raw_code;
 use super::gemm::OUT_TILE;
 use super::pack;
-use super::{grab, Scratch};
+use super::{force_portable, grab, KernelIsa, Scratch, SplitMut};
 
 /// Largest k_w·k_a product for which [`super::QuantGemm`] auto-selects
 /// the bitserial plan (`PlanChoice::Auto`). The crossover is where
 /// k_w·k_a popcount pairs per 64 elements stop beating 64 dense
-/// multiply-adds — measured on the bench sweep (`benches/kernels.rs`,
-/// bitserial-vs-i8 rows); 9 keeps W3·A3 and W2·A4 on the popcount path
-/// and leaves W4·A4 on the dense one. Forced construction via
+/// multiply-adds — re-derived on the bench sweep (`benches/kernels.rs`,
+/// bitserial-vs-i8 rows) after the dense path gained AVX2 + tiling
+/// (§16): against the *scalar* dense loop the crossover sat near 9
+/// (W3·A3 and W2·A4 still won), but `_mm256_madd_epi16` retires 16
+/// dense MACs per instruction, so only the very small products stay
+/// ahead — W1·A1..W1·A4/W4·A1 and W2·A2 keep a clear margin, W3·A3 and
+/// W2·A4 fall behind the vectorized dense kernel. 4 keeps exactly the
+/// still-winning region on the popcount planes. The heuristic tracks
+/// the vectorized common case on purpose (plans must pick the same
+/// engine on every host — serving results are host-independent either
+/// way, this is only a speed call). Forced construction via
 /// `PlanChoice::Bitserial` ignores this (the bench sweeps k ∈ 1..=4).
-pub const BITSERIAL_MAX_PRODUCT: u32 = 9;
+pub const BITSERIAL_MAX_PRODUCT: u32 = 4;
 
-/// Which popcount backend a plan runs (detected once at build).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum PopImpl {
-    Portable,
-    #[cfg(target_arch = "x86_64")]
-    Popcnt,
-    #[cfg(target_arch = "x86_64")]
-    Avx2,
-}
-
-fn detect_popcount() -> PopImpl {
+/// Runtime popcount-backend pick ([`KernelIsa`]), the pattern the dense
+/// dispatch mirrors: AVX2 Mula LUT when available, the `popcnt`
+/// instruction next, portable fallback — with `ADAQAT_FORCE_PORTABLE`
+/// read fresh each detection so one process can build portable and
+/// native plans back to back (bench A/B, CI matrix).
+fn detect_popcount() -> KernelIsa {
+    if force_portable() {
+        return KernelIsa::Portable;
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if is_x86_feature_detected!("avx2") {
-            return PopImpl::Avx2;
+            return KernelIsa::Avx2;
         }
         if is_x86_feature_detected!("popcnt") {
-            return PopImpl::Popcnt;
+            return KernelIsa::Popcnt;
         }
     }
-    PopImpl::Portable
+    KernelIsa::Portable
+}
+
+/// The backend a bitserial plan built right now would run — the serve
+/// startup banner ([`super::isa_summary`]) reports it.
+pub fn detected_popcount_isa() -> KernelIsa {
+    detect_popcount()
 }
 
 /// Bit-sliced weight planes for one GEMM: built once at checkpoint load
@@ -92,7 +104,7 @@ pub struct BitserialGemm {
     /// The constant term d·s_a·s_w.
     base: i64,
     k_w: u32,
-    imp: PopImpl,
+    imp: KernelIsa,
 }
 
 impl BitserialGemm {
@@ -138,58 +150,100 @@ impl BitserialGemm {
         }
     }
 
-    /// The exact-integer forward over centered activation codes —
-    /// identical arithmetic contract to the dense `quant_rows` loop
-    /// (`sw` is Δ_w as f64; `gain = None` reproduces the unscaled
-    /// epilogue): `out[r,o] = (acc·Δ_a[r]·Δ_w[·gain[o]]) + bias[o]`
-    /// with acc the exact Σ q_a·q_w. Activation rows are sliced into
-    /// the scratch arena's plane buffer (no allocation once warm).
-    #[allow(clippy::too_many_arguments)]
-    pub fn run(
+    /// The popcount backend this plan dispatches to.
+    pub(crate) fn isa(&self) -> KernelIsa {
+        self.imp
+    }
+
+    /// Activation-plane words one batch row needs (k_a·⌈d/64⌉) — how
+    /// callers size the staging buffer for [`slice_rows`].
+    ///
+    /// [`slice_rows`]: BitserialGemm::slice_rows
+    pub(crate) fn plane_words_per_row(&self) -> usize {
+        self.k_a as usize * self.words
+    }
+
+    /// Slice rows `r0..r1`'s centered codes into activation bit-planes —
+    /// the batch-amortized half of the forward (§16): the pooled path
+    /// runs this once per batch (row-parallel across lanes), then every
+    /// column tile sweeps the shared planes instead of re-slicing its
+    /// rows. `planes`/`asum` are chunk-relative: row `r` lands at
+    /// `(r − r0)·plane_words_per_row()`.
+    ///
+    /// An all-zero row is the quantizer's Δ = 0 sentinel: its centered
+    /// codes are all 0, which is *off* the parity grid, so the
+    /// centering identity does not apply — its exact integer dot is
+    /// simply 0 (what the dense path computes), forced in the sweep.
+    /// The row's planes are left unwritten (stale arena contents); the
+    /// sweep's acc short-circuit never reads them.
+    pub(crate) fn slice_rows(
         &self,
         qa: &[i16],
         step_a: &[f32],
-        rows: usize,
-        sw: f64,
-        gain: Option<&[f32]>,
-        bias: &[f32],
-        out: &mut [f32],
-        scratch: &mut Scratch,
+        r0: usize,
+        r1: usize,
+        planes: &mut [u64],
+        asum: &mut [i64],
     ) {
         let d = self.d;
+        let per_row = self.plane_words_per_row();
+        debug_assert_eq!(planes.len(), (r1 - r0) * per_row);
+        debug_assert_eq!(asum.len(), r1 - r0);
+        for r in r0..r1 {
+            let i = r - r0;
+            if step_a[r] != 0.0 {
+                asum[i] = slice_row(
+                    &qa[r * d..(r + 1) * d],
+                    self.s_a,
+                    self.k_a,
+                    &mut planes[i * per_row..(i + 1) * per_row],
+                );
+            } else {
+                asum[i] = 0;
+            }
+        }
+    }
+
+    /// Sweep weight planes `o0..o1` against pre-sliced activation
+    /// planes for rows `r0..r1` — the tile unit the pooled forward
+    /// distributes. Unlike [`slice_rows`]'s chunks, `planes`/`asum`
+    /// here index the *full batch* (row `r` at
+    /// `r·plane_words_per_row()`): column tiles share one slicing pass.
+    /// `dscale[r]` is the hoisted Δ_a[r]·Δ_w epilogue constant.
+    /// Liveness keys on `step_a[r] != 0.0`, *not* `dscale[r] == 0.0` —
+    /// a zero-scale weight tensor zeroes every dscale while its rows'
+    /// planes are live, and the epilogue must still fold the true acc
+    /// so the bits match the dense path exactly. Tiles cover disjoint
+    /// (r, o) cells of `out`: race-free.
+    ///
+    /// [`slice_rows`]: BitserialGemm::slice_rows
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn sweep_cols(
+        &self,
+        planes: &[u64],
+        asum: &[i64],
+        step_a: &[f32],
+        dscale: &[f64],
+        r0: usize,
+        r1: usize,
+        o0: usize,
+        o1: usize,
+        gain: Option<&[f32]>,
+        bias: &[f32],
+        out: &SplitMut<f32>,
+    ) {
         let words = self.words;
         let ka = self.k_a as usize;
         let kw = self.k_w as usize;
         let per_row = ka * words;
         let per_out = kw * words;
-        let Scratch { planes: aplanes, asum, grow_events, .. } = scratch;
-        grab(aplanes, rows * per_row, grow_events);
-        grab(asum, rows, grow_events);
-        for r in 0..rows {
-            // An all-zero row is the quantizer's Δ = 0 sentinel: its
-            // centered codes are all 0, which is *off* the parity grid,
-            // so the centering identity does not apply — its exact
-            // integer dot is simply 0 (what the dense path computes),
-            // forced below. The row's planes are left unwritten (stale
-            // arena contents); the acc short-circuit never reads them.
-            if step_a[r] != 0.0 {
-                asum[r] = slice_row(
-                    &qa[r * d..(r + 1) * d],
-                    self.s_a,
-                    self.k_a,
-                    &mut aplanes[r * per_row..(r + 1) * per_row],
-                );
-            } else {
-                asum[r] = 0;
-            }
-        }
-        for o0 in (0..self.n_out).step_by(OUT_TILE) {
-            let o1 = (o0 + OUT_TILE).min(self.n_out);
-            for r in 0..rows {
-                let ap = &aplanes[r * per_row..(r + 1) * per_row];
-                let da = step_a[r] as f64 * sw;
+        for ot0 in (o0..o1).step_by(OUT_TILE) {
+            let ot1 = (ot0 + OUT_TILE).min(o1);
+            for r in r0..r1 {
+                let ap = &planes[r * per_row..(r + 1) * per_row];
+                let da = dscale[r];
                 let live = step_a[r] != 0.0;
-                for o in o0..o1 {
+                for o in ot0..ot1 {
                     let acc = if live {
                         let wp = &self.planes[o * per_out..(o + 1) * per_out];
                         let p = weighted_and_popcount(ap, wp, words, ka, kw, self.imp);
@@ -203,10 +257,49 @@ impl BitserialGemm {
                         Some(g) => da * g[o] as f64,
                         None => da,
                     };
-                    out[r * self.n_out + o] = (acc as f64 * scale) as f32 + bias[o];
+                    // Safety: tiles cover disjoint (r, o) cells.
+                    unsafe {
+                        out.write(r * self.n_out + o, (acc as f64 * scale) as f32 + bias[o])
+                    };
                 }
             }
         }
+    }
+
+    /// The exact-integer forward over centered activation codes —
+    /// identical arithmetic contract to the dense tile kernel (`sw` is
+    /// Δ_w as f64; `gain = None` reproduces the unscaled epilogue):
+    /// `out[r,o] = (acc·Δ_a[r]·Δ_w[·gain[o]]) + bias[o]` with acc the
+    /// exact Σ q_a·q_w. A composition of [`slice_rows`] (into the
+    /// scratch arena — no allocation once warm) and one full-range
+    /// [`sweep_cols`]; the pooled forward calls the two halves directly
+    /// to amortize slicing across column tiles.
+    ///
+    /// [`slice_rows`]: BitserialGemm::slice_rows
+    /// [`sweep_cols`]: BitserialGemm::sweep_cols
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        qa: &[i16],
+        step_a: &[f32],
+        rows: usize,
+        sw: f64,
+        gain: Option<&[f32]>,
+        bias: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let per_row = self.plane_words_per_row();
+        let Scratch { planes: aplanes, asum, dscale, grow_events, .. } = scratch;
+        grab(aplanes, rows * per_row, grow_events);
+        grab(asum, rows, grow_events);
+        grab(dscale, rows, grow_events);
+        for r in 0..rows {
+            dscale[r] = step_a[r] as f64 * sw;
+        }
+        self.slice_rows(qa, step_a, 0, rows, aplanes, asum);
+        let split = SplitMut::new(out);
+        self.sweep_cols(aplanes, asum, step_a, dscale, 0, rows, 0, self.n_out, gain, bias, &split);
     }
 }
 
@@ -248,14 +341,15 @@ fn weighted_and_popcount(
     words: usize,
     ka: usize,
     kw: usize,
-    imp: PopImpl,
+    imp: KernelIsa,
 ) -> i64 {
     match imp {
-        PopImpl::Portable => weighted_pairs(a, w, words, ka, kw),
         #[cfg(target_arch = "x86_64")]
-        PopImpl::Popcnt => unsafe { weighted_pairs_popcnt(a, w, words, ka, kw) },
+        // Safety: plans only carry these when detection confirmed them.
+        KernelIsa::Popcnt => unsafe { weighted_pairs_popcnt(a, w, words, ka, kw) },
         #[cfg(target_arch = "x86_64")]
-        PopImpl::Avx2 => unsafe { weighted_pairs_avx2(a, w, words, ka, kw) },
+        KernelIsa::Avx2 => unsafe { weighted_pairs_avx2(a, w, words, ka, kw) },
+        _ => weighted_pairs(a, w, words, ka, kw),
     }
 }
 
@@ -534,11 +628,84 @@ mod tests {
     fn preferred_follows_the_product_threshold() {
         assert!(BitserialGemm::preferred(1, 1));
         assert!(BitserialGemm::preferred(2, 2));
-        assert!(BitserialGemm::preferred(3, 3));
-        assert!(BitserialGemm::preferred(2, 4));
-        assert!(BitserialGemm::preferred(1, 8));
+        assert!(BitserialGemm::preferred(1, 4));
+        assert!(BitserialGemm::preferred(4, 1));
+        // products the SIMD dense path now wins (crossover 9 → 4, §16)
+        assert!(!BitserialGemm::preferred(3, 3));
+        assert!(!BitserialGemm::preferred(2, 4));
+        assert!(!BitserialGemm::preferred(1, 8));
         assert!(!BitserialGemm::preferred(2, 5));
         assert!(!BitserialGemm::preferred(4, 4));
         assert!(!BitserialGemm::preferred(2, 8));
+    }
+
+    /// The batch-amortized path — chunked [`BitserialGemm::slice_rows`]
+    /// calls + column-tiled [`BitserialGemm::sweep_cols`] over shared
+    /// planes — must equal `run` over the whole batch AND `run` called
+    /// per row, bitwise, including a Δ = 0 sentinel row mid-batch.
+    #[test]
+    fn batch_amortized_slicing_matches_per_row_runs_bitwise() {
+        use crate::kernels::SplitMut;
+        let mut rng = Rng::new(53);
+        for (k_w, k_a) in [(1u32, 1u32), (2, 2), (1, 4)] {
+            let d = 131usize;
+            let n_out = 40usize;
+            let rows = 5usize;
+            let wt =
+                PackedTensor::quantize(&random_tensor(vec![d, n_out], 400 + k_w as u64), k_w);
+            let gemm = QuantGemm::from_packed_with(&wt, k_a, PlanChoice::Bitserial).unwrap();
+            let mut x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+            x[2 * d..3 * d].fill(0.0); // Δ = 0 sentinel row mid-batch
+            let (qa, steps) = quantized_rows(&x, rows, d, k_a);
+            assert_eq!(steps[2], 0.0);
+            let bias: Vec<f32> = (0..n_out).map(|_| rng.normal() * 0.1).collect();
+
+            // reference: the whole batch through run()
+            let mut want = vec![0.0f32; rows * n_out];
+            gemm.forward_quant(&qa, &steps, rows, &bias, &mut want);
+
+            // the pre-amortization shape: one run() per row
+            let mut per_row_out = vec![0.0f32; rows * n_out];
+            for r in 0..rows {
+                gemm.forward_quant(
+                    &qa[r * d..(r + 1) * d],
+                    &steps[r..r + 1],
+                    1,
+                    &bias,
+                    &mut per_row_out[r * n_out..(r + 1) * n_out],
+                );
+            }
+
+            // batch-amortized: chunked slicing (exercises r0 > 0), then
+            // column tiles sweeping the shared planes
+            let bits = gemm.bitserial().expect("bitserial plan");
+            let per = bits.plane_words_per_row();
+            let mut planes = vec![0u64; rows * per];
+            let mut asum = vec![0i64; rows];
+            bits.slice_rows(&qa, &steps, 0, 2, &mut planes[..2 * per], &mut asum[..2]);
+            bits.slice_rows(&qa, &steps, 2, rows, &mut planes[2 * per..], &mut asum[2..]);
+            let sw = gemm.step_w as f64;
+            let dscale: Vec<f64> = steps.iter().map(|&s| s as f64 * sw).collect();
+            let mut got = vec![0.0f32; rows * n_out];
+            let split = SplitMut::new(&mut got);
+            for (o0, o1) in [(0usize, 13usize), (13, 30), (30, n_out)] {
+                bits.sweep_cols(
+                    &planes, &asum, &steps, &dscale, 0, rows, o0, o1, None, &bias, &split,
+                );
+            }
+            drop(split);
+            for i in 0..rows * n_out {
+                assert_eq!(
+                    want[i].to_bits(),
+                    per_row_out[i].to_bits(),
+                    "per-row k=({k_w},{k_a}) cell {i}"
+                );
+                assert_eq!(
+                    want[i].to_bits(),
+                    got[i].to_bits(),
+                    "presliced k=({k_w},{k_a}) cell {i}"
+                );
+            }
+        }
     }
 }

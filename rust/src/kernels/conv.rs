@@ -410,7 +410,7 @@ impl QuantConvNet {
         let classes = head.classes;
         let obs = conv
             .iter()
-            .map(|l| LayerObs::register(&l.name, l.gemm.plan_kind(), l.gemm.bits, l.k_a))
+            .map(|l| LayerObs::register(&l.name, l.gemm.plan_label(), l.gemm.bits, l.k_a))
             .collect();
         Ok(QuantConvNet { conv, head, h: h0, w: w0, c: c0, classes, obs })
     }

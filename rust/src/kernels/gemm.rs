@@ -16,6 +16,17 @@
 //! cannot change results: the blocked/threaded output is bit-identical
 //! to a naive scalar dot, which is what the property tests pin down.
 //!
+//! The dense inner dot is vectorized (DESIGN.md §16): runtime CPU
+//! detection — the same pattern as the popcount dispatch in
+//! [`super::bitserial`] — picks an AVX2 kernel built on
+//! `_mm256_madd_epi16` (i8 weights sign-extended to i16 first), with
+//! the portable scalar loop as fallback and `ADAQAT_FORCE_PORTABLE=1`
+//! pinning every plan to it. The SIMD lanes are exact too: each lane's
+//! partial sum is bounded by Σ|q_a·q_w| ≤ d·s_a·s_w, the very bound the
+//! plan admitted, so no lane can wrap and lane order is invisible —
+//! AVX2 output is bit-identical to portable by the same argument that
+//! makes tiling invisible.
+//!
 //! Codes wider than i16 (k > 15), raw-f32 tensors, identity-scale
 //! activations (k_a ≥ 24) and bound violations fall back to an f32 plan
 //! over the canonical dequantized weights, same transposed layout.
@@ -33,7 +44,7 @@ use crate::serve::packed::{PackedTensor, RAW_BITS};
 use super::activ::MAX_INT_ACT_BITS;
 use super::bitserial::BitserialGemm;
 use super::pack;
-use super::Scratch;
+use super::{force_portable, grab, KernelIsa, Scratch, SplitMut};
 
 /// Weight storage: centered integer codes when the integer path is
 /// usable, canonical dequantized f32 otherwise. All row-major
@@ -71,6 +82,26 @@ impl PlanKind {
             PlanKind::F32 => "f32",
         }
     }
+
+    /// [`label`] refined with the ISA the plan dispatches to, so the
+    /// per-layer obs series distinguish SIMD/tiled plans from scalar
+    /// ones (`int8_avx2` vs `int8`). The base token is always a prefix,
+    /// so existing dashboards can still group by plan family. f32 plans
+    /// have no ISA variants; `popcnt` only exists for bitserial.
+    ///
+    /// [`label`]: PlanKind::label
+    pub fn label_with(self, isa: KernelIsa) -> &'static str {
+        match (self, isa) {
+            (PlanKind::Bitserial, KernelIsa::Avx2) => "bitserial_avx2",
+            (PlanKind::Bitserial, KernelIsa::Popcnt) => "bitserial_popcnt",
+            (PlanKind::Bitserial, KernelIsa::Portable) => "bitserial",
+            (PlanKind::Int8, KernelIsa::Avx2) => "int8_avx2",
+            (PlanKind::Int8, _) => "int8",
+            (PlanKind::Int16, KernelIsa::Avx2) => "int16_avx2",
+            (PlanKind::Int16, _) => "int16",
+            (PlanKind::F32, _) => "f32",
+        }
+    }
 }
 
 /// Plan-selection override for [`QuantGemm::from_packed_with`]. `Auto`
@@ -92,6 +123,41 @@ pub enum PlanChoice {
 /// weight matrix is read once per tile instead of once per batch row.
 pub(crate) const OUT_TILE: usize = 16;
 
+/// Reduction-dimension block (§16): one activation span this long plus
+/// an OUT_TILE of weight-row spans fits L1/L2 comfortably (at i16 that
+/// is 2 KiB of activations + 32 KiB of weights), so huge-d layers
+/// (im2col patch rows run to tens of thousands of features) sweep the
+/// whole output tile per block instead of thrashing the activation row
+/// out of cache once per output. Blocking cannot change results: the
+/// i32 accumulator is exact, so the split is invisible in the bits.
+pub(crate) const D_TILE: usize = 1024;
+
+/// Runtime ISA pick for the dense i8/i16 dot, the same
+/// `is_x86_feature_detected!` pattern as the popcount dispatch in
+/// [`super::bitserial`]. Detection runs at plan build (never on the
+/// request path) and reads `ADAQAT_FORCE_PORTABLE` fresh each time so
+/// one process can build portable and native plans back to back (the
+/// bench A/B and the CI matrix both rely on that).
+fn detect_dense() -> KernelIsa {
+    if force_portable() {
+        return KernelIsa::Portable;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return KernelIsa::Avx2;
+        }
+    }
+    KernelIsa::Portable
+}
+
+/// The ISA a dense plan built right now would execute — the serve
+/// startup banner ([`super::isa_summary`]) reports it so A/B runs and
+/// CI logs show which kernels are actually live.
+pub fn detected_dense_isa() -> KernelIsa {
+    detect_dense()
+}
+
 pub struct QuantGemm {
     /// Input features (contiguous inner/reduction dimension).
     pub d: usize,
@@ -101,6 +167,9 @@ pub struct QuantGemm {
     pub bits: u32,
     /// Δ_w = scale / (2^k_w − 1); 0 for f32 plans.
     pub step_w: f32,
+    /// ISA the dense inner dot dispatches to (fixed at plan build;
+    /// bitserial plans carry their own popcount backend).
+    isa: KernelIsa,
     weights: Weights,
 }
 
@@ -168,7 +237,14 @@ impl QuantGemm {
                     w[o * d + i] = deq[i * n_out + o];
                 }
             }
-            return Ok(QuantGemm { d, n_out, bits: t.bits, step_w: 0.0, weights: Weights::F32(w) });
+            return Ok(QuantGemm {
+                d,
+                n_out,
+                bits: t.bits,
+                step_w: 0.0,
+                isa: detect_dense(),
+                weights: Weights::F32(w),
+            });
         }
         let s_i = code_levels(t.bits) as i32;
         let s = s_i as f32;
@@ -198,7 +274,7 @@ impl QuantGemm {
             }
             Weights::I16(w)
         };
-        Ok(QuantGemm { d, n_out, bits: t.bits, step_w, weights })
+        Ok(QuantGemm { d, n_out, bits: t.bits, step_w, isa: detect_dense(), weights })
     }
 
     /// Which representation this plan executes.
@@ -208,6 +284,69 @@ impl QuantGemm {
             Weights::I8(_) => PlanKind::Int8,
             Weights::I16(_) => PlanKind::Int16,
             Weights::F32(_) => PlanKind::F32,
+        }
+    }
+
+    /// The ISA this plan's inner loop dispatches to — the dense dot's
+    /// pick, or the popcount backend for bitserial plans.
+    pub fn isa(&self) -> KernelIsa {
+        match &self.weights {
+            Weights::Bits(b) => b.isa(),
+            _ => self.isa,
+        }
+    }
+
+    /// Full metric label: representation refined with the dispatched
+    /// ISA (`int8_avx2`, `bitserial_popcnt`, … — DESIGN.md §15/§16).
+    pub fn plan_label(&self) -> &'static str {
+        self.plan_kind().label_with(self.isa())
+    }
+
+    /// The bitserial engine when this plan is bit-sliced — the pooled
+    /// forward drives batch-amortized slicing through it directly
+    /// ([`BitserialGemm::slice_rows`] / [`BitserialGemm::sweep_cols`]).
+    pub(crate) fn bitserial(&self) -> Option<&BitserialGemm> {
+        match &self.weights {
+            Weights::Bits(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Pin the dense dispatch for cross-ISA equivalence tests.
+    #[cfg(test)]
+    pub(crate) fn set_isa(&mut self, isa: KernelIsa) {
+        self.isa = isa;
+    }
+
+    /// One (row-range × output-range) tile of the dense integer
+    /// forward — the unit the worker pool distributes — writing through
+    /// a shared [`SplitMut`] view of the full `[rows × n_out]` output.
+    /// `dscale[r]` is the hoisted per-row epilogue constant Δ_a[r]·Δ_w
+    /// as f64 (computed once per row, not per cell). Tiles cover
+    /// disjoint cells, so concurrent calls on disjoint ranges are
+    /// race-free, and exact i32 accumulation keeps any grid bit-
+    /// identical to the full-range call.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn forward_tile(
+        &self,
+        qa: &[i16],
+        dscale: &[f64],
+        r0: usize,
+        r1: usize,
+        o0: usize,
+        o1: usize,
+        gain: Option<&[f32]>,
+        bias: &[f32],
+        out: &SplitMut<f32>,
+    ) {
+        match &self.weights {
+            Weights::I8(w) => tile_rows(
+                w, self.d, self.n_out, self.isa, qa, dscale, r0, r1, o0, o1, gain, bias, out,
+            ),
+            Weights::I16(w) => tile_rows(
+                w, self.d, self.n_out, self.isa, qa, dscale, r0, r1, o0, o1, gain, bias, out,
+            ),
+            _ => panic!("forward_tile wants a dense integer plan"),
         }
     }
 
@@ -310,15 +449,28 @@ impl QuantGemm {
         assert_eq!(bias.len(), self.n_out);
         assert_eq!(out.len(), rows * self.n_out);
         let sw = self.step_w as f64;
+        if let Weights::Bits(b) = &self.weights {
+            b.run(qa, step_a, rows, sw, gain, bias, out, scratch);
+            return;
+        }
+        // hoist the per-row epilogue constant Δ_a[r]·Δ_w once per row
+        // (it used to be recomputed per output tile)
+        let Scratch { dscale, grow_events, .. } = scratch;
+        grab(dscale, rows, grow_events);
+        for r in 0..rows {
+            dscale[r] = step_a[r] as f64 * sw;
+        }
+        let split = SplitMut::new(out);
         match &self.weights {
-            Weights::I8(w) => {
-                quant_rows(w, self.d, self.n_out, sw, qa, step_a, rows, gain, bias, out)
-            }
-            Weights::I16(w) => {
-                quant_rows(w, self.d, self.n_out, sw, qa, step_a, rows, gain, bias, out)
-            }
-            Weights::Bits(b) => b.run(qa, step_a, rows, sw, gain, bias, out, scratch),
-            Weights::F32(_) => unreachable!("guarded by is_integer"),
+            Weights::I8(w) => tile_rows(
+                w, self.d, self.n_out, self.isa, qa, dscale, 0, rows, 0, self.n_out, gain, bias,
+                &split,
+            ),
+            Weights::I16(w) => tile_rows(
+                w, self.d, self.n_out, self.isa, qa, dscale, 0, rows, 0, self.n_out, gain, bias,
+                &split,
+            ),
+            _ => unreachable!("guarded by is_integer"),
         }
     }
 
@@ -392,41 +544,173 @@ impl QuantGemm {
     }
 }
 
-/// The shared integer inner loop over i8 or i16 weight storage: exact
-/// i32 accumulation, OUT_TILE-blocked weight streaming, and the f64
-/// epilogue — `gain = None` reproduces [`QuantGemm::forward_quant`]'s
-/// arithmetic exactly (the per-channel factor is never multiplied in).
+/// Dense weight element (i8 or i16): the ISA-dispatched inner dot
+/// against the centered i16 activation span. Every backend is exact —
+/// any partial sum of products is bounded by Σ|q_a·q_w| ≤ d·s_a·s_w ≤
+/// i32::MAX (the plan admission bound), so neither the scalar
+/// accumulator nor any SIMD lane can wrap and every summation order
+/// yields the same bits (pinned by `dense_dot_backends_agree`).
+pub(crate) trait DenseWeight: Copy + Send + Sync + 'static {
+    fn dot(a: &[i16], w: &[Self], isa: KernelIsa) -> i32;
+}
+
+impl DenseWeight for i8 {
+    #[inline]
+    fn dot(a: &[i16], w: &[i8], isa: KernelIsa) -> i32 {
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            // Safety: plans only carry Avx2 when detection confirmed it.
+            KernelIsa::Avx2 => unsafe { dot_i8_avx2(a, w) },
+            _ => dot_scalar(a, w),
+        }
+    }
+}
+
+impl DenseWeight for i16 {
+    #[inline]
+    fn dot(a: &[i16], w: &[i16], isa: KernelIsa) -> i32 {
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            // Safety: plans only carry Avx2 when detection confirmed it.
+            KernelIsa::Avx2 => unsafe { dot_i16_avx2(a, w) },
+            _ => dot_scalar(a, w),
+        }
+    }
+}
+
+/// Portable scalar dot — the fallback leg of every dispatch and the
+/// reference the SIMD kernels are pinned against.
+#[inline]
+fn dot_scalar<T: Copy>(a: &[i16], w: &[T]) -> i32
+where
+    i32: From<T>,
+{
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(w) {
+        acc += x as i32 * i32::from(y);
+    }
+    acc
+}
+
+/// AVX2 i8-weight dot, 16 elements per step: weights sign-extended
+/// i8→i16 (`_mm256_cvtepi8_epi16`), then `_mm256_madd_epi16` multiplies
+/// adjacent pairs into i32 lanes. The madd itself cannot saturate — its
+/// only overflow case is two −32768·−32768 products, and centered codes
+/// q = 2c − s never reach −32768 — and the lane accumulators are exact
+/// per the admission bound (see [`DenseWeight`]). Scalar tail for
+/// `d mod 16` elements.
+///
+/// # Safety
+/// Caller must have verified AVX2 support (detection at plan build).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(a: &[i16], w: &[i8]) -> i32 {
+    use std::arch::x86_64::{
+        __m128i, __m256i, _mm256_add_epi32, _mm256_cvtepi8_epi16, _mm256_loadu_si256,
+        _mm256_madd_epi16, _mm256_setzero_si256, _mm256_storeu_si256, _mm_loadu_si128,
+    };
+    debug_assert_eq!(a.len(), w.len());
+    let d = a.len();
+    let chunks = d / 16;
+    let mut lanes = [0i32; 8];
+    unsafe {
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(16 * c) as *const __m256i);
+            let vw =
+                _mm256_cvtepi8_epi16(_mm_loadu_si128(w.as_ptr().add(16 * c) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vw));
+        }
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    }
+    let mut sum: i32 = lanes.iter().sum();
+    for i in 16 * chunks..d {
+        sum += a[i] as i32 * w[i] as i32;
+    }
+    sum
+}
+
+/// AVX2 i16-weight dot, 16 elements per step: two full 256-bit loads
+/// into `_mm256_madd_epi16`. Centered codes never reach −32768 (|q| ≤
+/// 2^15 − 1 at the widest admissible k), so the pairwise i32 result is
+/// exact, and lane accumulators are exact per the admission bound.
+///
+/// # Safety
+/// Caller must have verified AVX2 support (detection at plan build).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i16_avx2(a: &[i16], w: &[i16]) -> i32 {
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi32, _mm256_loadu_si256, _mm256_madd_epi16, _mm256_setzero_si256,
+        _mm256_storeu_si256,
+    };
+    debug_assert_eq!(a.len(), w.len());
+    let d = a.len();
+    let chunks = d / 16;
+    let mut lanes = [0i32; 8];
+    unsafe {
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(16 * c) as *const __m256i);
+            let vw = _mm256_loadu_si256(w.as_ptr().add(16 * c) as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vw));
+        }
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    }
+    let mut sum: i32 = lanes.iter().sum();
+    for i in 16 * chunks..d {
+        sum += a[i] as i32 * w[i] as i32;
+    }
+    sum
+}
+
+/// The cache-blocked dense integer tile kernel shared by i8 and i16
+/// storage (§16): within one (row, output) tile, the reduction runs in
+/// D_TILE blocks with the OUT_TILE accumulator array carried across
+/// blocks — one activation block is swept against the whole weight tile
+/// before moving on, so the block stays L1-resident and the weight tile
+/// stays L2-resident across all batch rows (weight-stationary batch
+/// reuse). Epilogue: hoisted per-row `dscale[r]` (= Δ_a[r]·Δ_w), folded
+/// with the optional per-channel gain in f64, one rounding to f32 —
+/// `gain = None` reproduces [`QuantGemm::forward_quant`]'s arithmetic
+/// exactly (the per-channel factor is never multiplied in).
 #[allow(clippy::too_many_arguments)]
-fn quant_rows<T: Copy>(
+fn tile_rows<T: DenseWeight>(
     w: &[T],
     d: usize,
     n_out: usize,
-    sw: f64,
+    isa: KernelIsa,
     qa: &[i16],
-    step_a: &[f32],
-    rows: usize,
+    dscale: &[f64],
+    r0: usize,
+    r1: usize,
+    o0: usize,
+    o1: usize,
     gain: Option<&[f32]>,
     bias: &[f32],
-    out: &mut [f32],
-) where
-    i32: From<T>,
-{
-    for o0 in (0..n_out).step_by(OUT_TILE) {
-        let o1 = (o0 + OUT_TILE).min(n_out);
-        for r in 0..rows {
+    out: &SplitMut<f32>,
+) {
+    let mut acc = [0i32; OUT_TILE];
+    for ot0 in (o0..o1).step_by(OUT_TILE) {
+        let ot1 = (ot0 + OUT_TILE).min(o1);
+        for r in r0..r1 {
             let a = &qa[r * d..(r + 1) * d];
-            let da = step_a[r] as f64 * sw;
-            for o in o0..o1 {
-                let wr = &w[o * d..(o + 1) * d];
-                let mut acc = 0i32;
-                for (&x, &y) in a.iter().zip(wr) {
-                    acc += x as i32 * i32::from(y);
+            acc[..ot1 - ot0].fill(0);
+            for i0 in (0..d).step_by(D_TILE) {
+                let i1 = (i0 + D_TILE).min(d);
+                let ab = &a[i0..i1];
+                for o in ot0..ot1 {
+                    acc[o - ot0] += T::dot(ab, &w[o * d + i0..o * d + i1], isa);
                 }
+            }
+            let da = dscale[r];
+            for o in ot0..ot1 {
                 let scale = match gain {
                     Some(g) => da * g[o] as f64,
                     None => da,
                 };
-                out[r * n_out + o] = (acc as f64 * scale) as f32 + bias[o];
+                // Safety: tiles cover disjoint (r, o) cells.
+                unsafe { out.write(r * n_out + o, (acc[o - ot0] as f64 * scale) as f32 + bias[o]) };
             }
         }
     }
@@ -707,10 +991,13 @@ mod tests {
         // k_w·k_a ≤ BITSERIAL_MAX_PRODUCT rides the popcount planes
         assert_eq!(plan(1, 1), PlanKind::Bitserial);
         assert_eq!(plan(2, 2), PlanKind::Bitserial);
-        assert_eq!(plan(3, 3), PlanKind::Bitserial);
-        assert_eq!(plan(2, 4), PlanKind::Bitserial);
-        assert_eq!(plan(1, 8), PlanKind::Bitserial);
-        // past the product threshold: dense centered codes
+        assert_eq!(plan(1, 4), PlanKind::Bitserial);
+        assert_eq!(plan(4, 1), PlanKind::Bitserial);
+        // past the product threshold: dense centered codes (the SIMD
+        // dense path moved the crossover down from 9 — see §16)
+        assert_eq!(plan(3, 3), PlanKind::Int8);
+        assert_eq!(plan(2, 4), PlanKind::Int8);
+        assert_eq!(plan(1, 8), PlanKind::Int8);
         assert_eq!(plan(2, 5), PlanKind::Int8);
         assert_eq!(plan(4, 4), PlanKind::Int8);
         assert_eq!(plan(8, 8), PlanKind::Int8);
@@ -732,6 +1019,197 @@ mod tests {
         assert!(QuantGemm::from_packed_with(&PackedTensor::raw(&t), 2, PlanChoice::Bitserial)
             .is_err());
         assert!(QuantGemm::from_packed_with(&wt, 32, PlanChoice::DenseInt).is_err());
+    }
+
+    /// The SIMD dense dots must return exactly the scalar integer at
+    /// every length class: below one vector (1, 7, 15), exact multiples
+    /// (16, 32, 1024), one-past (17, 33, 1033) and odd in-between —
+    /// the partial-lane tails are where a wrong bound silently truncates.
+    #[test]
+    fn dense_dot_backends_agree() {
+        let mut rng = Rng::new(97);
+        let isa = detect_dense(); // Portable on non-AVX2 (test is then trivially green)
+        for &len in &[1usize, 7, 15, 16, 17, 31, 32, 33, 100, 131, 1024, 1033] {
+            let a: Vec<i16> =
+                (0..len).map(|_| (rng.next_u64() % 511) as i16 - 255).collect();
+            let w8: Vec<i8> =
+                (0..len).map(|_| ((rng.next_u64() % 255) as i32 - 127) as i8).collect();
+            let w16: Vec<i16> =
+                (0..len).map(|_| (rng.next_u64() % 2047) as i16 - 1023).collect();
+            // oracle in i64 + bound check (keeps the i32 contract honest)
+            let mut o8 = 0i64;
+            let mut o16 = 0i64;
+            for i in 0..len {
+                o8 += a[i] as i64 * w8[i] as i64;
+                o16 += a[i] as i64 * w16[i] as i64;
+            }
+            assert!(o8.abs() <= i32::MAX as i64 && o16.abs() <= i32::MAX as i64);
+            assert_eq!(dot_scalar(&a, &w8) as i64, o8, "scalar i8 len={len}");
+            assert_eq!(dot_scalar(&a, &w16) as i64, o16, "scalar i16 len={len}");
+            assert_eq!(<i8 as DenseWeight>::dot(&a, &w8, isa) as i64, o8, "i8 len={len}");
+            assert_eq!(<i16 as DenseWeight>::dot(&a, &w16, isa) as i64, o16, "i16 len={len}");
+        }
+    }
+
+    /// The tiled/SIMD forward vs the scalar i64 oracle at shapes that
+    /// straddle every tile boundary: d and n_out not multiples of
+    /// OUT_TILE/16-lane/D_TILE, exact multiples, and one-past-D_TILE.
+    /// k = 3 drives the i8 storage, k = 8 the i16 storage.
+    #[test]
+    fn tiled_path_matches_i64_oracle_at_tile_boundaries() {
+        let mut rng = Rng::new(101);
+        for &(d, n_out) in &[(17usize, 3usize), (33, 17), (64, 16), (131, 10), (1025, 5)] {
+            for k in [3u32, 8] {
+                let rows = 3usize;
+                let wdata: Vec<f32> = (0..d * n_out).map(|_| rng.normal() * 0.2).collect();
+                let wt = PackedTensor::quantize(&Tensor::new(vec![d, n_out], wdata), k);
+                let gemm =
+                    QuantGemm::from_packed_with(&wt, k, PlanChoice::DenseInt).unwrap();
+                assert_eq!(
+                    gemm.plan_kind(),
+                    if k <= 7 { PlanKind::Int8 } else { PlanKind::Int16 },
+                    "d={d} k={k}"
+                );
+                let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+                let mut qa = vec![0i16; rows * d];
+                let mut steps = vec![0.0f32; rows];
+                for r in 0..rows {
+                    steps[r] = quantize_row_centered(
+                        &x[r * d..(r + 1) * d],
+                        k,
+                        &mut qa[r * d..(r + 1) * d],
+                    );
+                }
+                let bias = vec![0.125f32; n_out];
+                let mut got = vec![0.0f32; rows * n_out];
+                gemm.forward_quant(&qa, &steps, rows, &bias, &mut got);
+                let s_i = code_levels(k) as i64;
+                let sw = if wt.scale > 0.0 { wt.scale / s_i as f32 } else { 0.0 };
+                for r in 0..rows {
+                    for o in 0..n_out {
+                        let mut acc = 0i64;
+                        for i in 0..d {
+                            let c = pack::read_bits_scalar(
+                                &wt.payload,
+                                (i * n_out + o) * k as usize,
+                                k,
+                            ) as i64;
+                            acc += qa[r * d + i] as i64 * (2 * c - s_i);
+                        }
+                        let want =
+                            (acc as f64 * (steps[r] as f64 * sw as f64)) as f32 + bias[o];
+                        assert_eq!(
+                            got[r * n_out + o].to_bits(),
+                            want.to_bits(),
+                            "d={d} n_out={n_out} k={k} r={r} o={o}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drive the accumulator to ±(i32::MAX − 3022) — the exact edge the
+    /// admission bound allows at W8/A8, d = 33 025 — on both the SIMD
+    /// and portable paths. Any lane that wraps or saturates is off by
+    /// billions here, not by one ulp.
+    #[test]
+    fn i32_bound_edge_is_exact_on_every_isa() {
+        let d = 33_025usize;
+        let n_out = 2usize;
+        // column 0 all code 0 (q_w = −255), column 1 all 255 (q_w = +255)
+        let mut codes = vec![0u32; d * n_out];
+        for i in 0..d {
+            codes[i * n_out + 1] = 255;
+        }
+        // scale = 255 ⇒ Δ_w = 255/255 = 1.0 exactly
+        let wt = packed_from_codes(&codes, vec![d, n_out], 8, 255.0);
+        let mut gemm = QuantGemm::from_packed_with(&wt, 8, PlanChoice::DenseInt).unwrap();
+        let qa = vec![-255i16; d]; // extreme centered activation row
+        let steps = vec![1.0f32];
+        let bias = [0.5f32, -0.5];
+        let edge = 33_025i64 * 255 * 255; // 2_147_480_625 = i32::MAX − 3022
+        assert!(edge <= i32::MAX as i64);
+        let want0 = (edge as f64) as f32 + bias[0]; // col 0: (−255)·(−255)·d
+        let want1 = (-edge as f64) as f32 + bias[1];
+        for isa in [detect_dense(), KernelIsa::Portable] {
+            gemm.set_isa(isa);
+            let mut out = vec![0.0f32; n_out];
+            gemm.forward_quant(&qa, &steps, 1, &bias, &mut out);
+            assert_eq!(out[0].to_bits(), want0.to_bits(), "{isa:?} col 0");
+            assert_eq!(out[1].to_bits(), want1.to_bits(), "{isa:?} col 1");
+        }
+    }
+
+    /// Pinning the dispatch itself: the same plan forced onto every
+    /// available ISA returns the same bits for i8 and i16 storage,
+    /// scaled and unscaled epilogues.
+    #[test]
+    fn isa_override_never_changes_bits() {
+        let mut rng = Rng::new(103);
+        for k in [4u32, 8, 12] {
+            let (d, n_out, rows) = (131usize, 10usize, 3usize);
+            let k_a = 6u32;
+            let wdata: Vec<f32> = (0..d * n_out).map(|_| rng.normal() * 0.2).collect();
+            let wt = PackedTensor::quantize(&Tensor::new(vec![d, n_out], wdata), k);
+            let mut gemm = QuantGemm::from_packed_with(&wt, k_a, PlanChoice::DenseInt).unwrap();
+            let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+            let mut qa = vec![0i16; rows * d];
+            let mut steps = vec![0.0f32; rows];
+            for r in 0..rows {
+                steps[r] = quantize_row_centered(
+                    &x[r * d..(r + 1) * d],
+                    k_a,
+                    &mut qa[r * d..(r + 1) * d],
+                );
+            }
+            let gain: Vec<f32> = (0..n_out).map(|_| 0.5 + rng.uniform()).collect();
+            let bias: Vec<f32> = (0..n_out).map(|_| rng.normal() * 0.1).collect();
+            gemm.set_isa(KernelIsa::Portable);
+            let mut base = vec![0.0f32; rows * n_out];
+            gemm.forward_quant(&qa, &steps, rows, &bias, &mut base);
+            let mut base_scaled = vec![0.0f32; rows * n_out];
+            gemm.forward_quant_scaled(&qa, &steps, rows, &gain, &bias, &mut base_scaled);
+            for isa in [detect_dense()] {
+                gemm.set_isa(isa);
+                let mut got = vec![0.0f32; rows * n_out];
+                gemm.forward_quant(&qa, &steps, rows, &bias, &mut got);
+                for (a, b) in base.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "k={k} {isa:?}");
+                }
+                gemm.forward_quant_scaled(&qa, &steps, rows, &gain, &bias, &mut got);
+                for (a, b) in base_scaled.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "scaled k={k} {isa:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_labels_expose_isa() {
+        // the full table — obs series names are API
+        use crate::kernels::KernelIsa::*;
+        assert_eq!(PlanKind::Int8.label_with(Avx2), "int8_avx2");
+        assert_eq!(PlanKind::Int8.label_with(Portable), "int8");
+        assert_eq!(PlanKind::Int16.label_with(Avx2), "int16_avx2");
+        assert_eq!(PlanKind::Int16.label_with(Portable), "int16");
+        assert_eq!(PlanKind::Bitserial.label_with(Avx2), "bitserial_avx2");
+        assert_eq!(PlanKind::Bitserial.label_with(Popcnt), "bitserial_popcnt");
+        assert_eq!(PlanKind::Bitserial.label_with(Portable), "bitserial");
+        assert_eq!(PlanKind::F32.label_with(Avx2), "f32");
+        // plan_label goes through the plan's own dispatch
+        let mut rng = Rng::new(111);
+        let t = Tensor::new(vec![20, 4], (0..80).map(|_| rng.normal()).collect());
+        let wt = PackedTensor::quantize(&t, 4); // k_w = 4 ⇒ i8 storage
+        let mut gemm = QuantGemm::from_packed_with(&wt, 8, PlanChoice::DenseInt).unwrap();
+        gemm.set_isa(Portable);
+        assert_eq!(gemm.plan_label(), "int8");
+        gemm.set_isa(Avx2);
+        assert_eq!(gemm.plan_label(), "int8_avx2");
+        let bits = QuantGemm::from_packed_with(&wt, 2, PlanChoice::Bitserial).unwrap();
+        assert!(bits.plan_label().starts_with("bitserial"));
+        let f = QuantGemm::from_packed_with(&wt, 2, PlanChoice::F32).unwrap();
+        assert_eq!(f.plan_label(), "f32");
     }
 
     #[test]

@@ -19,7 +19,8 @@
 //!   checkpoint's learned k_a, same s = 2^k − 1 grid as training;
 //! * [`QuantMlp`] (here) — the multi-layer forward: fc stacks with
 //!   ReLU, per-layer mixed k_w (each tensor's packed width) and k_a
-//!   (checkpoint meta), row-parallel across a [`WorkerPool`].
+//!   (checkpoint meta), tile-parallel (rows × output columns) across a
+//!   [`WorkerPool`] so small-batch/large-layer shapes use every lane.
 //!
 //! **Pool & arena lifecycle (§14).** A [`WorkerPool`] is built once per
 //! backend (`ReferenceBackend` construction resolves `--threads`,
@@ -48,6 +49,51 @@ pub use activ::{fake_quantize_row, quantize_row_centered, raw_code, MAX_INT_ACT_
 pub use bitserial::{BitserialGemm, BITSERIAL_MAX_PRODUCT};
 pub use conv::QuantConvNet;
 pub use gemm::{PlanChoice, PlanKind, QuantGemm};
+
+/// Instruction set a kernel dispatches to, detected once at plan build
+/// (`is_x86_feature_detected!`, same pattern for the dense and popcount
+/// paths). `ADAQAT_FORCE_PORTABLE` pins every detection to `Portable`
+/// for A/B runs and the portable leg of the CI matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelIsa {
+    Portable,
+    Popcnt,
+    Avx2,
+}
+
+impl KernelIsa {
+    /// Stable lowercase token for logs and metric labels.
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelIsa::Portable => "portable",
+            KernelIsa::Popcnt => "popcnt",
+            KernelIsa::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Whether `ADAQAT_FORCE_PORTABLE` pins ISA detection to the portable
+/// kernels (set to anything but "" or "0"). Read fresh on every
+/// detection — detection runs only at plan build — so one process can
+/// build portable and native plans back to back (the bench A/B does).
+pub(crate) fn force_portable() -> bool {
+    match std::env::var("ADAQAT_FORCE_PORTABLE") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+/// One-line ISA banner for the serve startup log: which backend the
+/// dense and popcount kernels would dispatch to right now, plus a
+/// marker when `ADAQAT_FORCE_PORTABLE` is overriding detection.
+pub fn isa_summary() -> String {
+    format!(
+        "dense={} popcount={}{}",
+        gemm::detected_dense_isa().label(),
+        bitserial::detected_popcount_isa().label(),
+        if force_portable() { " (ADAQAT_FORCE_PORTABLE)" } else { "" }
+    )
+}
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -82,6 +128,9 @@ pub struct Scratch {
     pub(crate) qa: Vec<i16>,
     /// Per-row activation steps Δ_a.
     pub(crate) steps: Vec<f32>,
+    /// Per-row hoisted epilogue constants Δ_a[r]·Δ_w as f64 — computed
+    /// once per row per GEMM instead of once per output tile.
+    pub(crate) dscale: Vec<f64>,
     /// Layer ping-pong buffers (MLP stages, conv feature maps).
     pub(crate) buf_a: Vec<f32>,
     pub(crate) buf_b: Vec<f32>,
@@ -411,30 +460,49 @@ pub(crate) fn chunk_range(n: usize, parts: usize, i: usize) -> (usize, usize) {
 }
 
 /// Mutable view of one output buffer that pool jobs carve into disjoint
-/// ranges by worker id — the borrow checker cannot see the disjointness
+/// pieces by worker id — the borrow checker cannot see the disjointness
 /// through the shared job closure, so the carve is unsafe-but-audited.
-pub(crate) struct SplitMut<'a> {
-    ptr: *mut f32,
+/// Row-granular jobs take contiguous [`range`]s; tile-granular jobs
+/// (column splits interleave their cells in memory) use per-cell
+/// [`write`]s instead.
+///
+/// [`range`]: SplitMut::range
+/// [`write`]: SplitMut::write
+pub(crate) struct SplitMut<'a, T> {
+    ptr: *mut T,
     len: usize,
-    _life: std::marker::PhantomData<&'a mut [f32]>,
+    _life: std::marker::PhantomData<&'a mut [T]>,
 }
 
-unsafe impl Send for SplitMut<'_> {}
-unsafe impl Sync for SplitMut<'_> {}
+unsafe impl<T: Send> Send for SplitMut<'_, T> {}
+unsafe impl<T: Send> Sync for SplitMut<'_, T> {}
 
-impl<'a> SplitMut<'a> {
-    pub(crate) fn new(buf: &'a mut [f32]) -> SplitMut<'a> {
+impl<'a, T> SplitMut<'a, T> {
+    pub(crate) fn new(buf: &'a mut [T]) -> SplitMut<'a, T> {
         SplitMut { ptr: buf.as_mut_ptr(), len: buf.len(), _life: std::marker::PhantomData }
     }
 
     /// # Safety
     /// Concurrent callers must take non-overlapping `(start, len)`
     /// ranges (the forward paths derive them from [`chunk_range`],
-    /// which partitions).
+    /// which partitions), and no concurrent [`write`](SplitMut::write)
+    /// may land inside a handed-out range.
     #[allow(clippy::mut_from_ref)]
-    pub(crate) unsafe fn range(&self, start: usize, len: usize) -> &mut [f32] {
+    pub(crate) unsafe fn range(&self, start: usize, len: usize) -> &mut [T] {
         assert!(start + len <= self.len, "SplitMut range out of bounds");
         unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
+    }
+
+    /// Write one cell. `debug_assert` bounds check only: this sits in
+    /// the tiled-GEMM epilogue (once per output cell).
+    ///
+    /// # Safety
+    /// Concurrent callers must write disjoint indices (the tiled
+    /// forward paths derive them from [`chunk_range`] grids, which
+    /// partition the `[rows × n_out]` cell space).
+    pub(crate) unsafe fn write(&self, idx: usize, v: T) {
+        debug_assert!(idx < self.len, "SplitMut write out of bounds");
+        unsafe { *self.ptr.add(idx) = v };
     }
 }
 
@@ -453,11 +521,14 @@ pub struct LayerObs {
 }
 
 impl LayerObs {
-    pub fn register(layer: &str, plan: PlanKind, k_w: u32, k_a: u32) -> LayerObs {
+    /// `plan` is the full plan label ([`QuantGemm::plan_label`]), which
+    /// carries the dispatched ISA (`int8_avx2` vs `int8`) so the
+    /// per-layer series distinguish tiled/SIMD plans from scalar ones.
+    pub fn register(layer: &str, plan: &str, k_w: u32, k_a: u32) -> LayerObs {
         let (k_w, k_a) = (k_w.to_string(), k_a.to_string());
         let labels = [
             ("layer", layer),
-            ("plan", plan.label()),
+            ("plan", plan),
             ("k_w", k_w.as_str()),
             ("k_a", k_a.as_str()),
         ];
@@ -562,7 +633,7 @@ impl QuantMlp {
         let classes = layers[layers.len() - 1].gemm.n_out;
         let obs = layers
             .iter()
-            .map(|l| LayerObs::register(&l.name, l.gemm.plan_kind(), l.gemm.bits, l.k_a))
+            .map(|l| LayerObs::register(&l.name, l.gemm.plan_label(), l.gemm.bits, l.k_a))
             .collect();
         Ok(QuantMlp { layers, input, classes, obs })
     }
@@ -593,13 +664,14 @@ impl QuantMlp {
         // Take the staging buffers out of the arena (releasing the
         // guard — holding it across pool.run would block nothing, but
         // holding it across a nested *_pooled call would deadlock).
-        let (mut cur, mut nxt, mut qa, mut steps, grew) = {
+        let (mut cur, mut nxt, mut qa, mut steps, mut dscale, grew) = {
             let mut st = pool.stage_scratch();
             (
                 std::mem::take(&mut st.buf_a),
                 std::mem::take(&mut st.buf_b),
                 std::mem::take(&mut st.qa),
                 std::mem::take(&mut st.steps),
+                std::mem::take(&mut st.dscale),
                 st.grow_events.clone(),
             )
         };
@@ -613,7 +685,6 @@ impl QuantMlp {
             let d = layer.gemm.d;
             let n_out = layer.gemm.n_out;
             grab(&mut nxt, rows * n_out, &grew);
-            let parts = pool.threads().min(rows.max(1));
             if layer.gemm.is_integer() {
                 grab(&mut qa, rows * d, &grew);
                 grab(&mut steps, rows, &grew);
@@ -624,26 +695,94 @@ impl QuantMlp {
                         &mut qa[r * d..(r + 1) * d],
                     );
                 }
+                // hoisted per-row epilogue constants, shared by every
+                // tile that touches the row
+                grab(&mut dscale, rows, &grew);
+                let sw = layer.gemm.step_w as f64;
+                for r in 0..rows {
+                    dscale[r] = steps[r] as f64 * sw;
+                }
+                // Tile-granular distribution over [rows × n_out]: rows
+                // split first (cheapest — contiguous output), then
+                // leftover lanes split the output columns, so a
+                // small-batch/large-layer request (the serving hot
+                // case) still occupies every lane. Any grid gives the
+                // same bits: the kernels are order-independent.
+                let lanes = pool.threads();
+                let row_tiles = rows.min(lanes).max(1);
+                let col_tiles = (lanes / row_tiles).min(n_out.div_ceil(gemm::OUT_TILE)).max(1);
+                let tiles = row_tiles * col_tiles;
+                let parts = tiles.min(lanes);
                 let qa_ref = &qa;
                 let steps_ref = &steps;
+                let dscale_ref = &dscale;
                 let split = SplitMut::new(&mut nxt);
-                pool.run_active(parts, |wid, ws| {
-                    let (r0, r1) = chunk_range(rows, parts, wid);
-                    if r0 >= r1 {
-                        return;
+                if let Some(bits) = layer.gemm.bitserial() {
+                    // Batch-amortized slicing: the whole batch's
+                    // activation bit-planes go into the staging arena
+                    // once (row-parallel), then every weight-plane tile
+                    // sweeps against them — column tiles share the
+                    // slices instead of re-slicing their rows.
+                    let per_row = bits.plane_words_per_row();
+                    let (mut planes, mut asum) = {
+                        let mut st = pool.stage_scratch();
+                        (std::mem::take(&mut st.planes), std::mem::take(&mut st.asum))
+                    };
+                    grab(&mut planes, rows * per_row, &grew);
+                    grab(&mut asum, rows, &grew);
+                    let sparts = rows.min(lanes);
+                    {
+                        let psplit = SplitMut::new(&mut planes);
+                        let ssplit = SplitMut::new(&mut asum);
+                        pool.run_active(sparts, |wid, _ws| {
+                            let (r0, r1) = chunk_range(rows, sparts, wid);
+                            if r0 >= r1 {
+                                return;
+                            }
+                            // Safety: chunk_range partitions — disjoint.
+                            let pchunk =
+                                unsafe { psplit.range(r0 * per_row, (r1 - r0) * per_row) };
+                            let schunk = unsafe { ssplit.range(r0, r1 - r0) };
+                            bits.slice_rows(qa_ref, steps_ref, r0, r1, pchunk, schunk);
+                        });
                     }
-                    // Safety: chunk_range partitions — ranges disjoint.
-                    let out = unsafe { split.range(r0 * n_out, (r1 - r0) * n_out) };
-                    layer.gemm.forward_quant_arena(
-                        &qa_ref[r0 * d..r1 * d],
-                        &steps_ref[r0..r1],
-                        r1 - r0,
-                        &layer.bias,
-                        out,
-                        ws,
-                    );
-                });
+                    let planes_ref = &planes;
+                    let asum_ref = &asum;
+                    pool.run_active(parts, |wid, _ws| {
+                        let mut t = wid;
+                        while t < tiles {
+                            let (r0, r1) = chunk_range(rows, row_tiles, t % row_tiles);
+                            let (o0, o1) = chunk_range(n_out, col_tiles, t / row_tiles);
+                            if r0 < r1 && o0 < o1 {
+                                bits.sweep_cols(
+                                    planes_ref, asum_ref, steps_ref, dscale_ref, r0, r1, o0,
+                                    o1, None, &layer.bias, &split,
+                                );
+                            }
+                            t += parts;
+                        }
+                    });
+                    let mut st = pool.stage_scratch();
+                    st.planes = planes;
+                    st.asum = asum;
+                } else {
+                    pool.run_active(parts, |wid, _ws| {
+                        let mut t = wid;
+                        while t < tiles {
+                            let (r0, r1) = chunk_range(rows, row_tiles, t % row_tiles);
+                            let (o0, o1) = chunk_range(n_out, col_tiles, t / row_tiles);
+                            if r0 < r1 && o0 < o1 {
+                                layer.gemm.forward_tile(
+                                    qa_ref, dscale_ref, r0, r1, o0, o1, None, &layer.bias,
+                                    &split,
+                                );
+                            }
+                            t += parts;
+                        }
+                    });
+                }
             } else {
+                let parts = pool.threads().min(rows.max(1));
                 if layer.k_a < 24 {
                     for r in 0..rows {
                         activ::fake_quantize_row(&mut cur[r * d..(r + 1) * d], layer.k_a);
@@ -685,6 +824,7 @@ impl QuantMlp {
         st.buf_b = nxt;
         st.qa = qa;
         st.steps = steps;
+        st.dscale = dscale;
         logits
     }
 
@@ -827,6 +967,39 @@ mod tests {
     }
 
     #[test]
+    fn tile_split_never_changes_results_small_batch_wide_layer() {
+        // batch-1/2 requests on a wide layer split across column tiles
+        // now — every lane count must stay bit-identical to inline,
+        // for a dense layer and a bitserial (pre-sliced) layer alike
+        let (d, h, classes) = (96usize, 200usize, 40usize);
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            ("k_a", Json::num(8.0)),
+            (
+                "mlp_layers",
+                Json::Arr(vec![Json::str("fc1"), Json::str("fc2")]),
+            ),
+            // fc2 at k_w=1, k_a=4: product 4 rides the popcount planes
+            ("layer_k_a", Json::obj(vec![("fc2", Json::num(4.0))])),
+        ]));
+        q.push("fc1.w", PackedTensor::quantize(&random_tensor(vec![d, h], 71), 4));
+        q.push("fc2.w", PackedTensor::quantize(&random_tensor(vec![h, classes], 72), 1));
+        let mlp = QuantMlp::from_packed(&q).unwrap();
+        assert_eq!(mlp.layers[0].gemm.plan_kind(), gemm::PlanKind::Int8);
+        assert_eq!(mlp.layers[1].gemm.plan_kind(), gemm::PlanKind::Bitserial);
+        let mut rng = Rng::new(73);
+        for rows in [1usize, 2, 5] {
+            let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+            let base = mlp.forward(&x, rows, 1);
+            for threads in [2usize, 3, 8, 64] {
+                let got = mlp.forward(&x, rows, threads);
+                for (a, b) in base.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "rows={rows} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn batch_composition_does_not_change_a_row() {
         // per-row activation scales: row 3 of a 8-batch == the same
         // image at batch 1, bitwise
@@ -886,14 +1059,14 @@ mod tests {
     fn persistent_pool_matches_transient_forward_bitwise() {
         let (d, h, classes) = (64usize, 32usize, 10usize);
         let mut q = QuantizedCheckpoint::new(Json::obj(vec![
-            ("k_a", Json::num(4.0)), // k_w·k_a = 16/8: dense + bitserial mix
+            ("k_a", Json::num(4.0)), // k_w·k_a = 16/4: dense + bitserial mix
             (
                 "mlp_layers",
                 Json::Arr(vec![Json::str("fc1"), Json::str("fc2")]),
             ),
         ]));
         q.push("fc1.w", PackedTensor::quantize(&random_tensor(vec![d, h], 61), 4));
-        q.push("fc2.w", PackedTensor::quantize(&random_tensor(vec![h, classes], 62), 2));
+        q.push("fc2.w", PackedTensor::quantize(&random_tensor(vec![h, classes], 62), 1));
         let mlp = QuantMlp::from_packed(&q).unwrap();
         assert_eq!(mlp.layers[0].gemm.plan_kind(), gemm::PlanKind::Int8);
         assert_eq!(mlp.layers[1].gemm.plan_kind(), gemm::PlanKind::Bitserial);

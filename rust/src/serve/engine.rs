@@ -226,10 +226,11 @@ impl Engine {
             signature.expect("at least one worker reported");
         metrics.batch_rows.store(batch as u64, Ordering::Relaxed);
         log::info!(
-            "serve engine up: {} workers, batch {batch}, window {:?}, queue cap {}",
+            "serve engine up: {} workers, batch {batch}, window {:?}, queue cap {}, kernels: {}",
             cfg.workers,
             cfg.max_delay,
-            cfg.queue_capacity
+            cfg.queue_capacity,
+            crate::kernels::isa_summary()
         );
         Ok(Arc::new(Engine {
             queue,
@@ -538,8 +539,9 @@ impl ReferenceBackend {
         );
         let pool = WorkerPool::new(threads);
         log::info!(
-            "reference backend: {} gemm thread(s) (requested {threads}; 0 = per core)",
-            pool.threads()
+            "reference backend: {} gemm thread(s) (requested {threads}; 0 = per core), kernels: {}",
+            pool.threads(),
+            crate::kernels::isa_summary()
         );
         Ok(ReferenceBackend { net, h, wid, c, batch, pool })
     }

@@ -11,9 +11,18 @@
 #   BENCH_kernels.json       speedup_vs_legacy   per (mode, k_w, batch)
 #   BENCH_kernels.json       speedup_vs_i8       per (mode, k_w, batch)
 #                            (mode "bitserial": the §14 popcount GEMM
-#                             vs the dense i8 path at k_w = k_a = k —
+#                             vs the dense path at k_w = k_a = k —
 #                             floors fall as k grows because popcount
-#                             work is ∝ k_w·k_a while i8 work is flat)
+#                             work is ∝ k_w·k_a while dense work is
+#                             flat; the dense side is vectorized as of
+#                             §16, so floors sit below parity past the
+#                             BITSERIAL_MAX_PRODUCT crossover)
+#   BENCH_kernels.json       speedup_vs_scalar   per (mode, k_w, batch)
+#                            (mode "dense": §16 SIMD dot kernels vs the
+#                             same plan forced portable in-process)
+#   BENCH_kernels.json       speedup_vs_perrow   per (mode, k_w, batch)
+#                            (mode "bslice": §16 whole-batch bit-plane
+#                             slicing vs per-row runs of the same plan)
 #   BENCH_conv_native.json   speedup_vs_direct   per (k_w, batch)
 #   BENCH_train_native.json  steps_per_sec / fp32 steps_per_sec
 #                                                per quantized config
@@ -67,6 +76,10 @@ CHECKS = [
      lambda d: ratio_metric(d, "speedup_vs_legacy", ("mode", "k_w", "batch"))),
     ("BENCH_kernels.json",      "speedup_vs_i8",
      lambda d: ratio_metric(d, "speedup_vs_i8", ("mode", "k_w", "batch"))),
+    ("BENCH_kernels.json",      "speedup_vs_scalar",
+     lambda d: ratio_metric(d, "speedup_vs_scalar", ("mode", "k_w", "batch"))),
+    ("BENCH_kernels.json",      "speedup_vs_perrow",
+     lambda d: ratio_metric(d, "speedup_vs_perrow", ("mode", "k_w", "batch"))),
     ("BENCH_conv_native.json",  "speedup_vs_direct",
      lambda d: ratio_metric(d, "speedup_vs_direct", ("k_w", "batch"))),
     ("BENCH_train_native.json", "steps_per_sec vs fp32",

@@ -28,6 +28,12 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== kernel tests under ADAQAT_FORCE_PORTABLE=1 =="
+# the same kernel suite with the SIMD dispatch forced onto the portable
+# scalar paths (DESIGN.md §16) — proves the fallback stays bit-identical
+# on the very hardware where the vector paths normally win
+ADAQAT_FORCE_PORTABLE=1 cargo test -q kernels::
+
 echo "== bench smoke: cargo test -q --benches =="
 # harness = false benches run as plain binaries; each either completes a
 # smoke-scale run or prints why it skipped
