@@ -1,0 +1,634 @@
+//! Unsafe-policy lint (DESIGN.md §17).
+//!
+//! Scans the Rust source tree and enforces the repo's unsafe contract:
+//!
+//! - every `unsafe` block carries a `// SAFETY:` justification in the
+//!   contiguous comment block directly above it;
+//! - every `unsafe fn` documents its caller contract (a `# Safety` doc
+//!   section or a `// SAFETY:` comment);
+//! - every `unsafe impl Send`/`Sync` carries an `// AUDIT:` tag naming
+//!   the invariant that makes the type thread-safe, on top of the
+//!   SAFETY justification;
+//! - atomic `Ordering::Relaxed` only appears in the allow-listed
+//!   counter/gauge modules (`relaxed` lines in the config).
+//!
+//! String/char-literal contents and comment text are separated before
+//! matching, so `"unsafe"` inside a string can't trip the scanner and
+//! `// SAFETY` prose can't hide a real violation. The scan is
+//! line-based and deliberately conservative: it never needs a full
+//! parser because rustfmt (the CI lint step) has already normalised
+//! the shapes it matches on.
+//!
+//! Config: `unsafe_audit.conf` next to the manifest (`scan`, `exempt`,
+//! `relaxed` directives; paths relative to the config's directory).
+//! Output: a machine-readable JSON report (`--report <path>`, default
+//! stdout) plus human-readable violation lines on stderr; exit 1 when
+//! any violation is found.
+
+use adaqat::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const MSG_BLOCK: &str = "unsafe block without a `// SAFETY:` justification";
+const MSG_FN: &str = "unsafe fn without a `# Safety` caller contract";
+const MSG_IMPL: &str = "unsafe impl without a `// SAFETY:` justification";
+const MSG_AUDIT: &str = "unsafe impl Send/Sync without an `// AUDIT:` invariant tag";
+const MSG_RELAXED: &str = "Ordering::Relaxed outside the allow-listed counter modules";
+
+struct Config {
+    root: PathBuf,
+    scan: Vec<PathBuf>,
+    exempt: Vec<PathBuf>,
+    relaxed: Vec<PathBuf>,
+}
+
+#[derive(Default)]
+struct Stats {
+    blocks: usize,
+    fns: usize,
+    impls: usize,
+    relaxed: usize,
+}
+
+struct Violation {
+    file: String,
+    line: usize,
+    kind: &'static str,
+    message: &'static str,
+}
+
+fn violation(file: &str, line: usize, kind: &'static str, message: &'static str) -> Violation {
+    Violation { file: file.to_string(), line, kind, message }
+}
+
+/// One source line split into its code text (string/char-literal
+/// contents dropped) and its comment text (line, doc and block).
+#[derive(Default)]
+struct LineView {
+    code: String,
+    comment: String,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Split source into per-line code and comment channels. Handles line
+/// and nested block comments, plain/byte strings with escapes, raw
+/// strings (`r"…"`, `r#"…"#`, `br"…"`), and char literals (including
+/// escaped ones like `'\''` and `'"'`) vs lifetime ticks.
+fn split_code_comments(src: &str) -> Vec<LineView> {
+    let ch: Vec<char> = src.chars().collect();
+    let n = ch.len();
+    let mut out: Vec<LineView> = vec![LineView::default()];
+    let mut i = 0usize;
+    while i < n {
+        let c = ch[i];
+        if c == '\n' {
+            out.push(LineView::default());
+            i += 1;
+            continue;
+        }
+        // line comment (also covers `///` and `//!` doc comments)
+        if c == '/' && i + 1 < n && ch[i + 1] == '/' {
+            while i < n && ch[i] != '\n' {
+                out.last_mut().unwrap().comment.push(ch[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // block comment, nested per Rust's grammar
+        if c == '/' && i + 1 < n && ch[i + 1] == '*' {
+            let mut depth = 1u32;
+            out.last_mut().unwrap().comment.push_str("/*");
+            i += 2;
+            while i < n && depth > 0 {
+                if ch[i] == '\n' {
+                    out.push(LineView::default());
+                    i += 1;
+                } else if ch[i] == '/' && i + 1 < n && ch[i + 1] == '*' {
+                    depth += 1;
+                    out.last_mut().unwrap().comment.push_str("/*");
+                    i += 2;
+                } else if ch[i] == '*' && i + 1 < n && ch[i + 1] == '/' {
+                    depth -= 1;
+                    out.last_mut().unwrap().comment.push_str("*/");
+                    i += 2;
+                } else {
+                    out.last_mut().unwrap().comment.push(ch[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw string r"…" / r#"…"# (optionally byte-prefixed), only
+        // when the `r` does not continue an identifier
+        if (c == 'r' || (c == 'b' && i + 1 < n && ch[i + 1] == 'r'))
+            && (i == 0 || !is_ident(ch[i - 1]))
+        {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            let mut hashes = 0usize;
+            while j < n && ch[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && ch[j] == '"' {
+                j += 1;
+                while j < n {
+                    if ch[j] == '\n' {
+                        out.push(LineView::default());
+                    } else if ch[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && j + 1 + k < n && ch[j + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+        }
+        // plain string literal (escapes honoured)
+        if c == '"' {
+            i += 1;
+            while i < n {
+                if ch[i] == '\\' {
+                    i += 2;
+                } else if ch[i] == '\n' {
+                    out.push(LineView::default());
+                    i += 1;
+                } else if ch[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // char literal vs lifetime tick
+        if c == '\'' {
+            if i + 1 < n && ch[i + 1] == '\\' {
+                i += 2;
+                while i < n && ch[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                continue;
+            }
+            if i + 2 < n && ch[i + 2] == '\'' && ch[i + 1] != '\'' {
+                i += 3;
+                continue;
+            }
+            out.last_mut().unwrap().code.push(c);
+            i += 1;
+            continue;
+        }
+        out.last_mut().unwrap().code.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Byte offsets of whole-word occurrences of `word` in `s`.
+fn word_positions(s: &str, word: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = s[from..].find(word) {
+        let at = from + pos;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident(s[..at].chars().next_back().unwrap());
+        let after_ok = end >= s.len() || !is_ident(s[end..].chars().next().unwrap());
+        if before_ok && after_ok {
+            hits.push(at);
+        }
+        from = end;
+    }
+    hits
+}
+
+/// Code text from byte `col` on line `li` joined with the next few
+/// lines — enough lookahead to classify what follows `unsafe` even
+/// when rustfmt wrapped the signature.
+fn joined_tail(lines: &[LineView], li: usize, col: usize) -> String {
+    let mut tail = String::new();
+    if col < lines[li].code.len() {
+        tail.push_str(&lines[li].code[col..]);
+    }
+    for l in lines.iter().skip(li + 1).take(3) {
+        tail.push(' ');
+        tail.push_str(&l.code);
+    }
+    tail
+}
+
+/// The first code token after `col` on line `li`: `"{"` for a bare
+/// block, otherwise the identifier (`impl`, `fn`, …).
+fn next_token(lines: &[LineView], li: usize, col: usize) -> String {
+    let tail = joined_tail(lines, li, col);
+    let t = tail.trim_start();
+    if t.starts_with('{') {
+        return "{".to_string();
+    }
+    t.chars().take_while(|&c| is_ident(c)).collect()
+}
+
+/// The comment/attribute block above line `li` (plus any comment on
+/// the line itself), concatenated. Attribute lines pass through, and
+/// so do statement-continuation code lines (`let x =` left on its own
+/// line by rustfmt with the `unsafe { … }` beneath) — the comment
+/// above the *statement* documents the block, matching clippy's
+/// accept-comment-above-statement semantics. A blank line or a
+/// completed statement/block edge (`;`, `{`, `}`) ends the walk.
+fn audit_context(lines: &[LineView], li: usize) -> String {
+    let mut ctx = lines[li].comment.clone();
+    let mut i = li;
+    while i > 0 {
+        i -= 1;
+        let code = lines[i].code.trim();
+        let comment = lines[i].comment.trim();
+        if code.is_empty() && comment.is_empty() {
+            break;
+        }
+        if !code.is_empty()
+            && !code.starts_with('#')
+            && (code.ends_with(';') || code.ends_with('{') || code.ends_with('}'))
+        {
+            break;
+        }
+        ctx.push('\n');
+        ctx.push_str(comment);
+    }
+    ctx
+}
+
+/// Lint one source file's text. `relaxed_ok` marks files on the
+/// Relaxed-ordering allow-list.
+fn audit_source(
+    label: &str,
+    src: &str,
+    relaxed_ok: bool,
+    stats: &mut Stats,
+    out: &mut Vec<Violation>,
+) {
+    let lines = split_code_comments(src);
+    for (li, line) in lines.iter().enumerate() {
+        for at in word_positions(&line.code, "unsafe") {
+            let tok = next_token(&lines, li, at + "unsafe".len());
+            let ctx = audit_context(&lines, li);
+            let documented = ctx.contains("SAFETY:") || ctx.contains("# Safety");
+            match tok.as_str() {
+                "impl" => {
+                    stats.impls += 1;
+                    let tail = joined_tail(&lines, li, at);
+                    let marker = tail.contains("Send for") || tail.contains("Sync for");
+                    if marker && !ctx.contains("AUDIT") {
+                        out.push(violation(label, li + 1, "impl-missing-audit", MSG_AUDIT));
+                    }
+                    if !documented {
+                        out.push(violation(label, li + 1, "impl-missing-safety", MSG_IMPL));
+                    }
+                }
+                "fn" => {
+                    stats.fns += 1;
+                    if !documented {
+                        out.push(violation(label, li + 1, "fn-missing-safety", MSG_FN));
+                    }
+                }
+                _ => {
+                    stats.blocks += 1;
+                    if !documented {
+                        out.push(violation(label, li + 1, "block-missing-safety", MSG_BLOCK));
+                    }
+                }
+            }
+        }
+        let relaxed_hits = word_positions(&line.code, "Relaxed").len();
+        stats.relaxed += relaxed_hits;
+        if relaxed_hits > 0 && !relaxed_ok {
+            out.push(violation(label, li + 1, "relaxed-not-allowlisted", MSG_RELAXED));
+        }
+    }
+}
+
+fn parse_config(path: &Path) -> std::io::Result<Config> {
+    let text = std::fs::read_to_string(path)?;
+    let root = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+    let mut cfg = Config { root, scan: Vec::new(), exempt: Vec::new(), relaxed: Vec::new() };
+    for raw in text.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let dir = it.next().unwrap_or("");
+        let arg = it.next().unwrap_or("");
+        match dir {
+            "scan" => cfg.scan.push(normalize(arg)),
+            "exempt" => cfg.exempt.push(normalize(arg)),
+            "relaxed" => cfg.relaxed.push(normalize(arg)),
+            other => eprintln!("unsafe_audit: ignoring unknown directive `{other}`"),
+        }
+    }
+    Ok(cfg)
+}
+
+/// `.` means the config root itself; everything else stays relative.
+fn normalize(arg: &str) -> PathBuf {
+    if arg == "." {
+        PathBuf::new()
+    } else {
+        PathBuf::from(arg)
+    }
+}
+
+/// Collect `.rs` files under `root/rel`, depth-first in name order,
+/// skipping exempt subtrees. Paths in `out` stay root-relative.
+fn walk(
+    root: &Path,
+    rel: &Path,
+    exempt: &[PathBuf],
+    out: &mut Vec<PathBuf>,
+) -> std::io::Result<()> {
+    let rd = std::fs::read_dir(root.join(rel))?;
+    let mut entries: Vec<std::fs::DirEntry> = rd.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let child = rel.join(e.file_name());
+        if exempt.iter().any(|x| child.starts_with(x)) {
+            continue;
+        }
+        if e.file_type()?.is_dir() {
+            walk(root, &child, exempt, out)?;
+        } else if child.extension().and_then(|s| s.to_str()) == Some("rs") {
+            out.push(child);
+        }
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let mut config_path = PathBuf::from("unsafe_audit.conf");
+    let mut report_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--config" => {
+                config_path = PathBuf::from(args.next().expect("--config needs a path"));
+            }
+            "--report" => {
+                report_path = Some(PathBuf::from(args.next().expect("--report needs a path")));
+            }
+            other => {
+                eprintln!("unsafe_audit: unknown argument `{other}`");
+                eprintln!("usage: unsafe_audit [--config <conf>] [--report <json>]");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let cfg = match parse_config(&config_path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("unsafe_audit: cannot read {}: {e}", config_path.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut files = Vec::new();
+    for s in &cfg.scan {
+        if let Err(e) = walk(&cfg.root, s, &cfg.exempt, &mut files) {
+            eprintln!("unsafe_audit: cannot walk {}: {e}", cfg.root.join(s).display());
+            return ExitCode::from(2);
+        }
+    }
+
+    let mut stats = Stats::default();
+    let mut violations = Vec::new();
+    for rel in &files {
+        let label = rel.display().to_string();
+        let src = match std::fs::read_to_string(cfg.root.join(rel)) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("unsafe_audit: cannot read {label}: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let relaxed_ok = cfg.relaxed.iter().any(|p| p == rel);
+        audit_source(&label, &src, relaxed_ok, &mut stats, &mut violations);
+    }
+
+    for v in &violations {
+        eprintln!("{}:{}: [{}] {}", v.file, v.line, v.kind, v.message);
+    }
+    eprintln!(
+        "unsafe_audit: {} files, {} unsafe blocks, {} unsafe fns, {} unsafe impls, \
+         {} Relaxed sites, {} violations",
+        files.len(),
+        stats.blocks,
+        stats.fns,
+        stats.impls,
+        stats.relaxed,
+        violations.len()
+    );
+
+    let mut vjson = Vec::new();
+    for v in &violations {
+        vjson.push(Json::obj(vec![
+            ("file", Json::str(v.file.clone())),
+            ("line", Json::num(v.line as f64)),
+            ("kind", Json::str(v.kind)),
+            ("message", Json::str(v.message)),
+        ]));
+    }
+    let report = Json::obj(vec![
+        ("files_scanned", Json::num(files.len() as f64)),
+        ("unsafe_blocks", Json::num(stats.blocks as f64)),
+        ("unsafe_fns", Json::num(stats.fns as f64)),
+        ("unsafe_impls", Json::num(stats.impls as f64)),
+        ("relaxed_sites", Json::num(stats.relaxed as f64)),
+        ("violations", Json::Arr(vjson)),
+    ]);
+    match &report_path {
+        Some(p) => {
+            if let Err(e) = std::fs::write(p, report.to_string() + "\n") {
+                eprintln!("unsafe_audit: cannot write {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        }
+        None => println!("{}", report.to_string()),
+    }
+
+    if violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str, relaxed_ok: bool) -> (Stats, Vec<Violation>) {
+        let mut stats = Stats::default();
+        let mut v = Vec::new();
+        audit_source("test.rs", src, relaxed_ok, &mut stats, &mut v);
+        (stats, v)
+    }
+
+    #[test]
+    fn strings_comments_and_lifetimes_do_not_trip_the_scanner() {
+        let src = r##"
+fn f<'a>(x: &'a str) -> usize {
+    let s = "unsafe { Ordering::Relaxed }";
+    let r = r#"unsafe impl Send for T {} Relaxed"#;
+    let q = '"';
+    let t = '\'';
+    // prose mentioning unsafe and Relaxed is fine in comments
+    /* block comment: unsafe fn nope() — also fine */
+    s.len() + r.len() + (q as usize) + (t as usize) + x.len()
+}
+"##;
+        let (stats, v) = run(src, false);
+        assert_eq!(stats.blocks + stats.fns + stats.impls, 0);
+        assert_eq!(stats.relaxed, 0);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn documented_unsafe_block_passes_undocumented_is_flagged() {
+        let good = "
+fn f(p: *mut u8) {
+    // SAFETY: p is valid for writes, caller contract.
+    unsafe { *p = 0 };
+}
+";
+        let (stats, v) = run(good, false);
+        assert_eq!(stats.blocks, 1);
+        assert!(v.is_empty());
+
+        let bad = "
+fn f(p: *mut u8) {
+    unsafe { *p = 0 };
+}
+";
+        let (stats, v) = run(bad, false);
+        assert_eq!(stats.blocks, 1);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].kind, "block-missing-safety");
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn safety_comment_carries_across_attributes() {
+        let src = "
+fn f(p: *mut u8) {
+    // SAFETY: p is valid; the allow silences a style lint only.
+    #[allow(clippy::some_lint)]
+    let x = unsafe { *p };
+    let _ = x;
+}
+";
+        let (stats, v) = run(src, false);
+        assert_eq!(stats.blocks, 1);
+        assert!(v.is_empty(), "attribute between comment and unsafe must not break the link");
+    }
+
+    #[test]
+    fn safety_comment_documents_a_wrapped_statement() {
+        let src = "
+fn f(p: *mut u8) -> u8 {
+    // SAFETY: p is valid for reads, caller contract.
+    let value =
+        unsafe { *p };
+    value
+}
+";
+        let (stats, v) = run(src, false);
+        assert_eq!(stats.blocks, 1);
+        assert!(v.is_empty(), "a rustfmt-wrapped let must not break the SAFETY link");
+
+        let stale = "
+fn f(p: *mut u8) -> u8 {
+    // SAFETY: documents the first read only.
+    let a = unsafe { *p };
+    let b = unsafe { *p };
+    a + b
+}
+";
+        let (_, v) = run(stale, false);
+        assert_eq!(v.len(), 1, "a completed statement must still end the walk");
+        assert_eq!(v[0].line, 5);
+    }
+
+    #[test]
+    fn send_sync_impls_require_audit_tags() {
+        let good = "
+// AUDIT(Send): the invariant is X.
+// SAFETY: moving T across threads is sound because X.
+unsafe impl Send for T {}
+";
+        let (_, v) = run(good, false);
+        assert!(v.is_empty());
+
+        let no_audit = "
+// SAFETY: moving T across threads is sound because X.
+unsafe impl Send for T {}
+";
+        let (stats, v) = run(no_audit, false);
+        assert_eq!(stats.impls, 1);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].kind, "impl-missing-audit");
+
+        let plain_impl = "
+// SAFETY: the trait's contract holds because Y.
+unsafe impl Marker for T {}
+";
+        let (_, v) = run(plain_impl, false);
+        assert!(v.is_empty(), "non-thread-marker unsafe impls need SAFETY only");
+    }
+
+    #[test]
+    fn unsafe_fn_accepts_safety_doc_section() {
+        let src = "
+/// Does a thing.
+///
+/// # Safety
+/// Caller must uphold Z.
+unsafe fn danger() {}
+";
+        let (stats, v) = run(src, false);
+        assert_eq!(stats.fns, 1);
+        assert!(v.is_empty());
+
+        let bare = "
+unsafe fn danger() {}
+";
+        let (_, v) = run(bare, false);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].kind, "fn-missing-safety");
+    }
+
+    #[test]
+    fn relaxed_ordering_respects_the_allowlist() {
+        let src = "
+fn tick(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+";
+        let (stats, v) = run(src, true);
+        assert_eq!(stats.relaxed, 1);
+        assert!(v.is_empty());
+
+        let (stats, v) = run(src, false);
+        assert_eq!(stats.relaxed, 1);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].kind, "relaxed-not-allowlisted");
+    }
+}

@@ -65,7 +65,9 @@ pub const BITSERIAL_MAX_PRODUCT: u32 = 4;
 /// read fresh each detection so one process can build portable and
 /// native plans back to back (bench A/B, CI matrix).
 fn detect_popcount() -> KernelIsa {
-    if force_portable() {
+    // Miri interprets MIR and has no SIMD/popcnt intrinsics — pin the
+    // portable backend so the kernel suites run under `cargo miri test`.
+    if cfg!(miri) || force_portable() {
         return KernelIsa::Portable;
     }
     #[cfg(target_arch = "x86_64")]
@@ -257,7 +259,7 @@ impl BitserialGemm {
                         Some(g) => da * g[o] as f64,
                         None => da,
                     };
-                    // Safety: tiles cover disjoint (r, o) cells.
+                    // SAFETY: tiles cover disjoint (r, o) cells.
                     unsafe {
                         out.write(r * self.n_out + o, (acc as f64 * scale) as f32 + bias[o])
                     };
@@ -345,10 +347,17 @@ fn weighted_and_popcount(
 ) -> i64 {
     match imp {
         #[cfg(target_arch = "x86_64")]
-        // Safety: plans only carry these when detection confirmed them.
-        KernelIsa::Popcnt => unsafe { weighted_pairs_popcnt(a, w, words, ka, kw) },
+        KernelIsa::Popcnt => {
+            // SAFETY: plans only carry Popcnt when detection confirmed
+            // it at plan build.
+            unsafe { weighted_pairs_popcnt(a, w, words, ka, kw) }
+        }
         #[cfg(target_arch = "x86_64")]
-        KernelIsa::Avx2 => unsafe { weighted_pairs_avx2(a, w, words, ka, kw) },
+        KernelIsa::Avx2 => {
+            // SAFETY: plans only carry Avx2 when detection confirmed
+            // it at plan build.
+            unsafe { weighted_pairs_avx2(a, w, words, ka, kw) }
+        }
         _ => weighted_pairs(a, w, words, ka, kw),
     }
 }
@@ -397,6 +406,10 @@ unsafe fn weighted_pairs_avx2(a: &[u64], w: &[u64], words: usize, ka: usize, kw:
         _mm256_sad_epu8, _mm256_set1_epi8, _mm256_setr_epi8, _mm256_setzero_si256,
         _mm256_shuffle_epi8, _mm256_srli_epi16, _mm256_storeu_si256,
     };
+    // SAFETY: every 256-bit load covers 4 in-bounds u64 words
+    // (t < words/4) with no alignment requirement (`loadu`), the
+    // `lanes` store writes exactly the 32 bytes it owns, and AVX2 is
+    // guaranteed by this function's contract.
     unsafe {
         #[rustfmt::skip]
         let lut = _mm256_setr_epi8(
@@ -472,10 +485,12 @@ mod tests {
             #[cfg(target_arch = "x86_64")]
             {
                 if is_x86_feature_detected!("popcnt") {
+                    // SAFETY: popcnt support just verified above.
                     let got = unsafe { weighted_pairs_popcnt(&a, &w, words, ka, kw) };
                     assert_eq!(got, want, "popcnt backend ka={ka} kw={kw} words={words}");
                 }
                 if is_x86_feature_detected!("avx2") {
+                    // SAFETY: AVX2 support just verified above.
                     let got = unsafe { weighted_pairs_avx2(&a, &w, words, ka, kw) };
                     assert_eq!(got, want, "avx2 backend ka={ka} kw={kw} words={words}");
                 }

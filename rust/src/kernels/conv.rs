@@ -487,7 +487,7 @@ impl QuantConvNet {
                 if r0 >= r1 {
                     return;
                 }
-                // Safety: chunk_range partitions — ranges disjoint.
+                // SAFETY: chunk_range partitions — ranges disjoint.
                 let out = unsafe { split.range(r0 * flat, (r1 - r0) * flat) };
                 self.features_scratch(&x[r0 * sz..r1 * sz], r1 - r0, ws, out);
             });

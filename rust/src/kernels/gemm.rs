@@ -139,7 +139,10 @@ pub(crate) const D_TILE: usize = 1024;
 /// one process can build portable and native plans back to back (the
 /// bench A/B and the CI matrix both rely on that).
 fn detect_dense() -> KernelIsa {
-    if force_portable() {
+    // Under Miri there are no SIMD intrinsics: pin to the portable
+    // kernels so the aliasing model checks the code the portable CI leg
+    // actually runs (scripts/analyze.sh, DESIGN.md §17).
+    if cfg!(miri) || force_portable() {
         return KernelIsa::Portable;
     }
     #[cfg(target_arch = "x86_64")]
@@ -559,8 +562,11 @@ impl DenseWeight for i8 {
     fn dot(a: &[i16], w: &[i8], isa: KernelIsa) -> i32 {
         match isa {
             #[cfg(target_arch = "x86_64")]
-            // Safety: plans only carry Avx2 when detection confirmed it.
-            KernelIsa::Avx2 => unsafe { dot_i8_avx2(a, w) },
+            KernelIsa::Avx2 => {
+                // SAFETY: plans only carry Avx2 when detection
+                // confirmed it at plan build.
+                unsafe { dot_i8_avx2(a, w) }
+            }
             _ => dot_scalar(a, w),
         }
     }
@@ -571,8 +577,11 @@ impl DenseWeight for i16 {
     fn dot(a: &[i16], w: &[i16], isa: KernelIsa) -> i32 {
         match isa {
             #[cfg(target_arch = "x86_64")]
-            // Safety: plans only carry Avx2 when detection confirmed it.
-            KernelIsa::Avx2 => unsafe { dot_i16_avx2(a, w) },
+            KernelIsa::Avx2 => {
+                // SAFETY: plans only carry Avx2 when detection
+                // confirmed it at plan build.
+                unsafe { dot_i16_avx2(a, w) }
+            }
             _ => dot_scalar(a, w),
         }
     }
@@ -613,6 +622,10 @@ unsafe fn dot_i8_avx2(a: &[i16], w: &[i8]) -> i32 {
     let d = a.len();
     let chunks = d / 16;
     let mut lanes = [0i32; 8];
+    // SAFETY: every load covers 16 in-bounds elements (c < d/16), the
+    // `loadu`/`storeu` forms have no alignment requirement, and the
+    // `lanes` store writes exactly the 32 bytes it owns; AVX2 itself is
+    // guaranteed by this function's contract.
     unsafe {
         let mut acc = _mm256_setzero_si256();
         for c in 0..chunks {
@@ -648,6 +661,10 @@ unsafe fn dot_i16_avx2(a: &[i16], w: &[i16]) -> i32 {
     let d = a.len();
     let chunks = d / 16;
     let mut lanes = [0i32; 8];
+    // SAFETY: both 256-bit loads cover 16 in-bounds i16 elements
+    // (c < d/16) with no alignment requirement (`loadu`), and the
+    // `lanes` store writes exactly the 32 bytes it owns; AVX2 itself is
+    // guaranteed by this function's contract.
     unsafe {
         let mut acc = _mm256_setzero_si256();
         for c in 0..chunks {
@@ -709,7 +726,7 @@ fn tile_rows<T: DenseWeight>(
                     Some(g) => da * g[o] as f64,
                     None => da,
                 };
-                // Safety: tiles cover disjoint (r, o) cells.
+                // SAFETY: tiles cover disjoint (r, o) cells.
                 unsafe { out.write(r * n_out + o, (acc[o - ot0] as f64 * scale) as f32 + bias[o]) };
             }
         }

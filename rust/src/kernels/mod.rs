@@ -187,7 +187,20 @@ fn lock_scratch(m: &Mutex<Scratch>) -> MutexGuard<'_, Scratch> {
 #[derive(Clone, Copy)]
 struct Job(*const (dyn Fn(usize, &mut Scratch) + Sync));
 
+// AUDIT(Send): the invariant is pointee liveness — `Job` is one erased
+// closure pointer published per pool generation, and `run_dyn` does not
+// return until `remaining == 0`, so the pointee outlives every worker's
+// dereference (the generation-monotonicity debug asserts pin the
+// drain-before-republish protocol).
+// SAFETY: the pointer is only dereferenced by workers inside the
+// generation it was published for; the pointee outlives that window
+// (see AUDIT above), so moving the pointer across threads is sound.
 unsafe impl Send for Job {}
+// AUDIT(Sync): the invariant is shared-call safety — the pointee is
+// `dyn Fn(..) + Sync`, so concurrent `&`-calls from every lane are the
+// exact contract the closure's type already promises.
+// SAFETY: `&Job` only allows reading the pointer and calling the Sync
+// pointee; both are safe from any number of threads at once.
 unsafe impl Sync for Job {}
 
 struct PoolState {
@@ -358,7 +371,7 @@ impl WorkerPool {
         self.obs.active.add(self.threads as f64);
         let serial = self.run_lock.lock().unwrap();
         let ptr: *const (dyn Fn(usize, &mut Scratch) + Sync + 'a) = f;
-        // Safety (lifetime erasure): this function does not return
+        // SAFETY: lifetime erasure — this function does not return
         // until every worker reports done, so `f` outlives all uses.
         #[allow(clippy::useless_transmute)]
         let job = Job(unsafe {
@@ -369,6 +382,13 @@ impl WorkerPool {
         });
         {
             let mut st = self.shared.state.lock().unwrap();
+            // generation protocol invariant: a new generation may only
+            // be published once the previous one fully drained — the
+            // erased Job pointer's liveness argument depends on it
+            debug_assert!(
+                st.remaining == 0 && st.job.is_none(),
+                "worker pool generation published before the previous one drained"
+            );
             st.job = Some(job);
             st.generation += 1;
             st.remaining = self.handles.len();
@@ -422,11 +442,19 @@ fn pool_worker_loop(shared: &PoolShared, wid: usize, scratch: &mut Scratch) {
             return;
         }
         if st.generation != my_gen {
+            // generation monotonicity: `run_dyn` waits for the previous
+            // generation to drain before publishing the next, so a
+            // worker can never skip one — each wake sees exactly +1
+            debug_assert_eq!(
+                st.generation,
+                my_gen + 1,
+                "worker pool generation not monotone (worker skipped a generation)"
+            );
             my_gen = st.generation;
             let job = st.job.expect("pool generation published without a job");
             drop(st);
             let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                // Safety: the pointer stays valid until `remaining`
+                // SAFETY: the pointer stays valid until `remaining`
                 // reaches zero, which cannot happen before this call
                 // returns (we decrement below).
                 let f = unsafe { &*job.0 };
@@ -459,6 +487,55 @@ pub(crate) fn chunk_range(n: usize, parts: usize, i: usize) -> (usize, usize) {
     (r0, r1)
 }
 
+/// Debug-build claim map for [`SplitMut`] (DESIGN.md §17): one bit per
+/// output cell, set by `fetch_or` when a [`range`] or [`write`] claims
+/// it. The RMW is atomic, so when two lanes race for the same cell
+/// exactly one observes the bit already set and panics — turning the
+/// "unsafe-but-audited" disjointness contract into a runtime-verified
+/// invariant on every test/CI run. Compiled out entirely in release
+/// builds (`debug_assertions` off), so the serving hot path pays zero.
+///
+/// [`range`]: SplitMut::range
+/// [`write`]: SplitMut::write
+#[cfg(debug_assertions)]
+struct ClaimMap {
+    words: Box<[AtomicU64]>,
+}
+
+#[cfg(debug_assertions)]
+impl ClaimMap {
+    fn new(len: usize) -> ClaimMap {
+        let n = len.div_ceil(64);
+        let mut words = Vec::with_capacity(n);
+        words.resize_with(n, || AtomicU64::new(0));
+        ClaimMap { words: words.into_boxed_slice() }
+    }
+
+    /// Claim cells `[start, start + len)`, panicking if any of them was
+    /// already claimed by this or any other lane. Callers bounds-check
+    /// first, so the word indexing here cannot go out of range.
+    fn claim(&self, start: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let end = start + len;
+        let (w0, w1) = (start / 64, (end - 1) / 64);
+        for w in w0..=w1 {
+            let lo = if w == w0 { start % 64 } else { 0 };
+            let hi = if w == w1 { (end - 1) % 64 + 1 } else { 64 };
+            let mask = if hi - lo == 64 { u64::MAX } else { ((1u64 << (hi - lo)) - 1) << lo };
+            // Relaxed is enough: the RMW's atomicity alone guarantees a
+            // unique winner per bit; no other memory is published here.
+            let prev = self.words[w].fetch_or(mask, Ordering::Relaxed);
+            assert!(
+                prev & mask == 0,
+                "SplitMut overlapping claim: cells [{start}, {end}) collide with an \
+                 earlier range()/write() claim on the same buffer"
+            );
+        }
+    }
+}
+
 /// Mutable view of one output buffer that pool jobs carve into disjoint
 /// pieces by worker id — the borrow checker cannot see the disjointness
 /// through the shared job closure, so the carve is unsafe-but-audited.
@@ -466,42 +543,86 @@ pub(crate) fn chunk_range(n: usize, parts: usize, i: usize) -> (usize, usize) {
 /// (column splits interleave their cells in memory) use per-cell
 /// [`write`]s instead.
 ///
+/// Under `debug_assertions` every claim is additionally checked against
+/// a [`ClaimMap`]: any overlapping carve — from concurrent lanes or
+/// from a buggy sequential double-visit — panics instead of silently
+/// racing. A `SplitMut` is therefore single-use by contract: each cell
+/// may be claimed at most once over the view's lifetime (every forward
+/// path builds a fresh view per parallel section, so this is the
+/// contract they already obeyed).
+///
 /// [`range`]: SplitMut::range
 /// [`write`]: SplitMut::write
 pub(crate) struct SplitMut<'a, T> {
     ptr: *mut T,
     len: usize,
+    #[cfg(debug_assertions)]
+    claims: ClaimMap,
     _life: std::marker::PhantomData<&'a mut [T]>,
 }
 
+// AUDIT(Send): the invariant is exclusive origin — the view is built
+// from one `&mut [T]`, whose borrow it holds for its lifetime, so the
+// pointer's target is owned for the duration and may move threads with
+// the view whenever the element type itself may (`T: Send`).
+// SAFETY: sending the view only relocates which thread may claim
+// pieces; the underlying buffer stays exclusively borrowed.
 unsafe impl<T: Send> Send for SplitMut<'_, T> {}
+// AUDIT(Sync): the invariant is claim disjointness — concurrent
+// `&`-access hands out non-overlapping `&mut` pieces only (caller
+// contract on `range`/`write`, runtime-verified by the debug
+// [`ClaimMap`]), so no two threads ever alias a cell.
+// SAFETY: shared access cannot create overlapping mutable aliasing as
+// long as the claim contract holds; the dynamic checker enforces it on
+// every debug run.
 unsafe impl<T: Send> Sync for SplitMut<'_, T> {}
 
 impl<'a, T> SplitMut<'a, T> {
     pub(crate) fn new(buf: &'a mut [T]) -> SplitMut<'a, T> {
-        SplitMut { ptr: buf.as_mut_ptr(), len: buf.len(), _life: std::marker::PhantomData }
+        SplitMut {
+            ptr: buf.as_mut_ptr(),
+            len: buf.len(),
+            #[cfg(debug_assertions)]
+            claims: ClaimMap::new(buf.len()),
+            _life: std::marker::PhantomData,
+        }
     }
 
     /// # Safety
     /// Concurrent callers must take non-overlapping `(start, len)`
     /// ranges (the forward paths derive them from [`chunk_range`],
     /// which partitions), and no concurrent [`write`](SplitMut::write)
-    /// may land inside a handed-out range.
+    /// may land inside a handed-out range. Debug builds verify this
+    /// dynamically via the claim map.
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn range(&self, start: usize, len: usize) -> &mut [T] {
-        assert!(start + len <= self.len, "SplitMut range out of bounds");
+        // checked add: a pathological `start` near usize::MAX must not
+        // wrap past the bounds test below
+        let end = start.checked_add(len).expect("SplitMut range overflow: start + len wraps");
+        assert!(end <= self.len, "SplitMut range out of bounds");
+        #[cfg(debug_assertions)]
+        self.claims.claim(start, len);
+        // SAFETY: `[start, end)` is in bounds (asserted above) and the
+        // caller guarantees no concurrent claim overlaps it.
         unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
     }
 
-    /// Write one cell. `debug_assert` bounds check only: this sits in
-    /// the tiled-GEMM epilogue (once per output cell).
+    /// Write one cell. The bounds check is a hard `assert!` — it guards
+    /// a raw-pointer store, so release builds must not skip it (one
+    /// predictable compare per output cell, same cost class as the
+    /// slice indexing the epilogue already does).
     ///
     /// # Safety
     /// Concurrent callers must write disjoint indices (the tiled
     /// forward paths derive them from [`chunk_range`] grids, which
-    /// partition the `[rows × n_out]` cell space).
+    /// partition the `[rows × n_out]` cell space). Debug builds verify
+    /// this dynamically via the claim map.
     pub(crate) unsafe fn write(&self, idx: usize, v: T) {
-        debug_assert!(idx < self.len, "SplitMut write out of bounds");
+        assert!(idx < self.len, "SplitMut write out of bounds");
+        #[cfg(debug_assertions)]
+        self.claims.claim(idx, 1);
+        // SAFETY: `idx` is in bounds (asserted above) and the caller
+        // guarantees no concurrent claim covers it.
         unsafe { *self.ptr.add(idx) = v };
     }
 }
@@ -739,9 +860,10 @@ impl QuantMlp {
                             if r0 >= r1 {
                                 return;
                             }
-                            // Safety: chunk_range partitions — disjoint.
+                            // SAFETY: chunk_range partitions — disjoint.
                             let pchunk =
                                 unsafe { psplit.range(r0 * per_row, (r1 - r0) * per_row) };
+                            // SAFETY: same partition, row-granular.
                             let schunk = unsafe { ssplit.range(r0, r1 - r0) };
                             bits.slice_rows(qa_ref, steps_ref, r0, r1, pchunk, schunk);
                         });
@@ -795,7 +917,7 @@ impl QuantMlp {
                     if r0 >= r1 {
                         return;
                     }
-                    // Safety: chunk_range partitions — ranges disjoint.
+                    // SAFETY: chunk_range partitions — ranges disjoint.
                     let out = unsafe { split.range(r0 * n_out, (r1 - r0) * n_out) };
                     layer.gemm.forward_f32(&xin[r0 * d..r1 * d], r1 - r0, &layer.bias, out);
                 });
@@ -1104,6 +1226,138 @@ mod tests {
             }
         }
         assert_eq!(pool.grow_events(), warm, "hot path allocated after warm-up");
+    }
+
+    #[test]
+    fn pool_scratch_arenas_recover_from_poisoned_jobs() {
+        use std::sync::atomic::AtomicUsize;
+        // a panicking job poisons the caller-lane arena mutex while
+        // unwinding; lock_scratch must shrug the poison off and the
+        // pool must keep serving jobs afterwards
+        let pool = WorkerPool::new(2);
+        let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|_wid, _s| panic!("poison the arenas"));
+        }));
+        assert!(poisoned.is_err(), "panicking job must propagate");
+        let hits = AtomicUsize::new(0);
+        for _ in 0..3 {
+            pool.run(|_wid, _s| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 6, "pool wedged after a poisoned job");
+    }
+
+    /// Small, thread-light SplitMut carve — the Miri target for the
+    /// raw-pointer aliasing model (scripts/analyze.sh filters on
+    /// `splitmut`): disjoint ranges from scoped threads must cover the
+    /// buffer exactly once.
+    #[test]
+    fn splitmut_disjoint_range_carve_covers_exactly() {
+        let n = 130usize;
+        let mut buf = vec![0u32; n];
+        {
+            let split = SplitMut::new(&mut buf);
+            let parts = 4;
+            std::thread::scope(|s| {
+                for i in 0..parts {
+                    let split = &split;
+                    s.spawn(move || {
+                        let (r0, r1) = chunk_range(n, parts, i);
+                        // SAFETY: chunk_range partitions — disjoint.
+                        let chunk = unsafe { split.range(r0, r1 - r0) };
+                        for (j, c) in chunk.iter_mut().enumerate() {
+                            *c = (r0 + j) as u32;
+                        }
+                    });
+                }
+            });
+        }
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v as usize, i);
+        }
+    }
+
+    /// Interleaved per-cell writes (the tiled-epilogue shape) from two
+    /// scoped threads — disjoint cells, every cell covered once.
+    #[test]
+    fn splitmut_disjoint_cell_writes_cover_exactly() {
+        let n = 65usize; // odd length: exercises the claim-map tail word
+        let mut buf = vec![0u32; n];
+        {
+            let split = SplitMut::new(&mut buf);
+            std::thread::scope(|s| {
+                for lane in 0..2usize {
+                    let split = &split;
+                    s.spawn(move || {
+                        let mut i = lane;
+                        while i < n {
+                            // SAFETY: lanes write disjoint interleaved cells.
+                            unsafe { split.write(i, (i + 1) as u32) };
+                            i += 2;
+                        }
+                    });
+                }
+            });
+        }
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v as usize, i + 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "SplitMut write out of bounds")]
+    fn splitmut_write_out_of_bounds_panics() {
+        let mut buf = vec![0.0f32; 4];
+        let split = SplitMut::new(&mut buf);
+        // SAFETY: never reached — the hard bounds assert fires first
+        // (this is the release-mode guarantee the test pins down).
+        unsafe { split.write(4, 1.0) };
+    }
+
+    #[test]
+    #[should_panic(expected = "SplitMut range overflow")]
+    fn splitmut_range_overflow_is_caught() {
+        let mut buf = vec![0.0f32; 4];
+        let split = SplitMut::new(&mut buf);
+        // SAFETY: never reached — the checked add panics before any
+        // pointer arithmetic can wrap.
+        let _ = unsafe { split.range(usize::MAX, 2) };
+    }
+
+    /// The dynamic disjointness checker's negative test (debug builds
+    /// only — release compiles the claim map out): a seeded overlapping
+    /// carve must panic instead of silently aliasing.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "SplitMut overlapping claim")]
+    fn splitmut_overlapping_carve_is_caught() {
+        let mut buf = vec![0.0f32; 64];
+        let split = SplitMut::new(&mut buf);
+        // SAFETY: the first claim is exclusive; the second overlaps and
+        // panics inside the claim map before a second alias exists.
+        let _a = unsafe { split.range(0, 40) };
+        // SAFETY: see above — this call panics, no alias is created.
+        let _b = unsafe { split.range(32, 8) };
+    }
+
+    /// Same checker through the worker pool: two lanes claim ranges
+    /// seeded to overlap; exactly one wins the atomic claim, the other
+    /// panics, and the pool surfaces it as a job panic.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "worker pool job panicked")]
+    fn splitmut_concurrent_overlap_is_caught_via_pool() {
+        let pool = WorkerPool::new(2);
+        let mut buf = vec![0.0f32; 128];
+        let split = SplitMut::new(&mut buf);
+        pool.run(|wid, _s| {
+            let (start, len) = if wid == 0 { (0, 96) } else { (64, 64) };
+            // SAFETY: the overlap is caught by the claim map before a
+            // second mutable alias over [64, 96) can exist.
+            let chunk = unsafe { split.range(start, len) };
+            chunk[0] = 1.0;
+        });
     }
 
     #[test]

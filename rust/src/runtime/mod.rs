@@ -279,6 +279,10 @@ fn to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
     if t.shape.is_empty() {
         return Ok(xla::Literal::scalar(t.data[0]));
     }
+    // SAFETY: reinterpreting a live `&[f32]` as its raw bytes — same
+    // allocation, exact byte length (len·4), u8 has no alignment
+    // requirement, and the borrow of `t` keeps the data alive for the
+    // slice's lifetime.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
     };
@@ -290,6 +294,10 @@ fn to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
 }
 
 fn int_to_literal(t: &IntTensor) -> anyhow::Result<xla::Literal> {
+    // SAFETY: reinterpreting a live `&[i32]` as its raw bytes — same
+    // allocation, exact byte length (len·4), u8 has no alignment
+    // requirement, and the borrow of `t` keeps the data alive for the
+    // slice's lifetime.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
     };

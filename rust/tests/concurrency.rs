@@ -1,0 +1,292 @@
+//! Concurrency stress suite (DESIGN.md §17).
+//!
+//! These tests widen the schedule space around the repo's shared-state
+//! hot spots — worker-pool generations, the bounded request queue, the
+//! trace ring, the metrics registry — with seeded yield-jitter, and
+//! assert conservation/bit-stability invariants that any interleaving
+//! must preserve. They run in tier-1 (`cargo test`), and the CI
+//! `analysis` job re-runs them under ThreadSanitizer
+//! (`scripts/analyze.sh`), where the jitter turns each assertion into
+//! a race probe.
+//!
+//! Policy note: this file deliberately uses `Ordering::SeqCst` for its
+//! own bookkeeping — the Relaxed allow-list (unsafe_audit.conf) covers
+//! production counter modules only.
+
+use std::collections::HashSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use adaqat::kernels::{QuantMlp, WorkerPool};
+use adaqat::obs::{Registry, RequestTrace, TraceRing};
+use adaqat::serve::packed::{PackedTensor, QuantizedCheckpoint};
+use adaqat::serve::queue::{Pop, PushError, RequestQueue, ServeRequest};
+use adaqat::tensor::Tensor;
+use adaqat::util::json::Json;
+use adaqat::util::rng::Rng;
+
+/// Yield a seeded number of times (0..=max) to perturb the schedule.
+fn jitter(rng: &mut Rng, max: usize) {
+    for _ in 0..rng.below(max + 1) {
+        std::thread::yield_now();
+    }
+}
+
+/// Every pool generation must run every lane exactly once, no matter
+/// how the lanes interleave — the fan-out counter and the lane bitmask
+/// are conserved across 200 jittered generations.
+#[test]
+fn pool_fan_out_conserves_lanes_under_jitter() {
+    let pool = WorkerPool::new(4);
+    for gen in 0..200u64 {
+        let hits = AtomicU64::new(0);
+        let mask = AtomicU64::new(0);
+        pool.run(|wid, _s| {
+            let mut rng = Rng::new(0xFA11_0000 ^ (gen << 8) ^ wid as u64);
+            jitter(&mut rng, 6);
+            hits.fetch_add(1, Ordering::SeqCst);
+            mask.fetch_or(1 << wid, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4, "generation {gen}");
+        assert_eq!(mask.load(Ordering::SeqCst), 0b1111, "generation {gen}");
+    }
+}
+
+/// Seeded job panics on rotating lanes (including the caller lane,
+/// which poisons the main scratch mutex) must never wedge the pool:
+/// every following generation still fans out to all lanes.
+#[test]
+fn pool_survives_rotating_job_panics() {
+    let pool = WorkerPool::new(4);
+    let hits = AtomicU64::new(0);
+    let mut clean_runs = 0u64;
+    for round in 0..24u64 {
+        if round % 6 == 3 {
+            let victim = (round / 6) as usize % 4;
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(|wid, _s| {
+                    if wid == victim {
+                        panic!("seeded job panic (lane {wid})");
+                    }
+                    std::thread::yield_now();
+                });
+            }));
+            assert!(r.is_err(), "round {round}: seeded panic must surface");
+        } else {
+            pool.run(|wid, _s| {
+                let mut rng = Rng::new(0x9015_0000 ^ (round << 8) ^ wid as u64);
+                jitter(&mut rng, 4);
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+            clean_runs += 1;
+        }
+    }
+    assert_eq!(hits.load(Ordering::SeqCst), clean_runs * 4, "pool lost lanes after panics");
+}
+
+fn request(id: u64, resp: &mpsc::Sender<adaqat::serve::ServeResponse>) -> ServeRequest {
+    ServeRequest { id, pixels: Vec::new(), enqueued: Instant::now(), resp: resp.clone() }
+}
+
+/// Conservation across backpressure: with 4 producers racing a
+/// mid-stream close, every single request is either popped once or
+/// counted in exactly one shed counter — nothing duplicated, nothing
+/// lost.
+#[test]
+fn queue_sheds_conserve_every_request() {
+    const PRODUCERS: u64 = 4;
+    const PER_PRODUCER: u64 = 250;
+    let reg = Registry::new();
+    let q = RequestQueue::with_obs(64, &reg);
+    let producers_done = Arc::new(AtomicBool::new(false));
+
+    let consumer = {
+        let q = Arc::clone(&q);
+        let producers_done = Arc::clone(&producers_done);
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(0xC0DE);
+            let mut ids = HashSet::new();
+            loop {
+                match q.pop(Duration::from_millis(5)) {
+                    Pop::Item(req) => {
+                        assert!(ids.insert(req.id), "request {} delivered twice", req.id);
+                        jitter(&mut rng, 3);
+                        if ids.len() == 300 {
+                            q.close();
+                        }
+                    }
+                    Pop::TimedOut => {
+                        if producers_done.load(Ordering::SeqCst) {
+                            q.close();
+                        }
+                    }
+                    Pop::Closed => return ids,
+                }
+            }
+        })
+    };
+
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let q = Arc::clone(&q);
+        handles.push(std::thread::spawn(move || {
+            let (tx, _rx) = mpsc::channel();
+            let mut rng = Rng::new(0x9E0D ^ p);
+            let mut accepted = 0u64;
+            for i in 0..PER_PRODUCER {
+                jitter(&mut rng, 2);
+                if q.push(request(p * PER_PRODUCER + i, &tx)).is_ok() {
+                    accepted += 1;
+                }
+            }
+            accepted
+        }));
+    }
+    let accepted: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    producers_done.store(true, Ordering::SeqCst);
+    let ids = consumer.join().unwrap();
+
+    let (shed_full, shed_closed) = q.shed_counts();
+    let total = PRODUCERS * PER_PRODUCER;
+    assert_eq!(accepted, ids.len() as u64, "accepted pushes must all be popped");
+    assert_eq!(
+        ids.len() as u64 + shed_full + shed_closed,
+        total,
+        "popped + shed(full) + shed(closed) must conserve every push"
+    );
+    assert_eq!(q.len(), 0, "queue must be drained");
+
+    // the closed path, deterministically: one more push after close
+    let (tx, _rx) = mpsc::channel();
+    assert_eq!(q.push(request(total, &tx)), Err(PushError::Closed));
+    assert_eq!(q.shed_counts().1, shed_closed + 1);
+}
+
+/// Concurrent wraparound: 8 threads hammer a capacity-64 ring with 500
+/// pushes each. The total never loses a push, retention is exactly the
+/// capacity, and the retained traces are distinct pushed values.
+#[test]
+fn trace_ring_concurrent_wraparound_is_bounded() {
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 500;
+    let ring = Arc::new(TraceRing::new(64));
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let ring = Arc::clone(&ring);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0x7ACE ^ t);
+            for i in 0..PER_THREAD {
+                let seq = t * PER_THREAD + i;
+                ring.push(RequestTrace {
+                    id: seq,
+                    enqueue_us: seq,
+                    batch_us: seq + 1,
+                    compute_done_us: seq + 2,
+                    reply_us: seq + 3,
+                    rows: 1,
+                    ok: true,
+                });
+                jitter(&mut rng, 2);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(ring.total(), THREADS * PER_THREAD);
+    let snap = ring.snapshot();
+    assert_eq!(snap.len(), 64, "retention must equal capacity after wraparound");
+    let mut seen = HashSet::new();
+    for tr in &snap {
+        assert!(tr.id < THREADS * PER_THREAD);
+        assert_eq!(tr.reply_us, tr.id + 3, "trace fields must not tear");
+        assert!(seen.insert(tr.id), "trace {} retained twice", tr.id);
+    }
+}
+
+/// Concurrent get-or-register on the same series must hand every
+/// thread the same underlying cell (sums conserve), and a same-name/
+/// different-type collision must stay a warn-once no-op, not a panic.
+#[test]
+fn registry_registration_races_conserve_counts() {
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 200;
+    let reg = Arc::new(Registry::new());
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let reg = Arc::clone(&reg);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0x2E6 ^ t as u64);
+            let label = (t % 2).to_string();
+            for _ in 0..PER_THREAD {
+                // four threads share each label: the same cell must be
+                // returned on every lookup for the sums to conserve
+                reg.counter("conc_hits_total", &[("half", label.as_str())]).inc();
+                jitter(&mut rng, 2);
+            }
+            // type-collision path: half the threads re-request the
+            // counter's name as a gauge — warn-once, detached handle
+            if t % 2 == 1 {
+                reg.gauge("conc_hits_total", &[("half", label.as_str())]).set(1.0);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let per_label = (THREADS as u64 / 2) * PER_THREAD;
+    for half in ["0", "1"] {
+        let c = reg.counter("conc_hits_total", &[("half", half)]);
+        assert_eq!(c.get(), per_label, "label {half} lost increments");
+    }
+}
+
+fn stress_mlp() -> QuantMlp {
+    let (d, h, classes) = (96usize, 200usize, 40usize);
+    let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+        ("k_a", Json::num(8.0)),
+        ("mlp_layers", Json::Arr(vec![Json::str("fc1"), Json::str("fc2")])),
+        // fc2 at k_w=1, k_a=4: product 4 rides the popcount planes
+        ("layer_k_a", Json::obj(vec![("fc2", Json::num(4.0))])),
+    ]));
+    let mut rng = Rng::new(4021);
+    let wn = |shape: Vec<usize>, rng: &mut Rng| {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.normal() * 0.2).collect())
+    };
+    q.push("fc1.w", PackedTensor::quantize(&wn(vec![d, h], &mut rng), 4));
+    q.push("fc2.w", PackedTensor::quantize(&wn(vec![h, classes], &mut rng), 1));
+    QuantMlp::from_packed(&q).unwrap()
+}
+
+/// Bit-exactness under contention: four threads drive the same
+/// `QuantMlp` through one shared `WorkerPool` (dense + bitserial
+/// layers, staging arenas, SplitMut carves) — every result must stay
+/// bit-identical to the single-threaded forward.
+#[test]
+fn shared_pool_forward_stays_bit_identical_under_contention() {
+    let mlp = stress_mlp();
+    let pool = WorkerPool::new(4);
+    let rows = 5usize;
+    let mut rng = Rng::new(77);
+    let x: Vec<f32> = (0..rows * 96).map(|_| rng.normal()).collect();
+    let baseline = mlp.forward(&x, rows, 1);
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let (mlp, pool, x, baseline) = (&mlp, &pool, &x, &baseline);
+            s.spawn(move || {
+                let mut rng = Rng::new(0xB17 ^ t);
+                for _ in 0..25 {
+                    jitter(&mut rng, 3);
+                    let got = mlp.forward_pooled(x, rows, pool);
+                    assert_eq!(got.len(), baseline.len());
+                    for (a, b) in baseline.iter().zip(&got) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "thread {t} diverged");
+                    }
+                }
+            });
+        }
+    });
+}

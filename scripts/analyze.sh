@@ -1,0 +1,108 @@
+#!/usr/bin/env bash
+# Unsafe-core analysis matrix (DESIGN.md §17).
+#
+#   scripts/analyze.sh                        # run what the host can
+#   ADAQAT_ANALYZE_STRICT=1 scripts/analyze.sh  # skips become failures
+#
+# Four stages, each proving a different class of invariant:
+#
+#   1. unsafe_audit   source-side policy: SAFETY/AUDIT comments present,
+#                     Ordering::Relaxed confined to the allow-list
+#                     (rust/unsafe_audit.conf). Needs only the stable
+#                     toolchain; also runs inside scripts/verify.sh.
+#   2. Miri           UB interpreter over the portable kernel / pack /
+#                     quant / SplitMut suites. The SIMD paths are cfg'd
+#                     out under Miri (ISA detection pins Portable), so
+#                     what runs is exactly the portable arithmetic plus
+#                     the raw-pointer carve logic the SIMD paths share.
+#   3. TSan           ThreadSanitizer over tests/concurrency.rs — the
+#                     jittered worker-pool / queue / trace-ring /
+#                     registry stress suite.
+#   4. ASan           AddressSanitizer over the SplitMut and scratch-
+#                     arena unit suites — the raw-pointer carve paths
+#                     and the poisoned-mutex recovery path.
+#
+# Stages 2–4 need a rustup nightly toolchain (Miri additionally the
+# `miri` component, the sanitizers the `rust-src` component for
+# -Zbuild-std). Hosts without them skip those stages with a note; the
+# CI `analysis` job (.github/workflows/ci.yml) installs all three and
+# exports ADAQAT_ANALYZE_STRICT=1 so a silent skip can never turn the
+# matrix green.
+set -euo pipefail
+cd "$(dirname "$0")/../rust" || exit 1
+
+STRICT="${ADAQAT_ANALYZE_STRICT:-0}"
+
+skip() {
+  # $1 = stage name, $2 = reason
+  if [ "$STRICT" = "1" ]; then
+    echo "analyze: FAIL (strict mode): $1 skipped — $2" >&2
+    exit 1
+  fi
+  echo "analyze: skip $1 — $2"
+}
+
+have_nightly() {
+  command -v rustup >/dev/null 2>&1 &&
+    rustup run nightly rustc --version >/dev/null 2>&1
+}
+
+nightly_component() {
+  # component rows read e.g. "miri-x86_64-unknown-linux-gnu (installed)"
+  rustup component list --toolchain nightly 2>/dev/null |
+    grep -q "^$1.*(installed)"
+}
+
+echo "== analysis 1/4: unsafe policy audit =="
+cargo run --release --bin unsafe_audit -- --report ../UNSAFE_AUDIT.json
+test -s ../UNSAFE_AUDIT.json
+
+echo "== analysis 2/4: Miri (portable kernel/pack/quant/SplitMut) =="
+if have_nightly && nightly_component miri; then
+  # --skip pool: the worker-pool tests park persistent threads on a
+  # condvar; Miri treats threads still live at process exit as an
+  # error, and the pool's schedule space is TSan's job (stage 3).
+  # ADAQAT_FORCE_PORTABLE is forwarded so the forced-portable dispatch
+  # pairs exercise the same env contract under the interpreter.
+  MIRIFLAGS="-Zmiri-env-forward=ADAQAT_FORCE_PORTABLE" \
+    ADAQAT_FORCE_PORTABLE=1 \
+    cargo +nightly miri test --lib -- --skip pool \
+    kernels::pack kernels::activ quant:: splitmut_
+else
+  skip "Miri" "rustup nightly with the miri component is not installed"
+fi
+
+HOST_TARGET=""
+if have_nightly; then
+  HOST_TARGET="$(rustup run nightly rustc -vV | sed -n 's/^host: //p')"
+fi
+
+echo "== analysis 3/4: ThreadSanitizer (tests/concurrency.rs) =="
+if have_nightly && nightly_component rust-src; then
+  # explicit --target keeps RUSTFLAGS off host build scripts; a
+  # dedicated target dir keeps sanitized artifacts from thrashing the
+  # regular build cache
+  RUSTFLAGS="-Zsanitizer=thread" \
+    CARGO_TARGET_DIR=target/tsan \
+    cargo +nightly test -Zbuild-std --target "$HOST_TARGET" \
+    --test concurrency
+else
+  skip "TSan" "rustup nightly with the rust-src component is not installed"
+fi
+
+echo "== analysis 4/4: AddressSanitizer (SplitMut + scratch suites) =="
+if have_nightly && nightly_component rust-src; then
+  # detect_leaks=0: the worker pool parks persistent threads that are
+  # deliberately alive at process exit; LeakSanitizer flags their
+  # stacks, and leak detection is not what this stage is for (the
+  # carve/recovery paths are the memory-error surface under test)
+  RUSTFLAGS="-Zsanitizer=address" \
+    CARGO_TARGET_DIR=target/asan \
+    ASAN_OPTIONS="detect_leaks=0" \
+    cargo +nightly test -Zbuild-std --target "$HOST_TARGET" \
+    --lib -- splitmut scratch
+else
+  skip "ASan" "rustup nightly with the rust-src component is not installed"
+fi
+
+echo "analyze: OK"

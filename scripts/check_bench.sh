@@ -37,7 +37,7 @@
 #
 # Usage: scripts/check_bench.sh   (from the repo root or anywhere)
 set -euo pipefail
-cd "$(dirname "$0")/.."
+cd "$(dirname "$0")/.." || exit 1
 
 PY=python3
 command -v "$PY" >/dev/null 2>&1 || PY=python

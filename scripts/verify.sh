@@ -13,17 +13,29 @@
 # CI gates layered on top of this script (.github/workflows/ci.yml):
 #   lint        cargo fmt --check + cargo clippy --all-targets -D warnings
 #               (style-lint allowances live in rust/Cargo.toml [lints])
+#               + shellcheck over scripts/*.sh
 #   verify      this script
+#   analysis    scripts/analyze.sh — Miri / ThreadSanitizer /
+#               AddressSanitizer matrix over the unsafe core
+#               (DESIGN.md §17)
 #   e2e         release-mode tests/train_native.rs + tests/conv_native.rs
 #               (the offline train→export→serve closures, MLP and conv)
 #   bench gate  scripts/check_bench.sh — the BENCH_*.json ratio metrics
 #               emitted below vs the committed bench_baselines/*.json,
 #               failing on a >25% throughput regression
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+cd "$(dirname "$0")/../rust" || exit 1
 
 echo "== tier-1: cargo build --release =="
 cargo build --release
+
+echo "== unsafe policy audit (DESIGN.md §17) =="
+# source-side enforcement of the unsafe contract: every unsafe site
+# carries a SAFETY justification, unsafe Send/Sync impls carry AUDIT
+# tags, Ordering::Relaxed stays inside the allow-listed counter modules
+# (rust/unsafe_audit.conf); reuses the release build from the step above
+cargo run --release --bin unsafe_audit -- --report ../UNSAFE_AUDIT.json
+test -s ../UNSAFE_AUDIT.json
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
