@@ -16,6 +16,13 @@
 //!   quantization at k_a = 8, i8 codes, exact i32 accumulation, BN in
 //!   the f64 epilogue.
 //!
+//! A second sweep covers the resnet20-class residual topology
+//! (DESIGN.md §18): the integer residual kernels vs the *same*
+//! `QuantConvNet` served with raw f32 payloads and no activation
+//! quantization (k = 32 packing), so the `speedup_vs_f32` ratio
+//! isolates the integer GEMM + epilogue win with skip connections in
+//! the path.
+//!
 //! Runs fully offline — no artifacts, no PJRT.
 //!
 //! ```bash
@@ -25,7 +32,7 @@
 
 use std::path::PathBuf;
 
-use adaqat::backprop::ConvNativeBackend;
+use adaqat::backprop::{ConvNativeBackend, ResNetNativeBackend};
 use adaqat::data::{synth, DatasetKind};
 use adaqat::kernels::conv::fold_bn;
 use adaqat::kernels::QuantConvNet;
@@ -254,9 +261,79 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", table.render());
 
+    // ---- resnet20-class residual serving (DESIGN.md §18): the same
+    // trainer state served twice — integer kernels at k_w × k_a = 8 vs
+    // raw f32 payloads with no activation quantization (k = 32), both
+    // through QuantConvNet, so the ratio is pure integer-path win
+    let res_trainer = ResNetNativeBackend::new(8, hw, 3, 10, &channels, 1)?;
+    let res_state = res_trainer.init_state(0)?;
+    let f32_net = res_trainer.serving_resnet(&res_state, 32, 32)?;
+
+    println!(
+        "=== integer residual serving vs f32 (resnet {hw}x{hw}x3, stages {channels:?}, k_a=8) ==="
+    );
+    let mut res_table = Table::new(&[
+        "k_w", "batch", "f32 ms", "quant ms", "speedup", "img/s (quant)",
+    ]);
+    for &k in &ks {
+        let quant = res_trainer.serving_resnet(&res_state, k, 8)?;
+        anyhow::ensure!(
+            quant.res.iter().all(|b| {
+                b.c1.gemm.is_integer()
+                    && b.c2.gemm.is_integer()
+                    && b.sc.as_ref().is_none_or(|l| l.gemm.is_integer())
+            }),
+            "k={k}: expected the integer residual path"
+        );
+        // sanity: both paths produce finite logits of the right shape
+        // (bit-exact serving-vs-trainer equality is pinned by
+        // tests/resnet_native.rs; the f32 side deliberately skips
+        // weight and activation quantization)
+        let la = quant.forward(&x[..4 * d], 4, 1);
+        let lb = f32_net.forward(&x[..4 * d], 4, 1);
+        anyhow::ensure!(la.len() == 40 && lb.len() == 40, "k={k}: bad resnet logit shape");
+        anyhow::ensure!(
+            la.iter().chain(&lb).all(|v| v.is_finite()),
+            "k={k}: non-finite resnet logits"
+        );
+
+        for &batch in &batches {
+            let xb = &x[..batch * d];
+            let s_f32 = measure(warmup, iters, || {
+                std::hint::black_box(f32_net.forward(xb, batch, 1));
+            });
+            let s_quant = measure(warmup, iters, || {
+                std::hint::black_box(quant.forward(xb, batch, 1));
+            });
+            let speedup = s_f32.p50_ms / s_quant.p50_ms;
+            let img_s = batch as f64 / (s_quant.p50_ms / 1e3);
+            res_table.row(vec![
+                k.to_string(),
+                batch.to_string(),
+                format!("{:.3}", s_f32.p50_ms),
+                format!("{:.3}", s_quant.p50_ms),
+                format!("{speedup:.2}x"),
+                format!("{img_s:.0}"),
+            ]);
+            rows_json.push(Json::obj(vec![
+                ("k_w", Json::num(k as f64)),
+                ("k_a", Json::num(8.0)),
+                ("batch", Json::num(batch as f64)),
+                ("f32_ms", Json::num(s_f32.p50_ms)),
+                ("quant_ms", Json::num(s_quant.p50_ms)),
+                ("speedup_vs_f32", Json::num(speedup)),
+                ("images_per_sec", Json::num(img_s)),
+            ]));
+        }
+    }
+    println!("{}", res_table.render());
+
     let doc = Json::obj(vec![
         ("bench", Json::str("conv_native")),
         ("model", Json::str("native-smallcnn")),
+        // resnet rows (speedup_vs_f32) share the channel widths as the
+        // per-stage plan, one block per stage
+        ("res_model", Json::str("native-resnet20")),
         ("image_hw", Json::num(hw as f64)),
         (
             "channels",

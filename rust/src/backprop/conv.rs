@@ -1,5 +1,5 @@
-//! Pure-Rust quantized conv training — the smallcnn half of the native
-//! backend (DESIGN.md §13).
+//! Pure-Rust quantized conv training — the conv backends of the native
+//! stack (DESIGN.md §13, §18).
 //!
 //! Until this module, the native backend trained fc stacks only: the
 //! paper's headline models are CNNs, so the conv architectures still
@@ -8,6 +8,15 @@
 //! third [`StepBackend`]: conv→BN→ReLU→pool blocks plus an fc head,
 //! trained entirely in-process with the same offline closure the MLP
 //! backend established (train → export → serve, zero artifacts).
+//! [`ResNetNativeBackend`] extends it to the paper's resnet20-class
+//! topology (DESIGN.md §18): a stem unit, residual blocks whose trunk
+//! (conv→BN→ReLU→conv→BN) joins an identity or 1×1-projection shortcut
+//! under a shared ReLU, global average pooling, and an fc head. The
+//! backward pass differentiates through the join exactly — the gradient
+//! at a block output passes the join ReLU gate, then flows down the
+//! trunk chain *and* through the shortcut adjoint (projection conv
+//! transpose, or a straight copy for identity), and the two input
+//! gradients sum.
 //!
 //! Mechanics, mirroring the MLP backend wherever the two overlap:
 //! * **conv forward** — im2col ([`crate::kernels::conv::im2col`], shared
@@ -40,7 +49,7 @@ use std::cell::{Cell, RefCell};
 use crate::config::ExperimentConfig;
 use crate::data::DatasetKind;
 use crate::kernels::activ;
-use crate::kernels::conv::{avgpool2x2, im2col, ConvGeom, QuantConvNet, BN_EPS};
+use crate::kernels::conv::{avgpool2x2, global_avgpool, im2col, ConvGeom, QuantConvNet, BN_EPS};
 use crate::runtime::{
     init_state_from_manifest, load_state_from_manifest, Batch, ModelManifest, StepBackend,
     StepMetrics, TrainState,
@@ -49,7 +58,7 @@ use crate::serve::packed::{PackedTensor, QuantizedCheckpoint};
 use crate::tensor::checkpoint::Checkpoint;
 use crate::util::json::Json;
 
-use super::manifest::native_smallcnn_manifest;
+use super::manifest::{native_resnet_manifest, native_smallcnn_manifest};
 use super::{fake_quantize_tensor, softmax_metrics, MOMENTUM, WEIGHT_DECAY};
 
 /// Running-statistics update rate: `r ← (1 − m)·r + m·batch`, the
@@ -795,10 +804,867 @@ impl StepBackend for ConvNativeBackend {
     }
 }
 
+/// One conv→BN unit's position in the flat [`TrainState`] layout plus
+/// its geometry: unit `u` owns params `[3u, 3u+3)` (w, γ, β) and BN
+/// stats `[2u, 2u+2)` (mean, var) — the order
+/// [`native_resnet_manifest`] emits.
+#[derive(Clone, Copy)]
+struct UnitIdx {
+    u: usize,
+    geom: ConvGeom,
+}
+
+/// One residual block's units in layout order (c1, c2, optional sc).
+struct ResBlockIdx {
+    name: String,
+    stride: usize,
+    c1: UnitIdx,
+    c2: UnitIdx,
+    sc: Option<UnitIdx>,
+}
+
+/// Everything one resnet forward pass leaves behind for the backward
+/// pass. The per-unit vectors are indexed by [`UnitIdx::u`]; `y` holds
+/// each unit's output *after* its own activation (post-ReLU for the
+/// stem and c1, the raw BN output for c2 and projections — their
+/// nonlinearity belongs to the join).
+struct ResForwardPass {
+    patches: Vec<Vec<f32>>,
+    wq: Vec<Option<Vec<f32>>>,
+    bn_mean: Vec<Vec<f32>>,
+    bn_var: Vec<Vec<f32>>,
+    inv_std: Vec<Vec<f32>>,
+    xhat: Vec<Vec<f32>>,
+    y: Vec<Vec<f32>>,
+    /// Per block: post-join, post-ReLU output.
+    join: Vec<Vec<f32>>,
+    /// Global-average-pooled features, `[rows × c_last]`.
+    gap: Vec<f32>,
+    /// Fake-quantized fc input rows (`None` = `gap` used raw).
+    flat_q: Option<Vec<f32>>,
+    /// Fake-quantized fc weights (`None` = raw).
+    fc_wq: Option<Vec<f32>>,
+    probs: Vec<f32>,
+    loss: f64,
+    correct: usize,
+}
+
+/// The native resnet20-class trainer (DESIGN.md §18) — the fourth
+/// [`StepBackend`]. Geometry lives here; all training state lives in
+/// the caller's [`TrainState`], like every other backend.
+pub struct ResNetNativeBackend {
+    mm: ModelManifest,
+    stem: UnitIdx,
+    blocks: Vec<ResBlockIdx>,
+    /// Total conv→BN units (stem + 2 or 3 per block).
+    units: usize,
+    /// Feature-map shape (h, w, c) entering the global average pool.
+    feat: (usize, usize, usize),
+    /// fc head (c_last, classes).
+    fc: (usize, usize),
+    eval_cache: RefCell<Option<ConvEvalCache>>,
+    /// How many times the eval memo was (re)built — pinned by tests.
+    eval_builds: Cell<usize>,
+}
+
+impl ResNetNativeBackend {
+    pub fn new(
+        batch: usize,
+        hw: usize,
+        in_channels: usize,
+        classes: usize,
+        channels: &[usize],
+        blocks: usize,
+    ) -> anyhow::Result<ResNetNativeBackend> {
+        let mm = native_resnet_manifest(batch, hw, in_channels, classes, channels, blocks)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let mut u = 0usize;
+        let stem = UnitIdx {
+            u,
+            geom: ConvGeom {
+                h: hw,
+                w: hw,
+                c_in: in_channels,
+                c_out: channels[0],
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+        };
+        u += 1;
+        let mut side = hw;
+        let mut c = channels[0];
+        let mut blks = Vec::with_capacity(channels.len() * blocks);
+        for (s, &c_out) in channels.iter().enumerate() {
+            for b in 0..blocks {
+                let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                let name = format!("res{}_{}", s + 1, b + 1);
+                let c1 = UnitIdx {
+                    u,
+                    geom: ConvGeom {
+                        h: side,
+                        w: side,
+                        c_in: c,
+                        c_out,
+                        kh: 3,
+                        kw: 3,
+                        stride,
+                        pad: 1,
+                    },
+                };
+                u += 1;
+                let mid = side / stride;
+                let c2 = UnitIdx {
+                    u,
+                    geom: ConvGeom {
+                        h: mid,
+                        w: mid,
+                        c_in: c_out,
+                        c_out,
+                        kh: 3,
+                        kw: 3,
+                        stride: 1,
+                        pad: 1,
+                    },
+                };
+                u += 1;
+                let sc = if stride != 1 || c != c_out {
+                    let su = UnitIdx {
+                        u,
+                        geom: ConvGeom {
+                            h: side,
+                            w: side,
+                            c_in: c,
+                            c_out,
+                            kh: 1,
+                            kw: 1,
+                            stride,
+                            pad: 0,
+                        },
+                    };
+                    u += 1;
+                    Some(su)
+                } else {
+                    None
+                };
+                blks.push(ResBlockIdx { name, stride, c1, c2, sc });
+                side = mid;
+                c = c_out;
+            }
+        }
+        Ok(ResNetNativeBackend {
+            mm,
+            stem,
+            blocks: blks,
+            units: u,
+            feat: (side, side, c),
+            fc: (c, classes),
+            eval_cache: RefCell::new(None),
+            eval_builds: Cell::new(0),
+        })
+    }
+
+    /// Build from an [`ExperimentConfig`] (`backend = "native"`, a
+    /// resnet model key): `image_hw`/`channels`/`blocks`/`batch` fix
+    /// the geometry, the synthetic dataset fixes classes.
+    pub fn from_config(cfg: &ExperimentConfig) -> anyhow::Result<ResNetNativeBackend> {
+        let kind = DatasetKind::parse(&cfg.dataset).map_err(|e| anyhow::anyhow!(e))?;
+        ResNetNativeBackend::new(
+            cfg.batch,
+            cfg.image_hw,
+            3,
+            kind.num_classes(),
+            &cfg.channels,
+            cfg.blocks,
+        )
+    }
+
+    /// (name, unit) pairs in manifest/[`TrainState`] order: the stem,
+    /// then `c1`/`c2`/(`sc`) per block.
+    fn unit_list(&self) -> Vec<(String, UnitIdx)> {
+        let mut v = vec![("stem".to_string(), self.stem)];
+        for blk in &self.blocks {
+            v.push((format!("{}.c1", blk.name), blk.c1));
+            v.push((format!("{}.c2", blk.name), blk.c2));
+            if let Some(su) = blk.sc {
+                v.push((format!("{}.sc", blk.name), su));
+            }
+        }
+        v
+    }
+
+    /// The `res_blocks` serving-meta array: one `{name, stride, proj}`
+    /// object per block, the format `QuantConvNet::from_packed` reads.
+    fn res_blocks_meta(&self) -> Json {
+        Json::Arr(
+            self.blocks
+                .iter()
+                .map(|b| {
+                    Json::obj(vec![
+                        ("name", Json::str(b.name.clone())),
+                        ("stride", Json::num(b.stride as f64)),
+                        ("proj", Json::Bool(b.sc.is_some())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    fn check_batch(&self, batch: &Batch) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            batch.x.shape
+                == vec![
+                    self.mm.batch,
+                    self.mm.input_hw.0,
+                    self.mm.input_hw.1,
+                    self.mm.in_channels
+                ],
+            "native resnet backend: batch x shape {:?} does not match manifest batch {}",
+            batch.x.shape,
+            self.mm.batch
+        );
+        anyhow::ensure!(
+            batch.y.shape == vec![self.mm.batch],
+            "native resnet backend: bad y shape"
+        );
+        Ok(())
+    }
+
+    /// Forward one conv→BN(→ReLU) unit and append its caches to `fwd`
+    /// (units must be visited in layout order). Identical math to the
+    /// smallcnn block forward minus pooling: im2col, per-patch-row
+    /// activation fake-quant at k_a, per-tensor weight fake-quant at
+    /// k_w, GEMM, batch-stat BN.
+    fn unit_forward(
+        &self,
+        state: &TrainState,
+        u: UnitIdx,
+        src: &[f32],
+        rows: usize,
+        k_w: u32,
+        k_a: u32,
+        quant: bool,
+        relu: bool,
+        fwd: &mut ResForwardPass,
+    ) {
+        debug_assert_eq!(fwd.patches.len(), u.u, "units must be visited in layout order");
+        let g = &u.geom;
+        let (oh, ow) = g.out_hw();
+        let k = g.patch_len();
+        let cout = g.c_out;
+        let prows = rows * oh * ow;
+        let mut p = vec![0.0f32; prows * k];
+        im2col(src, rows, g, &mut p);
+        if quant && k_a < 24 {
+            for r in 0..prows {
+                activ::fake_quantize_row(&mut p[r * k..(r + 1) * k], k_a);
+            }
+        }
+        let w = &state.params[3 * u.u].data;
+        let wql = if quant && (1..=24).contains(&k_w) {
+            let mut q = vec![0.0f32; w.len()];
+            fake_quantize_tensor(w, k_w, &mut q);
+            Some(q)
+        } else {
+            None
+        };
+        let win: &[f32] = wql.as_deref().unwrap_or(w);
+        // z = patches × W  (no conv bias; BN supplies the shift)
+        let mut z = vec![0.0f32; prows * cout];
+        for r in 0..prows {
+            let xrow = &p[r * k..(r + 1) * k];
+            let orow = &mut z[r * cout..(r + 1) * cout];
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                for (o, &wv) in orow.iter_mut().zip(&win[i * cout..(i + 1) * cout]) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        // batch-stat BN (two-pass, f64 accumulation per channel)
+        let n = prows as f64;
+        let mut mean = vec![0.0f32; cout];
+        let mut var = vec![0.0f32; cout];
+        let mut acc = vec![0.0f64; cout];
+        for r in 0..prows {
+            for (a, &v) in acc.iter_mut().zip(&z[r * cout..(r + 1) * cout]) {
+                *a += v as f64;
+            }
+        }
+        for (m, &a) in mean.iter_mut().zip(&acc) {
+            *m = (a / n) as f32;
+        }
+        acc.fill(0.0);
+        for r in 0..prows {
+            for (o, (a, &v)) in acc.iter_mut().zip(&z[r * cout..(r + 1) * cout]).enumerate() {
+                let d = (v - mean[o]) as f64;
+                *a += d * d;
+            }
+        }
+        for (v, &a) in var.iter_mut().zip(&acc) {
+            *v = (a / n) as f32;
+        }
+        let mut inv_std = vec![0.0f32; cout];
+        for (s, &v) in inv_std.iter_mut().zip(&var) {
+            *s = 1.0 / (v + BN_EPS).sqrt();
+        }
+        let gamma = &state.params[3 * u.u + 1].data;
+        let beta = &state.params[3 * u.u + 2].data;
+        let mut xhat = vec![0.0f32; prows * cout];
+        let mut y = vec![0.0f32; prows * cout];
+        for r in 0..prows {
+            for o in 0..cout {
+                let xh = (z[r * cout + o] - mean[o]) * inv_std[o];
+                xhat[r * cout + o] = xh;
+                let v = gamma[o] * xh + beta[o];
+                y[r * cout + o] = if relu && v < 0.0 { 0.0 } else { v };
+            }
+        }
+        fwd.patches.push(p);
+        fwd.wq.push(wql);
+        fwd.bn_mean.push(mean);
+        fwd.bn_var.push(var);
+        fwd.inv_std.push(inv_std);
+        fwd.xhat.push(xhat);
+        fwd.y.push(y);
+    }
+
+    /// The training/probe forward: batch-stat BN, fake-quant at
+    /// (k_w, k_a) when `quant`, residual joins in f32, global average
+    /// pooling through the serving [`global_avgpool`].
+    fn forward(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+        quant: bool,
+    ) -> ResForwardPass {
+        let rows = self.mm.batch;
+        let mut fwd = ResForwardPass {
+            patches: Vec::with_capacity(self.units),
+            wq: Vec::with_capacity(self.units),
+            bn_mean: Vec::with_capacity(self.units),
+            bn_var: Vec::with_capacity(self.units),
+            inv_std: Vec::with_capacity(self.units),
+            xhat: Vec::with_capacity(self.units),
+            y: Vec::with_capacity(self.units),
+            join: Vec::with_capacity(self.blocks.len()),
+            gap: Vec::new(),
+            flat_q: None,
+            fc_wq: None,
+            probs: Vec::new(),
+            loss: 0.0,
+            correct: 0,
+        };
+        self.unit_forward(state, self.stem, &batch.x.data, rows, k_w, k_a, quant, true, &mut fwd);
+        let mut cur = fwd.y[0].clone();
+        for blk in &self.blocks {
+            self.unit_forward(state, blk.c1, &cur, rows, k_w, k_a, quant, true, &mut fwd);
+            let mid = fwd.y[blk.c1.u].clone();
+            self.unit_forward(state, blk.c2, &mid, rows, k_w, k_a, quant, false, &mut fwd);
+            if let Some(su) = blk.sc {
+                self.unit_forward(state, su, &cur, rows, k_w, k_a, quant, false, &mut fwd);
+            }
+            let trunk = &fwd.y[blk.c2.u];
+            let shortcut: &[f32] = match blk.sc {
+                Some(su) => &fwd.y[su.u],
+                None => &cur,
+            };
+            let mut joined = vec![0.0f32; trunk.len()];
+            for ((j, &t), &s) in joined.iter_mut().zip(trunk).zip(shortcut) {
+                let u = t + s;
+                *j = if u < 0.0 { 0.0 } else { u };
+            }
+            cur = joined.clone();
+            fwd.join.push(joined);
+        }
+
+        // global average pool, then the fc head over [rows × c_last]
+        let (flat, classes) = self.fc;
+        let (fh, fw, fc) = self.feat;
+        let mut gap = vec![0.0f32; rows * flat];
+        global_avgpool(&cur, rows, fh, fw, fc, &mut gap);
+        let flat_q = if quant && k_a < 24 {
+            let mut q = gap.clone();
+            for r in 0..rows {
+                activ::fake_quantize_row(&mut q[r * flat..(r + 1) * flat], k_a);
+            }
+            Some(q)
+        } else {
+            None
+        };
+        let fcw = &state.params[3 * self.units].data;
+        let fc_wq = if quant && (1..=24).contains(&k_w) {
+            let mut q = vec![0.0f32; fcw.len()];
+            fake_quantize_tensor(fcw, k_w, &mut q);
+            Some(q)
+        } else {
+            None
+        };
+        let fcb = &state.params[3 * self.units + 1].data;
+        let xin: &[f32] = flat_q.as_deref().unwrap_or(&gap);
+        let win: &[f32] = fc_wq.as_deref().unwrap_or(fcw);
+        let mut logits = vec![0.0f32; rows * classes];
+        for r in 0..rows {
+            let xrow = &xin[r * flat..(r + 1) * flat];
+            let orow = &mut logits[r * classes..(r + 1) * classes];
+            orow.copy_from_slice(fcb);
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                for (o, &wv) in orow.iter_mut().zip(&win[i * classes..(i + 1) * classes]) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        let (loss, correct, probs) = softmax_metrics(&logits, &batch.y.data, rows, classes);
+        fwd.gap = gap;
+        fwd.flat_q = flat_q;
+        fwd.fc_wq = fc_wq;
+        fwd.probs = probs;
+        fwd.loss = loss;
+        fwd.correct = correct;
+        fwd
+    }
+
+    /// BN backward + weight gradient + SGD update for one unit; `dy` is
+    /// the gradient at the unit's own output (the caller applies any
+    /// ReLU gating first). Returns the gradient w.r.t. the unit input
+    /// when `need_din` (the stem has no upstream, so it skips the
+    /// col2im adjoint).
+    fn unit_backward(
+        &self,
+        state: &mut TrainState,
+        fwd: &ResForwardPass,
+        u: UnitIdx,
+        dy: &[f32],
+        rows: usize,
+        lr: f32,
+        need_din: bool,
+    ) -> Option<Vec<f32>> {
+        let g = u.geom;
+        let (oh, ow) = g.out_hw();
+        let cout = g.c_out;
+        let prows = rows * oh * ow;
+        debug_assert_eq!(dy.len(), prows * cout);
+        let pi = 3 * u.u;
+        // batch-norm backward (batch statistics)
+        let inv_std = &fwd.inv_std[u.u];
+        let xhat = &fwd.xhat[u.u];
+        let n = prows as f64;
+        let mut sum_dy = vec![0.0f64; cout];
+        let mut sum_dy_xh = vec![0.0f64; cout];
+        for r in 0..prows {
+            for o in 0..cout {
+                let d = dy[r * cout + o] as f64;
+                sum_dy[o] += d;
+                sum_dy_xh[o] += d * xhat[r * cout + o] as f64;
+            }
+        }
+        let ggamma: Vec<f32> = sum_dy_xh.iter().map(|&v| v as f32).collect();
+        let gbeta: Vec<f32> = sum_dy.iter().map(|&v| v as f32).collect();
+        let gamma = &state.params[pi + 1].data;
+        let mut dz = vec![0.0f32; prows * cout];
+        for o in 0..cout {
+            let m1 = (sum_dy[o] / n) as f32;
+            let m2 = (sum_dy_xh[o] / n) as f32;
+            let f = gamma[o] * inv_std[o];
+            for r in 0..prows {
+                dz[r * cout + o] = f * (dy[r * cout + o] - m1 - xhat[r * cout + o] * m2);
+            }
+        }
+        // weight gradient x̂ᵀδ over patch rows, then decay on raw w
+        let k = g.patch_len();
+        let mut gwc = vec![0.0f32; k * cout];
+        for r in 0..prows {
+            let xrow = &fwd.patches[u.u][r * k..(r + 1) * k];
+            let drow = &dz[r * cout..(r + 1) * cout];
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                for (gv, &dv) in gwc[i * cout..(i + 1) * cout].iter_mut().zip(drow) {
+                    *gv += xv * dv;
+                }
+            }
+        }
+        for (gv, &wv) in gwc.iter_mut().zip(&state.params[pi].data) {
+            *gv += WEIGHT_DECAY * wv;
+        }
+        // input gradient through ŵ, scattered back through im2col
+        let din = if need_din {
+            let win: &[f32] = fwd.wq[u.u].as_deref().unwrap_or(&state.params[pi].data);
+            let mut dp = vec![0.0f32; prows * k];
+            for r in 0..prows {
+                let drow = &dz[r * cout..(r + 1) * cout];
+                let prow = &mut dp[r * k..(r + 1) * k];
+                for (i, pv) in prow.iter_mut().enumerate() {
+                    let mut s = 0.0f32;
+                    for (&wv, &dv) in win[i * cout..(i + 1) * cout].iter().zip(drow) {
+                        s += wv * dv;
+                    }
+                    *pv = s;
+                }
+            }
+            let mut din = vec![0.0f32; rows * g.h * g.w * g.c_in];
+            col2im(&dp, rows, &g, &mut din);
+            Some(din)
+        } else {
+            None
+        };
+        sgd_update(&mut state.params[pi].data, &mut state.momentum[pi].data, &gwc, lr);
+        sgd_update(&mut state.params[pi + 1].data, &mut state.momentum[pi + 1].data, &ggamma, lr);
+        sgd_update(&mut state.params[pi + 2].data, &mut state.momentum[pi + 2].data, &gbeta, lr);
+        din
+    }
+
+    /// STE backward + SGD update through the whole net. The residual
+    /// join backward: gate by the join ReLU, send the gated gradient
+    /// down the trunk (c2 → ReLU gate at c1's output → c1) *and*
+    /// through the shortcut adjoint (projection unit backward, or a
+    /// straight copy for identity), then sum the two input gradients.
+    fn backward_update(
+        &self,
+        state: &mut TrainState,
+        fwd: &ResForwardPass,
+        batch: &Batch,
+        lr: f32,
+    ) {
+        let rows = self.mm.batch;
+        let (flat, classes) = self.fc;
+        let nu = self.units;
+
+        // δ at the logits: (softmax − one-hot) / rows
+        let mut delta: Vec<f32> = fwd.probs.clone();
+        for r in 0..rows {
+            delta[r * classes + batch.y.data[r] as usize] -= 1.0;
+        }
+        let inv_rows = 1.0 / rows as f32;
+        for v in delta.iter_mut() {
+            *v *= inv_rows;
+        }
+
+        // ---- fc head over the pooled features
+        let xh: &[f32] = fwd.flat_q.as_deref().unwrap_or(&fwd.gap);
+        let mut gw = vec![0.0f32; flat * classes];
+        for r in 0..rows {
+            let xrow = &xh[r * flat..(r + 1) * flat];
+            let drow = &delta[r * classes..(r + 1) * classes];
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                for (g, &dv) in gw[i * classes..(i + 1) * classes].iter_mut().zip(drow) {
+                    *g += xv * dv;
+                }
+            }
+        }
+        for (g, &wv) in gw.iter_mut().zip(&state.params[3 * nu].data) {
+            *g += WEIGHT_DECAY * wv;
+        }
+        let mut gb = vec![0.0f32; classes];
+        for r in 0..rows {
+            for (g, &dv) in gb.iter_mut().zip(&delta[r * classes..(r + 1) * classes]) {
+                *g += dv;
+            }
+        }
+        let fcw: &[f32] = fwd.fc_wq.as_deref().unwrap_or(&state.params[3 * nu].data);
+        let mut dflat = vec![0.0f32; rows * flat];
+        for r in 0..rows {
+            let drow = &delta[r * classes..(r + 1) * classes];
+            let ndrow = &mut dflat[r * flat..(r + 1) * flat];
+            for (i, nd) in ndrow.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for (&wv, &dv) in fcw[i * classes..(i + 1) * classes].iter().zip(drow) {
+                    s += wv * dv;
+                }
+                *nd = s;
+            }
+        }
+        sgd_update(&mut state.params[3 * nu].data, &mut state.momentum[3 * nu].data, &gw, lr);
+        sgd_update(
+            &mut state.params[3 * nu + 1].data,
+            &mut state.momentum[3 * nu + 1].data,
+            &gb,
+            lr,
+        );
+
+        // ---- global-average-pool backward: δ spreads as δ/(h·w)
+        let (fh, fww, fcc) = self.feat;
+        let hw = fh * fww;
+        let inv = 1.0 / hw as f32;
+        let mut dcur = vec![0.0f32; rows * hw * fcc];
+        for r in 0..rows {
+            for p in 0..hw {
+                for ch in 0..fcc {
+                    dcur[(r * hw + p) * fcc + ch] = dflat[r * fcc + ch] * inv;
+                }
+            }
+        }
+
+        // ---- residual blocks, last to first
+        for (bi, blk) in self.blocks.iter().enumerate().rev() {
+            // ReLU gate at the join output
+            let mut dj = dcur;
+            for (d, &jv) in dj.iter_mut().zip(&fwd.join[bi]) {
+                if jv <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+            // trunk chain: c2, then the ReLU gate at c1's output, then c1
+            let mut dmid = self
+                .unit_backward(state, fwd, blk.c2, &dj, rows, lr, true)
+                .expect("trunk c2 always needs din");
+            for (d, &yv) in dmid.iter_mut().zip(&fwd.y[blk.c1.u]) {
+                if yv <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+            let din_trunk = self
+                .unit_backward(state, fwd, blk.c1, &dmid, rows, lr, true)
+                .expect("trunk c1 always needs din");
+            // shortcut adjoint, summed with the trunk's input gradient
+            dcur = match blk.sc {
+                Some(su) => {
+                    let mut d = self
+                        .unit_backward(state, fwd, su, &dj, rows, lr, true)
+                        .expect("projection always needs din");
+                    for (a, &b) in d.iter_mut().zip(&din_trunk) {
+                        *a += b;
+                    }
+                    d
+                }
+                None => {
+                    let mut d = din_trunk;
+                    for (a, &b) in d.iter_mut().zip(&dj) {
+                        *a += b;
+                    }
+                    d
+                }
+            };
+        }
+
+        // ---- stem: ReLU gate, no upstream gradient needed
+        let mut dstem = dcur;
+        for (d, &yv) in dstem.iter_mut().zip(&fwd.y[0]) {
+            if yv <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        self.unit_backward(state, fwd, self.stem, &dstem, rows, lr, false);
+    }
+
+    /// Assemble a full serving checkpoint for the current state — the
+    /// same tensor set `train::save_checkpoint` writes, with this
+    /// backend's serving meta plus `k_a`.
+    pub fn to_checkpoint(&self, state: &TrainState, k_a: u32) -> Checkpoint {
+        let mut meta = Json::obj(vec![("k_a", Json::num(k_a as f64))]);
+        if let Json::Obj(m) = &mut meta {
+            for (k, v) in self.checkpoint_meta() {
+                m.insert(k, v);
+            }
+        }
+        let mut ck = Checkpoint::new(meta);
+        for (spec, t) in self.mm.params.iter().zip(&state.params) {
+            ck.push(spec.name.clone(), t.clone());
+        }
+        for (spec, t) in self.mm.bn.iter().zip(&state.bn) {
+            ck.push(spec.name.clone(), t.clone());
+        }
+        ck
+    }
+
+    /// Pack the current weights + BN statistics exactly as
+    /// `adaqat export` packs a saved checkpoint and build the integer
+    /// residual kernels — the serving-identical forward.
+    pub fn serving_resnet(
+        &self,
+        state: &TrainState,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<QuantConvNet> {
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            ("k_a", Json::num(k_a as f64)),
+            ("res_stem", Json::str("stem")),
+            ("res_blocks", self.res_blocks_meta()),
+            ("mlp_layers", Json::Arr(vec![Json::str("fc1")])),
+            (
+                "input_hw",
+                Json::Arr(vec![
+                    Json::num(self.mm.input_hw.0 as f64),
+                    Json::num(self.mm.input_hw.1 as f64),
+                ]),
+            ),
+            ("in_channels", Json::num(self.mm.in_channels as f64)),
+        ]));
+        let pack = |t: &crate::tensor::Tensor| -> PackedTensor {
+            if (1..=24).contains(&k_w) {
+                PackedTensor::quantize(t, k_w)
+            } else {
+                PackedTensor::raw(t)
+            }
+        };
+        for (name, u) in self.unit_list() {
+            q.push(format!("{name}.w"), pack(&state.params[3 * u.u]));
+            q.push(format!("{name}.bn.g"), PackedTensor::raw(&state.params[3 * u.u + 1]));
+            q.push(format!("{name}.bn.b"), PackedTensor::raw(&state.params[3 * u.u + 2]));
+            q.push(format!("{name}.bn.mean"), PackedTensor::raw(&state.bn[2 * u.u]));
+            q.push(format!("{name}.bn.var"), PackedTensor::raw(&state.bn[2 * u.u + 1]));
+        }
+        q.push("fc1.w", pack(&state.params[3 * self.units]));
+        q.push("fc1.b", PackedTensor::raw(&state.params[3 * self.units + 1]));
+        QuantConvNet::from_packed(&q)
+    }
+
+    /// [`ResNetNativeBackend::serving_resnet`] behind the
+    /// fingerprint-keyed memo (weights, BN stats, bit-widths).
+    fn cached_serving_resnet(
+        &self,
+        state: &TrainState,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<std::cell::RefMut<'_, QuantConvNet>> {
+        let fp = state_fingerprint(state);
+        let mut cache = self.eval_cache.borrow_mut();
+        let hit = matches!(
+            &*cache,
+            Some(c) if c.fingerprint == fp && c.k_w == k_w && c.k_a == k_a
+        );
+        if !hit {
+            *cache = Some(ConvEvalCache {
+                fingerprint: fp,
+                k_w,
+                k_a,
+                net: self.serving_resnet(state, k_w, k_a)?,
+            });
+            self.eval_builds.set(self.eval_builds.get() + 1);
+        }
+        Ok(std::cell::RefMut::map(cache, |c| {
+            &mut c.as_mut().expect("just populated").net
+        }))
+    }
+
+    /// Serving-identical predictions for `rows` flattened NHWC images —
+    /// what the resnet e2e test cross-checks the served model against.
+    pub fn predict(
+        &self,
+        state: &TrainState,
+        x: &[f32],
+        rows: usize,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<Vec<usize>> {
+        Ok(self.cached_serving_resnet(state, k_w, k_a)?.classify(x, rows, 1))
+    }
+}
+
+impl StepBackend for ResNetNativeBackend {
+    fn mm(&self) -> &ModelManifest {
+        &self.mm
+    }
+
+    fn init_state(&self, seed: u64) -> anyhow::Result<TrainState> {
+        init_state_from_manifest(&self.mm, seed)
+    }
+
+    fn load_state(&self, ck: &Checkpoint, seed: u64) -> anyhow::Result<TrainState> {
+        load_state_from_manifest(&self.mm, ck, seed)
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        lr: f32,
+        k_w: u32,
+        k_a: u32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        let fwd = self.forward(state, batch, k_w, k_a, !fp32);
+        self.backward_update(state, &fwd, batch, lr);
+        // running statistics move only on real train steps (probes and
+        // evals are forward-only, like the PJRT graphs)
+        for u in 0..self.units {
+            for (r, &b) in state.bn[2 * u].data.iter_mut().zip(&fwd.bn_mean[u]) {
+                *r = (1.0 - BN_MOMENTUM) * *r + BN_MOMENTUM * b;
+            }
+            for (r, &b) in state.bn[2 * u + 1].data.iter_mut().zip(&fwd.bn_var[u]) {
+                *r = (1.0 - BN_MOMENTUM) * *r + BN_MOMENTUM * b;
+            }
+        }
+        Ok(StepMetrics { loss: fwd.loss as f32, correct: fwd.correct as f32 })
+    }
+
+    fn probe_loss(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        let fwd = self.forward(state, batch, k_w, k_a, true);
+        Ok(StepMetrics { loss: fwd.loss as f32, correct: fwd.correct as f32 })
+    }
+
+    fn eval_batch(
+        &self,
+        state: &TrainState,
+        batch: &Batch,
+        k_w: u32,
+        k_a: u32,
+        fp32: bool,
+    ) -> anyhow::Result<StepMetrics> {
+        self.check_batch(batch)?;
+        let rows = self.mm.batch;
+        let classes = self.mm.num_classes;
+        // eval = the serving forward (memoized), so eval metrics and an
+        // exported checkpoint can never drift apart (see the smallcnn
+        // backend for the fp32-as-identity-widths rationale)
+        let (k_w, k_a) = if fp32 { (32, 32) } else { (k_w, k_a) };
+        let net = self.cached_serving_resnet(state, k_w, k_a)?;
+        let logits = net.forward(&batch.x.data, rows, 1);
+        let (loss, correct, _) = softmax_metrics(&logits, &batch.y.data, rows, classes);
+        Ok(StepMetrics { loss: loss as f32, correct: correct as f32 })
+    }
+
+    fn has_fp32(&self) -> bool {
+        true
+    }
+
+    fn checkpoint_meta(&self) -> Vec<(String, Json)> {
+        vec![
+            ("backend".to_string(), Json::str("native")),
+            ("res_stem".to_string(), Json::str("stem")),
+            ("res_blocks".to_string(), self.res_blocks_meta()),
+            (
+                "mlp_layers".to_string(),
+                Json::Arr(vec![Json::str("fc1")]),
+            ),
+            (
+                "input_hw".to_string(),
+                Json::Arr(vec![
+                    Json::num(self.mm.input_hw.0 as f64),
+                    Json::num(self.mm.input_hw.1 as f64),
+                ]),
+            ),
+            ("in_channels".to_string(), Json::num(self.mm.in_channels as f64)),
+            ("num_classes".to_string(), Json::num(self.mm.num_classes as f64)),
+            ("serve_batch".to_string(), Json::num(self.mm.batch as f64)),
+        ]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backprop::manifest::NATIVE_SMALLCNN_KEY;
+    use crate::backprop::manifest::{NATIVE_RESNET_KEY, NATIVE_SMALLCNN_KEY};
     use crate::data::{loader::Loader, synth, DatasetKind};
     use crate::tensor::{IntTensor, Tensor};
 
@@ -1028,5 +1894,176 @@ mod tests {
         assert_eq!(backend.mm().key, NATIVE_SMALLCNN_KEY);
         assert_eq!(backend.mm().batch, 4);
         assert_eq!(backend.blocks.len(), 1);
+    }
+
+    /// A tiny resnet backend + one real data batch: 8×8×3 images, two
+    /// stages ([4, 8]) of one block each — one identity block, one
+    /// stride-2 projection block — GAP over 4×4×8, fc to 10 classes.
+    fn tiny_res() -> (ResNetNativeBackend, Batch) {
+        let backend = ResNetNativeBackend::new(8, 8, 3, 10, &[4, 8], 1).unwrap();
+        let ds = synth::generate_sized(DatasetKind::Cifar10, 8, 3, 0, 8, 8).into_shared();
+        let batch = Loader::new(ds, 8, false).epoch(0).remove(0);
+        (backend, batch)
+    }
+
+    #[test]
+    fn resnet_geometry_and_param_layout_line_up() {
+        let (backend, _) = tiny_res();
+        // stem + (c1, c2) + (c1, c2, sc) = 6 units
+        assert_eq!(backend.units, 6);
+        assert_eq!(backend.blocks.len(), 2);
+        assert!(backend.blocks[0].sc.is_none(), "same-width stride-1 block is identity");
+        assert!(backend.blocks[1].sc.is_some(), "stage transition needs a projection");
+        assert_eq!(backend.blocks[1].stride, 2);
+        assert_eq!(backend.blocks[1].c1.geom.h, 8);
+        assert_eq!(backend.blocks[1].c2.geom.h, 4);
+        assert_eq!(backend.blocks[1].sc.unwrap().geom.kh, 1);
+        assert_eq!(backend.feat, (4, 4, 8));
+        assert_eq!(backend.fc, (8, 10));
+        assert_eq!(backend.mm.params.len(), 3 * 6 + 2);
+        assert_eq!(backend.mm.bn.len(), 2 * 6);
+        let names: Vec<String> = backend.unit_list().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(
+            names,
+            vec!["stem", "res1_1.c1", "res1_1.c2", "res2_1.c1", "res2_1.c2", "res2_1.sc"]
+        );
+        assert!(
+            ResNetNativeBackend::new(8, 9, 3, 10, &[4, 8], 1).is_err(),
+            "9 is not divisible by the stage-transition downsample"
+        );
+    }
+
+    #[test]
+    fn resnet_fp32_gradients_match_finite_differences() {
+        // same recipe as the smallcnn test: infer the analytic gradient
+        // from one momentum-free update and compare against central
+        // differences. The coordinates cover the stem, the identity
+        // block's trunk, the projection block's trunk AND its 1×1
+        // shortcut (both join adjoints), BN γ/β, and the fc head.
+        let (backend, batch) = tiny_res();
+        let state0 = backend.init_state(1).unwrap();
+        let lr = 1e-3f32;
+        let mut stepped = state0.clone();
+        backend.train_step(&mut stepped, &batch, lr, 32, 32, true).unwrap();
+        let eps = 1e-2f32;
+        for (pi, xi, wd) in [
+            (0usize, 61usize, true), // stem.w
+            (1, 2, false),           // stem.bn.g
+            (3, 40, true),           // res1_1.c1.w (identity trunk)
+            (8, 3, false),           // res1_1.c2.bn.b
+            (9, 100, true),          // res2_1.c1.w (projection trunk)
+            (15, 7, true),           // res2_1.sc.w (shortcut adjoint)
+            (16, 5, false),          // res2_1.sc.bn.g
+            (18, 33, true),          // fc1.w
+            (19, 5, false),          // fc1.b
+        ] {
+            let analytic = (state0.params[pi].data[xi] - stepped.params[pi].data[xi]) / lr
+                - if wd { WEIGHT_DECAY * state0.params[pi].data[xi] } else { 0.0 };
+            let mut plus = state0.clone();
+            plus.params[pi].data[xi] += eps;
+            let lp = backend.probe_loss(&plus, &batch, 32, 32).unwrap().loss;
+            let mut minus = state0.clone();
+            minus.params[pi].data[xi] -= eps;
+            let lm = backend.probe_loss(&minus, &batch, 32, 32).unwrap().loss;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (analytic - fd).abs() <= 3e-2 * analytic.abs().max(fd.abs()).max(0.05),
+                "param {pi}[{xi}]: analytic {analytic} vs finite-diff {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn resnet_training_reduces_loss_and_moves_running_stats() {
+        let (backend, batch) = tiny_res();
+        let mut state = backend.init_state(0).unwrap();
+        let init_stem = state.bn[0].data.clone();
+        let init_sc = state.bn[2 * 5].data.clone();
+        let first = backend.train_step(&mut state, &batch, 0.05, 8, 8, false).unwrap();
+        let mut last = first;
+        for _ in 0..80 {
+            last = backend.train_step(&mut state, &batch, 0.05, 8, 8, false).unwrap();
+        }
+        assert!(last.loss.is_finite());
+        assert!(
+            last.loss < first.loss * 0.8,
+            "loss did not decrease: {} -> {}",
+            first.loss,
+            last.loss
+        );
+        assert!(state.is_finite());
+        assert_ne!(state.bn[0].data, init_stem, "stem running mean never updated");
+        assert_ne!(state.bn[2 * 5].data, init_sc, "projection running mean never updated");
+    }
+
+    #[test]
+    fn resnet_probes_do_not_move_running_stats() {
+        let (backend, batch) = tiny_res();
+        let state = backend.init_state(3).unwrap();
+        let before: Vec<Vec<f32>> = state.bn.iter().map(|t| t.data.clone()).collect();
+        backend.probe_loss(&state, &batch, 4, 8).unwrap();
+        backend.eval_batch(&state, &batch, 4, 8, false).unwrap();
+        for (t, b) in state.bn.iter().zip(&before) {
+            assert_eq!(&t.data, b);
+        }
+    }
+
+    #[test]
+    fn resnet_eval_batch_equals_serving_math_and_memo_tracks_state() {
+        let (backend, batch) = tiny_res();
+        let mut state = backend.init_state(9).unwrap();
+        for _ in 0..5 {
+            backend.train_step(&mut state, &batch, 0.05, 8, 8, false).unwrap();
+        }
+        let ev = backend.eval_batch(&state, &batch, 4, 8, false).unwrap();
+        // recompute through a fresh serving net: must agree exactly
+        let net = backend.serving_resnet(&state, 4, 8).unwrap();
+        let logits = net.forward(&batch.x.data, 8, 1);
+        let (loss, correct, _) = softmax_metrics(&logits, &batch.y.data, 8, 10);
+        assert_eq!(ev.loss.to_bits(), (loss as f32).to_bits());
+        assert_eq!(ev.correct, correct as f32);
+        let fp = backend.eval_batch(&state, &batch, 32, 32, true).unwrap();
+        assert!(fp.loss.is_finite());
+        // the memo keys on (weights + BN stats, widths), like smallcnn
+        let builds = backend.eval_builds.get();
+        backend.eval_batch(&state, &batch, 32, 32, true).unwrap();
+        assert_eq!(backend.eval_builds.get(), builds, "repeat eval must hit the memo");
+        state.bn[0].data[0] += 0.25;
+        backend.eval_batch(&state, &batch, 32, 32, true).unwrap();
+        assert_eq!(backend.eval_builds.get(), builds + 1, "BN-stat change rebuilds");
+    }
+
+    #[test]
+    fn resnet_state_roundtrips_through_checkpoint() {
+        let (backend, batch) = tiny_res();
+        let mut state = backend.init_state(5).unwrap();
+        for _ in 0..3 {
+            backend.train_step(&mut state, &batch, 0.05, 8, 8, false).unwrap();
+        }
+        let ck = backend.to_checkpoint(&state, 8);
+        assert!(ck.meta.get("res_blocks").is_some(), "serving meta must ride along");
+        let restored = backend.load_state(&ck, 0).unwrap();
+        let a = backend.probe_loss(&state, &batch, 4, 4).unwrap();
+        let b = backend.probe_loss(&restored, &batch, 4, 4).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        // and predictions go through the serving kernels identically
+        let pa = backend.predict(&state, &batch.x.data, 8, 4, 8).unwrap();
+        let pb = backend.predict(&restored, &batch.x.data, 8, 4, 8).unwrap();
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn resnet_from_config_uses_channels_and_blocks() {
+        let mut cfg = ExperimentConfig::default_for(NATIVE_RESNET_KEY);
+        cfg.backend = "native".to_string();
+        cfg.image_hw = 8;
+        cfg.batch = 4;
+        cfg.channels = vec![4, 8];
+        cfg.blocks = 1;
+        let backend = ResNetNativeBackend::from_config(&cfg).unwrap();
+        assert_eq!(backend.mm().key, NATIVE_RESNET_KEY);
+        assert_eq!(backend.mm().batch, 4);
+        assert_eq!(backend.blocks.len(), 2);
+        assert_eq!(backend.units, 6);
     }
 }

@@ -1,4 +1,5 @@
-//! Synthetic in-Rust manifests for the native backends (MLP + smallcnn).
+//! Synthetic in-Rust manifests for the native backends (MLP, smallcnn,
+//! resnet20-class).
 //!
 //! The PJRT path gets its [`ModelManifest`] from `python/compile/aot.py`
 //! via `manifest.json`; the native backends build the same structure
@@ -26,6 +27,22 @@ pub const NATIVE_SMALLCNN_KEY: &str = "native-smallcnn";
 /// Whether a model key selects the native conv backend (vs the MLP).
 pub fn is_native_conv_model(model: &str) -> bool {
     model == "smallcnn" || model == NATIVE_SMALLCNN_KEY
+}
+
+/// Manifest key of the native residual model — distinct from the PJRT
+/// "resnet20" key for the same reason [`NATIVE_SMALLCNN_KEY`] is
+/// distinct from "smallcnn": an exported checkpoint carrying the PJRT
+/// key would resolve the compiled manifest's parameter roles on an
+/// artifact-bearing box, match none of the stem/res…/fc1 names, and
+/// silently pack every tensor raw. `config_from` maps the user-facing
+/// `--model resnet20 --backend native` onto this key.
+pub const NATIVE_RESNET_KEY: &str = "native-resnet20";
+
+/// Whether a model key selects the native residual backend. Only
+/// consulted when the backend is already "native" — the bare
+/// "resnet20" spelling still names the PJRT artifact model elsewhere.
+pub fn is_native_resnet_model(model: &str) -> bool {
+    model == "resnet20" || model == NATIVE_RESNET_KEY
 }
 
 /// The smallcnn architecture's geometric contract, shared by the
@@ -223,6 +240,208 @@ pub fn native_smallcnn_manifest(
     })
 }
 
+/// The resnet20-class architecture's geometric contract, shared by the
+/// manifest builder and `ExperimentConfig::validate` (same pattern as
+/// [`validate_smallcnn_geometry`]): at least one non-zero stage width,
+/// at least one block per stage, and an image side divisible by
+/// 2^(stages−1) — the first block of every stage after the first
+/// downsamples by stride 2, and global average pooling needs at least
+/// a 1×1 map at the end.
+pub fn validate_resnet_geometry(
+    hw: usize,
+    channels: &[usize],
+    blocks: usize,
+) -> Result<(), String> {
+    if channels.is_empty() || channels.contains(&0) {
+        return Err("native resnet: need at least one non-zero stage width".into());
+    }
+    if blocks == 0 {
+        return Err("native resnet: need at least one residual block per stage".into());
+    }
+    let downs = channels.len() - 1;
+    if downs >= usize::BITS as usize || hw % (1usize << downs) != 0 || hw >> downs == 0 {
+        return Err(format!(
+            "native resnet: image_hw {hw} must be divisible by 2^{downs} \
+             (one stride-2 downsample per stage transition)"
+        ));
+    }
+    Ok(())
+}
+
+/// Push one conv→BN unit (weight + γ/β parameters, running mean/var
+/// stats, and a conv [`LayerGeom`] at the unit's output resolution)
+/// onto a resnet manifest under construction. `k` is the square kernel
+/// side (3 for trunk convs, 1 for projection shortcuts).
+fn push_conv_unit(
+    params: &mut Vec<ParamSpec>,
+    bn: &mut Vec<BnSpec>,
+    geoms: &mut Vec<LayerGeom>,
+    name: &str,
+    k: usize,
+    c_in: usize,
+    c_out: usize,
+    out_side: usize,
+) {
+    params.push(ParamSpec {
+        name: format!("{name}.w"),
+        shape: vec![k, k, c_in, c_out],
+        init: format!("kaiming:{}", k * k * c_in),
+        role: "conv_w".to_string(),
+    });
+    params.push(ParamSpec {
+        name: format!("{name}.bn.g"),
+        shape: vec![c_out],
+        init: "ones".to_string(),
+        role: "bn_g".to_string(),
+    });
+    params.push(ParamSpec {
+        name: format!("{name}.bn.b"),
+        shape: vec![c_out],
+        init: "zeros".to_string(),
+        role: "bn_b".to_string(),
+    });
+    bn.push(BnSpec {
+        name: format!("{name}.bn.mean"),
+        shape: vec![c_out],
+        init: "zeros".to_string(),
+    });
+    bn.push(BnSpec {
+        name: format!("{name}.bn.var"),
+        shape: vec![c_out],
+        init: "ones".to_string(),
+    });
+    geoms.push(LayerGeom {
+        name: name.to_string(),
+        kind: "conv".to_string(),
+        weight_count: k * k * c_in * c_out,
+        macs: k * k * c_in * c_out * out_side * out_side,
+        fixed8: false,
+    });
+}
+
+/// Build the manifest for the native resnet20-class model (DESIGN.md
+/// §18): a 3×3 stride-1 stem conv→BN→ReLU into `channels[0]`, then
+/// `channels.len()` stages of `blocks` residual blocks each, global
+/// average pooling, and an `fc1` head over the final stage width.
+///
+/// Block `res{s}_{b}` is conv→BN→ReLU→conv→BN with a join-then-ReLU:
+/// the first block of every stage after the first runs its `c1` conv
+/// (and its 1×1 projection shortcut `sc`) at stride 2; every other
+/// block keeps stride 1 and an identity shortcut. A projection is
+/// emitted exactly when the shortcut must change shape (stride ≠ 1 or
+/// c_in ≠ c_out) — the classic ResNet "option B" rule. All weight
+/// tensors end in `.w` so `export_packed`'s artifact-free heuristic
+/// packs every conv and the head while BN tensors stay raw.
+///
+/// The paper's ResNet20/CIFAR-10 is `channels = [16, 32, 64]`,
+/// `blocks = 3`, `hw = 32` (1 stem + 18 trunk convs + fc = 20 weight
+/// layers); the defaults stay smaller so the offline loop is quick.
+pub fn native_resnet_manifest(
+    batch: usize,
+    hw: usize,
+    in_channels: usize,
+    classes: usize,
+    channels: &[usize],
+    blocks: usize,
+) -> Result<ModelManifest, String> {
+    if batch == 0 {
+        return Err("native resnet: batch must be >= 1".into());
+    }
+    if hw == 0 || in_channels == 0 || classes < 2 {
+        return Err("native resnet: need hw >= 1, channels >= 1, classes >= 2".into());
+    }
+    validate_resnet_geometry(hw, channels, blocks)?;
+
+    let mut params = vec![];
+    let mut bn = vec![];
+    let mut geoms = vec![];
+    let mut side = hw;
+    let mut c_in = channels[0];
+    push_conv_unit(
+        &mut params,
+        &mut bn,
+        &mut geoms,
+        "stem",
+        3,
+        in_channels,
+        channels[0],
+        side,
+    );
+    for (s, &c_out) in channels.iter().enumerate() {
+        for b in 0..blocks {
+            let name = format!("res{}_{}", s + 1, b + 1);
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            if stride == 2 {
+                side /= 2;
+            }
+            push_conv_unit(
+                &mut params,
+                &mut bn,
+                &mut geoms,
+                &format!("{name}.c1"),
+                3,
+                c_in,
+                c_out,
+                side,
+            );
+            push_conv_unit(
+                &mut params,
+                &mut bn,
+                &mut geoms,
+                &format!("{name}.c2"),
+                3,
+                c_out,
+                c_out,
+                side,
+            );
+            if stride != 1 || c_in != c_out {
+                push_conv_unit(
+                    &mut params,
+                    &mut bn,
+                    &mut geoms,
+                    &format!("{name}.sc"),
+                    1,
+                    c_in,
+                    c_out,
+                    side,
+                );
+            }
+            c_in = c_out;
+        }
+    }
+    params.push(ParamSpec {
+        name: "fc1.w".to_string(),
+        shape: vec![c_in, classes],
+        init: format!("kaiming:{c_in}"),
+        role: "fc_w".to_string(),
+    });
+    params.push(ParamSpec {
+        name: "fc1.b".to_string(),
+        shape: vec![classes],
+        init: "zeros".to_string(),
+        role: "fc_b".to_string(),
+    });
+    geoms.push(LayerGeom {
+        name: "fc1".to_string(),
+        kind: "fc".to_string(),
+        weight_count: c_in * classes,
+        macs: c_in * classes,
+        fixed8: false,
+    });
+
+    Ok(ModelManifest {
+        key: NATIVE_RESNET_KEY.to_string(),
+        batch,
+        input_hw: (hw, hw),
+        in_channels,
+        num_classes: classes,
+        params,
+        bn,
+        geoms,
+        artifacts: BTreeMap::new(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -284,6 +503,95 @@ mod tests {
         assert_eq!(mm.geoms[1].macs, 9 * 8 * 12 * 8 * 8);
         assert_eq!(mm.weight_count(), 9 * 3 * 8 + 9 * 8 * 12 + 4 * 4 * 12 * 10);
         assert!(mm.artifacts.is_empty());
+    }
+
+    #[test]
+    fn resnet_manifest_names_shapes_and_projection_rule_line_up() {
+        let mm = native_resnet_manifest(16, 8, 3, 10, &[4, 8], 2).unwrap();
+        assert_eq!(mm.key, NATIVE_RESNET_KEY);
+        let names: Vec<&str> = mm.params.iter().map(|p| p.name.as_str()).collect();
+        // stage 1 keeps identity shortcuts; the stage-2 entry block
+        // downsamples and widens, so only res2_1 carries a projection
+        assert_eq!(
+            names,
+            vec![
+                "stem.w",
+                "stem.bn.g",
+                "stem.bn.b",
+                "res1_1.c1.w",
+                "res1_1.c1.bn.g",
+                "res1_1.c1.bn.b",
+                "res1_1.c2.w",
+                "res1_1.c2.bn.g",
+                "res1_1.c2.bn.b",
+                "res1_2.c1.w",
+                "res1_2.c1.bn.g",
+                "res1_2.c1.bn.b",
+                "res1_2.c2.w",
+                "res1_2.c2.bn.g",
+                "res1_2.c2.bn.b",
+                "res2_1.c1.w",
+                "res2_1.c1.bn.g",
+                "res2_1.c1.bn.b",
+                "res2_1.c2.w",
+                "res2_1.c2.bn.g",
+                "res2_1.c2.bn.b",
+                "res2_1.sc.w",
+                "res2_1.sc.bn.g",
+                "res2_1.sc.bn.b",
+                "res2_2.c1.w",
+                "res2_2.c1.bn.g",
+                "res2_2.c1.bn.b",
+                "res2_2.c2.w",
+                "res2_2.c2.bn.g",
+                "res2_2.c2.bn.b",
+                "fc1.w",
+                "fc1.b",
+            ]
+        );
+        assert_eq!(mm.params[0].shape, vec![3, 3, 3, 4]); // stem.w
+        assert_eq!(mm.params[15].shape, vec![3, 3, 4, 8]); // res2_1.c1.w
+        assert_eq!(mm.params[21].shape, vec![1, 1, 4, 8]); // res2_1.sc.w
+        // GAP head: fc over the final stage width, not a flattened map
+        assert_eq!(mm.params[30].shape, vec![8, 10]);
+        // every weight tensor ends in .w — the export heuristic's contract
+        assert!(mm
+            .params
+            .iter()
+            .filter(|p| p.shape.len() > 1)
+            .all(|p| p.name.ends_with(".w")));
+        // stride-2 MACs: res2_1.c1 runs at the downsampled 4×4 side
+        let g = mm.geoms.iter().find(|g| g.name == "res2_1.c1").unwrap();
+        assert_eq!(g.macs, 9 * 4 * 8 * 4 * 4);
+        let sc = mm.geoms.iter().find(|g| g.name == "res2_1.sc").unwrap();
+        assert_eq!(sc.macs, 4 * 8 * 4 * 4);
+    }
+
+    #[test]
+    fn resnet20_manifest_has_twenty_weight_layers() {
+        // the paper's CIFAR-10 architecture: stem + 18 trunk convs + fc
+        let mm = native_resnet_manifest(32, 32, 3, 10, &[16, 32, 64], 3).unwrap();
+        let trunk = mm
+            .geoms
+            .iter()
+            .filter(|g| g.kind == "fc" || !g.name.ends_with(".sc"))
+            .count();
+        assert_eq!(trunk, 20);
+        // plus the two stage-transition projections
+        assert_eq!(mm.geoms.len(), 22);
+    }
+
+    #[test]
+    fn resnet_manifest_rejects_bad_geometry() {
+        // hw not divisible by 2^(stages-1)
+        assert!(native_resnet_manifest(4, 10, 3, 10, &[8, 16, 32], 1).is_err());
+        assert!(native_resnet_manifest(4, 16, 3, 10, &[], 1).is_err());
+        assert!(native_resnet_manifest(4, 16, 3, 10, &[8, 0], 1).is_err());
+        assert!(native_resnet_manifest(4, 16, 3, 10, &[8, 16], 0).is_err());
+        assert!(native_resnet_manifest(0, 16, 3, 10, &[8], 1).is_err());
+        assert!(is_native_resnet_model("resnet20"));
+        assert!(is_native_resnet_model(NATIVE_RESNET_KEY));
+        assert!(!is_native_resnet_model(NATIVE_SMALLCNN_KEY));
     }
 
     #[test]

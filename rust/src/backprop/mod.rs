@@ -1,8 +1,9 @@
 //! Pure-Rust quantized training backend (DESIGN.md §12; conv in §13).
 //!
-//! Two native [`StepBackend`]s live here: this module's MLP trainer and
-//! the smallcnn conv trainer in [`conv`] ([`ConvNativeBackend`]), both
-//! selected through [`build_native`].
+//! Three native [`StepBackend`]s live here: this module's MLP trainer,
+//! the smallcnn conv trainer in [`conv`] ([`ConvNativeBackend`]), and
+//! the resnet20-class residual trainer ([`ResNetNativeBackend`],
+//! DESIGN.md §18), all selected through [`build_native`].
 //!
 //! The MLP backend: a fc stack trained entirely in-process —
 //! fake-quant forward on the shared s = 2^k − 1 grid, softmax
@@ -35,10 +36,11 @@
 pub mod conv;
 pub mod manifest;
 
-pub use conv::ConvNativeBackend;
+pub use conv::{ConvNativeBackend, ResNetNativeBackend};
 pub use manifest::{
-    is_native_conv_model, native_manifest, native_smallcnn_manifest,
-    validate_smallcnn_geometry, NATIVE_MODEL_KEY, NATIVE_SMALLCNN_KEY,
+    is_native_conv_model, is_native_resnet_model, native_manifest, native_resnet_manifest,
+    native_smallcnn_manifest, validate_resnet_geometry, validate_smallcnn_geometry,
+    NATIVE_MODEL_KEY, NATIVE_RESNET_KEY, NATIVE_SMALLCNN_KEY,
 };
 
 use std::cell::{Cell, RefCell};
@@ -454,11 +456,15 @@ impl NativeBackend {
 
 /// The native step backend a config's model key selects: a conv model
 /// key (`smallcnn`/[`NATIVE_SMALLCNN_KEY`]) builds the
-/// [`ConvNativeBackend`], anything else the MLP [`NativeBackend`] —
-/// the one dispatch point the CLI and tools share.
+/// [`ConvNativeBackend`], a residual key
+/// (`resnet20`/[`NATIVE_RESNET_KEY`]) the [`ResNetNativeBackend`],
+/// anything else the MLP [`NativeBackend`] — the one dispatch point
+/// the CLI and tools share.
 pub fn build_native(cfg: &ExperimentConfig) -> anyhow::Result<Box<dyn StepBackend>> {
     if is_native_conv_model(&cfg.model) {
         Ok(Box::new(ConvNativeBackend::from_config(cfg)?))
+    } else if is_native_resnet_model(&cfg.model) {
+        Ok(Box::new(ResNetNativeBackend::from_config(cfg)?))
     } else {
         Ok(Box::new(NativeBackend::from_config(cfg)?))
     }

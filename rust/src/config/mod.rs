@@ -44,9 +44,14 @@ pub struct ExperimentConfig {
     pub backend: String,
     /// Hidden-layer widths of the native MLP (ignored by pjrt).
     pub hidden: Vec<usize>,
-    /// Conv channel widths of the native smallcnn, one per
-    /// conv→BN→ReLU→pool block (ignored by pjrt and the native MLP).
+    /// Conv channel widths of the native conv models: one per
+    /// conv→BN→ReLU→pool block (smallcnn) or one per residual stage
+    /// (resnet20-class). Ignored by pjrt and the native MLP.
     pub channels: Vec<usize>,
+    /// Residual blocks per stage of the native resnet20-class model
+    /// (DESIGN.md §18; the paper's ResNet20 is channels = 16,32,64 with
+    /// blocks = 3). Ignored by every other model.
+    pub blocks: usize,
     /// Batch size of the native backend (pjrt batch comes from the
     /// compiled artifact's static shape).
     pub batch: usize,
@@ -97,6 +102,7 @@ impl ExperimentConfig {
             backend: "pjrt".to_string(),
             hidden: vec![64],
             channels: vec![8, 16],
+            blocks: 2,
             batch: 32,
             image_hw: 32,
             epochs: 4,
@@ -154,6 +160,7 @@ impl ExperimentConfig {
                     })
                     .collect::<Result<Vec<usize>, String>>()?;
             }
+            "blocks" => self.blocks = p(key, value)?,
             "batch" => self.batch = p(key, value)?,
             "image_hw" => self.image_hw = p(key, value)?,
             "epochs" => self.epochs = p(key, value)?,
@@ -228,8 +235,8 @@ impl ExperimentConfig {
     /// Apply CLI overrides for every key present in `args`.
     pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
         for key in [
-            "model", "dataset", "fp32", "backend", "hidden", "channels", "batch",
-            "image_hw", "epochs", "train_size", "test_size",
+            "model", "dataset", "fp32", "backend", "hidden", "channels", "blocks",
+            "batch", "image_hw", "epochs", "train_size", "test_size",
             "lr", "lambda", "eta_w", "eta_a", "init_nw", "init_na",
             "probe_interval", "osc_threshold", "seed", "out_dir",
             "checkpoint", "controller", "hard_cost",
@@ -268,6 +275,12 @@ impl ExperimentConfig {
             if crate::backprop::is_native_conv_model(&self.model) {
                 // one geometry contract, owned by the manifest builder
                 crate::backprop::validate_smallcnn_geometry(self.image_hw, &self.channels)?;
+            } else if crate::backprop::is_native_resnet_model(&self.model) {
+                crate::backprop::validate_resnet_geometry(
+                    self.image_hw,
+                    &self.channels,
+                    self.blocks,
+                )?;
             } else if self.hidden.is_empty() || self.hidden.contains(&0) {
                 return Err("native backend needs at least one non-zero hidden width".into());
             }
@@ -450,6 +463,29 @@ mod tests {
         c.set("model", "native-mlp").unwrap();
         c.set("hidden", "0").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn native_resnet_keys_parse_and_validate() {
+        let mut c = ExperimentConfig::default_for("resnet20");
+        assert_eq!(c.blocks, 2);
+        // under pjrt, "resnet20" names the artifact model: no geometry rule
+        assert!(c.validate().is_ok());
+        c.set("backend", "native").unwrap();
+        c.set("channels", "4, 8").unwrap();
+        c.set("blocks", "1").unwrap();
+        c.set("image_hw", "8").unwrap();
+        assert!(c.validate().is_ok());
+        assert!(c.set("blocks", "x").is_err());
+        c.set("blocks", "0").unwrap();
+        assert!(c.validate().is_err(), "zero blocks per stage");
+        c.set("blocks", "1").unwrap();
+        // one stride-2 downsample per stage transition: hw % 2^(stages-1)
+        c.set("channels", "4,8,16").unwrap();
+        c.set("image_hw", "12").unwrap();
+        assert!(c.validate().is_err(), "12 % 4 != 0");
+        c.set("image_hw", "16").unwrap();
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -20,11 +20,18 @@
 //! * [`avgpool2x2`] — the 2×2/stride-2 average pool between blocks;
 //! * [`QuantConvNet`] — conv→BN→ReLU→pool blocks plus a [`QuantMlp`]
 //!   fc head, loaded from one packed checkpoint whose meta carries
-//!   `conv_layers` next to the existing `mlp_layers`.
+//!   `conv_layers` next to the existing `mlp_layers`;
+//! * [`QuantResBlock`] + [`global_avgpool`] — residual blocks with
+//!   integer skip joins for the resnet20-class topology (meta
+//!   `res_blocks`, DESIGN.md §18): each branch finishes its own exact
+//!   integer accumulation and per-channel f64 epilogue (BN folded per
+//!   branch), the f32 join adds the two rounded branch outputs, and
+//!   the next layer's per-patch quantization re-quantizes the joined
+//!   activations onto its own 2^k − 1 grid.
 //!
-//! The native conv trainer ([`crate::backprop::conv`]) evaluates through
-//! this exact code, so trainer eval and the served model are the same
-//! numbers — the guarantee the MLP path already gives.
+//! The native conv trainers ([`crate::backprop::conv`]) evaluate
+//! through this exact code, so trainer eval and the served model are
+//! the same numbers — the guarantee the MLP path already gives.
 
 use std::time::Instant;
 
@@ -190,6 +197,10 @@ pub struct QuantConvLayer {
     /// Folded-BN per-channel shift (β − μ·gain).
     pub bias: Vec<f32>,
     pub k_a: u32,
+    /// Whether a ReLU follows the folded BN. False for the second conv
+    /// and the projection shortcut of a residual block — there the
+    /// nonlinearity belongs to the join ([`QuantResBlock`]).
+    pub relu: bool,
     /// Whether a 2×2 average pool follows the ReLU.
     pub pool: bool,
 }
@@ -255,9 +266,11 @@ impl QuantConvLayer {
                 .forward_f32_scaled(&patches, prows, &self.gain, &self.bias, &mut pre);
         }
         s.patches = patches;
-        for v in pre.iter_mut() {
-            if *v < 0.0 {
-                *v = 0.0;
+        if self.relu {
+            for v in pre.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
             }
         }
         if self.pool {
@@ -273,36 +286,194 @@ impl QuantConvLayer {
     }
 }
 
+/// Global average pool over NHWC input: one mean per (row, channel),
+/// accumulated in f64 over the spatial positions in order and rounded
+/// to f32 once. The resnet head reduction (DESIGN.md §18) — shared by
+/// serving and the native trainer's eval path so the two sides agree
+/// bitwise.
+pub fn global_avgpool(x: &[f32], rows: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), rows * h * w * c, "global_avgpool: bad input length");
+    assert_eq!(out.len(), rows * c, "global_avgpool: bad output length");
+    let inv = 1.0f64 / (h * w) as f64;
+    for r in 0..rows {
+        let img = &x[r * h * w * c..(r + 1) * h * w * c];
+        for ch in 0..c {
+            let mut acc = 0.0f64;
+            for p in 0..h * w {
+                acc += img[p * c + ch] as f64;
+            }
+            out[r * c + ch] = (acc * inv) as f32;
+        }
+    }
+}
+
+/// One residual block (DESIGN.md §18): a two-conv trunk
+/// (conv→BN→ReLU→conv→BN) joined with an identity or 1×1-projection
+/// shortcut, ReLU after the join. Each branch finishes its own exact
+/// integer accumulation and per-channel f64 epilogue (BN folded per
+/// branch) and rounds to f32 once; the join then adds the two rounded
+/// maps elementwise — f32 addition of already-determined values, no
+/// rounding freedom left — and the next consumer's per-patch-row
+/// activation quantization puts the joined map back on its own
+/// `2^k − 1` grid. No requantization step lives in the join itself.
+pub struct QuantResBlock {
+    pub name: String,
+    /// Trunk conv 1: 3×3 at the block stride, ReLU.
+    pub c1: QuantConvLayer,
+    /// Trunk conv 2: 3×3 stride 1, no ReLU (the join supplies it).
+    pub c2: QuantConvLayer,
+    /// 1×1 projection at the block stride when the shape changes;
+    /// `None` = identity shortcut.
+    pub sc: Option<QuantConvLayer>,
+    /// Per-unit registry handles (see [`LayerObs`]).
+    obs_c1: LayerObs,
+    obs_c2: LayerObs,
+    obs_sc: Option<LayerObs>,
+}
+
+impl QuantResBlock {
+    /// Wire up a block from already-loaded units, registering each unit
+    /// with the observability layer under its checkpoint name.
+    pub fn new(
+        name: &str,
+        c1: QuantConvLayer,
+        c2: QuantConvLayer,
+        sc: Option<QuantConvLayer>,
+    ) -> QuantResBlock {
+        let reg = |l: &QuantConvLayer| {
+            LayerObs::register(&l.name, l.gemm.plan_label(), l.gemm.bits, l.k_a)
+        };
+        QuantResBlock {
+            name: name.to_string(),
+            obs_c1: reg(&c1),
+            obs_c2: reg(&c2),
+            obs_sc: sc.as_ref().map(&reg),
+            c1,
+            c2,
+            sc,
+        }
+    }
+
+    /// Forward `rows` NHWC maps through trunk + shortcut + join.
+    /// Allocating convenience over [`forward_scratch`] (tests and
+    /// one-off callers).
+    ///
+    /// [`forward_scratch`]: QuantResBlock::forward_scratch
+    pub fn forward(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.forward_scratch(x, rows, &mut Scratch::default(), &mut out, false);
+        out
+    }
+
+    /// [`forward`](QuantResBlock::forward) out of the arena: the
+    /// trunk's mid-map stages through `Scratch::res_mid` and the
+    /// projection branch through `Scratch::res_sc` — slots separate
+    /// from the unit forwards' `conv_out`, which cycles underneath
+    /// both. `obs_on` gates per-unit telemetry (the caller reads the
+    /// global switch once per batch).
+    pub fn forward_scratch(
+        &self,
+        x: &[f32],
+        rows: usize,
+        s: &mut Scratch,
+        out: &mut Vec<f32>,
+        obs_on: bool,
+    ) {
+        let mut mid = std::mem::take(&mut s.res_mid);
+        let t0 = if obs_on { Some(Instant::now()) } else { None };
+        self.c1.forward_scratch(x, rows, s, &mut mid);
+        if let Some(t) = t0 {
+            self.obs_c1.record(rows, t);
+        }
+        let t0 = if obs_on { Some(Instant::now()) } else { None };
+        self.c2.forward_scratch(&mid, rows, s, out);
+        if let Some(t) = t0 {
+            self.obs_c2.record(rows, t);
+        }
+        s.res_mid = mid;
+        if let Some(sc) = &self.sc {
+            let mut short = std::mem::take(&mut s.res_sc);
+            let t0 = if obs_on { Some(Instant::now()) } else { None };
+            sc.forward_scratch(x, rows, s, &mut short);
+            if let Some(t) = t0 {
+                self.obs_sc.as_ref().expect("projection obs handle").record(rows, t);
+            }
+            debug_assert_eq!(out.len(), short.len());
+            for (o, v) in out.iter_mut().zip(short.iter()) {
+                let u = *o + *v;
+                *o = if u < 0.0 { 0.0 } else { u };
+            }
+            s.res_sc = short;
+        } else {
+            // identity shortcut: the loader guarantees stride 1 and
+            // matching channels, so input and trunk output line up
+            debug_assert_eq!(out.len(), x.len());
+            for (o, v) in out.iter_mut().zip(x.iter()) {
+                let u = *o + *v;
+                *o = if u < 0.0 { 0.0 } else { u };
+            }
+        }
+    }
+}
+
 /// A conv stack plus fc head loaded from one packed checkpoint — the
-/// conv sibling of [`QuantMlp`]. Architecture contract (what the native
-/// smallcnn manifest emits): every `conv_layers` entry is a square
-/// odd-kernel conv at stride 1 with "same" padding, followed by folded
-/// BN, ReLU, and a 2×2 average pool; the pooled features flatten (NHWC
-/// order) into the `mlp_layers` head.
+/// conv sibling of [`QuantMlp`]. Two architecture contracts, selected
+/// by the meta (see [`QuantConvNet::from_packed`]): the smallcnn shape
+/// (`conv_layers`: conv→BN→ReLU→pool per entry, pooled features
+/// flattened NHWC into the `mlp_layers` head) and the resnet20-class
+/// shape (`res_blocks`: a stem unit, residual blocks with integer skip
+/// joins, then [`global_avgpool`] into the head).
 pub struct QuantConvNet {
+    /// The plain prefix: every smallcnn block, or the resnet stem.
     pub conv: Vec<QuantConvLayer>,
+    /// Residual blocks after the prefix (empty for smallcnn).
+    pub res: Vec<QuantResBlock>,
     pub head: QuantMlp,
     /// Input image shape (h, w, c).
     pub h: usize,
     pub w: usize,
     pub c: usize,
     pub classes: usize,
-    /// Registry handles parallel to `conv` (see [`LayerObs`]); the fc
-    /// head carries its own inside [`QuantMlp`].
+    /// Feature-map shape (h, w, c) entering the head reduction.
+    feat: (usize, usize, usize),
+    /// Features reduce by [`global_avgpool`] (resnet) instead of
+    /// flattening (smallcnn).
+    gap: bool,
+    /// Registry handles parallel to `conv` (see [`LayerObs`]); the
+    /// blocks in `res` and the fc head carry their own.
     obs: Vec<LayerObs>,
 }
 
 impl QuantConvNet {
-    /// Build from a packed checkpoint. Requires meta `conv_layers`
-    /// (names), `input_hw`, `in_channels`, plus the per-layer tensors
-    /// `L.w` (`[kh, kw, c_in, c_out]`) and raw BN statistics `L.bn.g`,
-    /// `L.bn.b`, `L.bn.mean`, `L.bn.var` (`[c_out]` each). Activation
-    /// widths resolve like the MLP: meta `k_a` globally, `layer_k_a`
-    /// per-layer overrides; k_w is per-tensor (each packed width).
+    /// Build from a packed checkpoint. Two topologies share one loader
+    /// (the meta says which; both also need `input_hw`/`in_channels`):
+    ///
+    /// * `conv_layers` (names) — the smallcnn shape: each entry is a
+    ///   square odd-kernel stride-1 "same"-pad conv with folded BN,
+    ///   ReLU and a 2×2 average pool; pooled features flatten into the
+    ///   `mlp_layers` head.
+    /// * `res_blocks` (DESIGN.md §18) — the resnet20-class shape: a
+    ///   stem unit (meta `res_stem`, default `"stem"`), then one object
+    ///   per block `{name, stride, proj}` loading `name.c1`/`name.c2`
+    ///   (plus `name.sc` when `proj`); features reduce by
+    ///   [`global_avgpool`] instead of flattening.
+    ///
+    /// Every unit carries tensors `L.w` (`[kh, kw, c_in, c_out]`) and
+    /// raw BN statistics `L.bn.g`, `L.bn.b`, `L.bn.mean`, `L.bn.var`
+    /// (`[c_out]` each). Activation widths resolve like the MLP: meta
+    /// `k_a` globally, `layer_k_a` per-unit overrides; k_w is
+    /// per-tensor (each packed width).
     pub fn from_packed(q: &QuantizedCheckpoint) -> anyhow::Result<QuantConvNet> {
-        let names = q.meta_layer_names("conv_layers")?.ok_or_else(|| {
-            anyhow::anyhow!("packed meta lacks conv_layers — not a conv checkpoint")
-        })?;
+        let conv_names = q.meta_layer_names("conv_layers")?;
+        let res_meta = q.meta.get("res_blocks").and_then(Json::as_arr);
+        anyhow::ensure!(
+            conv_names.is_some() || res_meta.is_some(),
+            "packed meta lacks conv_layers/res_blocks — not a conv checkpoint"
+        );
+        anyhow::ensure!(
+            conv_names.is_none() || res_meta.is_none(),
+            "conv_layers and res_blocks are mutually exclusive"
+        );
         let hw = q
             .meta
             .get("input_hw")
@@ -331,9 +502,17 @@ impl QuantConvNet {
             Ok(t.dequantize().data)
         };
 
-        let (mut h, mut w, mut c) = (h0, w0, c0);
-        let mut conv = Vec::with_capacity(names.len());
-        for name in &names {
+        // load one conv→foldedBN unit named `name` at an explicit
+        // geometry — shared verbatim by the smallcnn loop, the resnet
+        // stem, and every residual-block branch
+        let load_unit = |name: &str,
+                         h: usize,
+                         w: usize,
+                         c_in: usize,
+                         stride: usize,
+                         relu: bool,
+                         pool: bool|
+         -> anyhow::Result<QuantConvLayer> {
             let wt = q
                 .get(&format!("{name}.w"))
                 .ok_or_else(|| anyhow::anyhow!("packed checkpoint lacks {name}.w"))?;
@@ -348,19 +527,10 @@ impl QuantConvNet {
                 "{name}.w: kernel must be square with odd size, got {kh}x{kw}"
             );
             anyhow::ensure!(
-                ci == c,
-                "{name}.w expects {ci} input channels but the chain carries {c}"
+                ci == c_in,
+                "{name}.w expects {ci} input channels but the chain carries {c_in}"
             );
-            let geom = ConvGeom {
-                h,
-                w,
-                c_in: c,
-                c_out: co,
-                kh,
-                kw,
-                stride: 1,
-                pad: (kh - 1) / 2,
-            };
+            let geom = ConvGeom { h, w, c_in, c_out: co, kh, kw, stride, pad: (kh - 1) / 2 };
             geom.validate().map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
             let k_a = per_layer
                 .and_then(|m| m.get(name))
@@ -379,40 +549,104 @@ impl QuantConvNet {
             let mean = raw_vec(format!("{name}.bn.mean"), co)?;
             let var = raw_vec(format!("{name}.bn.var"), co)?;
             let (gain, bias) = fold_bn(&gamma, &beta, &mean, &var);
-            let (oh, ow) = geom.out_hw();
-            anyhow::ensure!(
-                oh % 2 == 0 && ow % 2 == 0,
-                "{name}: {oh}x{ow} feature map cannot 2x2-pool"
-            );
-            conv.push(QuantConvLayer {
-                name: name.clone(),
-                geom,
-                gemm,
-                gain,
-                bias,
-                k_a,
-                pool: true,
-            });
-            h = oh / 2;
-            w = ow / 2;
-            c = co;
+            Ok(QuantConvLayer { name: name.to_string(), geom, gemm, gain, bias, k_a, relu, pool })
+        };
+
+        let (mut h, mut w, mut c) = (h0, w0, c0);
+        let mut conv = Vec::new();
+        let mut res = Vec::new();
+        if let Some(names) = &conv_names {
+            for name in names {
+                let layer = load_unit(name, h, w, c, 1, true, true)?;
+                let (oh, ow) = layer.geom.out_hw();
+                anyhow::ensure!(
+                    oh % 2 == 0 && ow % 2 == 0,
+                    "{name}: {oh}x{ow} feature map cannot 2x2-pool"
+                );
+                h = oh / 2;
+                w = ow / 2;
+                c = layer.geom.c_out;
+                conv.push(layer);
+            }
+        } else if let Some(entries) = res_meta {
+            let stem = q.meta.get("res_stem").and_then(Json::as_str).unwrap_or("stem");
+            let layer = load_unit(stem, h, w, c, 1, true, false)?;
+            let (oh, ow) = layer.geom.out_hw();
+            h = oh;
+            w = ow;
+            c = layer.geom.c_out;
+            conv.push(layer);
+            for e in entries {
+                let name = e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("res_blocks entry lacks a name"))?;
+                let stride = e
+                    .get("stride")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("{name}: res_blocks entry lacks stride"))?;
+                let proj = e.get("proj").and_then(Json::as_bool).unwrap_or(false);
+                anyhow::ensure!(
+                    stride == 1 || stride == 2,
+                    "{name}: residual stride must be 1 or 2, got {stride}"
+                );
+                let c1 = load_unit(&format!("{name}.c1"), h, w, c, stride, true, false)?;
+                let (mh, mw) = c1.geom.out_hw();
+                let c2 = load_unit(&format!("{name}.c2"), mh, mw, c1.geom.c_out, 1, false, false)?;
+                let (oh, ow) = c2.geom.out_hw();
+                let co = c2.geom.c_out;
+                let sc = if proj {
+                    let p = load_unit(&format!("{name}.sc"), h, w, c, stride, false, false)?;
+                    anyhow::ensure!(
+                        p.geom.kh == 1,
+                        "{name}.sc: projection shortcuts are 1x1, got {}x{}",
+                        p.geom.kh,
+                        p.geom.kw
+                    );
+                    anyhow::ensure!(
+                        p.geom.c_out == co && p.geom.out_hw() == (oh, ow),
+                        "{name}.sc: shortcut must match the trunk output shape"
+                    );
+                    Some(p)
+                } else {
+                    anyhow::ensure!(
+                        stride == 1 && co == c,
+                        "{name}: identity shortcut needs stride 1 and {c} == {co} channels \
+                         (set proj for a 1x1 projection)"
+                    );
+                    None
+                };
+                res.push(QuantResBlock::new(name, c1, c2, sc));
+                h = oh;
+                w = ow;
+                c = co;
+            }
         }
+        let gap = res_meta.is_some();
         let head = QuantMlp::from_packed(q)?;
+        let flat = if gap { c } else { h * w * c };
         anyhow::ensure!(
-            head.input == h * w * c,
-            "fc head expects {} inputs but the conv stack produces {}x{}x{} = {}",
-            head.input,
-            h,
-            w,
-            c,
-            h * w * c
+            head.input == flat,
+            "fc head expects {} inputs but the feature stage produces {flat}",
+            head.input
         );
         let classes = head.classes;
         let obs = conv
             .iter()
             .map(|l| LayerObs::register(&l.name, l.gemm.plan_label(), l.gemm.bits, l.k_a))
             .collect();
-        Ok(QuantConvNet { conv, head, h: h0, w: w0, c: c0, classes, obs })
+        Ok(QuantConvNet {
+            conv,
+            res,
+            head,
+            h: h0,
+            w: w0,
+            c: c0,
+            classes,
+            feat: (h, w, c),
+            gap,
+            obs,
+        })
     }
 
     /// Per-sample input feature count (`h·w·c`).
@@ -420,9 +654,10 @@ impl QuantConvNet {
         self.h * self.w * self.c
     }
 
-    /// The conv stack only: `rows` NHWC images → flattened pooled
-    /// features written into `out` (`rows·head.input` elements), every
-    /// intermediate drawn from the arena.
+    /// The feature stage only: `rows` NHWC images through the plain
+    /// prefix, then every residual block, then the head reduction
+    /// (flatten or [`global_avgpool`]) into `out` (`rows·head.input`
+    /// elements), every intermediate drawn from the arena.
     fn features_scratch(&self, x: &[f32], rows: usize, s: &mut Scratch, out: &mut [f32]) {
         debug_assert_eq!(out.len(), rows * self.head.input);
         let mut cur = std::mem::take(&mut s.buf_a);
@@ -441,11 +676,20 @@ impl QuantConvNet {
             }
             std::mem::swap(&mut cur, &mut nxt);
         }
-        out.copy_from_slice(&cur[..out.len()]);
+        for blk in &self.res {
+            blk.forward_scratch(&cur, rows, s, &mut nxt, obs_on);
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        if self.gap {
+            let (fh, fw, fc) = self.feat;
+            global_avgpool(&cur, rows, fh, fw, fc, out);
+        } else {
+            out.copy_from_slice(&cur[..out.len()]);
+        }
         // undo ping-pong parity (see QuantMlp::forward_pooled): each
         // buffer returns to the arena slot it came from so capacities
         // stay stable across requests
-        if self.conv.len() % 2 == 1 {
+        if (self.conv.len() + self.res.len()) % 2 == 1 {
             std::mem::swap(&mut cur, &mut nxt);
         }
         s.buf_a = cur;
@@ -609,6 +853,7 @@ mod tests {
                     gain: gain.clone(),
                     bias: bias.clone(),
                     k_a: k,
+                    relu: true,
                     pool: false,
                 };
                 let rows = 2usize;
@@ -680,6 +925,7 @@ mod tests {
                 gain: gain.clone(),
                 bias: bias.clone(),
                 k_a: 32,
+                relu: true,
                 pool: false,
             };
             let rows = 2usize;
@@ -923,5 +1169,341 @@ mod tests {
         let x: Vec<f32> = (0..2 * net.input_numel()).map(|_| rng.normal()).collect();
         let logits = net.forward(&x, 2, 1);
         assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn global_avgpool_means_per_channel_stay_interleaved() {
+        // 1 row, 2x2 spatial, 2 channels interleaved NHWC
+        let x = vec![1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let mut out = vec![f32::NAN; 2];
+        global_avgpool(&x, 1, 2, 2, 2, &mut out);
+        assert_eq!(out[0], 2.5);
+        assert_eq!(out[1], 25.0);
+        // rows are independent
+        let mut x2 = x.clone();
+        x2.extend(x.iter().map(|v| v * 2.0));
+        let mut out2 = vec![f32::NAN; 4];
+        global_avgpool(&x2, 2, 2, 2, 2, &mut out2);
+        assert_eq!(&out2[..2], &out[..]);
+        assert_eq!(out2[2], 5.0);
+        assert_eq!(out2[3], 50.0);
+    }
+
+    /// From-scratch scalar oracle for one integer conv unit: naive
+    /// patch gather, per-element weight unpack, i64 accumulation, the
+    /// same f64 epilogue — the reference both residual branches compose
+    /// over.
+    fn scalar_conv_unit(
+        x: &[f32],
+        rows: usize,
+        g: &ConvGeom,
+        wt: &PackedTensor,
+        k: u32,
+        gain: &[f32],
+        bias: &[f32],
+        relu: bool,
+    ) -> Vec<f32> {
+        let (oh, ow) = g.out_hw();
+        let kl = g.patch_len();
+        let cout = g.c_out;
+        let s_i = code_levels(k) as i64;
+        let sw = (if wt.scale > 0.0 { wt.scale / s_i as f32 } else { 0.0 }) as f64;
+        let mut out = vec![0.0f32; rows * oh * ow * cout];
+        for r in 0..rows {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let patch = naive_patch(x, r, g, oy, ox);
+                    let mut qa = vec![0i16; kl];
+                    let step = activ::quantize_row_centered(&patch, k, &mut qa);
+                    for o in 0..cout {
+                        let mut acc = 0i64;
+                        for i in 0..kl {
+                            let c = pack::read_bits_scalar(
+                                &wt.payload,
+                                (i * cout + o) * k as usize,
+                                k,
+                            ) as i64;
+                            acc += qa[i] as i64 * (2 * c - s_i);
+                        }
+                        let scale = step as f64 * sw * gain[o] as f64;
+                        let mut pre = (acc as f64 * scale) as f32 + bias[o];
+                        if relu && pre < 0.0 {
+                            pre = 0.0;
+                        }
+                        out[((r * oh + oy) * ow + ox) * cout + o] = pre;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Build one integer conv unit plus the raw pieces its oracle needs.
+    fn make_unit(
+        name: &str,
+        g: ConvGeom,
+        k: u32,
+        seed: u64,
+        relu: bool,
+    ) -> (QuantConvLayer, PackedTensor, Vec<f32>, Vec<f32>) {
+        let src = random_tensor(vec![g.kh, g.kw, g.c_in, g.c_out], seed);
+        let wt = PackedTensor::quantize(&src, k);
+        let mut w2 = wt.clone();
+        w2.shape = vec![g.patch_len(), g.c_out];
+        let gemm = QuantGemm::from_packed(&w2, k).unwrap();
+        assert!(gemm.is_integer(), "{name} k={k}");
+        let mut rng = Rng::new(seed ^ 0x9e37);
+        let gain: Vec<f32> = (0..g.c_out).map(|_| 0.5 + rng.uniform()).collect();
+        let bias: Vec<f32> = (0..g.c_out).map(|_| rng.normal() * 0.1).collect();
+        let layer = QuantConvLayer {
+            name: name.to_string(),
+            geom: g,
+            gemm,
+            gain: gain.clone(),
+            bias: bias.clone(),
+            k_a: k,
+            relu,
+            pool: false,
+        };
+        (layer, wt, gain, bias)
+    }
+
+    /// The integer residual join must equal composing the per-unit
+    /// scalar oracles with a plain f32 add + ReLU — bitwise, for every
+    /// width 2..=8, across identity and projection shortcuts (stride 1
+    /// and 2, odd channel counts included). Each branch's oracle
+    /// recomputes its accumulator from scalar-unpacked codes, so this
+    /// pins the whole branch-epilogue-join chain, not just the add.
+    #[test]
+    fn integer_residual_join_matches_scalar_oracle_all_widths() {
+        // (c_in, c_mid, c_out, stride, proj, h, w)
+        let cases = [
+            (5usize, 3usize, 5usize, 1usize, false, 5usize, 4usize),
+            (3, 4, 6, 2, true, 6, 6),
+            (3, 5, 7, 1, true, 5, 5),
+        ];
+        for k in 2..=8u32 {
+            for (ci, cm, co, stride, proj, h, w) in cases {
+                let g1 = ConvGeom { h, w, c_in: ci, c_out: cm, kh: 3, kw: 3, stride, pad: 1 };
+                let (mh, mw) = g1.out_hw();
+                let g2 =
+                    ConvGeom { h: mh, w: mw, c_in: cm, c_out: co, kh: 3, kw: 3, stride: 1, pad: 1 };
+                let seed = 900 + k as u64 * 10 + stride as u64;
+                let (l1, wt1, gain1, bias1) = make_unit("b.c1", g1, k, seed, true);
+                let (l2, wt2, gain2, bias2) = make_unit("b.c2", g2, k, seed + 1, false);
+                let (sc, sc_oracle) = if proj {
+                    let gs =
+                        ConvGeom { h, w, c_in: ci, c_out: co, kh: 1, kw: 1, stride, pad: 0 };
+                    let (ls, wts, gains, biass) = make_unit("b.sc", gs, k, seed + 2, false);
+                    (Some(ls), Some((gs, wts, gains, biass)))
+                } else {
+                    (None, None)
+                };
+                let blk = QuantResBlock::new("b", l1, l2, sc);
+                let rows = 2usize;
+                let mut rng = Rng::new(seed + 5);
+                let x: Vec<f32> = (0..rows * h * w * ci).map(|_| rng.normal()).collect();
+                let got = blk.forward(&x, rows);
+
+                let mid = scalar_conv_unit(&x, rows, &g1, &wt1, k, &gain1, &bias1, true);
+                let trunk = scalar_conv_unit(&mid, rows, &g2, &wt2, k, &gain2, &bias2, false);
+                let shortcut = match &sc_oracle {
+                    Some((gs, wts, gains, biass)) => {
+                        scalar_conv_unit(&x, rows, gs, wts, k, gains, biass, false)
+                    }
+                    None => x.clone(),
+                };
+                assert_eq!(got.len(), trunk.len());
+                assert_eq!(trunk.len(), shortcut.len());
+                for (i, ((t, s), g)) in trunk.iter().zip(&shortcut).zip(&got).enumerate() {
+                    let u = t + s;
+                    let want = if u < 0.0 { 0.0 } else { u };
+                    assert_eq!(
+                        g.to_bits(),
+                        want.to_bits(),
+                        "k={k} ci={ci} cm={cm} co={co} stride={stride} proj={proj} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// A full synthetic resnet checkpoint: stem (3→4) over 8×8 inputs,
+    /// res1_1 identity (4→4), res2_1 projection at stride 2 (4→8),
+    /// global average pool, fc head 8 → classes.
+    fn res_checkpoint(k_w: u32, k_a: f64, seed: u64) -> QuantizedCheckpoint {
+        let classes = 3usize;
+        let mut q = QuantizedCheckpoint::new(Json::obj(vec![
+            ("k_a", Json::num(k_a)),
+            ("res_stem", Json::str("stem")),
+            (
+                "res_blocks",
+                Json::Arr(vec![
+                    Json::obj(vec![
+                        ("name", Json::str("res1_1")),
+                        ("stride", Json::num(1.0)),
+                        ("proj", Json::Bool(false)),
+                    ]),
+                    Json::obj(vec![
+                        ("name", Json::str("res2_1")),
+                        ("stride", Json::num(2.0)),
+                        ("proj", Json::Bool(true)),
+                    ]),
+                ]),
+            ),
+            ("mlp_layers", Json::Arr(vec![Json::str("fc1")])),
+            (
+                "input_hw",
+                Json::Arr(vec![Json::num(8.0), Json::num(8.0)]),
+            ),
+            ("in_channels", Json::num(3.0)),
+            ("num_classes", Json::num(classes as f64)),
+            ("serve_batch", Json::num(8.0)),
+        ]));
+        let quant = |t: &Tensor| -> PackedTensor {
+            if (1..=24).contains(&k_w) {
+                PackedTensor::quantize(t, k_w)
+            } else {
+                PackedTensor::raw(t)
+            }
+        };
+        let units = [
+            ("stem", 3usize, 3usize, 4usize),
+            ("res1_1.c1", 3, 4, 4),
+            ("res1_1.c2", 3, 4, 4),
+            ("res2_1.c1", 3, 4, 8),
+            ("res2_1.c2", 3, 8, 8),
+            ("res2_1.sc", 1, 4, 8),
+        ];
+        for (i, &(name, kh, ci, co)) in units.iter().enumerate() {
+            let s = seed + i as u64;
+            q.push(
+                format!("{name}.w"),
+                quant(&random_tensor(vec![kh, kh, ci, co], s)),
+            );
+            for (suffix, off) in [("g", 10u64), ("b", 20), ("mean", 30)] {
+                q.push(
+                    format!("{name}.bn.{suffix}"),
+                    PackedTensor::raw(&random_tensor(vec![co], s + off)),
+                );
+            }
+            q.push(
+                format!("{name}.bn.var"),
+                PackedTensor::raw(&Tensor::new(
+                    vec![co],
+                    (0..co).map(|j| 0.5 + 0.1 * j as f32).collect(),
+                )),
+            );
+        }
+        q.push("fc1.w", quant(&random_tensor(vec![8, classes], seed + 40)));
+        q.push("fc1.b", PackedTensor::raw(&random_tensor(vec![classes], seed + 41)));
+        q
+    }
+
+    #[test]
+    fn res_net_loads_and_batch_and_threads_are_invariant() {
+        let q = res_checkpoint(4, 8.0, 500);
+        let net = QuantConvNet::from_packed(&q).unwrap();
+        assert_eq!(net.conv.len(), 1, "stem only in the plain prefix");
+        assert_eq!(net.res.len(), 2);
+        assert!(net.res[0].sc.is_none());
+        assert!(net.res[1].sc.is_some());
+        assert_eq!(net.head.input, 8, "GAP feeds channels, not h*w*c");
+        assert_eq!((net.h, net.w, net.c), (8, 8, 3));
+        assert!(net.conv[0].gemm.is_integer());
+        let mut rng = Rng::new(7);
+        let rows = 6usize;
+        let x: Vec<f32> = (0..rows * net.input_numel()).map(|_| rng.normal()).collect();
+        let base = net.forward(&x, rows, 1);
+        assert_eq!(base.len(), rows * net.classes);
+        assert!(base.iter().all(|v| v.is_finite()));
+        for threads in [2usize, 3, 8] {
+            let got = net.forward(&x, rows, threads);
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+        let sz = net.input_numel();
+        let solo = net.forward(&x[4 * sz..5 * sz], 1, 1);
+        for (a, b) in base[4 * net.classes..5 * net.classes].iter().zip(&solo) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let preds = net.classify(&x, rows, 2);
+        assert!(preds.iter().all(|&p| p < net.classes));
+    }
+
+    #[test]
+    fn res_net_rejects_malformed_checkpoints() {
+        // projection declared but tensor missing
+        let mut q = res_checkpoint(4, 8.0, 600);
+        q.tensors.retain(|(n, _)| n != "res2_1.sc.w");
+        assert!(QuantConvNet::from_packed(&q).is_err());
+        // projection kernel must be 1x1
+        let mut q2 = res_checkpoint(4, 8.0, 601);
+        q2.tensors.retain(|(n, _)| n != "res2_1.sc.w");
+        q2.push(
+            "res2_1.sc.w",
+            PackedTensor::quantize(&random_tensor(vec![3, 3, 4, 8], 9), 4),
+        );
+        assert!(QuantConvNet::from_packed(&q2).is_err());
+        // identity shortcut cannot change shape: flip res2_1 to proj=false
+        let mut q3 = res_checkpoint(4, 8.0, 602);
+        if let Json::Obj(m) = &mut q3.meta {
+            if let Some(Json::Arr(arr)) = m.get_mut("res_blocks") {
+                if let Json::Obj(e) = &mut arr[1] {
+                    e.insert("proj".to_string(), Json::Bool(false));
+                }
+            }
+        }
+        assert!(QuantConvNet::from_packed(&q3).is_err());
+        // the two topology keys are mutually exclusive
+        let mut q4 = res_checkpoint(4, 8.0, 603);
+        if let Json::Obj(m) = &mut q4.meta {
+            m.insert(
+                "conv_layers".to_string(),
+                Json::Arr(vec![Json::str("stem")]),
+            );
+        }
+        assert!(QuantConvNet::from_packed(&q4).is_err());
+        // head must match the channel count, not the flattened map
+        let mut q5 = res_checkpoint(4, 8.0, 604);
+        q5.tensors.retain(|(n, _)| n != "fc1.w");
+        q5.push(
+            "fc1.w",
+            PackedTensor::quantize(&random_tensor(vec![8 * 4 * 4, 3], 11), 4),
+        );
+        assert!(QuantConvNet::from_packed(&q5).is_err());
+    }
+
+    #[test]
+    fn res_arena_stops_allocating_after_warmup() {
+        // residual staging buffers (res_mid/res_sc) join the recycling
+        // contract: buffers permute between arena slots across a
+        // request, so capacities can take a few requests to reach their
+        // fixed point — warm generously, then pin the grow counter flat
+        let q = res_checkpoint(2, 2.0, 700);
+        let net = QuantConvNet::from_packed(&q).unwrap();
+        let pool = WorkerPool::new(2);
+        let mut rng = Rng::new(5);
+        let rows = 6usize;
+        let x: Vec<f32> = (0..rows * net.input_numel()).map(|_| rng.normal()).collect();
+        let first = net.forward_pooled(&x, rows, &pool);
+        for _ in 0..5 {
+            net.forward_pooled(&x, rows, &pool);
+        }
+        let warm = pool.grow_events();
+        assert!(warm > 0, "warm-up should have populated the arenas");
+        for _ in 0..4 {
+            let again = net.forward_pooled(&x, rows, &pool);
+            for (a, b) in first.iter().zip(&again) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert_eq!(pool.grow_events(), warm, "residual hot path allocated after warm-up");
+        // and the pooled path agrees with the transient-inline one
+        let inline = net.forward(&x, rows, 1);
+        for (a, b) in first.iter().zip(&inline) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

@@ -47,7 +47,7 @@ pub mod pack;
 
 pub use activ::{fake_quantize_row, quantize_row_centered, raw_code, MAX_INT_ACT_BITS};
 pub use bitserial::{BitserialGemm, BITSERIAL_MAX_PRODUCT};
-pub use conv::QuantConvNet;
+pub use conv::{QuantConvNet, QuantResBlock};
 pub use gemm::{PlanChoice, PlanKind, QuantGemm};
 
 /// Instruction set a kernel dispatches to, detected once at plan build
@@ -139,6 +139,12 @@ pub struct Scratch {
     pub(crate) patches: Vec<f32>,
     /// Pre-pool conv block output.
     pub(crate) conv_out: Vec<f32>,
+    /// Residual-block staging (DESIGN.md §18): the trunk's mid-map
+    /// (conv1 output) and the projection-shortcut branch. Separate from
+    /// `conv_out` because both live across the nested unit forwards
+    /// that cycle `conv_out` underneath them.
+    pub(crate) res_mid: Vec<f32>,
+    pub(crate) res_sc: Vec<f32>,
     /// Pool-shared allocation counter (None outside a pool).
     pub(crate) grow_events: Option<Arc<AtomicU64>>,
 }

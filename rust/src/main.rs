@@ -35,7 +35,7 @@ use adaqat::tensor::checkpoint::Checkpoint;
 use adaqat::util::cli::Args;
 
 const TRAIN_FLAGS: &[&str] = &[
-    "model", "dataset", "fp32", "backend", "hidden", "channels", "batch", "image_hw",
+    "model", "dataset", "fp32", "backend", "hidden", "channels", "blocks", "batch", "image_hw",
     "epochs", "train_size", "test_size", "lr",
     "lambda", "eta_w", "eta_a", "init_nw", "init_na", "probe_interval",
     "osc_threshold", "seed", "out_dir", "checkpoint", "controller",
@@ -109,11 +109,15 @@ fn config_from(args: &Args) -> anyhow::Result<ExperimentConfig> {
     if cfg.backend == "native" && !args.has("model") && cfg.model == model {
         cfg.model = adaqat::backprop::NATIVE_MODEL_KEY.to_string();
     }
-    // The native conv trainer is addressed by the familiar name
-    // (`--backend native --model smallcnn`) but its checkpoints carry
-    // the native key, for the same artifact-box reason as above.
+    // The native conv trainers are addressed by their familiar names
+    // (`--backend native --model smallcnn` / `--model resnet20`) but
+    // their checkpoints carry the native keys, for the same
+    // artifact-box reason as above.
     if cfg.backend == "native" && cfg.model == "smallcnn" {
         cfg.model = adaqat::backprop::NATIVE_SMALLCNN_KEY.to_string();
+    }
+    if cfg.backend == "native" && cfg.model == "resnet20" {
+        cfg.model = adaqat::backprop::NATIVE_RESNET_KEY.to_string();
     }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
@@ -121,7 +125,7 @@ fn config_from(args: &Args) -> anyhow::Result<ExperimentConfig> {
 
 /// The step backend a config asks for. The PJRT variant owns its
 /// `ModelRuntime` (which holds the client handle); the native variant
-/// is whichever trainer the model key selects (MLP or conv) behind
+/// is whichever trainer the model key selects (MLP, conv, or resnet) behind
 /// `backprop::build_native`. Both expose `&dyn StepBackend` for the
 /// shared train/eval code paths.
 enum BackendHolder {
@@ -441,11 +445,16 @@ TRAIN/EVAL FLAGS
   --model NAME          smallcnn | resnet20 | resnet18 | smallcnn_pallas
   --backend B           pjrt (compiled artifacts) | native (pure-Rust
                         trainers, run offline)                [pjrt]
-                        native models: the MLP (default) and smallcnn
-                        (conv+BN blocks, --model smallcnn)
+                        native models: the MLP (default), smallcnn
+                        (conv+BN blocks) and resnet20 (residual
+                        blocks with integer skip joins, DESIGN.md §18)
   --hidden W[,W...]     native MLP hidden widths              [64]
-  --channels C[,C...]   native smallcnn conv widths, one per
-                        conv-BN-ReLU-pool block               [8,16]
+  --channels C[,C...]   native conv widths: one per smallcnn
+                        conv-BN-ReLU-pool block, or one per
+                        resnet20 stage                        [8,16]
+  --blocks N            native resnet20 residual blocks per
+                        stage (paper: --channels 16,32,64
+                        --blocks 3)                           [2]
   --batch N             native batch size                     [32]
   --image_hw N          synthetic image side (native; pjrt=32) [32]
   --config FILE         key = value config file (flags override it)
@@ -489,6 +498,10 @@ Offline train→export→serve (no PJRT artifacts needed):
 Same loop on the conv model (im2col conv + BN, integer conv serving):
   adaqat train --backend native --model smallcnn --channels 8,16 \
                --epochs 4 --out_dir runs/cnn
+Same loop on the paper's architecture (residual blocks, integer skip
+joins — docs/HANDBOOK.md is the full operator walkthrough):
+  adaqat train --backend native --model resnet20 --channels 8,16 \
+               --blocks 2 --epochs 4 --out_dir runs/resnet
 
 Artifacts are loaded from $ADAQAT_ARTIFACTS (default ./artifacts);
 build them with `make artifacts`."

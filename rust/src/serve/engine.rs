@@ -423,8 +423,9 @@ fn push_trace(
 // ------------------------------------------------------------- backends
 
 /// The quantized network a packed checkpoint serves: an fc stack
-/// ([`QuantMlp`]) or, when the meta carries `conv_layers`, the conv
-/// blocks + fc head of a [`QuantConvNet`] (DESIGN.md §13).
+/// ([`QuantMlp`]) or, when the meta carries `conv_layers` or
+/// `res_blocks`, the conv/residual blocks + fc head of a
+/// [`QuantConvNet`] (DESIGN.md §13, §18).
 enum ServedNet {
     Mlp(QuantMlp),
     Conv(QuantConvNet),
@@ -455,8 +456,8 @@ impl ServedNet {
 
 /// Pure-Rust quantized backend: a [`QuantMlp`] (single fc layer or an
 /// `mlp_layers` stack with ReLU) or a [`QuantConvNet`] (`conv_layers`
-/// meta) over a packed checkpoint whose meta carries `input_hw`,
-/// `in_channels`, `num_classes`, `serve_batch` (written by
+/// or `res_blocks` meta) over a packed checkpoint whose meta carries
+/// `input_hw`, `in_channels`, `num_classes`, `serve_batch` (written by
 /// `adaqat demo-model` / the native trainers). Packed weight tensors
 /// run in the integer domain (i8/i16 codes, i32 accumulation,
 /// activations quantized on the fly at the learned k_a) instead of the
@@ -514,7 +515,7 @@ impl ReferenceBackend {
             .get("serve_batch")
             .and_then(|j| j.as_usize())
             .unwrap_or(16);
-        let net = if q.meta.get("conv_layers").is_some() {
+        let net = if q.meta.get("conv_layers").is_some() || q.meta.get("res_blocks").is_some() {
             // the conv loader derives its input shape from these same
             // meta keys and validates the tensor chain against them
             // internally, so no cross-check is possible (or needed) here

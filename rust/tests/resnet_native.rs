@@ -1,0 +1,209 @@
+//! Offline end-to-end tests for the native *resnet* training backend —
+//! no AOT artifacts, no PJRT, no Python (DESIGN.md §18). The residual
+//! sibling of `tests/conv_native.rs`: a real gradient-descent run on a
+//! resnet20-class topology (stem → residual blocks with identity and
+//! 1×1-projection shortcuts → GAP → fc) feeds the AdaQAT controller
+//! *measured* probe losses, the run exports an `AQQCKPT1` checkpoint
+//! whose meta carries `res_blocks`, and the integer residual kernels
+//! serve it with every prediction matching the trainer's eval forward.
+
+use std::path::{Path, PathBuf};
+
+use adaqat::backprop::{ResNetNativeBackend, NATIVE_RESNET_KEY};
+use adaqat::config::{ControllerKind, ExperimentConfig};
+use adaqat::coordinator::{self, Experiment};
+use adaqat::data::{synth, DatasetKind};
+use adaqat::runtime::StepBackend;
+use adaqat::serve::{QuantizedCheckpoint, ReferenceBackend};
+use adaqat::tensor::checkpoint::Checkpoint;
+
+/// Small offline config: 8×8 synthetic images, two stages of one
+/// residual block each ([4, 8] channels → one identity block, one
+/// stride-2 projection block), GAP over 4×4×8, 16-sample batches —
+/// sized so the suite stays fast in debug builds while the loss
+/// surface still shows the low-bit wall the controller feeds on.
+fn res_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for(NATIVE_RESNET_KEY);
+    cfg.model = NATIVE_RESNET_KEY.to_string();
+    cfg.backend = "native".to_string();
+    cfg.dataset = "cifar10".to_string();
+    cfg.image_hw = 8;
+    cfg.batch = 16;
+    cfg.channels = vec![4, 8];
+    cfg.blocks = 1;
+    cfg.train_size = 256;
+    cfg.test_size = 64;
+    cfg.lr = 0.05;
+    cfg.epochs = 3;
+    cfg
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("adaqat_res_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Export a finished run and cross-check every served prediction
+/// against the trainer's serving-identical eval forward.
+fn export_and_check(
+    backend: &ResNetNativeBackend,
+    out_dir: &Path,
+    k_w: u32,
+    k_a: u32,
+    expect_quantized: usize,
+) {
+    let ck = Checkpoint::load(&out_dir.join("final.ckpt")).unwrap();
+    assert!(ck.meta.get("res_blocks").is_some(), "residual serving meta missing");
+    assert!(ck.meta.get("mlp_layers").is_some(), "fc-head serving meta missing");
+    let (q, report) = coordinator::export_packed(&ck, k_w).unwrap();
+    assert_eq!(report.k_w, k_w);
+    assert_eq!(
+        report.quantized_tensors, expect_quantized,
+        "the six unit `.w` tensors and fc1.w must pack; BN tensors stay raw"
+    );
+    let aqq = out_dir.join("final.aqq");
+    q.save(&aqq).unwrap();
+
+    let served =
+        ReferenceBackend::from_packed(&QuantizedCheckpoint::load(&aqq).unwrap()).unwrap();
+    let state = backend.load_state(&ck, 0).unwrap();
+    let ds = synth::generate_sized(DatasetKind::Cifar10, 64, 99, 1, 8, 8);
+    for i in 0..64 {
+        let want = backend.predict(&state, ds.image(i), 1, k_w, k_a).unwrap()[0];
+        assert_eq!(
+            served.classify_one(ds.image(i)),
+            want,
+            "sample {i}: served prediction diverged from the trainer's eval forward"
+        );
+    }
+}
+
+/// The acceptance path: a full AdaQAT run on measured residual-net
+/// losses → freeze via oscillation → export → serve through the
+/// integer residual kernels → bit-identical predictions.
+#[test]
+fn full_adaqat_resnet_run_exports_and_serves_identically() {
+    let mut cfg = res_cfg();
+    cfg.epochs = 12; // 192 steps: descent + oscillation + margin
+    cfg.controller = ControllerKind::AdaQat;
+    // Same tuning rationale as the smallcnn e2e: batch-norm after every
+    // conv renormalizes post-quantization, so ΔL(1→2 bits) is ~1 nat
+    // and λ = 0.1 keeps the hardware pull under that wall while still
+    // dominating the flat high-bit region — N_w settles into the
+    // oscillation band instead of ramming the 1-bit clamp. Residual
+    // joins only add f32 sums on top of the same BN'd conv units, so
+    // the surface shape carries over.
+    cfg.init_nw = 5.0;
+    cfg.init_na = 8.0;
+    cfg.eta_w = 0.05;
+    cfg.eta_a = 0.0;
+    cfg.lambda = 0.1;
+    cfg.osc_threshold = 2;
+    cfg.probe_interval = 1;
+    let out_dir = tmpdir("e2e");
+    cfg.out_dir = Some(out_dir.clone());
+
+    let backend = ResNetNativeBackend::from_config(&cfg).unwrap();
+    let exp = Experiment::new(&backend, cfg).unwrap();
+    let result = exp.run().unwrap();
+
+    // the controller ran on measured residual-net losses and froze the
+    // weight axis (freeze picks the larger point, so k_w >= 2)
+    assert!(!result.trace.is_empty(), "controller never probed");
+    assert!(result.trace.iter().all(|t| t.train_loss.is_finite()));
+    let (k_w, k_a) = result.final_bits;
+    assert_eq!(k_a, 8, "eta_a = 0 must pin activations");
+    assert!(
+        (2..=8).contains(&k_w),
+        "frozen k_w = {k_w} outside the expected band (N trace: {:?})",
+        result.trace.iter().map(|t| t.n_w).collect::<Vec<_>>()
+    );
+    assert!(
+        result.trace.iter().any(|t| t.osc_w >= 2),
+        "weight axis should have frozen via oscillation, max osc = {:?}",
+        result.trace.iter().map(|t| t.osc_w).max()
+    );
+    // loss moved: a real training signal, not the synthetic landscape
+    let first = result.epochs.first().unwrap().train_loss;
+    let last = result.epochs.last().unwrap().train_loss;
+    assert!(last < first, "train loss did not improve: {first} -> {last}");
+
+    export_and_check(&backend, &out_dir, k_w, k_a, 7);
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+/// The robustness core, independent of controller dynamics: a fixed
+/// 4/8 run round-trips through export → serve with bit-identical
+/// predictions across both shortcut kinds.
+#[test]
+fn fixed_controller_resnet_run_round_trips_through_serving() {
+    let mut cfg = res_cfg();
+    cfg.controller = ControllerKind::Fixed { k_w: 4, k_a: 8 };
+    let out_dir = tmpdir("fixed");
+    cfg.out_dir = Some(out_dir.clone());
+    let backend = ResNetNativeBackend::from_config(&cfg).unwrap();
+    let result = Experiment::new(&backend, cfg).unwrap().run().unwrap();
+    assert_eq!(result.final_bits, (4, 8));
+    assert!(result.test_top1 > 0.0);
+    export_and_check(&backend, &out_dir, 4, 8, 7);
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+/// Same seed ⇒ bit-identical run (the residual backend is
+/// single-threaded math over a deterministic pipeline).
+#[test]
+fn same_seed_gives_identical_resnet_run() {
+    let mut cfg = res_cfg();
+    cfg.epochs = 2;
+    cfg.controller = ControllerKind::AdaQat;
+    cfg.seed = 11;
+    let run = |cfg: &ExperimentConfig| {
+        let backend = ResNetNativeBackend::from_config(cfg).unwrap();
+        Experiment::new(&backend, cfg.clone()).unwrap().run().unwrap()
+    };
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(a.final_bits, b.final_bits);
+    assert_eq!(a.trace.len(), b.trace.len());
+    for (x, y) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+        assert_eq!(x.n_w.to_bits(), y.n_w.to_bits());
+    }
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits());
+    }
+    cfg.seed = 12;
+    let c = run(&cfg);
+    assert!(
+        a.epochs[0].train_loss.to_bits() != c.epochs[0].train_loss.to_bits(),
+        "seed change should change the trajectory"
+    );
+}
+
+/// The measured residual probe-loss surface: after some training,
+/// fewer weight bits ⇒ higher task loss — the wall the oscillation
+/// freeze relies on, now with skip connections in the way.
+#[test]
+fn measured_resnet_loss_surface_has_a_low_bit_wall() {
+    let cfg = res_cfg();
+    let backend = ResNetNativeBackend::from_config(&cfg).unwrap();
+    let exp = Experiment::new(&backend, cfg.clone()).unwrap();
+    let mut state = backend.init_state(3).unwrap();
+    let batches = exp.train_loader.epoch(1);
+    for _ in 0..3 {
+        for batch in &batches {
+            backend.train_step(&mut state, batch, 0.05, 8, 8, false).unwrap();
+        }
+    }
+    let probe = |k_w: u32| {
+        backend.probe_loss(&state, &batches[0], k_w, 8).unwrap().loss
+    };
+    let (l1, l8) = (probe(1), probe(8));
+    assert!(l1.is_finite() && l8.is_finite());
+    assert!(
+        l1 > l8 + 0.05,
+        "1-bit resnet weights should hurt a trained net: L(1)={l1} vs L(8)={l8}"
+    );
+}

@@ -24,6 +24,10 @@
 #                            (mode "bslice": §16 whole-batch bit-plane
 #                             slicing vs per-row runs of the same plan)
 #   BENCH_conv_native.json   speedup_vs_direct   per (k_w, batch)
+#   BENCH_conv_native.json   speedup_vs_f32      per (k_w, batch)
+#                            (the §18 resnet rows: integer residual
+#                             serving vs the same QuantConvNet with raw
+#                             f32 payloads and no activation quant)
 #   BENCH_train_native.json  steps_per_sec / fp32 steps_per_sec
 #                                                per quantized config
 #   BENCH_obs.json           overhead_ratio      instrumented / plain
@@ -47,19 +51,21 @@ import json, os, sys
 
 TOLERANCE = 0.75  # fresh must be >= 25% of the way below baseline
 
-def rows_by_key(doc, key_fields):
+def ratio_metric(doc, metric, key_fields):
+    """(key -> ratio) straight from a per-row ratio field. Rows lacking
+    the metric are skipped *before* keying, so row families that share
+    key fields but carry disjoint metrics (e.g. the smallcnn
+    speedup_vs_direct rows and the resnet speedup_vs_f32 rows in
+    BENCH_conv_native.json) cannot clobber each other."""
     out = {}
     for row in doc.get("results", []):
+        if metric not in row:
+            continue
         # "mode" defaults to "quant" so pre-bitserial files still key
         key = tuple(row.get(f, "quant") if f == "mode" else row.get(f)
                     for f in key_fields)
-        out[key] = row
+        out[key] = row[metric]
     return out
-
-def ratio_metric(doc, metric, key_fields):
-    """(key -> ratio) straight from a per-row ratio field."""
-    return {k: r[metric] for k, r in rows_by_key(doc, key_fields).items()
-            if metric in r}
 
 def train_relative(doc):
     """steps_per_sec of each quantized config relative to the same
@@ -82,6 +88,8 @@ CHECKS = [
      lambda d: ratio_metric(d, "speedup_vs_perrow", ("mode", "k_w", "batch"))),
     ("BENCH_conv_native.json",  "speedup_vs_direct",
      lambda d: ratio_metric(d, "speedup_vs_direct", ("k_w", "batch"))),
+    ("BENCH_conv_native.json",  "speedup_vs_f32",
+     lambda d: ratio_metric(d, "speedup_vs_f32", ("k_w", "batch"))),
     ("BENCH_train_native.json", "steps_per_sec vs fp32",
      train_relative),
 ]

@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# Docs-drift gate (ISSUE 9, satellite d): every `--flag` token that
+# docs/HANDBOOK.md mentions — in fenced command blocks or prose — must
+# exist in one of the CLI flag tables in rust/src/main.rs (the
+# `const *_FLAGS: &[&str]` consts that the argument parser validates
+# against). A renamed or removed flag therefore fails CI instead of
+# silently rotting the operator walkthrough.
+#
+# The companion rustdoc gate (`RUSTDOCFLAGS="-D warnings" cargo doc`)
+# lives in .github/workflows/ci.yml next to the call site of this
+# script; this half covers the handbook, that half covers doc comments.
+#
+# Usage: scripts/check_docs.sh   (from the repo root or anywhere)
+set -euo pipefail
+cd "$(dirname "$0")/.." || exit 1
+
+PY=python3
+command -v "$PY" >/dev/null 2>&1 || PY=python
+
+"$PY" - <<'EOF'
+import re
+import sys
+
+SRC = "rust/src/main.rs"
+DOC = "docs/HANDBOOK.md"
+
+with open(SRC) as f:
+    src = f.read()
+
+# The flag universe: every quoted name inside a `*_FLAGS: &[&str]`
+# const. The parser rejects anything outside these tables, so they are
+# the ground truth the handbook must agree with.
+valid = set()
+tables = re.findall(r"_FLAGS: &\[&str\] =\s*&\[(.*?)\];", src, re.S)
+for body in tables:
+    valid.update(re.findall(r'"([a-z][a-z0-9_]*)"', body))
+if not tables or not valid:
+    sys.exit(f"check_docs: no *_FLAGS tables found in {SRC} — "
+             "did the CLI parser move?")
+
+with open(DOC) as f:
+    text = f.read()
+# Join backslash-continued shell lines so multi-line commands read as
+# one, drop lines invoking cargo (whose --release/--test flags are not
+# ours to validate), then collect every `--flag` token. The lookbehind
+# keeps `---` table rules and mid-word dashes out.
+text = text.replace("\\\n", " ")
+lines = [ln for ln in text.splitlines() if "cargo " not in ln]
+used = set(re.findall(r"(?<![-\w])--([a-z][a-z0-9_]*)", "\n".join(lines)))
+if not used:
+    sys.exit(f"check_docs: no --flag tokens found in {DOC} — "
+             "extraction broken or handbook gutted?")
+
+unknown = sorted(used - valid)
+if unknown:
+    print(f"docs gate FAILED: {DOC} references flags {SRC} does not "
+          "define:", file=sys.stderr)
+    for flag in unknown:
+        print(f"  --{flag}", file=sys.stderr)
+    print("(fix the handbook, or add the flag to the *_FLAGS table "
+          "it belongs to)", file=sys.stderr)
+    sys.exit(1)
+
+print(f"docs gate: OK — {len(used)} distinct flags in {DOC}, "
+      f"all present in {SRC} ({len(valid)} defined)")
+EOF
