@@ -78,6 +78,11 @@ fn main() -> anyhow::Result<()> {
             workers,
             queue_capacity: 4096.max(n),
             max_delay: Duration::from_millis(window_ms),
+            // armed but never firing at this queue depth / time scale:
+            // the §19 admission + deadline checks must price inside the
+            // same ≤5% instrumentation budget
+            default_deadline: Some(Duration::from_secs(60)),
+            max_wait: Some(Duration::from_secs(30)),
         },
         move |_| Ok(Box::new(ReferenceBackend::from_packed(&packed2)?) as Box<dyn Backend>),
     )?;

@@ -1,6 +1,10 @@
 //! Serving benchmarks (DESIGN.md §7): packed-checkpoint size at swept
-//! bit-widths, single-stream vs dynamically-batched throughput, and a
-//! TCP loopback end-to-end run.
+//! bit-widths, single-stream vs dynamically-batched throughput, a TCP
+//! loopback end-to-end run, and a scored overload scenario (§19) —
+//! 4x the measured sustained throughput against a small queue with
+//! admission control armed. The overload row lands in
+//! `BENCH_serve.json`, which `scripts/check_bench.sh` gates against
+//! `bench_baselines/BENCH_serve.json`.
 //!
 //! Runs entirely offline on the pure-Rust reference backend — no AOT
 //! artifacts or PJRT needed — so it doubles as the serving subsystem's
@@ -11,24 +15,31 @@
 //! cargo bench --bench serve -- --n 8192 --workers 4 --max_delay_ms 1
 //! ```
 
+use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use adaqat::data::DatasetKind;
-use adaqat::metrics::Table;
+use adaqat::metrics::{Histogram, Table};
+use adaqat::serve::engine::SubmitError;
 use adaqat::serve::{
     demo, Backend, Engine, EngineConfig, QuantizedCheckpoint, ReferenceBackend, Server,
 };
 use adaqat::util::bench::bench_args;
+use adaqat::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     adaqat::util::logger::init();
     let args = bench_args();
-    let n: usize = args.get("n", 2048).map_err(|e| anyhow::anyhow!(e))?;
+    // smoke scale under `cargo test --benches` (unoptimized), full
+    // scale under `cargo bench` — same convention as the other benches
+    let (def_n, def_single) = if cfg!(debug_assertions) { (512, 64) } else { (2048, 256) };
+    let n: usize = args.get("n", def_n).map_err(|e| anyhow::anyhow!(e))?;
     let batch: usize = args.get("batch", 64).map_err(|e| anyhow::anyhow!(e))?;
     let workers: usize = args.get("workers", 2).map_err(|e| anyhow::anyhow!(e))?;
     let window_ms: u64 = args.get("max_delay_ms", 2).map_err(|e| anyhow::anyhow!(e))?;
-    let single_n: usize = args.get("single_n", 256).map_err(|e| anyhow::anyhow!(e))?;
+    let single_n: usize = args.get("single_n", def_single).map_err(|e| anyhow::anyhow!(e))?;
+    let out = PathBuf::from(args.get_str("out", "../BENCH_serve.json"));
 
     let tmp = std::env::temp_dir().join(format!("adaqat_serve_bench_{}", std::process::id()));
     std::fs::create_dir_all(&tmp)?;
@@ -70,6 +81,7 @@ fn main() -> anyhow::Result<()> {
             workers,
             queue_capacity: 4096.max(n),
             max_delay: Duration::from_millis(window_ms),
+            ..EngineConfig::default()
         },
         move |_| Ok(Box::new(ReferenceBackend::from_packed(&packed2)?) as Box<dyn Backend>),
     )?;
@@ -138,6 +150,116 @@ fn main() -> anyhow::Result<()> {
     }
 
     engine.shutdown();
+
+    // ---------------------------------------------- overload behavior
+    // DESIGN.md §19: offer ~4x the sustained batched throughput to a
+    // fresh engine with a small queue and admission control armed.
+    // Scored, not timed: every rejection must carry a finite
+    // retry_after_ms hint, accounting must conserve every submit, and
+    // the p99 of admitted requests must stay bounded by the max_wait
+    // dial rather than grow with the backlog.
+    println!("\n=== overload: 4x offered load, admission control armed ===");
+    let max_wait_ms: u64 = 100;
+    let packed3 = Arc::clone(&packed);
+    let overload_engine = Engine::start(
+        EngineConfig {
+            workers,
+            queue_capacity: 64,
+            max_delay: Duration::from_millis(window_ms),
+            max_wait: Some(Duration::from_millis(max_wait_ms)),
+            ..EngineConfig::default()
+        },
+        move |_| Ok(Box::new(ReferenceBackend::from_packed(&packed3)?) as Box<dyn Backend>),
+    )?;
+    let offered_rps = 4.0 * rps_batched;
+    let interval = Duration::from_secs_f64(1.0 / offered_rps);
+    let admitted_ms = Histogram::new();
+    let (tx, rx) = mpsc::channel();
+    let (mut accepted, mut rejected, mut full) = (0u64, 0u64, 0u64);
+    let mut hints_ok = true;
+    let t0 = Instant::now();
+    for i in 0..n {
+        // paced open loop: target send times are fixed up front, so a
+        // slow engine cannot slow the arrival process down
+        let target = t0 + interval.mul_f64(i as f64);
+        loop {
+            let now = Instant::now();
+            if now >= target {
+                break;
+            }
+            std::thread::sleep((target - now).min(Duration::from_millis(1)));
+        }
+        match overload_engine.submit(i as u64, ds.image(i).to_vec(), tx.clone()) {
+            Ok(()) => accepted += 1,
+            Err(SubmitError::Overloaded { retry_after_ms }) => {
+                hints_ok &= (1..=30_000).contains(&retry_after_ms);
+                rejected += 1;
+            }
+            Err(SubmitError::Full) => full += 1, // decide/push race under load
+            Err(e) => anyhow::bail!("unexpected overload submit error: {e}"),
+        }
+    }
+    drop(tx);
+    for _ in 0..accepted {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .map_err(|_| anyhow::anyhow!("overload engine stalled"))?;
+        anyhow::ensure!(resp.result.is_ok(), "admitted overload request failed");
+        admitted_ms.record_ms(resp.queue_ms + resp.compute_ms);
+    }
+    anyhow::ensure!(rx.try_recv().is_err(), "more responses than accepted submits");
+    let (c_rejected, c_dl_adm, c_dl_batch) = overload_engine.overload_counts();
+    let (c_full, _c_closed) = overload_engine.shed_counts();
+    overload_engine.shutdown();
+
+    let conserved = accepted + rejected + full == n as u64
+        && c_rejected == rejected
+        && c_full == full
+        && c_dl_adm + c_dl_batch == 0;
+    let snap = admitted_ms.snapshot();
+    let p99_bound_ms = 10.0 * max_wait_ms as f64;
+    let p99_bounded = snap.p99_ms <= p99_bound_ms;
+    let overload_score = if rejected > 0 && hints_ok && conserved && p99_bounded {
+        1.0
+    } else {
+        0.0
+    };
+    let reject_fraction = rejected as f64 / n as f64;
+    println!("offered:       {offered_rps:9.0} req/s (paced, {n} requests)");
+    println!(
+        "admitted:      {accepted:9} requests, p99 {:.1} ms (bound {p99_bound_ms:.0} ms)",
+        snap.p99_ms
+    );
+    println!("rejected:      {rejected:9} with retry_after_ms hints, {full} shed queue-full");
+    println!(
+        "overload_score:{overload_score:9.1}  (rejections seen: {}, hints finite: {hints_ok}, \
+         conserved: {conserved}, p99 bounded: {p99_bounded})",
+        rejected > 0
+    );
+
+    let doc = Json::obj(vec![(
+        "results",
+        Json::Arr(vec![
+            Json::obj(vec![
+                ("metric", Json::str("overload")),
+                ("load", Json::str("4x")),
+                ("overload_score", Json::num(overload_score)),
+                ("offered_rps", Json::num(offered_rps)),
+                ("admitted_p99_ms", Json::num(snap.p99_ms)),
+                ("reject_fraction", Json::num(reject_fraction)),
+            ]),
+            Json::obj(vec![
+                ("metric", Json::str("throughput")),
+                ("load", Json::str("1x")),
+                ("rps_single", Json::num(rps_single)),
+                ("rps_batched", Json::num(rps_batched)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ]),
+    )]);
+    std::fs::write(&out, doc.to_string())?;
+    println!("wrote {}", out.display());
+
     std::fs::remove_dir_all(&tmp).ok();
     Ok(())
 }

@@ -320,6 +320,15 @@ pub struct ServeConfig {
     /// text exposition at every stats interval (DESIGN.md §15) — a
     /// file-scrape surface for setups without a TCP scraper.
     pub metrics_out: Option<PathBuf>,
+    /// Deadline budget applied to requests that carry no `deadline_ms`
+    /// of their own (DESIGN.md §19); 0 = requests without a deadline
+    /// never expire.
+    pub default_deadline_ms: u64,
+    /// Admission-control trip wire: reject with `overloaded` +
+    /// `retry_after_ms` once the estimated queue wait exceeds this
+    /// budget (DESIGN.md §19); 0 disarms admission control (the queue
+    /// sheds with `queue_full` at capacity, as before).
+    pub max_wait_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -334,6 +343,8 @@ impl Default for ServeConfig {
             model: "resnet20".to_string(),
             threads: 1,
             metrics_out: None,
+            default_deadline_ms: 0,
+            max_wait_ms: 500,
         }
     }
 }
@@ -349,6 +360,8 @@ impl ServeConfig {
             "workers" => self.workers = p(key, value)?,
             "queue_capacity" => self.queue_capacity = p(key, value)?,
             "max_delay_ms" => self.max_delay_ms = p(key, value)?,
+            "default_deadline_ms" => self.default_deadline_ms = p(key, value)?,
+            "max_wait_ms" => self.max_wait_ms = p(key, value)?,
             "threads" => self.threads = p(key, value)?,
             "metrics_out" => self.metrics_out = Some(PathBuf::from(value)),
             "model" => self.model = value.to_string(),
@@ -368,7 +381,8 @@ impl ServeConfig {
     pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
         for key in [
             "checkpoint", "addr", "workers", "queue_capacity", "max_delay_ms",
-            "backend", "model", "threads", "metrics_out",
+            "default_deadline_ms", "max_wait_ms", "backend", "model", "threads",
+            "metrics_out",
         ] {
             if args.has(key) {
                 let v = args.get_str(key, "");
@@ -541,6 +555,8 @@ mod tests {
                 .map(String::from),
         )
         .unwrap();
+        assert_eq!(s.default_deadline_ms, 0, "no implicit deadline by default");
+        assert_eq!(s.max_wait_ms, 500, "admission control armed by default");
         s.apply_args(&args).unwrap();
         assert!(s.validate().is_ok());
         assert_eq!(s.workers, 4);
@@ -550,6 +566,11 @@ mod tests {
         assert_eq!(s.threads, 0, "0 = auto-size to the machine");
         assert_eq!(s.addr, "127.0.0.1:7878");
         assert_eq!(s.metrics_out, Some(PathBuf::from("runs/demo/metrics.prom")));
+        s.set("default_deadline_ms", "250").unwrap();
+        s.set("max_wait_ms", "0").unwrap();
+        assert_eq!(s.default_deadline_ms, 250);
+        assert_eq!(s.max_wait_ms, 0, "0 disarms admission control");
+        assert!(s.validate().is_ok());
     }
 
     #[test]

@@ -46,11 +46,12 @@ const EXPORT_FLAGS: &[&str] = &["checkpoint", "out", "bits", "help"];
 
 const SERVE_FLAGS: &[&str] = &[
     "checkpoint", "addr", "workers", "queue_capacity", "max_delay_ms",
-    "backend", "model", "threads", "metrics_out", "help",
+    "default_deadline_ms", "max_wait_ms", "backend", "model", "threads",
+    "metrics_out", "help",
 ];
 
 const CLIENT_FLAGS: &[&str] =
-    &["addr", "n", "window", "dataset", "seed", "help"];
+    &["addr", "n", "window", "retries", "deadline_ms", "dataset", "seed", "help"];
 
 const DEMO_MODEL_FLAGS: &[&str] =
     &["out", "dataset", "samples", "seed", "serve_batch", "hidden", "k_a", "help"];
@@ -287,10 +288,13 @@ fn cmd_export(args: &Args) -> anyhow::Result<()> {
 
 fn engine_from(scfg: &ServeConfig) -> anyhow::Result<Arc<Engine>> {
     let packed = Arc::new(QuantizedCheckpoint::load(&scfg.checkpoint)?);
+    let nonzero_ms = |ms: u64| (ms > 0).then(|| Duration::from_millis(ms));
     let cfg = EngineConfig {
         workers: scfg.workers,
         queue_capacity: scfg.queue_capacity,
         max_delay: Duration::from_millis(scfg.max_delay_ms),
+        default_deadline: nonzero_ms(scfg.default_deadline_ms),
+        max_wait: nonzero_ms(scfg.max_wait_ms),
     };
     let threads = scfg.threads;
     match scfg.backend.as_str() {
@@ -314,6 +318,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut scfg = ServeConfig::default();
     scfg.apply_args(args).map_err(|e| anyhow::anyhow!(e))?;
     scfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    // graceful drain (DESIGN.md §19): SIGINT/SIGTERM latch a flag the
+    // serve loop polls, same path as the wire-level {"cmd":"drain"}
+    adaqat::util::signal::install();
     let engine = engine_from(&scfg)?;
     let server = Server::start(&scfg.addr, Arc::clone(&engine))?;
     // the GEMM pool only exists on the reference backend (the PJRT
@@ -346,15 +353,37 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     // write once at startup so scrapers see the file immediately
     dump_metrics(&engine);
-    // Foreground service: report latency stats until the process is
-    // killed (no signal handling in the offline std-only build).
+    // Foreground service: report latency stats until a signal or a
+    // wire-level {"cmd":"drain"} asks for a graceful exit. A short
+    // poll tick bounds drain latency; stats/exposition refresh on a
+    // coarser multiple of it.
+    const TICK: Duration = Duration::from_millis(200);
+    const STATS_EVERY: u32 = 50; // ≈ every 10 s
+    let mut ticks = 0u32;
     loop {
-        std::thread::sleep(Duration::from_secs(10));
-        dump_metrics(&engine);
-        if engine.metrics.requests.load(std::sync::atomic::Ordering::Relaxed) > 0 {
-            log::info!("\n{}", engine.metrics.report());
+        std::thread::sleep(TICK);
+        if server.drain_requested() || adaqat::util::signal::requested() {
+            break;
+        }
+        ticks += 1;
+        if ticks % STATS_EVERY == 0 {
+            dump_metrics(&engine);
+            if engine.metrics.requests.load(std::sync::atomic::Ordering::Relaxed) > 0 {
+                log::info!("\n{}", engine.metrics.report());
+            }
         }
     }
+    // Drain: stop accepting, finish what was admitted (in-queue work
+    // still races its deadlines), flush the exposition, exit cleanly.
+    println!("draining: listener closed, finishing in-flight requests…");
+    server.stop();
+    engine.shutdown();
+    dump_metrics(&engine);
+    if engine.metrics.requests.load(std::sync::atomic::Ordering::Relaxed) > 0 {
+        println!("{}", engine.metrics.report());
+    }
+    println!("drained: bye");
+    Ok(())
 }
 
 fn cmd_client(args: &Args) -> anyhow::Result<()> {
@@ -362,14 +391,29 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
     let n: usize = args.get("n", 1000).map_err(|e| anyhow::anyhow!(e))?;
     let window: usize = args.get("window", 64).map_err(|e| anyhow::anyhow!(e))?;
     let seed: u64 = args.get("seed", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let retries: u32 = args.get("retries", 4).map_err(|e| anyhow::anyhow!(e))?;
+    let deadline_ms: u64 = args.get("deadline_ms", 0).map_err(|e| anyhow::anyhow!(e))?;
     let kind = DatasetKind::parse(&args.get_str("dataset", "cifar10"))
         .map_err(|e| anyhow::anyhow!(e))?;
     let ds = adaqat::data::synth::generate(kind, n, seed, 1);
     let images: Vec<(Vec<f32>, i32)> =
         (0..n).map(|i| (ds.image(i).to_vec(), ds.labels[i])).collect();
     println!("sending {n} requests to {addr} (window {window})…");
-    let report = adaqat::serve::client::run(&addr, &images, window)?;
+    let cfg = adaqat::serve::client::ClientConfig {
+        window,
+        max_retries: retries,
+        deadline_ms: (deadline_ms > 0).then_some(deadline_ms),
+        seed,
+    };
+    let report = adaqat::serve::client::run_with(&addr, &images, &cfg)?;
     println!("received:    {}/{} ({} errors)", report.received, report.sent, report.errors);
+    println!(
+        "attempted:   {} wire sends ({} retried, {} shed after {} attempts)",
+        report.attempted,
+        report.retried,
+        report.shed,
+        retries + 1
+    );
     println!(
         "accuracy:    {:.1}% ({} correct)",
         100.0 * report.correct as f64 / report.received.max(1) as f64,
@@ -476,11 +520,23 @@ SERVING FLAGS
   export:     --checkpoint FILE [--out FILE.aqq] [--bits N (default: meta k_w)]
   serve:      --checkpoint FILE.aqq [--addr HOST:PORT] [--workers N]
               [--queue_capacity N] [--max_delay_ms N]
+              [--default_deadline_ms N (deadline for requests without
+               one; 0 = no implicit deadline)]
+              [--max_wait_ms N (admission control: reject `overloaded`
+               + retry_after_ms past this queue-wait estimate;
+               0 disarms, default 500)]
               [--backend reference|runtime] [--model NAME]
               [--threads N (GEMM threads per backend; 0 = per core)]
               [--metrics_out FILE (rewrite Prometheus exposition
                every 10s; also served via the metrics command)]
+              SIGINT/SIGTERM or a {{\"cmd\":\"drain\"}} line drain
+              gracefully: finish in-flight work, flush metrics, exit 0
   client:     [--addr HOST:PORT] [--n N] [--window N] [--dataset D] [--seed N]
+              [--retries N (per-request budget for `overloaded`
+               replies, jittered exponential backoff honoring
+               retry_after_ms; default 4)]
+              [--deadline_ms N (attach this budget to every request;
+               0 = none)]
   demo-model: [--out FILE] [--dataset D] [--samples PER_CLASS]
               [--serve_batch N] [--seed N]
               [--hidden N (0 = linear; even N builds the 2-layer ReLU MLP)]

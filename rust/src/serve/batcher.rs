@@ -12,6 +12,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::obs::{self, HistHandle};
+use crate::util::failpoint;
 
 use super::queue::{Pop, RequestQueue, ServeRequest};
 
@@ -30,14 +31,33 @@ pub struct DynamicBatcher {
 
 impl DynamicBatcher {
     pub fn new(queue: Arc<RequestQueue>, batch: usize, max_delay: Duration) -> DynamicBatcher {
+        Self::with_hist(
+            queue,
+            batch,
+            max_delay,
+            obs::global().histogram("adaqat_batch_rows", &[]),
+        )
+    }
+
+    /// [`new`](DynamicBatcher::new) with an explicit batch-rows series,
+    /// so an engine built on an isolated [`Registry`] (chaos tests)
+    /// keeps its histogram out of the global registry. Worker threads
+    /// hold the `Arc<HistHandle>`, not the registry itself.
+    pub fn with_hist(
+        queue: Arc<RequestQueue>,
+        batch: usize,
+        max_delay: Duration,
+        batch_rows: Arc<HistHandle>,
+    ) -> DynamicBatcher {
         assert!(batch > 0, "batch must be positive");
-        let batch_rows = obs::global().histogram("adaqat_batch_rows", &[]);
         DynamicBatcher { queue, batch, max_delay, batch_rows }
     }
 
     /// Next coalesced batch (1..=batch requests), or `None` once the
     /// queue is closed and drained.
     pub fn next_batch(&self) -> Option<Vec<ServeRequest>> {
+        // chaos site: stall batch formation so deadlines expire in-queue
+        failpoint::hit("batcher_stall");
         let first = loop {
             match self.queue.pop(IDLE_POLL) {
                 Pop::Item(r) => break r,
@@ -72,7 +92,7 @@ mod tests {
     fn req(id: u64) -> ServeRequest {
         let (tx, rx) = mpsc::channel();
         drop(rx);
-        ServeRequest { id, pixels: vec![], enqueued: Instant::now(), resp: tx }
+        ServeRequest { id, pixels: vec![], enqueued: Instant::now(), deadline: None, resp: tx }
     }
 
     #[test]

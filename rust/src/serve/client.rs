@@ -1,31 +1,77 @@
-//! Demo load-generating client (DESIGN.md §7): pipelines labeled images
-//! over one TCP connection with a bounded in-flight window, then reports
-//! client-observed latency percentiles, throughput, and accuracy.
+//! Demo load-generating client (DESIGN.md §7, §19): pipelines labeled
+//! images over one TCP connection with a bounded in-flight window, then
+//! reports client-observed latency percentiles, throughput, accuracy —
+//! and, under overload, the attempted/retried/shed accounting that
+//! makes the overload benches interpretable.
+//!
+//! `overloaded` replies are retried with jittered exponential backoff
+//! that honors the server's `retry_after_ms` hint (the hint is a floor,
+//! never a ceiling — the server knows its drain rate, the client adds
+//! jitter so synchronized retry waves don't re-overload it). Every
+//! other error (`bad_request`, `deadline_exceeded`, `queue_full`,
+//! `inference_failed`) is final.
 //!
 //! Used by `adaqat client`, the serve bench's TCP mode, and the
-//! end-to-end test (≥1k requests through the full stack).
+//! end-to-end tests.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::metrics::{Histogram, LatencySnapshot};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Give up on a run that makes no progress for this long (server hung,
+/// response lost to a dropped connection, …).
+const STALL_TIMEOUT: Duration = Duration::from_secs(60);
+/// Backoff floor for the first retry; doubles per attempt.
+const BACKOFF_BASE_MS: u64 = 10;
+
+/// Load-generation knobs beyond the image list.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Max requests in flight (1 = single-stream).
+    pub window: usize,
+    /// Retry budget per request for `overloaded` replies; 0 = never
+    /// retry (every rejection is recorded as shed).
+    pub max_retries: u32,
+    /// Attach this `deadline_ms` budget to every request (`None` =
+    /// no deadline field; the server default applies).
+    pub deadline_ms: Option<u64>,
+    /// Seed for backoff jitter (deterministic load patterns in tests).
+    pub seed: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig { window: 32, max_retries: 4, deadline_ms: None, seed: 0x5eed }
+    }
+}
 
 /// What one run observed, from the client's side of the socket.
 pub struct ClientReport {
+    /// First attempts written (one per image reached).
     pub sent: usize,
+    /// Final outcomes received (== `preds.len()`).
     pub received: usize,
+    /// All wire sends, retries included.
+    pub attempted: usize,
+    /// Retry sends (`attempted - sent` when every image was reached).
+    pub retried: usize,
+    /// Requests abandoned after exhausting the retry budget on
+    /// `overloaded` replies.
+    pub shed: usize,
+    /// Final outcomes that are errors (sheds included).
     pub errors: usize,
     /// Predictions matching the supplied label.
     pub correct: usize,
     pub wall_seconds: f64,
     pub latency: LatencySnapshot,
-    /// id → Ok(class) | Err(message), for correctness cross-checks.
+    /// id → Ok(class) | Err(error code), for correctness cross-checks.
     pub preds: BTreeMap<u64, Result<usize, String>>,
 }
 
@@ -39,119 +85,159 @@ impl ClientReport {
     }
 }
 
-/// Send `images` (pixels, label) as requests `id = 0..n`, keeping at
-/// most `window` in flight. `window = 1` is the single-stream regime;
-/// large windows exercise dynamic batching.
+/// What the reader thread decoded from one response line.
+enum Outcome {
+    Class(usize),
+    Overloaded { retry_after_ms: u64 },
+    Error(String),
+}
+
+/// Send `images` (pixels, label) as requests `id = 0..n` with the
+/// default retry policy. See [`run_with`] for the full dial set.
 pub fn run(
     addr: &str,
     images: &[(Vec<f32>, i32)],
     window: usize,
 ) -> anyhow::Result<ClientReport> {
-    anyhow::ensure!(window >= 1, "window must be >= 1");
+    run_with(addr, images, &ClientConfig { window, ..ClientConfig::default() })
+}
+
+/// Send `images` as requests `id = 0..n`, keeping at most `cfg.window`
+/// in flight (ids map answers back to questions, so at most one attempt
+/// per id is ever outstanding). `overloaded` replies are retried up to
+/// `cfg.max_retries` times with jittered exponential backoff honoring
+/// the server's `retry_after_ms`; exhausted budgets count as `shed`.
+pub fn run_with(
+    addr: &str,
+    images: &[(Vec<f32>, i32)],
+    cfg: &ClientConfig,
+) -> anyhow::Result<ClientReport> {
+    anyhow::ensure!(cfg.window >= 1, "window must be >= 1");
     let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
     let read_half = stream.try_clone()?;
 
     let n = images.len();
-    let outstanding = Arc::new(AtomicUsize::new(0));
-    let sent_at: Arc<Mutex<BTreeMap<u64, Instant>>> = Arc::new(Mutex::new(BTreeMap::new()));
-    let latency = Arc::new(Histogram::new());
-    let preds: Arc<Mutex<BTreeMap<u64, Result<usize, String>>>> =
-        Arc::new(Mutex::new(BTreeMap::new()));
-
-    let reader_outstanding = Arc::clone(&outstanding);
-    let reader_sent_at = Arc::clone(&sent_at);
-    let reader_latency = Arc::clone(&latency);
-    let reader_preds = Arc::clone(&preds);
-    let reader = std::thread::spawn(move || -> Result<usize, String> {
+    let (ev_tx, ev_rx) = mpsc::channel::<Result<(u64, Outcome), String>>();
+    let reader = std::thread::spawn(move || {
         let mut r = BufReader::new(read_half);
         let mut line = String::new();
-        let mut received = 0usize;
-        while received < n {
+        loop {
             line.clear();
             match r.read_line(&mut line) {
-                Ok(0) => return Err(format!("server closed after {received}/{n}")),
+                Ok(0) => return, // EOF: run finished or server closed
                 Ok(_) => {}
-                Err(e) => return Err(format!("read failed after {received}/{n}: {e}")),
-            }
-            let j = Json::parse(line.trim()).map_err(|e| format!("bad response: {e}"))?;
-            let id = match j.get("id").and_then(Json::as_f64) {
-                Some(v) => v as u64,
-                // id-less protocol error (shouldn't happen for well-formed
-                // requests) — count it so the run still terminates
-                None => {
-                    return Err(format!("response without id: {}", line.trim()));
+                Err(e) => {
+                    let _ = ev_tx.send(Err(format!("read failed: {e}")));
+                    return;
                 }
-            };
-            if let Some(t0) = reader_sent_at.lock().unwrap().remove(&id) {
-                reader_latency.record_ms(t0.elapsed().as_secs_f64() * 1e3);
             }
-            let outcome = match j.get("class").and_then(Json::as_f64) {
-                Some(c) => Ok(c as usize),
-                None => Err(j
-                    .get("error")
-                    .and_then(Json::as_str)
-                    .unwrap_or("malformed response")
-                    .to_string()),
-            };
-            reader_preds.lock().unwrap().insert(id, outcome);
-            reader_outstanding.fetch_sub(1, Ordering::AcqRel);
-            received += 1;
+            let event = decode_line(line.trim());
+            let fatal = event.is_err();
+            if ev_tx.send(event).is_err() || fatal {
+                return;
+            }
         }
-        Ok(received)
     });
 
     let t0 = Instant::now();
-    let mut w = std::io::BufWriter::new(stream);
-    let mut sent = 0usize;
-    for (id, (pixels, _)) in images.iter().enumerate() {
-        if outstanding.load(Ordering::Acquire) >= window {
-            // about to block on the window: everything buffered must be
-            // on the wire or the responses we wait for can never come
+    let mut w = BufWriter::new(stream.try_clone()?);
+    let mut rng = Rng::new(cfg.seed);
+    let latency = Histogram::new();
+    // per-id state: send time of the outstanding attempt, attempt index
+    let mut in_flight: BTreeMap<u64, (Instant, u32)> = BTreeMap::new();
+    // (ready_at, id, next attempt) — small (≤ window), linear scan is fine
+    let mut backlog: Vec<(Instant, u64, u32)> = Vec::new();
+    let mut preds: BTreeMap<u64, Result<usize, String>> = BTreeMap::new();
+    let mut next_idx = 0usize;
+    let (mut sent, mut attempted, mut retried, mut shed) = (0usize, 0usize, 0usize, 0usize);
+    let mut last_progress = Instant::now();
+
+    while preds.len() < n {
+        // fill the window: due retries first (they hold older ids), then
+        // fresh images
+        let mut wrote = false;
+        while in_flight.len() < cfg.window {
+            let now = Instant::now();
+            if let Some(pos) = backlog.iter().position(|(ready, _, _)| *ready <= now) {
+                let (_, id, attempt) = backlog.swap_remove(pos);
+                write_request(&mut w, id, &images[id as usize].0, cfg.deadline_ms)?;
+                in_flight.insert(id, (Instant::now(), attempt));
+                attempted += 1;
+                retried += 1;
+                wrote = true;
+            } else if next_idx < n {
+                let id = next_idx as u64;
+                write_request(&mut w, id, &images[next_idx].0, cfg.deadline_ms)?;
+                in_flight.insert(id, (Instant::now(), 0));
+                next_idx += 1;
+                sent += 1;
+                attempted += 1;
+                wrote = true;
+            } else {
+                break;
+            }
+        }
+        if wrote || cfg.window == 1 {
+            // everything buffered must be on the wire before we wait,
+            // or the responses we block on can never arrive
             w.flush()?;
         }
-        while outstanding.load(Ordering::Acquire) >= window {
-            if reader.is_finished() {
-                break; // reader bailed; stop feeding a dead run
+
+        // wait for one event (short timeout so due retries stay timely)
+        let event = match ev_rx.recv_timeout(Duration::from_millis(1)) {
+            Ok(ev) => ev,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if last_progress.elapsed() > STALL_TIMEOUT {
+                    anyhow::bail!(
+                        "client stalled: {}/{n} outcomes after {:?}",
+                        preds.len(),
+                        STALL_TIMEOUT
+                    );
+                }
+                continue;
             }
-            std::thread::sleep(Duration::from_micros(50));
-        }
-        if reader.is_finished() {
-            break;
-        }
-        let mut line = String::with_capacity(pixels.len() * 10 + 32);
-        let _ = write!(line, "{{\"id\":{id},\"image\":[");
-        for (i, p) in pixels.iter().enumerate() {
-            if i > 0 {
-                line.push(',');
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("server closed after {}/{n} outcomes", preds.len())
             }
-            // shortest round-trip formatting straight into the buffer
-            // (no per-pixel temporary): the server parses back the
-            // exact f32 we hold
-            let _ = write!(line, "{p}");
+        };
+        let (id, outcome) = event.map_err(|e| anyhow::anyhow!("client reader: {e}"))?;
+        let Some((sent_t, attempt)) = in_flight.remove(&id) else {
+            anyhow::bail!("response for id {id} which is not in flight");
+        };
+        last_progress = Instant::now();
+        match outcome {
+            Outcome::Class(c) => {
+                latency.record_ms(sent_t.elapsed().as_secs_f64() * 1e3);
+                preds.insert(id, Ok(c));
+            }
+            Outcome::Overloaded { retry_after_ms } => {
+                if attempt < cfg.max_retries {
+                    // server hint is the floor; exponential backoff and
+                    // jitter de-synchronize concurrent retriers
+                    let base = retry_after_ms.max(BACKOFF_BASE_MS << attempt);
+                    let jitter = rng.below((base / 2 + 1) as usize) as u64;
+                    backlog.push((
+                        Instant::now() + Duration::from_millis(base + jitter),
+                        id,
+                        attempt + 1,
+                    ));
+                } else {
+                    shed += 1;
+                    preds.insert(id, Err("overloaded (retry budget exhausted)".into()));
+                }
+            }
+            Outcome::Error(code) => {
+                preds.insert(id, Err(code));
+            }
         }
-        line.push_str("]}\n");
-        sent_at.lock().unwrap().insert(id as u64, Instant::now());
-        outstanding.fetch_add(1, Ordering::AcqRel);
-        w.write_all(line.as_bytes())?;
-        if window == 1 {
-            w.flush()?;
-        }
-        sent += 1;
     }
-    w.flush()?;
 
-    let received = match reader.join() {
-        Ok(Ok(r)) => r,
-        Ok(Err(e)) => anyhow::bail!("client reader: {e}"),
-        Err(_) => anyhow::bail!("client reader panicked"),
-    };
     let wall_seconds = t0.elapsed().as_secs_f64();
+    // unblock the reader (it is parked in read_line) and reap it
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    let _ = reader.join();
 
-    let preds = Arc::try_unwrap(preds)
-        .map_err(|_| anyhow::anyhow!("reader still holds preds"))?
-        .into_inner()
-        .unwrap();
     let mut errors = 0usize;
     let mut correct = 0usize;
     for (id, outcome) in &preds {
@@ -166,13 +252,67 @@ pub fn run(
     }
     Ok(ClientReport {
         sent,
-        received,
+        received: preds.len(),
+        attempted,
+        retried,
+        shed,
         errors,
         correct,
         wall_seconds,
         latency: latency.snapshot(),
         preds,
     })
+}
+
+/// Decode one response line into (id, outcome). Lines without an id
+/// are fatal — they cannot be correlated, so the run cannot finish.
+fn decode_line(line: &str) -> Result<(u64, Outcome), String> {
+    let j = Json::parse(line).map_err(|e| format!("bad response: {e}"))?;
+    let id = j
+        .get("id")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("response without id: {line}"))? as u64;
+    if let Some(c) = j.get("class").and_then(Json::as_f64) {
+        return Ok((id, Outcome::Class(c as usize)));
+    }
+    let code = j
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap_or("malformed response")
+        .to_string();
+    if code == "overloaded" {
+        let retry_after_ms =
+            j.get("retry_after_ms").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        return Ok((id, Outcome::Overloaded { retry_after_ms }));
+    }
+    Ok((id, Outcome::Error(code)))
+}
+
+/// Serialize and buffer one request line (flushing is the caller's
+/// windowing decision).
+fn write_request(
+    w: &mut BufWriter<TcpStream>,
+    id: u64,
+    pixels: &[f32],
+    deadline_ms: Option<u64>,
+) -> anyhow::Result<()> {
+    let mut line = String::with_capacity(pixels.len() * 10 + 48);
+    let _ = write!(line, "{{\"id\":{id},\"image\":[");
+    for (i, p) in pixels.iter().enumerate() {
+        if i > 0 {
+            line.push(',');
+        }
+        // shortest round-trip formatting straight into the buffer (no
+        // per-pixel temporary): the server parses back the exact f32
+        let _ = write!(line, "{p}");
+    }
+    line.push(']');
+    if let Some(d) = deadline_ms {
+        let _ = write!(line, ",\"deadline_ms\":{d}");
+    }
+    line.push_str("}\n");
+    w.write_all(line.as_bytes())?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -183,6 +323,7 @@ mod tests {
     use crate::serve::engine::{Backend, Engine, EngineConfig, ReferenceBackend};
     use crate::serve::packed::QuantizedCheckpoint;
     use crate::serve::server::Server;
+    use std::sync::Arc;
 
     #[test]
     fn windowed_client_round_trips_small_batch() {
@@ -196,6 +337,7 @@ mod tests {
                 workers: 1,
                 queue_capacity: 64,
                 max_delay: Duration::from_millis(1),
+                ..EngineConfig::default()
             },
             move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
         )
@@ -209,6 +351,10 @@ mod tests {
         assert_eq!(report.sent, 32);
         assert_eq!(report.received, 32);
         assert_eq!(report.errors, 0);
+        // a clean run retries and sheds nothing
+        assert_eq!(report.attempted, 32);
+        assert_eq!(report.retried, 0);
+        assert_eq!(report.shed, 0);
         assert_eq!(report.preds.len(), 32);
         assert!(report.latency.count == 32);
         // every prediction matches the model's direct forward
@@ -219,6 +365,59 @@ mod tests {
                 Some(direct.classify_one(ds.image(*id as usize)))
             );
         }
+        server.stop();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn deadline_field_rides_along_and_zero_budget_is_a_final_error() {
+        let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 4, 13, 8);
+        let q = Arc::new(QuantizedCheckpoint::from_checkpoint(&ck, 4, |n| {
+            n.ends_with(".w")
+        }));
+        let q2 = Arc::clone(&q);
+        let engine = Engine::start(
+            EngineConfig {
+                workers: 1,
+                queue_capacity: 64,
+                max_delay: Duration::from_millis(1),
+                ..EngineConfig::default()
+            },
+            move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
+        )
+        .unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&engine)).unwrap();
+        let ds = crate::data::synth::generate(DatasetKind::Cifar10, 8, 5, 1);
+        let images: Vec<(Vec<f32>, i32)> =
+            (0..8).map(|i| (ds.image(i).to_vec(), ds.labels[i])).collect();
+        // zero budget: every request expires at admission — a final,
+        // structured error, never a retry, never a stale answer
+        let report = run_with(
+            &server.addr.to_string(),
+            &images,
+            &ClientConfig { window: 4, deadline_ms: Some(0), ..ClientConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(report.received, 8);
+        assert_eq!(report.errors, 8);
+        assert_eq!(report.retried, 0);
+        assert_eq!(report.shed, 0);
+        for outcome in report.preds.values() {
+            assert_eq!(outcome.as_ref().unwrap_err(), "deadline_exceeded");
+        }
+        // a generous budget answers everything
+        let report = run_with(
+            &server.addr.to_string(),
+            &images,
+            &ClientConfig {
+                window: 4,
+                deadline_ms: Some(60_000),
+                ..ClientConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.received, 8);
+        assert_eq!(report.errors, 0);
         server.stop();
         engine.shutdown();
     }

@@ -19,6 +19,7 @@
 //!   demo model for the synthetic datasets.
 
 use std::fmt;
+use std::panic::AssertUnwindSafe;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -26,14 +27,16 @@ use std::time::{Duration, Instant};
 
 use crate::kernels::{QuantConvNet, QuantMlp, WorkerPool};
 use crate::metrics::Histogram;
-use crate::obs::{self, RequestTrace, TraceRing};
+use crate::obs::{self, Registry, RequestTrace, TraceRing};
 use crate::quant::bitwidth_scale;
 use crate::runtime::{ModelRuntime, Runtime, TrainState};
 use crate::tensor::Tensor;
+use crate::util::failpoint;
 
+use super::admission::{AdmissionControl, Decision};
 use super::batcher::DynamicBatcher;
 use super::packed::QuantizedCheckpoint;
-use super::queue::{PushError, RequestQueue, ServeRequest, ServeResponse};
+use super::queue::{PushError, RequestQueue, ServeError, ServeRequest, ServeResponse};
 
 /// A model that classifies one coalesced batch at a time.
 pub trait Backend {
@@ -111,6 +114,14 @@ pub struct EngineConfig {
     /// Dynamic-batching window: max time a lone request waits for
     /// company before a partial batch ships.
     pub max_delay: Duration,
+    /// Deadline applied to requests that carry none of their own
+    /// (`--default_deadline_ms`; `None` = requests without a
+    /// `deadline_ms` field never expire).
+    pub default_deadline: Option<Duration>,
+    /// Arms admission control (`--max_wait_ms`): reject before the
+    /// queue when the estimated wait exceeds this bound. `None`
+    /// disarms the policy — capacity backpressure only.
+    pub max_wait: Option<Duration>,
 }
 
 impl Default for EngineConfig {
@@ -119,6 +130,8 @@ impl Default for EngineConfig {
             workers: 2,
             queue_capacity: 1024,
             max_delay: Duration::from_millis(5),
+            default_deadline: None,
+            max_wait: None,
         }
     }
 }
@@ -130,6 +143,11 @@ pub enum SubmitError {
     BadInput { got: usize, want: usize },
     Full,
     Closed,
+    /// Admission control refused the request; the hint is finite and
+    /// drain-rate-derived (DESIGN.md §19).
+    Overloaded { retry_after_ms: u64 },
+    /// The request's deadline was already unmeetable at admission.
+    DeadlineExceeded,
 }
 
 impl fmt::Display for SubmitError {
@@ -140,17 +158,35 @@ impl fmt::Display for SubmitError {
             }
             SubmitError::Full => f.write_str("queue full (backpressure)"),
             SubmitError::Closed => f.write_str("server shutting down"),
+            SubmitError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded (retry after {retry_after_ms} ms)")
+            }
+            SubmitError::DeadlineExceeded => {
+                f.write_str("deadline exceeded (stage admission)")
+            }
         }
     }
+}
+
+/// Everything a worker thread needs besides its backend; bundled so
+/// the spawn sites stay readable as the pipeline grows dials.
+struct WorkerCtx {
+    queue: Arc<RequestQueue>,
+    metrics: Arc<EngineMetrics>,
+    admission: Arc<AdmissionControl>,
+    batch_rows: Arc<obs::HistHandle>,
+    max_delay: Duration,
 }
 
 /// The running engine: queue + workers + metrics.
 pub struct Engine {
     queue: Arc<RequestQueue>,
     pub metrics: Arc<EngineMetrics>,
+    admission: Arc<AdmissionControl>,
     input_numel: usize,
     num_classes: usize,
     batch: usize,
+    default_deadline: Option<Duration>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -162,18 +198,40 @@ impl Engine {
     where
         F: Fn(usize) -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
+        Self::start_with_obs(cfg, factory, obs::global())
+    }
+
+    /// [`start`](Engine::start) against an explicit registry: the
+    /// queue/admission/batch-rows series register there instead of the
+    /// global one, so chaos tests assert exact counter conservation
+    /// while unrelated tests serve traffic in parallel.
+    pub fn start_with_obs<F>(
+        cfg: EngineConfig,
+        factory: F,
+        reg: &Registry,
+    ) -> anyhow::Result<Arc<Engine>>
+    where
+        F: Fn(usize) -> anyhow::Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
-        let queue = RequestQueue::new(cfg.queue_capacity);
+        let queue = RequestQueue::with_obs(cfg.queue_capacity, reg);
+        let admission =
+            AdmissionControl::register(cfg.queue_capacity, cfg.workers, cfg.max_wait, reg);
+        let batch_rows_hist = reg.histogram("adaqat_batch_rows", &[]);
         let metrics = Arc::new(EngineMetrics::default());
         let factory = Arc::new(factory);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize), String>>();
         let mut handles = vec![];
         for wid in 0..cfg.workers {
-            let queue = Arc::clone(&queue);
-            let metrics = Arc::clone(&metrics);
+            let ctx = WorkerCtx {
+                queue: Arc::clone(&queue),
+                metrics: Arc::clone(&metrics),
+                admission: Arc::clone(&admission),
+                batch_rows: Arc::clone(&batch_rows_hist),
+                max_delay: cfg.max_delay,
+            };
             let factory = Arc::clone(&factory);
             let ready = ready_tx.clone();
-            let max_delay = cfg.max_delay;
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("serve-worker-{wid}"))
@@ -193,7 +251,7 @@ impl Engine {
                                 return;
                             }
                         };
-                        worker_loop(backend.as_ref(), &queue, &metrics, max_delay);
+                        worker_loop(backend.as_ref(), &ctx);
                     })?,
             );
         }
@@ -235,9 +293,11 @@ impl Engine {
         Ok(Arc::new(Engine {
             queue,
             metrics,
+            admission,
             input_numel,
             num_classes,
             batch,
+            default_deadline: cfg.default_deadline,
             workers: Mutex::new(handles),
         }))
     }
@@ -254,18 +314,53 @@ impl Engine {
         self.batch
     }
 
-    /// Enqueue one request; the answer arrives on `resp`.
+    /// Enqueue one request with no explicit deadline (the engine's
+    /// `default_deadline`, if any, still applies).
     pub fn submit(
         &self,
         id: u64,
         pixels: Vec<f32>,
         resp: mpsc::Sender<ServeResponse>,
     ) -> Result<(), SubmitError> {
+        self.submit_with_deadline(id, pixels, None, resp)
+    }
+
+    /// Enqueue one request; the answer arrives on `resp`. `deadline_ms`
+    /// is the client's budget from *now* (the wire `deadline_ms`
+    /// field); `None` falls back to the engine default. The deadline is
+    /// judged here (admission) and again at batch formation — an
+    /// expired request is answered, never computed.
+    pub fn submit_with_deadline(
+        &self,
+        id: u64,
+        pixels: Vec<f32>,
+        deadline_ms: Option<u64>,
+        resp: mpsc::Sender<ServeResponse>,
+    ) -> Result<(), SubmitError> {
         if pixels.len() != self.input_numel {
             return Err(SubmitError::BadInput { got: pixels.len(), want: self.input_numel });
         }
+        let now = Instant::now();
+        let budget = deadline_ms
+            .map(Duration::from_millis)
+            .or(self.default_deadline);
+        let deadline = budget.map(|b| now + b);
+        // admission-stage deadline check: a zero budget is already dead
+        if budget.is_some_and(|b| b.is_zero()) {
+            self.admission.note_admission_expiry();
+            return Err(SubmitError::DeadlineExceeded);
+        }
+        if self.admission.enabled() {
+            match self.admission.decide(budget) {
+                Decision::Admit => {}
+                Decision::Overloaded { retry_after_ms } => {
+                    return Err(SubmitError::Overloaded { retry_after_ms });
+                }
+                Decision::DeadlineHopeless => return Err(SubmitError::DeadlineExceeded),
+            }
+        }
         self.queue
-            .push(ServeRequest { id, pixels, enqueued: Instant::now(), resp })
+            .push(ServeRequest { id, pixels, enqueued: now, deadline, resp })
             .map_err(|e| match e {
                 PushError::Full => SubmitError::Full,
                 PushError::Closed => SubmitError::Closed,
@@ -288,6 +383,16 @@ impl Engine {
     /// (full, closed) shed counts from the request queue.
     pub fn shed_counts(&self) -> (u64, u64) {
         self.queue.shed_counts()
+    }
+
+    /// Overload accounting: (admission rejections, admission-stage
+    /// deadline expiries, batch-stage deadline expiries). With
+    /// [`shed_counts`](Engine::shed_counts) these close the
+    /// conservation identity the chaos tests assert:
+    /// `answered + shed + overloaded + deadline_expired == submitted`.
+    pub fn overload_counts(&self) -> (u64, u64, u64) {
+        let (overloaded, dl_admission) = self.admission.reject_counts();
+        (overloaded, dl_admission, self.queue.deadline_expired_count())
     }
 
     /// Full Prometheus text exposition: every series in the global
@@ -325,34 +430,63 @@ impl Engine {
     }
 }
 
-fn worker_loop(
-    backend: &dyn Backend,
-    queue: &Arc<RequestQueue>,
-    metrics: &EngineMetrics,
-    max_delay: Duration,
-) {
+fn worker_loop(backend: &dyn Backend, ctx: &WorkerCtx) {
     let (h, w, c) = backend.input_shape();
     let sz = h * w * c;
     let bs = backend.max_batch();
-    let batcher = DynamicBatcher::new(Arc::clone(queue), bs, max_delay);
+    let metrics = ctx.metrics.as_ref();
+    let batcher = DynamicBatcher::with_hist(
+        Arc::clone(&ctx.queue),
+        bs,
+        ctx.max_delay,
+        Arc::clone(&ctx.batch_rows),
+    );
     while let Some(reqs) = batcher.next_batch() {
         let picked = Instant::now();
+        // batch-stage deadline re-check (DESIGN.md §19): entries whose
+        // deadline passed while queued are answered `deadline_exceeded`
+        // and reclaimed, not computed — the queue counts them
+        let (live, expired): (Vec<_>, Vec<_>) =
+            reqs.into_iter().partition(|r| !r.expired_at(picked));
+        for r in expired {
+            ctx.queue.expire_batch(r);
+        }
+        if live.is_empty() {
+            continue;
+        }
         // ship only the real rows — static-shape backends pad for
         // themselves, dynamic ones do `rows` of work (no zero-row tax)
-        let rows = reqs.len();
+        let rows = live.len();
         let mut x = vec![0.0f32; rows * sz];
-        for (i, r) in reqs.iter().enumerate() {
+        for (i, r) in live.iter().enumerate() {
             x[i * sz..(i + 1) * sz].copy_from_slice(&r.pixels);
         }
         let t0 = Instant::now();
-        let outcome = backend.infer(&Tensor::new(vec![rows, h, w, c], x));
+        // a panicking backend (or injected worker_infer fault) must not
+        // take the worker — and its batch's requests — down with it:
+        // unwinds become per-request inference errors, conservation
+        // holds, and the worker lives to pull the next batch
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            failpoint::hit("worker_infer");
+            backend.infer(&Tensor::new(vec![rows, h, w, c], x))
+        }))
+        .unwrap_or_else(|p| {
+            let what = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "panic".to_string());
+            Err(anyhow::anyhow!("worker panicked: {what}"))
+        });
         let done = Instant::now();
-        let compute_ms = done.duration_since(t0).as_secs_f64() * 1e3;
+        let compute = done.duration_since(t0);
+        let compute_ms = compute.as_secs_f64() * 1e3;
+        ctx.admission.observe_batch(rows, compute);
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.padded.fetch_add((bs - rows) as u64, Ordering::Relaxed);
         match outcome {
             Ok(classes) => {
-                for (i, r) in reqs.into_iter().enumerate() {
+                for (i, r) in live.into_iter().enumerate() {
                     let queue_ms =
                         picked.duration_since(r.enqueued).as_secs_f64() * 1e3;
                     metrics.queue.record_ms(queue_ms);
@@ -368,9 +502,9 @@ fn worker_loop(
                 }
             }
             Err(e) => {
-                let msg = format!("inference failed: {e}");
-                log::warn!("serve worker: {msg}");
-                for r in reqs {
+                let msg = e.to_string();
+                log::warn!("serve worker: inference failed: {msg}");
+                for r in live {
                     let queue_ms =
                         picked.duration_since(r.enqueued).as_secs_f64() * 1e3;
                     // failed traffic must show up in the latency stats
@@ -381,7 +515,7 @@ fn worker_loop(
                     push_trace(metrics, &r, picked, done, rows as u32, false);
                     let _ = r.resp.send(ServeResponse {
                         id: r.id,
-                        result: Err(msg.clone()),
+                        result: Err(ServeError::Inference(msg.clone())),
                         queue_ms,
                         compute_ms,
                     });
@@ -691,6 +825,7 @@ mod tests {
                 workers,
                 queue_capacity: 256,
                 max_delay: Duration::from_millis(max_delay_ms),
+                ..EngineConfig::default()
             },
             move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
         )
@@ -726,6 +861,79 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         let err = engine.submit(0, vec![0.0; 7], tx).unwrap_err();
         assert!(matches!(err, SubmitError::BadInput { got: 7, .. }));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn zero_deadline_budget_expires_at_admission() {
+        let (engine, _q) = demo_engine(1, 4, 1);
+        let numel = engine.input_numel();
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(
+            engine.submit_with_deadline(0, vec![0.0; numel], Some(0), tx).unwrap_err(),
+            SubmitError::DeadlineExceeded
+        );
+        assert_eq!(engine.overload_counts(), (0, 1, 0));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn generous_deadline_still_answers_normally() {
+        let (engine, q) = demo_engine(1, 4, 1);
+        let direct = ReferenceBackend::from_packed(&q).unwrap();
+        let ds = crate::data::synth::generate(DatasetKind::Cifar10, 4, 11, 1);
+        let (tx, rx) = mpsc::channel();
+        engine
+            .submit_with_deadline(5, ds.image(1).to_vec(), Some(60_000), tx)
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(resp.result, Ok(direct.classify_one(ds.image(1))));
+        assert_eq!(engine.overload_counts(), (0, 0, 0));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn armed_admission_rejects_with_finite_retry_after_at_capacity() {
+        // capacity-2 queue with a long batching window and admission
+        // armed: the queue fills, then further submits come back
+        // Overloaded (finite retry hint) instead of bare Full
+        let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 8, 42, 4);
+        let q = Arc::new(QuantizedCheckpoint::from_checkpoint(&ck, 4, |n| {
+            n.ends_with(".w")
+        }));
+        let q2 = Arc::clone(&q);
+        let reg = crate::obs::Registry::new();
+        let engine = Engine::start_with_obs(
+            EngineConfig {
+                workers: 1,
+                queue_capacity: 2,
+                max_delay: Duration::from_millis(200),
+                max_wait: Some(Duration::from_millis(100)),
+                ..EngineConfig::default()
+            },
+            move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
+            &reg,
+        )
+        .unwrap();
+        let numel = engine.input_numel();
+        let (tx, _rx) = mpsc::channel::<ServeResponse>();
+        // overfill: worker takes up to 4/batch, so pushing hard
+        // eventually catches the queue at capacity
+        let mut saw_overloaded = false;
+        for i in 0..512 {
+            match engine.submit(i, vec![0.0; numel], tx.clone()) {
+                Ok(()) => {}
+                Err(SubmitError::Overloaded { retry_after_ms }) => {
+                    assert!(retry_after_ms >= 1, "retry hint must be finite and nonzero");
+                    assert!(retry_after_ms <= 30_000, "retry hint must be bounded");
+                    saw_overloaded = true;
+                    break;
+                }
+                Err(other) => panic!("armed admission must reject as Overloaded: {other}"),
+            }
+        }
+        assert!(saw_overloaded, "512 submits never caught a capacity-2 queue full");
+        assert!(engine.overload_counts().0 >= 1);
         engine.shutdown();
     }
 
@@ -819,6 +1027,7 @@ mod tests {
                 workers: 2,
                 queue_capacity: 64,
                 max_delay: Duration::from_millis(2),
+                ..EngineConfig::default()
             },
             move |_| {
                 Ok(Box::new(ReferenceBackend::with_threads(&q2, 2)?) as Box<dyn Backend>)
@@ -854,6 +1063,7 @@ mod tests {
                 workers: 2,
                 queue_capacity: 128,
                 max_delay: Duration::from_millis(2),
+                ..EngineConfig::default()
             },
             move |_| {
                 Ok(Box::new(ReferenceBackend::with_threads(&q2, 2)?) as Box<dyn Backend>)

@@ -15,14 +15,16 @@
 //! ```
 //!
 //! Module map: [`packed`] — bit-packed checkpoints; [`queue`] +
-//! [`batcher`] — the request pipeline; [`engine`] — workers, backends,
-//! metrics; [`protocol`] + [`server`] + [`client`] — the NDJSON/TCP
+//! [`batcher`] — the request pipeline; [`admission`] — overload
+//! policy in front of the queue (deadlines, retry-after, DESIGN.md
+//! §19); [`engine`] — workers, backends, metrics; [`protocol`] + [`server`] + [`client`] — the NDJSON/TCP
 //! front end; [`demo`] — the offline-runnable demo models (linear
 //! nearest-centroid and the 2-layer ReLU MLP). The reference backend's
 //! math lives in [`crate::kernels`]: integer-domain GEMMs over the
 //! packed codes, so the learned bit-widths buy compute, not just bytes
 //! (DESIGN.md §11).
 
+pub mod admission;
 pub mod batcher;
 pub mod client;
 pub mod demo;
@@ -32,7 +34,8 @@ pub mod protocol;
 pub mod queue;
 pub mod server;
 
+pub use admission::{AdmissionControl, Decision};
 pub use engine::{Backend, Engine, EngineConfig, ReferenceBackend, RuntimeBackend};
 pub use packed::{PackedTensor, QuantizedCheckpoint};
-pub use queue::{RequestQueue, ServeRequest, ServeResponse};
+pub use queue::{DeadlineStage, RequestQueue, ServeError, ServeRequest, ServeResponse};
 pub use server::Server;

@@ -4,41 +4,59 @@
 //! `util::json`. One JSON object per line, each direction:
 //!
 //! ```text
-//!   → {"id": 7, "image": [f32 × h·w·c]}      classify one image
+//!   → {"id": 7, "image": [f32 × h·w·c], "deadline_ms": 250}
+//!     (deadline_ms optional: budget from arrival; 0 = already dead)
 //!   → {"cmd": "ping"}                        liveness probe
 //!   → {"cmd": "stats"}                       latency/throughput counters
 //!   → {"cmd": "metrics"}                     Prometheus text exposition
 //!   → {"cmd": "trace"}                       recent request spans
+//!   → {"cmd": "drain"}                       begin graceful shutdown
 //!   ← {"id": 7, "class": 3, "queue_ms": 0.8, "compute_ms": 1.9}
-//!   ← {"id": 7, "error": "queue full (backpressure)"}
+//!   ← {"id": 7, "error": "overloaded", "retry_after_ms": 12, "detail": …}
+//!   ← {"id": 7, "error": "deadline_exceeded", "stage": "batch", …}
+//!   ← {"error": "bad_request", "detail": "…"}   (parse/cap violations)
 //!   ← {"ok": true}                           pong
+//!   ← {"ok": true, "draining": true}         drain acknowledged
 //!   ← {"requests": …, "queue_p50_ms": …, …}  stats
 //!   ← {"metrics": "adaqat_…{…} v\n…"}        exposition as one string
 //!   ← {"traces": [{"id": …, "enqueue_us": …, …}, …]}
 //! ```
+//!
+//! Every error frame carries a machine-readable `error` code
+//! (`bad_request`, `queue_full`, `shutting_down`, `overloaded`,
+//! `deadline_exceeded`, `inference_failed`) plus a human `detail` —
+//! overload clients branch on the code (DESIGN.md §19).
 
 use std::sync::atomic::Ordering;
 
 use crate::obs::RequestTrace;
 use crate::util::json::Json;
 
-use super::engine::EngineMetrics;
-use super::queue::ServeResponse;
+use super::engine::{EngineMetrics, SubmitError};
+use super::queue::{ServeError, ServeResponse};
 
 /// A parsed inbound line.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Infer { id: u64, pixels: Vec<f32> },
+    Infer {
+        id: u64,
+        pixels: Vec<f32>,
+        /// Client deadline budget in ms from arrival (`None` = server
+        /// default applies).
+        deadline_ms: Option<u64>,
+    },
     Ping,
     Stats,
     /// Prometheus text exposition of every registered series.
     Metrics,
     /// Recent request spans from the engine's trace ring.
     Trace,
+    /// Admin: begin graceful drain (close listener, finish in-flight).
+    Drain,
 }
 
 /// Parse one request line. Errors are strings ready to ship back via
-/// [`error_line`].
+/// [`error_line`] under the `bad_request` code.
 pub fn parse_request(line: &str) -> Result<Request, String> {
     let j = Json::parse(line).map_err(|e| e.to_string())?;
     if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
@@ -47,6 +65,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             "stats" => Ok(Request::Stats),
             "metrics" => Ok(Request::Metrics),
             "trace" => Ok(Request::Trace),
+            "drain" => Ok(Request::Drain),
             other => Err(format!("unknown cmd {other:?}")),
         };
     }
@@ -74,7 +93,21 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             f as u64
         }
     };
-    Ok(Request::Infer { id, pixels })
+    let deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| "deadline_ms must be a number".to_string())?;
+            if f < 0.0 || f.fract() != 0.0 || f >= 9_007_199_254_740_992.0 {
+                return Err(
+                    "deadline_ms must be a non-negative integer < 2^53".to_string()
+                );
+            }
+            Some(f as u64)
+        }
+    };
+    Ok(Request::Infer { id, pixels, deadline_ms })
 }
 
 /// Serialize an engine response (success or per-request failure).
@@ -82,20 +115,65 @@ pub fn response_line(resp: &ServeResponse) -> String {
     let mut pairs = vec![("id", Json::num(resp.id as f64))];
     match &resp.result {
         Ok(class) => pairs.push(("class", Json::num(*class as f64))),
-        Err(msg) => pairs.push(("error", Json::str(msg.clone()))),
+        Err(e) => {
+            pairs.push(("error", Json::str(e.code())));
+            match e {
+                ServeError::DeadlineExceeded { stage } => {
+                    pairs.push(("stage", Json::str(stage.label())));
+                }
+                ServeError::Overloaded { retry_after_ms } => {
+                    pairs.push(("retry_after_ms", Json::num(*retry_after_ms as f64)));
+                }
+                ServeError::Inference(msg) => {
+                    pairs.push(("detail", Json::str(msg.clone())));
+                }
+            }
+        }
     }
     pairs.push(("queue_ms", Json::num(round3(resp.queue_ms))));
     pairs.push(("compute_ms", Json::num(round3(resp.compute_ms))));
     Json::obj(pairs).to_string()
 }
 
-/// Protocol-level error (parse failure, backpressure, bad shape).
-pub fn error_line(id: Option<u64>, msg: &str) -> String {
+/// Protocol-level error frame: machine-readable `code` + human
+/// `detail` (parse failures and cap violations use `bad_request`).
+pub fn error_line(id: Option<u64>, code: &str, detail: &str) -> String {
     let mut pairs = vec![];
     if let Some(id) = id {
         pairs.push(("id", Json::num(id as f64)));
     }
-    pairs.push(("error", Json::str(msg)));
+    pairs.push(("error", Json::str(code)));
+    if !detail.is_empty() {
+        pairs.push(("detail", Json::str(detail)));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// The error frame for a refused `submit`: code per variant, plus
+/// `retry_after_ms` on `overloaded` (always present and finite there —
+/// the client backoff contract) and `stage` on `deadline_exceeded`.
+pub fn submit_error_line(id: u64, e: &SubmitError) -> String {
+    let code = match e {
+        SubmitError::BadInput { .. } => "bad_request",
+        SubmitError::Full => "queue_full",
+        SubmitError::Closed => "shutting_down",
+        SubmitError::Overloaded { .. } => "overloaded",
+        SubmitError::DeadlineExceeded => "deadline_exceeded",
+    };
+    let mut pairs = vec![
+        ("id", Json::num(id as f64)),
+        ("error", Json::str(code)),
+    ];
+    match e {
+        SubmitError::Overloaded { retry_after_ms } => {
+            pairs.push(("retry_after_ms", Json::num(*retry_after_ms as f64)));
+        }
+        SubmitError::DeadlineExceeded => {
+            pairs.push(("stage", Json::str("admission")));
+        }
+        _ => {}
+    }
+    pairs.push(("detail", Json::str(e.to_string())));
     Json::obj(pairs).to_string()
 }
 
@@ -103,10 +181,26 @@ pub fn pong_line() -> String {
     Json::obj(vec![("ok", Json::Bool(true))]).to_string()
 }
 
-/// Snapshot the engine counters as one stats object. `queue_depth` and
-/// the shed counts come from the live queue (the engine owns it, the
-/// metrics struct does not), so the server passes them alongside.
-pub fn stats_line(m: &EngineMetrics, queue_depth: usize, shed: (u64, u64)) -> String {
+/// Acknowledge a `{"cmd":"drain"}`: the listener is closing; in-flight
+/// requests finish against their deadlines.
+pub fn drain_line() -> String {
+    Json::obj(vec![("ok", Json::Bool(true)), ("draining", Json::Bool(true))]).to_string()
+}
+
+/// Snapshot the engine counters as one stats object. `queue_depth`,
+/// the shed counts, and the overload counts come from the live queue
+/// and admission policy (the engine owns them, the metrics struct does
+/// not), so the server passes them alongside. `overload` is
+/// (admission rejections, admission-stage expiries, batch-stage
+/// expiries) as [`Engine::overload_counts`] reports them.
+///
+/// [`Engine::overload_counts`]: super::engine::Engine::overload_counts
+pub fn stats_line(
+    m: &EngineMetrics,
+    queue_depth: usize,
+    shed: (u64, u64),
+    overload: (u64, u64, u64),
+) -> String {
     let q = m.queue.snapshot();
     let c = m.compute.snapshot();
     Json::obj(vec![
@@ -119,6 +213,9 @@ pub fn stats_line(m: &EngineMetrics, queue_depth: usize, shed: (u64, u64)) -> St
         ("queue_depth", Json::num(queue_depth as f64)),
         ("shed_full", Json::num(shed.0 as f64)),
         ("shed_closed", Json::num(shed.1 as f64)),
+        ("overloaded", Json::num(overload.0 as f64)),
+        ("deadline_admission", Json::num(overload.1 as f64)),
+        ("deadline_batch", Json::num(overload.2 as f64)),
         ("queue_p50_ms", Json::num(round3(q.p50_ms))),
         ("queue_p95_ms", Json::num(round3(q.p95_ms))),
         ("queue_p99_ms", Json::num(round3(q.p99_ms))),
@@ -166,10 +263,29 @@ mod tests {
     #[test]
     fn parses_infer_request() {
         let r = parse_request(r#"{"id": 9, "image": [0.5, -1.25, 3]}"#).unwrap();
-        assert_eq!(r, Request::Infer { id: 9, pixels: vec![0.5, -1.25, 3.0] });
+        assert_eq!(
+            r,
+            Request::Infer { id: 9, pixels: vec![0.5, -1.25, 3.0], deadline_ms: None }
+        );
         // id defaults to 0
         let r = parse_request(r#"{"image": []}"#).unwrap();
-        assert_eq!(r, Request::Infer { id: 0, pixels: vec![] });
+        assert_eq!(r, Request::Infer { id: 0, pixels: vec![], deadline_ms: None });
+    }
+
+    #[test]
+    fn parses_and_validates_deadline_ms() {
+        let r = parse_request(r#"{"id": 1, "image": [1], "deadline_ms": 250}"#).unwrap();
+        assert_eq!(
+            r,
+            Request::Infer { id: 1, pixels: vec![1.0], deadline_ms: Some(250) }
+        );
+        // zero is legal — it means "already expired", a deterministic
+        // way to exercise the admission-stage deadline path
+        let r = parse_request(r#"{"image": [1], "deadline_ms": 0}"#).unwrap();
+        assert_eq!(r, Request::Infer { id: 0, pixels: vec![1.0], deadline_ms: Some(0) });
+        assert!(parse_request(r#"{"image": [1], "deadline_ms": -5}"#).is_err());
+        assert!(parse_request(r#"{"image": [1], "deadline_ms": 1.5}"#).is_err());
+        assert!(parse_request(r#"{"image": [1], "deadline_ms": "soon"}"#).is_err());
     }
 
     #[test]
@@ -178,6 +294,7 @@ mod tests {
         assert_eq!(parse_request(r#"{"cmd": "stats"}"#).unwrap(), Request::Stats);
         assert_eq!(parse_request(r#"{"cmd": "metrics"}"#).unwrap(), Request::Metrics);
         assert_eq!(parse_request(r#"{"cmd": "trace"}"#).unwrap(), Request::Trace);
+        assert_eq!(parse_request(r#"{"cmd": "drain"}"#).unwrap(), Request::Drain);
         assert!(parse_request(r#"{"cmd": "reboot"}"#).is_err());
         assert!(parse_request("not json").is_err());
         assert!(parse_request(r#"{"id": 1}"#).is_err());
@@ -211,24 +328,72 @@ mod tests {
 
         let err = ServeResponse {
             id: 4,
-            result: Err("queue full (backpressure)".to_string()),
+            result: Err(ServeError::Inference("kernel exploded".to_string())),
             queue_ms: 0.0,
             compute_ms: 0.0,
         };
         let j = Json::parse(&response_line(&err)).unwrap();
         assert!(j.get("class").is_none());
-        assert!(j.get("error").unwrap().as_str().unwrap().contains("full"));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("inference_failed"));
+        assert!(j.get("detail").unwrap().as_str().unwrap().contains("exploded"));
+
+        let dl = ServeResponse {
+            id: 5,
+            result: Err(ServeError::DeadlineExceeded {
+                stage: crate::serve::queue::DeadlineStage::Batch,
+            }),
+            queue_ms: 7.0,
+            compute_ms: 0.0,
+        };
+        let j = Json::parse(&response_line(&dl)).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("deadline_exceeded"));
+        assert_eq!(j.get("stage").unwrap().as_str(), Some("batch"));
+        assert!(j.get("class").is_none());
     }
 
     #[test]
-    fn error_and_pong_lines_are_valid_json() {
-        let j = Json::parse(&error_line(Some(5), "boom")).unwrap();
+    fn submit_error_lines_carry_machine_codes() {
+        let j = Json::parse(&submit_error_line(
+            7,
+            &SubmitError::Overloaded { retry_after_ms: 12 },
+        ))
+        .unwrap();
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(j.get("retry_after_ms").unwrap().as_f64(), Some(12.0));
+
+        let j = Json::parse(&submit_error_line(8, &SubmitError::DeadlineExceeded)).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("deadline_exceeded"));
+        assert_eq!(j.get("stage").unwrap().as_str(), Some("admission"));
+
+        let j = Json::parse(&submit_error_line(9, &SubmitError::Full)).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("queue_full"));
+        let j = Json::parse(&submit_error_line(10, &SubmitError::Closed)).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("shutting_down"));
+        let j = Json::parse(&submit_error_line(
+            11,
+            &SubmitError::BadInput { got: 3, want: 4 },
+        ))
+        .unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("bad_request"));
+        assert!(j.get("detail").unwrap().as_str().unwrap().contains("3"));
+    }
+
+    #[test]
+    fn error_pong_and_drain_lines_are_valid_json() {
+        let j = Json::parse(&error_line(Some(5), "bad_request", "boom")).unwrap();
         assert_eq!(j.get("id").unwrap().as_f64(), Some(5.0));
-        let j = Json::parse(&error_line(None, "bad \"quote\"")).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("bad_request"));
+        assert_eq!(j.get("detail").unwrap().as_str(), Some("boom"));
+        let j = Json::parse(&error_line(None, "bad_request", "bad \"quote\"")).unwrap();
         assert!(j.get("id").is_none());
-        assert!(j.get("error").unwrap().as_str().unwrap().contains('"'));
+        assert!(j.get("detail").unwrap().as_str().unwrap().contains('"'));
         let j = Json::parse(&pong_line()).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert!(j.get("draining").is_none());
+        let j = Json::parse(&drain_line()).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("draining").unwrap().as_bool(), Some(true));
     }
 
     #[test]
@@ -237,11 +402,14 @@ mod tests {
         m.requests.store(12, Ordering::Relaxed);
         m.queue.record_ms(1.0);
         m.compute.record_ms(2.0);
-        let j = Json::parse(&stats_line(&m, 3, (5, 1))).unwrap();
+        let j = Json::parse(&stats_line(&m, 3, (5, 1), (2, 1, 4))).unwrap();
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(12.0));
         assert_eq!(j.get("queue_depth").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("shed_full").unwrap().as_f64(), Some(5.0));
         assert_eq!(j.get("shed_closed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("overloaded").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("deadline_admission").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("deadline_batch").unwrap().as_f64(), Some(4.0));
         assert!(j.get("queue_p50_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.get("compute_p99_ms").unwrap().as_f64().unwrap() > 0.0);
     }

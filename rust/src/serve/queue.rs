@@ -15,6 +15,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::obs::{self, Counter, Gauge, Registry};
+use crate::util::failpoint;
 
 /// One inference request traveling through the pipeline.
 pub struct ServeRequest {
@@ -26,16 +27,86 @@ pub struct ServeRequest {
     pub pixels: Vec<f32>,
     /// When the request entered the queue (queue-latency clock).
     pub enqueued: Instant,
+    /// Absolute point after which the answer is worthless to the
+    /// client. Checked at admission and again when a batch forms; an
+    /// expired request is answered with `deadline_exceeded` instead of
+    /// computed (DESIGN.md §19). `None` = no deadline.
+    pub deadline: Option<Instant>,
     /// Where the engine delivers the answer.
     pub resp: mpsc::Sender<ServeResponse>,
+}
+
+impl ServeRequest {
+    /// Expired against its own deadline at `now`?
+    pub fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
+}
+
+/// Where in the pipeline a deadline was found expired — the `stage`
+/// label on `adaqat_deadline_expired_total`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlineStage {
+    /// Caught at `submit` before the request entered the queue.
+    Admission,
+    /// Caught when the batcher formed a batch (or the queue reclaimed
+    /// an expired entry to make room).
+    Batch,
+}
+
+impl DeadlineStage {
+    pub fn label(self) -> &'static str {
+        match self {
+            DeadlineStage::Admission => "admission",
+            DeadlineStage::Batch => "batch",
+        }
+    }
+}
+
+/// Structured failure for one request, serialized by the protocol layer
+/// as a machine-readable `error` code plus detail fields — overload
+/// clients branch on the code, not on prose.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The deadline passed before the answer could be produced.
+    DeadlineExceeded { stage: DeadlineStage },
+    /// Admission control refused the request; retry after the hint.
+    Overloaded { retry_after_ms: u64 },
+    /// The backend failed (or panicked) computing the batch.
+    Inference(String),
+}
+
+impl ServeError {
+    /// The wire-level `error` code.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::DeadlineExceeded { .. } => "deadline_exceeded",
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::Inference(_) => "inference_failed",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded { stage } => {
+                write!(f, "deadline exceeded (stage {})", stage.label())
+            }
+            ServeError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded (retry after {retry_after_ms} ms)")
+            }
+            ServeError::Inference(msg) => write!(f, "inference failed: {msg}"),
+        }
+    }
 }
 
 /// The engine's answer to one request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeResponse {
     pub id: u64,
-    /// Predicted class, or a human-readable failure.
-    pub result: Result<usize, String>,
+    /// Predicted class, or a structured failure.
+    pub result: Result<usize, ServeError>,
     pub queue_ms: f64,
     pub compute_ms: f64,
 }
@@ -80,6 +151,10 @@ struct QueueObs {
     depth: Arc<Gauge>,
     shed_full: Arc<Counter>,
     shed_closed: Arc<Counter>,
+    /// `adaqat_deadline_expired_total{stage="batch"}` — expiries found
+    /// after admission (batch formation, or push-time reclaim). The
+    /// `stage="admission"` sibling lives with the admission policy.
+    deadline_batch: Arc<Counter>,
 }
 
 impl QueueObs {
@@ -88,6 +163,8 @@ impl QueueObs {
             depth: reg.gauge("adaqat_queue_depth", &[]),
             shed_full: reg.counter("adaqat_queue_shed_total", &[("reason", "full")]),
             shed_closed: reg.counter("adaqat_queue_shed_total", &[("reason", "closed")]),
+            deadline_batch: reg
+                .counter("adaqat_deadline_expired_total", &[("stage", "batch")]),
         }
     }
 }
@@ -120,20 +197,62 @@ impl RequestQueue {
     }
 
     pub fn push(&self, req: ServeRequest) -> Result<(), PushError> {
+        failpoint::hit("queue_push");
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             self.obs.shed_closed.inc();
             return Err(PushError::Closed);
         }
         if g.q.len() >= self.capacity {
-            self.obs.shed_full.inc();
-            return Err(PushError::Full);
+            // Before shedding a live request, reclaim entries whose
+            // deadline already passed: they will never be computed, so
+            // an expired head must not cost an admittable request its
+            // slot (ISSUE 10 satellite). Each reclaimed entry is
+            // answered `deadline_exceeded` here, exactly once.
+            let now = Instant::now();
+            let before = g.q.len();
+            g.q.retain(|r| {
+                if r.expired_at(now) {
+                    self.answer_expired(r, now);
+                    false
+                } else {
+                    true
+                }
+            });
+            let reclaimed = before - g.q.len();
+            if reclaimed > 0 {
+                self.obs.depth.add(-(reclaimed as f64));
+            }
+            if g.q.len() >= self.capacity {
+                self.obs.shed_full.inc();
+                return Err(PushError::Full);
+            }
         }
         g.q.push_back(req);
         self.obs.depth.add(1.0);
         drop(g);
         self.cv.notify_one();
         Ok(())
+    }
+
+    /// Answer `req` with a batch-stage `deadline_exceeded` error and
+    /// count it. The queue owns the `stage="batch"` counter, so both
+    /// reclaim paths — push-time eviction above and batch-formation
+    /// expiry in the worker loop — account through this one method.
+    pub fn expire_batch(&self, req: ServeRequest) {
+        self.answer_expired(&req, Instant::now());
+    }
+
+    fn answer_expired(&self, req: &ServeRequest, now: Instant) {
+        self.obs.deadline_batch.inc();
+        // receiver gone (client disconnected) is fine — the expiry is
+        // still counted, which is what conservation checks audit
+        let _ = req.resp.send(ServeResponse {
+            id: req.id,
+            result: Err(ServeError::DeadlineExceeded { stage: DeadlineStage::Batch }),
+            queue_ms: now.duration_since(req.enqueued).as_secs_f64() * 1e3,
+            compute_ms: 0.0,
+        });
     }
 
     /// Wait up to `timeout` for one request.
@@ -178,6 +297,12 @@ impl RequestQueue {
     pub fn shed_counts(&self) -> (u64, u64) {
         (self.obs.shed_full.get(), self.obs.shed_closed.get())
     }
+
+    /// Batch-stage deadline expiries (push-time reclaim + batch
+    /// formation), as this queue's registry series reports them.
+    pub fn deadline_expired_count(&self) -> u64 {
+        self.obs.deadline_batch.get()
+    }
 }
 
 #[cfg(test)]
@@ -185,9 +310,22 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> (ServeRequest, mpsc::Receiver<ServeResponse>) {
+        req_with_deadline(id, None)
+    }
+
+    fn req_with_deadline(
+        id: u64,
+        deadline: Option<Instant>,
+    ) -> (ServeRequest, mpsc::Receiver<ServeResponse>) {
         let (tx, rx) = mpsc::channel();
         (
-            ServeRequest { id, pixels: vec![0.0; 4], enqueued: Instant::now(), resp: tx },
+            ServeRequest {
+                id,
+                pixels: vec![0.0; 4],
+                enqueued: Instant::now(),
+                deadline,
+                resp: tx,
+            },
             rx,
         )
     }
@@ -277,6 +415,63 @@ mod tests {
         assert_eq!(q.push(r3).unwrap_err(), PushError::Closed);
         assert_eq!(q.shed_counts(), (1, 1));
         assert_eq!(depth.get(), 0.0);
+    }
+
+    #[test]
+    fn expired_head_is_reclaimed_instead_of_shedding_a_live_push() {
+        // regression (ISSUE 10): queue at capacity but holding an
+        // already-expired head → the live push must be admitted, the
+        // expired entry answered deadline_exceeded, and nothing shed
+        let reg = Registry::new();
+        let q = RequestQueue::with_obs(2, &reg);
+        let past = Instant::now() - Duration::from_millis(5);
+        let (r0, k0) = req_with_deadline(0, Some(past));
+        let (r1, _k1) = req(1);
+        q.push(r0).unwrap();
+        q.push(r1).unwrap();
+        let (r2, _k2) = req(2);
+        q.push(r2).expect("live push must displace the expired head");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.shed_counts(), (0, 0), "no shed while reclaim can make room");
+        assert_eq!(q.deadline_expired_count(), 1);
+        let resp = k0.try_recv().expect("expired entry must be answered");
+        assert_eq!(resp.id, 0);
+        assert_eq!(
+            resp.result,
+            Err(ServeError::DeadlineExceeded { stage: DeadlineStage::Batch })
+        );
+        // survivors come out in order, skipping the reclaimed entry
+        match q.pop(Duration::from_millis(1)) {
+            Pop::Item(r) => assert_eq!(r.id, 1),
+            _ => panic!("expected id 1"),
+        }
+        match q.pop(Duration::from_millis(1)) {
+            Pop::Item(r) => assert_eq!(r.id, 2),
+            _ => panic!("expected id 2"),
+        }
+        // depth gauge consistent after the reclaim + drain
+        assert_eq!(reg.gauge("adaqat_queue_depth", &[]).get(), 0.0);
+        // a full queue of *live* requests still sheds
+        let (r3, _k3) = req(3);
+        let (r4, _k4) = req(4);
+        let (r5, _k5) = req(5);
+        q.push(r3).unwrap();
+        q.push(r4).unwrap();
+        assert_eq!(q.push(r5).unwrap_err(), PushError::Full);
+        assert_eq!(q.shed_counts(), (1, 0));
+    }
+
+    #[test]
+    fn expire_batch_answers_and_counts() {
+        let reg = Registry::new();
+        let q = RequestQueue::with_obs(4, &reg);
+        let (r, k) = req_with_deadline(9, Some(Instant::now()));
+        q.expire_batch(r);
+        assert_eq!(q.deadline_expired_count(), 1);
+        let resp = k.try_recv().unwrap();
+        assert_eq!(resp.id, 9);
+        assert!(matches!(resp.result, Err(ServeError::DeadlineExceeded { .. })));
+        assert_eq!(resp.compute_ms, 0.0);
     }
 
     #[test]

@@ -14,6 +14,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
+use crate::util::failpoint;
+
 use super::engine::Engine;
 use super::protocol::{self, Request};
 use super::queue::ServeResponse;
@@ -28,6 +30,7 @@ const MAX_LINE_BYTES: u64 = 16 * 1024 * 1024;
 pub struct Server {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -40,11 +43,20 @@ impl Server {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let drain = Arc::new(AtomicBool::new(false));
+        let drain2 = Arc::clone(&drain);
         let accept_thread = std::thread::Builder::new()
             .name("serve-accept".to_string())
-            .spawn(move || accept_loop(listener, engine, stop2))?;
+            .spawn(move || accept_loop(listener, engine, stop2, drain2))?;
         log::info!("serving on {addr}");
-        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+        Ok(Server { addr, stop, drain, accept_thread: Some(accept_thread) })
+    }
+
+    /// True once a client sent `{"cmd":"drain"}`. The serve loop polls
+    /// this (alongside the signal latch) and performs the graceful
+    /// shutdown: [`Server::stop`], engine drain, metrics flush, exit 0.
+    pub fn drain_requested(&self) -> bool {
+        self.drain.load(Ordering::SeqCst)
     }
 
     /// Stop accepting new connections (existing ones run until the
@@ -57,18 +69,24 @@ impl Server {
     }
 }
 
-fn accept_loop(listener: TcpListener, engine: Arc<Engine>, stop: Arc<AtomicBool>) {
+fn accept_loop(
+    listener: TcpListener,
+    engine: Arc<Engine>,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+) {
     loop {
         match listener.accept() {
             Ok((stream, peer)) => {
                 log::debug!("connection from {peer}");
                 let engine = Arc::clone(&engine);
+                let drain = Arc::clone(&drain);
                 let _ = std::thread::Builder::new()
                     .name("serve-conn".to_string())
-                    .spawn(move || handle_conn(stream, engine));
+                    .spawn(move || handle_conn(stream, engine, drain));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                if stop.load(Ordering::Relaxed) {
+                if stop.load(Ordering::Relaxed) || drain.load(Ordering::SeqCst) {
                     return;
                 }
                 std::thread::sleep(Duration::from_millis(20));
@@ -84,11 +102,15 @@ fn accept_loop(listener: TcpListener, engine: Arc<Engine>, stop: Arc<AtomicBool>
 type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
 
 fn write_line(out: &SharedWriter, line: &str) -> bool {
+    // chaos site: injected resets exercise the disconnect paths
+    if failpoint::io_error("conn_write").is_some() {
+        return false;
+    }
     let mut g = out.lock().unwrap();
     writeln!(g, "{line}").and_then(|_| g.flush()).is_ok()
 }
 
-fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
+fn handle_conn(stream: TcpStream, engine: Arc<Engine>, drain: Arc<AtomicBool>) {
     // the listener is non-blocking; accepted sockets must not be
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_nodelay(true);
@@ -119,17 +141,23 @@ fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
     loop {
         buf.clear();
         reader.set_limit(MAX_LINE_BYTES);
+        // chaos site: injected resets on the read path
+        if failpoint::io_error("conn_read").is_some() {
+            break;
+        }
         match reader.read_until(b'\n', &mut buf) {
             Ok(0) => break, // EOF
             Ok(_) => {}
             Err(_) => break,
         }
         if buf.last() != Some(&b'\n') && reader.limit() == 0 {
-            // cap hit mid-line: answer once, then drop the connection
+            // cap hit mid-line: answer once (a structured bad_request,
+            // not a silent close), then drop the connection
             write_line(
                 &out,
                 &protocol::error_line(
                     None,
+                    "bad_request",
                     &format!("request line exceeds {MAX_LINE_BYTES} bytes"),
                 ),
             );
@@ -138,7 +166,10 @@ fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
         let line = match std::str::from_utf8(&buf) {
             Ok(l) => l.trim(),
             Err(_) => {
-                if !write_line(&out, &protocol::error_line(None, "request is not UTF-8")) {
+                if !write_line(
+                    &out,
+                    &protocol::error_line(None, "bad_request", "request is not UTF-8"),
+                ) {
                     break;
                 }
                 continue;
@@ -155,6 +186,7 @@ fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
                     &engine.metrics,
                     engine.queue_depth(),
                     engine.shed_counts(),
+                    engine.overload_counts(),
                 ),
             ),
             Ok(Request::Metrics) => {
@@ -163,15 +195,22 @@ fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
             Ok(Request::Trace) => {
                 write_line(&out, &protocol::trace_line(&engine.metrics.trace.snapshot()))
             }
-            Ok(Request::Infer { id, pixels }) => {
-                match engine.submit(id, pixels, tx.clone()) {
+            Ok(Request::Drain) => {
+                // graceful shutdown begins: flag the serve loop (which
+                // closes the listener and drains the engine), ack the
+                // admin, and keep this connection open for in-flight
+                // answers
+                log::info!("drain requested by admin command");
+                drain.store(true, Ordering::SeqCst);
+                write_line(&out, &protocol::drain_line())
+            }
+            Ok(Request::Infer { id, pixels, deadline_ms }) => {
+                match engine.submit_with_deadline(id, pixels, deadline_ms, tx.clone()) {
                     Ok(()) => true,
-                    Err(e) => {
-                        write_line(&out, &protocol::error_line(Some(id), &e.to_string()))
-                    }
+                    Err(e) => write_line(&out, &protocol::submit_error_line(id, &e)),
                 }
             }
-            Err(msg) => write_line(&out, &protocol::error_line(None, &msg)),
+            Err(msg) => write_line(&out, &protocol::error_line(None, "bad_request", &msg)),
         };
         if !keep_going {
             break;
@@ -203,6 +242,7 @@ mod tests {
                 workers: 2,
                 queue_capacity: 128,
                 max_delay: Duration::from_millis(2),
+                ..EngineConfig::default()
             },
             move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
         )
@@ -238,17 +278,21 @@ mod tests {
             Some(direct.classify_one(ds.image(1)) as f64)
         );
 
-        // wrong pixel count → protocol error with the id echoed
+        // wrong pixel count → structured bad_request with the id echoed
         writeln!(w, r#"{{"id": 43, "image": [1, 2, 3]}}"#).unwrap();
         line.clear();
         reader.read_line(&mut line).unwrap();
-        assert!(line.contains("\"error\"") && line.contains("43"), "{line}");
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(43.0));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("bad_request"));
 
-        // garbage → protocol error without id
+        // garbage → structured bad_request without id
         writeln!(w, "zzz").unwrap();
         line.clear();
         reader.read_line(&mut line).unwrap();
-        assert!(line.contains("\"error\""), "{line}");
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("bad_request"));
+        assert!(j.get("id").is_none());
 
         // stats reflect the one served request
         writeln!(w, r#"{{"cmd":"stats"}}"#).unwrap();
@@ -257,6 +301,57 @@ mod tests {
         let j = Json::parse(line.trim()).unwrap();
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(1.0));
 
+        drop(w);
+        drop(reader);
+        server.stop();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn over_cap_line_gets_structured_bad_request_before_close() {
+        // a newline-less line that exhausts the 16 MiB cap must be
+        // answered with {"error":"bad_request"} — not a silent close
+        let (server, engine, _q) = start_demo_server();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let chunk = vec![b'a'; 1 << 20];
+        for _ in 0..16 {
+            w.write_all(&chunk).unwrap();
+        }
+        w.flush().unwrap();
+        // half-close: the server sees the cap hit (limit exhausted, no
+        // newline), answers, and drops the connection
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("bad_request"));
+        assert!(
+            j.get("detail").unwrap().as_str().unwrap().contains("exceeds"),
+            "{line}"
+        );
+        // then the connection closes: next read is EOF
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+        server.stop();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn drain_command_acks_and_trips_the_server_flag() {
+        let (server, engine, _q) = start_demo_server();
+        assert!(!server.drain_requested());
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream.try_clone().unwrap();
+        writeln!(w, r#"{{"cmd":"drain"}}"#).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("draining").unwrap().as_bool(), Some(true));
+        assert!(server.drain_requested());
         drop(w);
         drop(reader);
         server.stop();

@@ -1,0 +1,357 @@
+//! Deterministic fault-injection harness (DESIGN.md §19).
+//!
+//! Named *failpoints* are compiled into the serving hot paths (queue
+//! push, batcher, worker pool, socket read/write) and normally cost
+//! nothing: without the `failpoints` cargo feature every entry point
+//! here is an empty `#[inline(always)]` function the optimizer erases.
+//! With the feature on, each site consults a process-global registry
+//! configured either programmatically ([`configure`]) or from the
+//! environment:
+//!
+//! ```text
+//! ADAQAT_FAILPOINTS='batcher_stall=sleep(50);worker_infer=panic(0.01)'
+//! ADAQAT_FAILPOINTS_SEED=42   # optional; defaults to 0
+//! ```
+//!
+//! Supported actions:
+//!
+//! | spec          | effect at the site                               |
+//! |---------------|--------------------------------------------------|
+//! | `off`         | nothing (useful to disable one site of a list)   |
+//! | `sleep(MS)`   | block the calling thread for `MS` milliseconds   |
+//! | `panic(P)`    | panic with probability `P` (deterministic RNG)   |
+//! | `reset(P)`    | I/O sites: return `ConnectionReset` with prob `P`|
+//!
+//! Randomized actions draw from a per-site [`crate::util::rng::Rng`]
+//! seeded by `fnv1a(site_name) ^ seed`, so a given spec + seed produces
+//! the same fault schedule on every run — chaos tests are replayable.
+//!
+//! The spec parser ([`parse_spec`]) is compiled unconditionally so the
+//! grammar stays unit-tested in tier-1 even though the registry only
+//! exists under the feature.
+
+/// One parsed failpoint action. See the module docs for the grammar.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    /// Site disabled.
+    Off,
+    /// Sleep for this many milliseconds on every hit.
+    Sleep(u64),
+    /// Panic with this probability per hit.
+    Panic(f64),
+    /// (I/O sites only) surface a `ConnectionReset` error with this
+    /// probability per hit.
+    Reset(f64),
+}
+
+/// Parse an `ADAQAT_FAILPOINTS`-style spec: `;`-separated
+/// `name=action(arg)` entries. Returns the entries in order (later
+/// entries for the same name win when applied to the registry).
+pub fn parse_spec(spec: &str) -> Result<Vec<(String, Action)>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(';') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (name, action) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("failpoint entry `{entry}` missing `=`"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("failpoint entry `{entry}` has an empty name"));
+        }
+        out.push((name.to_string(), parse_action(action.trim())?));
+    }
+    Ok(out)
+}
+
+fn parse_action(s: &str) -> Result<Action, String> {
+    if s == "off" {
+        return Ok(Action::Off);
+    }
+    let (kind, rest) = s
+        .split_once('(')
+        .ok_or_else(|| format!("failpoint action `{s}` is not `off` or `kind(arg)`"))?;
+    let arg = rest
+        .strip_suffix(')')
+        .ok_or_else(|| format!("failpoint action `{s}` missing closing `)`"))?
+        .trim();
+    match kind.trim() {
+        "sleep" => arg
+            .parse::<u64>()
+            .map(Action::Sleep)
+            .map_err(|_| format!("sleep({arg}): want integer milliseconds")),
+        "panic" => parse_prob(arg).map(Action::Panic),
+        "reset" => parse_prob(arg).map(Action::Reset),
+        other => Err(format!("unknown failpoint action `{other}`")),
+    }
+}
+
+fn parse_prob(arg: &str) -> Result<f64, String> {
+    let p = arg
+        .parse::<f64>()
+        .map_err(|_| format!("`{arg}`: want a probability in [0, 1]"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("probability {p} outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+#[cfg(feature = "failpoints")]
+mod real {
+    use super::Action;
+    use crate::util::{fnv1a_mix, rng::Rng, FNV1A_BASIS};
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Duration;
+
+    struct Site {
+        action: Action,
+        rng: Rng,
+    }
+
+    struct RegistryState {
+        sites: HashMap<String, Site>,
+        seed: u64,
+    }
+
+    fn registry() -> &'static Mutex<RegistryState> {
+        static REG: OnceLock<Mutex<RegistryState>> = OnceLock::new();
+        REG.get_or_init(|| {
+            let seed = std::env::var("ADAQAT_FAILPOINTS_SEED")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            let mut state = RegistryState {
+                sites: HashMap::new(),
+                seed,
+            };
+            if let Ok(spec) = std::env::var("ADAQAT_FAILPOINTS") {
+                match super::parse_spec(&spec) {
+                    Ok(entries) => {
+                        for (name, action) in entries {
+                            install(&mut state, &name, action);
+                        }
+                    }
+                    Err(e) => panic!("ADAQAT_FAILPOINTS: {e}"),
+                }
+            }
+            Mutex::new(state)
+        })
+    }
+
+    fn site_seed(seed: u64, name: &str) -> u64 {
+        let mut h = FNV1A_BASIS;
+        for b in name.bytes() {
+            h = fnv1a_mix(h, u64::from(b));
+        }
+        h ^ seed
+    }
+
+    fn install(state: &mut RegistryState, name: &str, action: Action) {
+        let rng = Rng::new(site_seed(state.seed, name));
+        state
+            .sites
+            .insert(name.to_string(), Site { action, rng });
+    }
+
+    /// Programmatically arm one failpoint (replacing any prior action
+    /// and resetting its deterministic RNG).
+    pub fn configure(name: &str, action: Action) {
+        let mut g = registry().lock().unwrap();
+        install(&mut g, name, action);
+    }
+
+    /// Disarm every failpoint. Chaos tests call this between scenarios
+    /// (the registry is process-global).
+    pub fn clear() {
+        registry().lock().unwrap().sites.clear();
+    }
+
+    /// Execute the action armed at `name`, if any. `Sleep` blocks here;
+    /// `Panic` may panic here; `Reset` does nothing at non-I/O sites
+    /// (use [`io_error`] where an `io::Error` can be surfaced).
+    pub fn hit(name: &str) {
+        let action = {
+            let mut g = registry().lock().unwrap();
+            match g.sites.get_mut(name) {
+                Some(site) => match site.action {
+                    Action::Panic(p) => {
+                        if site.rng.bool(p as f32) {
+                            Action::Panic(1.0)
+                        } else {
+                            Action::Off
+                        }
+                    }
+                    a => a,
+                },
+                None => Action::Off,
+            }
+        };
+        // act outside the registry lock so a sleep never blocks other sites
+        match action {
+            Action::Sleep(ms) => std::thread::sleep(Duration::from_millis(ms)),
+            Action::Panic(_) => panic!("failpoint `{name}` injected panic"),
+            Action::Off | Action::Reset(_) => {}
+        }
+    }
+
+    /// I/O-site variant: returns `Some(ConnectionReset)` when a
+    /// `reset(P)` action fires (and also honors `sleep`/`panic`).
+    pub fn io_error(name: &str) -> Option<std::io::Error> {
+        let action = {
+            let mut g = registry().lock().unwrap();
+            match g.sites.get_mut(name) {
+                Some(site) => match site.action {
+                    Action::Panic(p) | Action::Reset(p) => {
+                        let fired = site.rng.bool(p as f32);
+                        match (site.action, fired) {
+                            (Action::Panic(_), true) => Action::Panic(1.0),
+                            (Action::Reset(_), true) => Action::Reset(1.0),
+                            _ => Action::Off,
+                        }
+                    }
+                    a => a,
+                },
+                None => Action::Off,
+            }
+        };
+        match action {
+            Action::Sleep(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                None
+            }
+            Action::Panic(_) => panic!("failpoint `{name}` injected panic"),
+            Action::Reset(_) => Some(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                format!("failpoint `{name}` injected connection reset"),
+            )),
+            Action::Off => None,
+        }
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use real::{clear, configure, hit, io_error};
+
+// Feature off (the default): every site is an empty inline function the
+// optimizer removes — the serving hot paths carry zero overhead.
+#[cfg(not(feature = "failpoints"))]
+mod noop {
+    use super::Action;
+
+    /// No-op stub (enable the `failpoints` feature for the real one).
+    #[inline(always)]
+    pub fn configure(_name: &str, _action: Action) {}
+
+    /// No-op stub (enable the `failpoints` feature for the real one).
+    #[inline(always)]
+    pub fn clear() {}
+
+    /// No-op stub (enable the `failpoints` feature for the real one).
+    #[inline(always)]
+    pub fn hit(_name: &str) {}
+
+    /// No-op stub (enable the `failpoints` feature for the real one).
+    #[inline(always)]
+    pub fn io_error(_name: &str) -> Option<std::io::Error> {
+        None
+    }
+}
+
+#[cfg(not(feature = "failpoints"))]
+pub use noop::{clear, configure, hit, io_error};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_example() {
+        let spec = "batcher_stall=sleep(50);worker_panic=panic(0.01)";
+        let entries = parse_spec(spec).unwrap();
+        assert_eq!(
+            entries,
+            vec![
+                ("batcher_stall".to_string(), Action::Sleep(50)),
+                ("worker_panic".to_string(), Action::Panic(0.01)),
+            ]
+        );
+    }
+
+    #[test]
+    fn parses_off_reset_and_ignores_empty_entries() {
+        let entries = parse_spec(" a=off; ;b=reset(1.0);").unwrap();
+        assert_eq!(
+            entries,
+            vec![
+                ("a".to_string(), Action::Off),
+                ("b".to_string(), Action::Reset(1.0)),
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "noequals",
+            "=sleep(1)",
+            "a=sleep(x)",
+            "a=sleep(5",
+            "a=panic(1.5)",
+            "a=reset(-0.1)",
+            "a=explode(1)",
+            "a=sleep",
+        ] {
+            assert!(parse_spec(bad).is_err(), "spec `{bad}` should fail");
+        }
+    }
+
+    #[cfg(not(feature = "failpoints"))]
+    #[test]
+    fn noop_stubs_do_nothing() {
+        configure("x", Action::Panic(1.0));
+        hit("x"); // must not panic — the stub ignores configuration
+        assert!(io_error("x").is_none());
+        clear();
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn registry_fires_and_clears() {
+        clear();
+        configure("fp_test_sleep", Action::Sleep(1));
+        let t0 = std::time::Instant::now();
+        hit("fp_test_sleep");
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(1));
+
+        configure("fp_test_reset", Action::Reset(1.0));
+        let e = io_error("fp_test_reset").expect("reset(1.0) must fire");
+        assert_eq!(e.kind(), std::io::ErrorKind::ConnectionReset);
+
+        configure("fp_test_panic", Action::Panic(1.0));
+        let r = std::panic::catch_unwind(|| hit("fp_test_panic"));
+        assert!(r.is_err(), "panic(1.0) must panic");
+
+        clear();
+        hit("fp_test_panic"); // cleared: must be silent
+        assert!(io_error("fp_test_reset").is_none());
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn probabilistic_sites_are_deterministic_per_name() {
+        // same name + same probability → identical fire schedule on
+        // reconfigure (the per-site RNG reseeds from the name)
+        let schedule = |name: &str| -> Vec<bool> {
+            configure(name, Action::Reset(0.5));
+            (0..64).map(|_| io_error(name).is_some()).collect()
+        };
+        let a = schedule("fp_test_det");
+        let b = schedule("fp_test_det");
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x));
+        clear();
+    }
+}

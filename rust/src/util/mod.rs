@@ -4,10 +4,12 @@
 
 pub mod bench;
 pub mod cli;
+pub mod failpoint;
 pub mod json;
 pub mod logger;
 pub mod prop;
 pub mod rng;
+pub mod signal;
 
 /// FNV-1a offset basis — pair with [`fnv1a_mix`].
 pub const FNV1A_BASIS: u64 = 0xcbf2_9ce4_8422_2325;

@@ -1,0 +1,81 @@
+//! Minimal std-only shutdown-signal latch (DESIGN.md §19).
+//!
+//! The offline crate universe has no `signal-hook`/`ctrlc`, so `serve`
+//! installs a raw `signal(2)` handler that does the only async-signal-
+//! safe thing possible: store into a static atomic. The serve loop
+//! polls [`requested`] and performs the actual graceful drain (close
+//! listener, finish in-flight work, flush metrics) on a normal thread.
+//!
+//! On non-unix targets [`install`] is a no-op and only the admin
+//! `{"cmd":"drain"}` path can trigger a drain.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// True once SIGINT/SIGTERM arrived (or [`raise`] was called).
+pub fn requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Trip the latch programmatically (tests, and the drain admin path in
+/// callers that want one code path for both triggers).
+pub fn raise() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+#[cfg(unix)]
+mod unix {
+    use super::SHUTDOWN;
+    use std::sync::atomic::Ordering;
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        // POSIX signal(2) from libc, which every unix Rust binary
+        // already links. Used instead of sigaction to stay free of
+        // libc struct layouts.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        // Only async-signal-safe operation here: a relaxed-or-stronger
+        // atomic store. No allocation, no locks, no I/O.
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        // SAFETY: `signal` is the POSIX C function; passing a valid
+        // signal number and a function pointer with the required
+        // `extern "C" fn(i32)` ABI (cast to the handler word) is its
+        // documented contract. The handler itself only performs an
+        // atomic store, which is async-signal-safe.
+        unsafe {
+            signal(SIGINT, on_signal as usize);
+            signal(SIGTERM, on_signal as usize);
+        }
+    }
+}
+
+/// Install SIGINT/SIGTERM handlers that trip the latch. Idempotent.
+#[cfg(unix)]
+pub fn install() {
+    unix::install();
+}
+
+/// Non-unix: no signal handling; drain is admin-command only.
+#[cfg(not(unix))]
+pub fn install() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raise_trips_the_latch() {
+        install();
+        raise();
+        assert!(requested());
+    }
+}

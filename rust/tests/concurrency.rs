@@ -87,7 +87,13 @@ fn pool_survives_rotating_job_panics() {
 }
 
 fn request(id: u64, resp: &mpsc::Sender<adaqat::serve::ServeResponse>) -> ServeRequest {
-    ServeRequest { id, pixels: Vec::new(), enqueued: Instant::now(), resp: resp.clone() }
+    ServeRequest {
+        id,
+        pixels: Vec::new(),
+        enqueued: Instant::now(),
+        deadline: None,
+        resp: resp.clone(),
+    }
 }
 
 /// Conservation across backpressure: with 4 producers racing a
@@ -289,4 +295,296 @@ fn shared_pool_forward_stays_bit_identical_under_contention() {
             });
         }
     });
+}
+
+/// Deterministic fault-injection scenarios (DESIGN.md §19). Compiled
+/// and run only with the `failpoints` feature:
+/// `cargo test --features failpoints --test concurrency` (verify.sh and
+/// the CI TSan stage both do). Each scenario proves the conservation
+/// identity — every submitted request lands in exactly one of
+/// {answered, shed, overloaded, deadline-expired} — while faults fire.
+#[cfg(feature = "failpoints")]
+mod chaos {
+    use super::*;
+    use adaqat::serve::engine::SubmitError;
+    use adaqat::serve::{Backend, Engine, EngineConfig, ServeError, Server};
+    use adaqat::util::failpoint::{self, Action};
+    use std::sync::Mutex;
+
+    /// The failpoint registry is process-global, so chaos scenarios are
+    /// serialized and each starts *and ends* disarmed (the guard clears
+    /// on drop even when the test panics).
+    static CHAOS: Mutex<()> = Mutex::new(());
+
+    struct Armed {
+        _lock: std::sync::MutexGuard<'static, ()>,
+    }
+
+    impl Drop for Armed {
+        fn drop(&mut self) {
+            failpoint::clear();
+        }
+    }
+
+    fn armed() -> Armed {
+        let lock = CHAOS.lock().unwrap_or_else(|p| p.into_inner());
+        failpoint::clear();
+        Armed { _lock: lock }
+    }
+
+    /// Fixed-delay 4-wide stub backend: chaos behavior comes from the
+    /// failpoints, not from kernel timing.
+    struct ChaosBackend {
+        delay: Duration,
+    }
+
+    impl Backend for ChaosBackend {
+        fn input_shape(&self) -> (usize, usize, usize) {
+            (2, 2, 1)
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+        fn num_classes(&self) -> usize {
+            10
+        }
+        fn infer(&self, x: &Tensor) -> anyhow::Result<Vec<usize>> {
+            std::thread::sleep(self.delay);
+            Ok(vec![0; x.shape[0]])
+        }
+    }
+
+    fn chaos_engine(cfg: EngineConfig, reg: &Registry) -> Arc<Engine> {
+        Engine::start_with_obs(
+            cfg,
+            |_| {
+                Ok(Box::new(ChaosBackend { delay: Duration::from_millis(2) })
+                    as Box<dyn Backend>)
+            },
+            reg,
+        )
+        .unwrap()
+    }
+
+    /// Batcher stalls + mixed deadlines + admission control, 4 racing
+    /// submitters: ground-truth tallies, per-request answers, and the
+    /// observable counters must all close the conservation identity
+    /// exactly.
+    #[test]
+    fn conservation_is_exact_under_stalls_and_mixed_deadlines() {
+        let _armed = armed();
+        failpoint::configure("batcher_stall", Action::Sleep(10));
+        let reg = Registry::new();
+        let engine = chaos_engine(
+            EngineConfig {
+                workers: 2,
+                queue_capacity: 16,
+                max_delay: Duration::from_millis(2),
+                max_wait: Some(Duration::from_millis(40)),
+                ..EngineConfig::default()
+            },
+            &reg,
+        );
+        let numel = engine.input_numel();
+        const THREADS: u64 = 4;
+        const PER: u64 = 100;
+        let (tx, rx) = mpsc::channel();
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let engine = Arc::clone(&engine);
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xCA05 ^ t);
+                // [accepted, overloaded, dl_admission, full, closed]
+                let mut tally = [0u64; 5];
+                for i in 0..PER {
+                    jitter(&mut rng, 2);
+                    let deadline_ms = match i % 4 {
+                        0 => None,         // never expires
+                        1 => Some(30_000), // generous
+                        2 => Some(15),     // may expire in-queue
+                        _ => Some(0),      // dead on arrival
+                    };
+                    match engine.submit_with_deadline(
+                        t * PER + i,
+                        vec![0.0; numel],
+                        deadline_ms,
+                        tx.clone(),
+                    ) {
+                        Ok(()) => tally[0] += 1,
+                        Err(SubmitError::Overloaded { retry_after_ms }) => {
+                            assert!(
+                                (1..=30_000).contains(&retry_after_ms),
+                                "retry hint must be finite and bounded"
+                            );
+                            tally[1] += 1;
+                        }
+                        Err(SubmitError::DeadlineExceeded) => tally[2] += 1,
+                        Err(SubmitError::Full) => tally[3] += 1,
+                        Err(SubmitError::Closed) => tally[4] += 1,
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                    }
+                }
+                tally
+            }));
+        }
+        drop(tx);
+        let mut tally = [0u64; 5];
+        for h in handles {
+            for (a, b) in tally.iter_mut().zip(h.join().unwrap()) {
+                *a += b;
+            }
+        }
+        let [accepted, overloaded, dl_admission, full, closed] = tally;
+        assert_eq!(
+            accepted + overloaded + dl_admission + full + closed,
+            THREADS * PER,
+            "every submit must land in exactly one bucket"
+        );
+        assert_eq!(closed, 0, "nothing closed the queue mid-run");
+
+        // every accepted request gets exactly one answer
+        let mut answered = 0u64;
+        let mut dl_batch = 0u64;
+        for _ in 0..accepted {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("answer lost");
+            match resp.result {
+                Ok(_) => answered += 1,
+                Err(ServeError::DeadlineExceeded { .. }) => dl_batch += 1,
+                Err(e) => panic!("unexpected serve error: {e}"),
+            }
+        }
+        assert!(rx.try_recv().is_err(), "more answers than accepted requests");
+
+        // the observable counters agree with ground truth exactly
+        let (c_overloaded, c_dl_admission, c_dl_batch) = engine.overload_counts();
+        assert_eq!(c_overloaded, overloaded);
+        assert_eq!(c_dl_admission, dl_admission);
+        assert_eq!(c_dl_batch, dl_batch);
+        let (c_full, c_closed) = engine.shed_counts();
+        assert_eq!((c_full, c_closed), (full, 0));
+        // the conservation identity, in counter terms:
+        // answered + shed + overloaded + deadline_expired == submitted
+        assert_eq!(
+            answered + c_full + c_closed + c_overloaded + c_dl_admission + c_dl_batch,
+            THREADS * PER,
+        );
+        engine.shutdown();
+    }
+
+    /// An injected panic inside `Backend::infer` must degrade to
+    /// per-request `inference_failed` answers — the worker survives,
+    /// and after `clear()` the same engine serves normally.
+    #[test]
+    fn worker_panics_degrade_to_answers_and_the_worker_recovers() {
+        let _armed = armed();
+        failpoint::configure("worker_infer", Action::Panic(1.0));
+        let reg = Registry::new();
+        let engine = chaos_engine(
+            EngineConfig {
+                workers: 1,
+                queue_capacity: 16,
+                max_delay: Duration::from_millis(1),
+                ..EngineConfig::default()
+            },
+            &reg,
+        );
+        let numel = engine.input_numel();
+        let (tx, rx) = mpsc::channel();
+        for id in 0..8u64 {
+            engine.submit(id, vec![0.0; numel], tx.clone()).unwrap();
+        }
+        for _ in 0..8 {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).expect("answer lost");
+            match resp.result {
+                Err(ServeError::Inference(msg)) => {
+                    assert!(msg.contains("panicked"), "unexpected message {msg:?}")
+                }
+                other => panic!("expected an inference error, got {other:?}"),
+            }
+        }
+        assert_eq!(engine.metrics.failures.load(Ordering::SeqCst), 8);
+
+        // the panic never took the worker down: disarm and serve
+        failpoint::clear();
+        let resp = engine.infer_blocking(vec![0.0; numel]).unwrap();
+        assert!(resp.result.is_ok(), "worker did not recover: {:?}", resp.result);
+        engine.shutdown();
+    }
+
+    /// Injected connection resets on the server's write path close that
+    /// connection only — the listener and engine keep serving, and a
+    /// fresh connection round-trips after `clear()`.
+    #[test]
+    fn connection_write_resets_leave_the_server_serving() {
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::TcpStream;
+
+        let _armed = armed();
+        let reg = Registry::new();
+        let engine = chaos_engine(
+            EngineConfig {
+                workers: 1,
+                queue_capacity: 16,
+                max_delay: Duration::from_millis(1),
+                ..EngineConfig::default()
+            },
+            &reg,
+        );
+        let server = Server::start("127.0.0.1:0", Arc::clone(&engine)).unwrap();
+        failpoint::configure("conn_write", Action::Reset(1.0));
+
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        writeln!(stream, r#"{{"id":1,"image":[0,0,0,0]}}"#).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        // the reply write hits the reset: the server drops this
+        // connection instead of answering
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "got {line:?}");
+
+        failpoint::clear();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        writeln!(stream, r#"{{"id":2,"image":[0,0,0,0]}}"#).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(2.0));
+        assert!(j.get("class").is_some(), "server did not recover: {line}");
+
+        server.stop();
+        engine.shutdown();
+    }
+
+    /// Shutdown while the batcher is stalling: every accepted request
+    /// is still answered before `shutdown()` returns — drain means
+    /// finish, not abandon.
+    #[test]
+    fn drain_answers_every_accepted_request_despite_stalls() {
+        let _armed = armed();
+        failpoint::configure("batcher_stall", Action::Sleep(20));
+        let reg = Registry::new();
+        let engine = chaos_engine(
+            EngineConfig {
+                workers: 1,
+                queue_capacity: 64,
+                max_delay: Duration::from_millis(1),
+                ..EngineConfig::default()
+            },
+            &reg,
+        );
+        let numel = engine.input_numel();
+        let (tx, rx) = mpsc::channel();
+        for id in 0..32u64 {
+            engine.submit(id, vec![0.0; numel], tx.clone()).unwrap();
+        }
+        engine.shutdown(); // close + drain + join
+        drop(tx);
+        let mut answered = 0u64;
+        while let Ok(resp) = rx.try_recv() {
+            assert!(resp.result.is_ok(), "drained request failed: {:?}", resp.result);
+            answered += 1;
+        }
+        assert_eq!(answered, 32, "drain abandoned accepted requests");
+    }
 }

@@ -46,6 +46,7 @@ fn serve_end_to_end_1k_requests_over_tcp() {
             workers: 2,
             queue_capacity: 2048,
             max_delay: Duration::from_millis(2),
+            ..EngineConfig::default()
         },
         move |_| Ok(Box::new(ReferenceBackend::from_packed(&packed2)?) as Box<dyn Backend>),
     )
@@ -109,6 +110,7 @@ fn serve_mlp_end_to_end_through_integer_kernels() {
             workers: 2,
             queue_capacity: 1024,
             max_delay: Duration::from_millis(2),
+            ..EngineConfig::default()
         },
         move |_| {
             Ok(Box::new(ReferenceBackend::with_threads(&q2, 2)?) as Box<dyn Backend>)
@@ -180,6 +182,7 @@ fn serve_metrics_exposition_and_trace_over_tcp() {
             workers: 1,
             queue_capacity: 64,
             max_delay: Duration::from_millis(1),
+            ..EngineConfig::default()
         },
         move |_| Ok(Box::new(ReferenceBackend::with_threads(&q2, 2)?) as Box<dyn Backend>),
     )
@@ -259,6 +262,7 @@ fn serve_sheds_load_instead_of_buffering_unboundedly() {
             workers: 1,
             queue_capacity: 2,
             max_delay: Duration::from_millis(50),
+            ..EngineConfig::default()
         },
         move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
     )
@@ -279,4 +283,229 @@ fn serve_sheds_load_instead_of_buffering_unboundedly() {
         rx.recv_timeout(Duration::from_secs(10)).unwrap();
     }
     engine.shutdown();
+}
+
+#[test]
+fn serve_deadline_expiry_is_a_structured_wire_error() {
+    // DESIGN.md §19: an unmeetable deadline is answered, never computed.
+    // `deadline_ms: 0` expires at admission deterministically; the reply
+    // must carry the machine code + stage, and a roomy deadline on the
+    // same connection must still classify.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    use adaqat::util::json::Json;
+
+    let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 4, 17, 8);
+    let (q, _) = export_packed(&ck, 4).unwrap();
+    let q = Arc::new(q);
+    let q2 = Arc::clone(&q);
+    let engine = Engine::start(
+        EngineConfig {
+            workers: 1,
+            queue_capacity: 64,
+            max_delay: Duration::from_millis(1),
+            ..EngineConfig::default()
+        },
+        move |_| Ok(Box::new(ReferenceBackend::from_packed(&q2)?) as Box<dyn Backend>),
+    )
+    .unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&engine)).unwrap();
+
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    let ds = synth::generate(DatasetKind::Cifar10, 2, 23, 1);
+    let image = |i: usize| {
+        Json::Arr(ds.image(i).iter().map(|&v| Json::num(v as f64)).collect()).to_string()
+    };
+
+    writeln!(stream, r#"{{"id":1,"image":{},"deadline_ms":0}}"#, image(0)).unwrap();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert_eq!(j.get("id").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(j.get("error").and_then(Json::as_str), Some("deadline_exceeded"));
+    assert_eq!(j.get("stage").and_then(Json::as_str), Some("admission"));
+    assert!(j.get("class").is_none(), "expired request must not be answered");
+
+    line.clear();
+    writeln!(stream, r#"{{"id":2,"image":{},"deadline_ms":60000}}"#, image(1)).unwrap();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert_eq!(j.get("id").and_then(Json::as_f64), Some(2.0));
+    assert!(j.get("class").is_some(), "roomy deadline must classify: {line}");
+
+    // the expiry landed on the admission counter, not the batch one
+    let (rejected, dl_admission, dl_batch) = engine.overload_counts();
+    assert_eq!(rejected, 0);
+    assert_eq!(dl_admission, 1);
+    assert_eq!(dl_batch, 0);
+
+    server.stop();
+    engine.shutdown();
+}
+
+/// Fixed-delay backend: makes overload deterministic without tuning
+/// real kernels (4-wide batches, `delay` per forward).
+struct SlowBackend {
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    fn input_shape(&self) -> (usize, usize, usize) {
+        (2, 2, 1)
+    }
+    fn max_batch(&self) -> usize {
+        4
+    }
+    fn num_classes(&self) -> usize {
+        10
+    }
+    fn infer(&self, x: &adaqat::tensor::Tensor) -> anyhow::Result<Vec<usize>> {
+        std::thread::sleep(self.delay);
+        Ok(vec![0; x.shape[0]])
+    }
+}
+
+#[test]
+fn serve_overload_retry_after_round_trip_resolves_all_requests() {
+    // ~an order of magnitude more offered load than a 4-deep queue over
+    // a slow worker can hold: admission control must reject with finite
+    // retry_after_ms hints and the client's jittered backoff must land
+    // every request eventually — no hangs, no lost answers, no
+    // budget-exhausted sheds.
+    let engine = Engine::start(
+        EngineConfig {
+            workers: 1,
+            queue_capacity: 4,
+            max_delay: Duration::from_millis(1),
+            max_wait: Some(Duration::from_millis(50)),
+            ..EngineConfig::default()
+        },
+        move |_| {
+            Ok(Box::new(SlowBackend { delay: Duration::from_millis(20) })
+                as Box<dyn Backend>)
+        },
+    )
+    .unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&engine)).unwrap();
+
+    let n = 128usize;
+    let images: Vec<(Vec<f32>, i32)> = (0..n).map(|_| (vec![0.5; 4], 0)).collect();
+    let cfg = client::ClientConfig {
+        window: 32,
+        max_retries: 12,
+        deadline_ms: None,
+        seed: 7,
+    };
+    let report = client::run_with(&server.addr.to_string(), &images, &cfg).unwrap();
+
+    assert_eq!(report.received, n);
+    assert_eq!(report.errors, 0, "retries must resolve every request");
+    assert_eq!(report.shed, 0);
+    assert!(report.retried > 0, "this load must trip admission control");
+    assert_eq!(report.attempted, n + report.retried);
+
+    // the server really rejected (the client's retries are not an
+    // artifact), and rejection implies a served retry hint
+    let (rejected, dl_admission, dl_batch) = engine.overload_counts();
+    assert!(rejected > 0, "admission control never fired");
+    assert_eq!(dl_admission + dl_batch, 0, "no deadlines were set");
+
+    server.stop();
+    engine.shutdown();
+}
+
+/// Kill the child on panic so a failed assert can't leak a server.
+struct KillOnDrop(std::process::Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn serve_binary_drains_gracefully_and_exits_zero() {
+    // The real `adaqat serve` process: answer traffic, take a
+    // {"cmd":"drain"}, finish up, flush --metrics_out, exit 0.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::process::{Command, Stdio};
+
+    use adaqat::util::json::Json;
+
+    let tmp = std::env::temp_dir().join(format!("adaqat_drain_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ck = demo::demo_checkpoint(DatasetKind::Cifar10, 4, 29, 8);
+    let (q, _) = export_packed(&ck, 4).unwrap();
+    let packed_path = tmp.join("model.aqq");
+    q.save(&packed_path).unwrap();
+    let metrics_path = tmp.join("metrics.prom");
+
+    let child = Command::new(env!("CARGO_BIN_EXE_adaqat"))
+        .args([
+            "serve",
+            "--checkpoint",
+            packed_path.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+            "--workers",
+            "1",
+            "--metrics_out",
+            metrics_path.to_str().unwrap(),
+        ])
+        .stdout(Stdio::piped())
+        .stdin(Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut child = KillOnDrop(child);
+    let mut child_out = BufReader::new(child.0.stdout.take().unwrap());
+
+    // the banner line carries the bound address: "serving X on ADDR (…)"
+    let mut banner = String::new();
+    child_out.read_line(&mut banner).unwrap();
+    let addr = banner
+        .split(" on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no address in banner {banner:?}"));
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    let ds = synth::generate(DatasetKind::Cifar10, 1, 31, 1);
+    let image =
+        Json::Arr(ds.image(0).iter().map(|&v| Json::num(v as f64)).collect()).to_string();
+    writeln!(stream, r#"{{"id":7,"image":{image}}}"#).unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        Json::parse(&line).unwrap().get("class").is_some(),
+        "infer before drain failed: {line}"
+    );
+
+    line.clear();
+    writeln!(stream, r#"{{"cmd":"drain"}}"#).unwrap();
+    reader.read_line(&mut line).unwrap();
+    let ack = Json::parse(&line).unwrap();
+    assert_eq!(ack.get("draining").and_then(Json::as_bool), Some(true), "{line}");
+
+    // the serve loop polls its drain flag every 200ms; allow generous
+    // slack for the final metrics flush before calling it a hang
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    let status = loop {
+        if let Some(status) = child.0.try_wait().unwrap() {
+            break status;
+        }
+        assert!(std::time::Instant::now() < deadline, "drain did not exit");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(status.success(), "drain must exit 0, got {status:?}");
+    let exposition = std::fs::read_to_string(&metrics_path).unwrap();
+    assert!(!exposition.is_empty(), "drain must flush --metrics_out");
+    for l in exposition.lines() {
+        parse_prom_line(l);
+    }
+    std::fs::remove_dir_all(&tmp).ok();
 }

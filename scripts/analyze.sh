@@ -17,7 +17,9 @@
 #                     the raw-pointer carve logic the SIMD paths share.
 #   3. TSan           ThreadSanitizer over tests/concurrency.rs — the
 #                     jittered worker-pool / queue / trace-ring /
-#                     registry stress suite.
+#                     registry stress suite, plus (via the failpoints
+#                     feature) the §19 chaos schedules: batcher stalls,
+#                     worker panics, connection resets.
 #   4. ASan           AddressSanitizer over the SplitMut and scratch-
 #                     arena unit suites — the raw-pointer carve paths
 #                     and the poisoned-mutex recovery path.
@@ -82,10 +84,13 @@ if have_nightly && nightly_component rust-src; then
   # explicit --target keeps RUSTFLAGS off host build scripts; a
   # dedicated target dir keeps sanitized artifacts from thrashing the
   # regular build cache
+  # --features failpoints compiles the §19 chaos module in, so the
+  # batcher-stall / worker-panic / connection-reset schedules run under
+  # the race detector too, not just in tier-1
   RUSTFLAGS="-Zsanitizer=thread" \
     CARGO_TARGET_DIR=target/tsan \
     cargo +nightly test -Zbuild-std --target "$HOST_TARGET" \
-    --test concurrency
+    --features failpoints --test concurrency
 else
   skip "TSan" "rustup nightly with the rust-src component is not installed"
 fi

@@ -40,6 +40,16 @@ test -s ../UNSAFE_AUDIT.json
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== chaos suite: cargo test --features failpoints =="
+# deterministic fault injection (DESIGN.md §19): the failpoints feature
+# compiles the injection sites in, and the chaos module in
+# tests/concurrency.rs stalls the batcher, panics workers, and resets
+# connections while asserting the accounting identity
+#   answered + shed + overloaded + deadline_expired == submitted
+# holds exactly. The feature is additive, so the whole test suite runs
+# with it on.
+cargo test -q --features failpoints --test concurrency
+
 echo "== kernel tests under ADAQAT_FORCE_PORTABLE=1 =="
 # the same kernel suite with the SIMD dispatch forced onto the portable
 # scalar paths (DESIGN.md §16) — proves the fallback stays bit-identical
@@ -78,5 +88,12 @@ echo "== obs bench: emit BENCH_obs.json =="
 # (instrumentation may cost at most 5% of uninstrumented throughput)
 cargo bench --bench obs -- --iters 3 --out ../BENCH_obs.json
 test -s ../BENCH_obs.json
+
+echo "== serve bench: emit BENCH_serve.json =="
+# the §19 overload scenario: 4x offered load against a small queue with
+# admission control armed; the 0/1 overload_score (finite retry-after
+# hints, exact accounting, bounded admitted p99) feeds the CI bench gate
+cargo bench --bench serve -- --out ../BENCH_serve.json
+test -s ../BENCH_serve.json
 
 echo "verify: OK"
